@@ -1,0 +1,99 @@
+//! Figs. 4/6: kernel execution-time characterization on the real PJRT
+//! runtime.
+//!
+//! * Fig. 4(a): execution time vs the number of assigned virtual SMs —
+//!   the paper fits `t = (C − L)/m + L` (Eq. 3).  On the CPU PJRT
+//!   backend, interpret-mode Pallas serializes the grid, so *wall time*
+//!   does not drop with m; instead we verify the **work-conservation
+//!   structure** behind Eq. 3: every pinned range computes the identical
+//!   full result (the scheduling contract), and we fit Eq. 3 to the
+//!   simulator's timing model where the SM semantics are temporal.
+//! * Fig. 4(b): time vs kernel size (rows), linear in C — measured for
+//!   real on the PJRT runtime.
+//! * Fig. 6: per-class interleave ratios (model constants, from the
+//!   paper's hardware measurements).
+//!
+//! ```bash
+//! cargo run --release --example kernel_characterization
+//! ```
+
+use anyhow::Result;
+use rtgpu::analysis::gpu::duration;
+use rtgpu::analysis::SmModel;
+use rtgpu::model::KernelClass;
+use rtgpu::runtime::{artifact_dir, Engine};
+use rtgpu::util::cli::Args;
+use rtgpu::util::stats::{linear_fit, Summary};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let reps = args.usize_or("reps", 30);
+    args.finish();
+
+    let engine = Engine::load_dir_filtered(&artifact_dir(), |m| m.name.ends_with("_small"))?;
+
+    // ---- Fig. 4(a) analog: Eq. 3 shape on the temporal (simulator) model
+    println!("== Fig 4(a): t = (C − L)/m + L  (temporal SM model) ==");
+    println!("{:>6} {:>12} {:>12}", "m", "t_virtual", "t_physical");
+    let (c, l) = (100.0, 4.0);
+    let ms: Vec<f64> = (1..=10).map(|m| m as f64).collect();
+    let mut ys = Vec::new();
+    for &m in &ms {
+        let tv = duration(c, l, 1.0, m as usize, SmModel::Virtual);
+        let tp = duration(c, l, 1.0, m as usize, SmModel::Physical);
+        println!("{m:>6} {tv:>12.2} {tp:>12.2}");
+        ys.push(tp);
+    }
+    let xs: Vec<f64> = ms.iter().map(|m| 1.0 / m).collect();
+    let (slope, intercept, r2) = linear_fit(&xs, &ys);
+    println!("fit: t = {slope:.2}/m + {intercept:.2}  (r² = {r2:.6}; expect C−L = {:.0}, L = {l})", c - l);
+
+    // ---- pinning invariance on the real runtime (the Eq. 3 contract)
+    println!("\n== workload-pinning invariance (real PJRT executions) ==");
+    let name = "synthetic_compute_small";
+    let n = engine.meta(name)?.inputs[1].element_count();
+    let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.003 - 1.0).collect();
+    let reference = engine.execute_pinned(name, (0, 7), &[&x])?.values;
+    for range in [(0, 1), (0, 3), (2, 5), (4, 7)] {
+        let out = engine.execute_pinned(name, range, &[&x])?;
+        let max_diff = out
+            .values
+            .iter()
+            .zip(&reference)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("  range {range:?}: max |Δ| vs full device = {max_diff:.2e}");
+    }
+
+    // ---- Fig. 4(b): wall time vs kernel class (real executions)
+    println!("\n== Fig 4(b) analog: per-class wall time on PJRT (reps = {reps}) ==");
+    println!("{:>16} {:>10} {:>10} {:>10} {:>10}", "kernel", "min(ms)", "p50(ms)", "max(ms)", "sd(ms)");
+    for kind in ["compute", "branch", "memory", "special", "comprehensive"] {
+        let name = format!("synthetic_{kind}_small");
+        let count = engine.meta(&name)?.inputs[1].element_count();
+        let x: Vec<f32> = (0..count).map(|i| i as f32 * 0.001).collect();
+        engine.execute_pinned(&name, (0, 7), &[&x])?; // warm-up
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let out = engine.execute_pinned(&name, (0, 7), &[&x])?;
+            samples.push(out.elapsed.as_secs_f64() * 1e3);
+        }
+        let s = Summary::of(&samples).unwrap();
+        println!(
+            "{:>16} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+            kind, s.min, s.p50, s.max, s.sd
+        );
+    }
+
+    // ---- Fig. 6: interleave ratios per class (model constants)
+    println!("\n== Fig 6: worst-case self-interleave ratios α ==");
+    for class in KernelClass::ALL {
+        let a = class.interleave_ratio();
+        println!(
+            "{:>16}: α = {a:.2}  → per-SM throughput gain 2/α − 1 = {:.0} %",
+            class.artifact_kind(),
+            (2.0 / a - 1.0) * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Figs. 8–11: acceptance-ratio curves for RTGPU vs self-suspension vs
+//! STGM, across segment-length ratios, subtask counts, task counts and
+//! SM counts, for both the two-copy and one-copy memory models.
+//!
+//! ```bash
+//! cargo run --release --example schedulability_sweep -- --figure 8 --sets 100
+//! cargo run --release --example schedulability_sweep            # all figures
+//! ```
+
+use anyhow::Result;
+use rtgpu::gen::GenConfig;
+use rtgpu::harness::chart::{results_dir, table, write_csv};
+use rtgpu::harness::sweep::{run_sweep, to_series, SweepSpec};
+use rtgpu::model::MemoryModel;
+use rtgpu::util::cli::Args;
+
+fn run_variant(label: &str, cfg: GenConfig, gn: usize, sets: usize, seed: u64) -> Result<()> {
+    for (mm, mm_name) in [(MemoryModel::TwoCopy, "2copy"), (MemoryModel::OneCopy, "1copy")] {
+        let mut spec = SweepSpec::standard(cfg.clone().with_memory_model(mm), seed);
+        spec.sets_per_point = sets;
+        spec.gn_total = gn;
+        let curves = run_sweep(&spec, 0);
+        let series = to_series(&curves);
+        let full = format!("{label}_{mm_name}");
+        println!("--- {full}");
+        print!("{}", table(&spec.utils, &series, "util"));
+        write_csv(&results_dir().join(format!("{full}.csv")), "util", &spec.utils, &series)?;
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let figure = args.usize_or("figure", 0); // 0 = all
+    let sets = args.usize_or("sets", 100);
+    let seed = args.u64_or("seed", 42);
+    args.finish();
+
+    if figure == 0 || figure == 8 {
+        for (c, g) in [(2.0, 1.0), (1.0, 2.0), (1.0, 8.0)] {
+            run_variant(
+                &format!("fig8_ratio{c}to{g}"),
+                GenConfig::default().with_length_ratio(c, g),
+                10,
+                sets,
+                seed,
+            )?;
+        }
+    }
+    if figure == 0 || figure == 9 {
+        for m in [3, 5, 7] {
+            run_variant(
+                &format!("fig9_subtasks{m}"),
+                GenConfig::default().with_subtasks(m),
+                10,
+                sets,
+                seed,
+            )?;
+        }
+    }
+    if figure == 0 || figure == 10 {
+        for n in [3, 5, 7] {
+            run_variant(
+                &format!("fig10_tasks{n}"),
+                GenConfig::default().with_tasks(n),
+                10,
+                sets,
+                seed,
+            )?;
+        }
+    }
+    if figure == 0 || figure == 11 {
+        for gn in [5, 8, 10] {
+            run_variant(&format!("fig11_gn{gn}"), GenConfig::default(), gn, sets, seed)?;
+        }
+    }
+    println!("CSV written to {:?}", results_dir());
+    Ok(())
+}

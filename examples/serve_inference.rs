@@ -1,0 +1,78 @@
+//! END-TO-END serving driver (the DESIGN.md §5 "E2E" row): load the AOT
+//! artifacts, admit four periodic GPU applications via Algorithm 2, and
+//! serve them with real PJRT kernel executions pinned to their federated
+//! virtual-SM ranges.  Reports per-app latency, deadline misses and
+//! total throughput — the numbers recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example serve_inference -- --seconds 5
+//! cargo run --release --example serve_inference -- --full-artifacts
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+use rtgpu::coordinator::{admit, serve, AppSpec, ServeConfig};
+use rtgpu::model::{KernelClass, Platform};
+use rtgpu::runtime::{artifact_dir, Engine};
+use rtgpu::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let seconds = args.f64_or("seconds", 5.0);
+    let full = args.flag("full-artifacts");
+    let gn = args.usize_or("sms", 4);
+    args.finish();
+
+    let suffix = if full { "" } else { "_small" };
+    let engine = Engine::load_dir_filtered(&artifact_dir(), |m| {
+        m.name.ends_with("_small") != full || m.name == "smoke"
+    })?;
+    println!(
+        "PJRT platform: {}; artifacts: {:?}",
+        engine.platform_name(),
+        engine.loaded_names()
+    );
+
+    // An autonomous-driving-flavoured application mix (the paper's intro
+    // motivation): detection, tracking, planning, and a DNN inference.
+    let specs = vec![
+        AppSpec {
+            class: KernelClass::Compute,
+            ..AppSpec::inference("detect", &format!("synthetic_compute{suffix}"), 40.0)
+        },
+        AppSpec {
+            class: KernelClass::Branch,
+            ..AppSpec::inference("track", &format!("synthetic_branch{suffix}"), 60.0)
+        },
+        AppSpec {
+            class: KernelClass::Special,
+            ..AppSpec::inference("plan", &format!("synthetic_special{suffix}"), 80.0)
+        },
+        AppSpec::inference("infer", &format!("inference{suffix}"), 100.0),
+    ];
+
+    println!("\n== admission (Algorithm 2, federated virtual SMs, GN = {gn}) ==");
+    let report = admit(&engine, Platform::new(gn), &specs, 10)?;
+    print!("{}", report.table());
+    anyhow::ensure!(report.schedulable, "admission rejected the application set");
+
+    println!("\n== serving for {seconds} s ==");
+    let out = serve(
+        &engine,
+        &report,
+        &ServeConfig {
+            duration: Duration::from_secs_f64(seconds),
+            ..Default::default()
+        },
+    )?;
+    print!("{}", out.table());
+
+    // Hard-deadline verdict for the run.
+    if out.total_misses() == 0 {
+        println!("HARD-DEADLINE OK: zero misses across {} requests", out.total_completed());
+    } else {
+        println!("DEADLINE MISSES: {}", out.total_misses());
+    }
+    Ok(())
+}

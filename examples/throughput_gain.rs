@@ -1,0 +1,45 @@
+//! Fig. 14: virtual-SM throughput improvements η₁ (over the whole GPU,
+//! Eq. 9) and η₂ (over the used SMs, Eq. 10), for the synthetic and
+//! "real" benchmark mixes.  Expect η₂ ≈ 20 % for the synthetic mix and
+//! ≈ 11 % for the real mix (the special-function class interleaves best).
+//!
+//! ```bash
+//! cargo run --release --example throughput_gain -- --sets 50
+//! ```
+
+use anyhow::Result;
+use rtgpu::gen::GenConfig;
+use rtgpu::harness::chart::{results_dir, write_csv, Series};
+use rtgpu::harness::throughput::{benchmark_mixes, throughput_gain};
+use rtgpu::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sets = args.usize_or("sets", 50);
+    let seed = args.u64_or("seed", 42);
+    args.finish();
+
+    let utils: Vec<f64> = (1..=10).map(|i| i as f64 * 0.15).collect();
+    for (mix, classes) in benchmark_mixes() {
+        let mut cfg = GenConfig::default();
+        cfg.classes = classes;
+        let pts = throughput_gain(&cfg, &utils, sets, seed, 10);
+        println!("--- fig14 mix = {mix}");
+        println!("{:>8} {:>8} {:>8} {:>10}", "util", "eta1", "eta2", "admitted");
+        for p in &pts {
+            println!(
+                "{:>8.2} {:>8.3} {:>8.3} {:>10.2}",
+                p.util, p.eta1, p.eta2, p.admitted
+            );
+        }
+        let mean_eta2: f64 =
+            pts.iter().map(|p| p.eta2).sum::<f64>() / pts.len() as f64;
+        println!("mean η₂ ({mix}): {:.1} %", 100.0 * mean_eta2);
+        let series = vec![
+            Series { name: "eta1".into(), ys: pts.iter().map(|p| p.eta1).collect() },
+            Series { name: "eta2".into(), ys: pts.iter().map(|p| p.eta2).collect() },
+        ];
+        write_csv(&results_dir().join(format!("fig14_{mix}.csv")), "util", &utils, &series)?;
+    }
+    Ok(())
+}

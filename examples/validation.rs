@@ -1,0 +1,52 @@
+//! Figs. 12/13: RTGPU schedulability analysis vs the simulated platform,
+//! under the worst-case (Fig. 12) and average (Fig. 13) execution-time
+//! models, for 5/8/10 SMs.
+//!
+//! ```bash
+//! cargo run --release --example validation -- --model wcet --sets 50
+//! cargo run --release --example validation -- --model avg  --sets 50
+//! ```
+
+use anyhow::Result;
+use rtgpu::gen::GenConfig;
+use rtgpu::harness::chart::{results_dir, table, write_csv, Series};
+use rtgpu::harness::validate::{run_validation, TimeModel};
+use rtgpu::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let models: Vec<(TimeModel, usize)> = match args.str_or("model", "both") {
+        "wcet" => vec![(TimeModel::Worst, 12)],
+        "avg" => vec![(TimeModel::Average, 13)],
+        _ => vec![(TimeModel::Worst, 12), (TimeModel::Average, 13)],
+    };
+    let sets = args.usize_or("sets", 50);
+    let seed = args.u64_or("seed", 42);
+    let sms = args.list_or("sms", &[5, 8, 10]);
+    args.finish();
+
+    let utils: Vec<f64> = (1..=12).map(|i| i as f64 * 0.2).collect();
+    for (model, fig) in models {
+        for &gn in &sms {
+            let v = run_validation(&GenConfig::default(), &utils, sets, seed, gn, model);
+            let series = vec![
+                Series { name: "analysis".into(), ys: v.analysis.clone() },
+                Series { name: "platform".into(), ys: v.platform.clone() },
+            ];
+            let label = format!("fig{fig}_gn{gn}");
+            println!("--- {label} ({model:?} execution-time model)");
+            print!("{}", table(&utils, &series, "util"));
+            // The headline gap metric recorded in EXPERIMENTS.md.
+            let gap: f64 = v
+                .platform
+                .iter()
+                .zip(&v.analysis)
+                .map(|(p, a)| (p - a).max(0.0))
+                .sum::<f64>()
+                / utils.len() as f64;
+            println!("mean analysis↔platform gap: {gap:.3}");
+            write_csv(&results_dir().join(format!("{label}.csv")), "util", &utils, &series)?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,206 @@
+"""AOT bridge: lower every Layer-2 graph to HLO **text** artifacts.
+
+This is the only place Python touches the deployment story.  ``make
+artifacts`` runs this module once; the Rust runtime then loads the emitted
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and executes
+them with the PJRT CPU client.  Python is never on the request path.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Alongside the HLO files we write ``manifest.json`` describing each
+artifact's inputs/outputs so the Rust artifact registry can type-check
+calls without hard-coding shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.pallas_kernels import DEFAULT_WORK_ITERS, KINDS
+from .model import build_inference_model, build_synthetic_app
+
+MANIFEST_VERSION = 1
+
+#: Virtual SMs in the "full device" artifacts — the paper's GTX 1080 Ti
+#: exposes 28 physical SMs, modelled as 56 virtual SMs (§6.3).
+FULL_VSM = 56
+#: Virtual SMs in the "small" artifacts used by fast tests and benches.
+SMALL_VSM = 8
+
+SYNTH_SHAPE = (64, 256)
+SYNTH_SHAPE_SMALL = (8, 32)
+
+INFER_CFG = dict(batch=8, d_in=128, hidden=[256], d_out=32)
+INFER_CFG_SMALL = dict(batch=8, d_in=16, hidden=[32], d_out=8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is essential: the default printer elides big
+    # literals as `constant({...})`, which the 0.5.1 text parser then reads
+    # as garbage — baked model weights would silently go wrong.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name: str, spec: jax.ShapeDtypeStruct) -> dict:
+    return {"name": name, "dtype": str(spec.dtype), "shape": list(spec.shape)}
+
+
+def lower_artifact(name: str, fn, arg_specs, out_dir: pathlib.Path, meta: dict) -> dict:
+    """Lower ``fn(*arg_specs)`` and write ``<name>.hlo.txt``; return manifest entry."""
+    lowered = jax.jit(fn).lower(*(s for _, s in arg_specs))
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    (out_dir / fname).write_text(text)
+    out_specs = jax.eval_shape(fn, *(s for _, s in arg_specs))
+    entry = {
+        "name": name,
+        "file": fname,
+        "inputs": [_io_entry(n, s) for n, s in arg_specs],
+        "outputs": [_io_entry(f"out{i}", s) for i, s in enumerate(out_specs)],
+        **meta,
+    }
+    print(f"  {fname}: {len(text)} chars")
+    return entry
+
+
+def smoke_fn(x, y):
+    """Trivial sanity artifact: matmul(x, y) + 2 (matches the reference demo)."""
+    return (jnp.matmul(x, y) + 2.0,)
+
+
+def _golden_input(shape) -> jax.Array:
+    """Deterministic input grid used by the golden files."""
+    n = 1
+    for d in shape:
+        n *= d
+    return (jnp.arange(n, dtype=jnp.float32) / 37.0 - 3.0).reshape(shape)
+
+
+def write_goldens(out_dir: pathlib.Path, entries: list[dict]) -> None:
+    """For every small persistent-thread artifact, execute the Layer-2 fn on
+    a deterministic input and record (sm, x, out) so the Rust integration
+    tests can verify the PJRT path end-to-end against JAX numerics."""
+    golden_dir = out_dir / "golden"
+    golden_dir.mkdir(parents=True, exist_ok=True)
+    for entry in entries:
+        name = entry["name"]
+        if not name.endswith("_small"):
+            continue
+        kind = entry["kind"]
+        num_vsm = entry["num_vsm"]
+        x_shape = entry["inputs"][1]["shape"]
+        x = _golden_input(x_shape)
+        sm = jnp.array([0, num_vsm - 1], jnp.int32)
+        if kind == "inference":
+            fn, _, _ = build_inference_model(num_vsm=num_vsm, **INFER_CFG_SMALL)
+        else:
+            fn = build_synthetic_app(kind, tuple(x_shape), num_vsm)
+        (out,) = jax.jit(fn)(sm, x)
+        golden = {
+            "name": name,
+            "sm": [0, num_vsm - 1],
+            "x": [float(v) for v in x.reshape(-1)],
+            "out": [float(v) for v in jnp.asarray(out).reshape(-1)],
+        }
+        (golden_dir / f"{name}.json").write_text(json.dumps(golden) + "\n")
+        print(f"  golden/{name}.json")
+
+
+def build_all(out_dir: pathlib.Path, *, small_only: bool = False) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    sm_spec = ("sm", _spec((2,), jnp.int32))
+    entries = []
+
+    entries.append(
+        lower_artifact(
+            "smoke", smoke_fn,
+            [("x", _spec((2, 2))), ("y", _spec((2, 2)))],
+            out_dir, {"kind": "smoke", "num_vsm": 0},
+        )
+    )
+
+    # Small artifacts (always built; used by rust integration tests/benches).
+    for kind in KINDS:
+        fn = build_synthetic_app(kind, SYNTH_SHAPE_SMALL, SMALL_VSM)
+        entries.append(
+            lower_artifact(
+                f"synthetic_{kind}_small", fn,
+                [sm_spec, ("x", _spec(SYNTH_SHAPE_SMALL))],
+                out_dir,
+                {"kind": kind, "num_vsm": SMALL_VSM, "work_iters": DEFAULT_WORK_ITERS},
+            )
+        )
+    fn, _, _ = build_inference_model(num_vsm=SMALL_VSM, **INFER_CFG_SMALL)
+    entries.append(
+        lower_artifact(
+            "inference_small", fn,
+            [sm_spec, ("x", _spec((INFER_CFG_SMALL["batch"], INFER_CFG_SMALL["d_in"])))],
+            out_dir,
+            {"kind": "inference", "num_vsm": SMALL_VSM, **INFER_CFG_SMALL},
+        )
+    )
+
+    if not small_only:
+        # Full-device artifacts (56 virtual SMs, the paper's 1080 Ti model).
+        for kind in KINDS:
+            fn = build_synthetic_app(kind, SYNTH_SHAPE, FULL_VSM)
+            entries.append(
+                lower_artifact(
+                    f"synthetic_{kind}", fn,
+                    [sm_spec, ("x", _spec(SYNTH_SHAPE))],
+                    out_dir,
+                    {"kind": kind, "num_vsm": FULL_VSM, "work_iters": DEFAULT_WORK_ITERS},
+                )
+            )
+        fn, _, _ = build_inference_model(num_vsm=FULL_VSM, **INFER_CFG)
+        entries.append(
+            lower_artifact(
+                "inference", fn,
+                [sm_spec, ("x", _spec((INFER_CFG["batch"], INFER_CFG["d_in"])))],
+                out_dir,
+                {"kind": "inference", "num_vsm": FULL_VSM, **INFER_CFG},
+            )
+        )
+
+    write_goldens(out_dir, entries)
+    manifest = {"version": MANIFEST_VERSION, "artifacts": entries}
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir", default="../artifacts", help="artifact output directory"
+    )
+    parser.add_argument(
+        "--small-only", action="store_true",
+        help="emit only the small fast artifacts (CI mode)",
+    )
+    args = parser.parse_args()
+    build_all(pathlib.Path(args.out_dir), small_only=args.small_only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""Persistent-thread style Pallas kernels (Layer 1).
+
+These kernels are the TPU/Pallas translation of RTGPU's Algorithm 1
+(pinned self-interleaving persistent threads).  The mapping, documented in
+DESIGN.md §Hardware-Adaptation, is:
+
+  CUDA SM                      -> Pallas grid program (program_id)
+  launch 2M persistent blocks  -> grid = (num_vsm,)  (one program / virtual SM)
+  workload pinning (%smid test)-> pl.when(sm_start <= pid <= sm_end)
+  early return on wrong SM     -> inactive program writes nothing
+  persistent-thread stride loop-> while-loop over rows with stride = #lanes
+  self-interleaving half split -> lower half of the pinned lanes processes
+                                  rows [0, R/2), upper half rows [R/2, R)
+
+Every kernel takes ``(sm, x)`` where ``sm`` is an ``int32[2]`` holding the
+*inclusive* virtual-SM range ``[sm_start, sm_end]`` selected at runtime by
+the Rust coordinator, and ``x`` is the workload.  The number of active
+virtual SMs ``nact = sm_end - sm_start + 1`` MUST be even and >= 2 (the
+coordinator allocates whole physical SMs = pairs of virtual SMs), and the
+row count ``R`` must be even.  Work is redistributed over the active lanes
+so the full output is produced for ANY valid pinned range -- exactly the
+behaviour of Algorithm 1.
+
+Kernels are lowered with ``interpret=True``: real-TPU Pallas lowering emits
+a Mosaic custom-call that the CPU PJRT plugin cannot execute.  interpret
+mode traces to plain HLO, so the artifact runs anywhere; it is the
+correctness path, not a TPU-performance proxy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# ---------------------------------------------------------------------------
+# Synthetic row workloads (the paper's five synthetic benchmark classes).
+#
+# Each function maps an array of shape (..., C) to the same shape, applying a
+# fixed number of "operations" per element along the last axis.  They are
+# written so that applying them to a (1, C) row slice inside the kernel is
+# bit-identical to applying them to the full (R, C) array in the reference
+# oracle (all ops are elementwise or last-axis-local).
+# ---------------------------------------------------------------------------
+
+#: Iterations of the per-element op chains.  Kept small so interpret-mode
+#: artifacts stay fast; the characterization example scales work via the
+#: ``work_iters`` builder argument instead.
+DEFAULT_WORK_ITERS = 8
+
+#: Kernel classes, in the paper's order (Fig 4 / Fig 6).
+KINDS = ("compute", "branch", "memory", "special", "comprehensive")
+
+
+def rowfn_compute(x: jax.Array, iters: int) -> jax.Array:
+    """Arithmetic kernel: a chain of fused multiply-adds (CUDA-core analog)."""
+    y = x
+    for _ in range(iters):
+        y = y * 1.0009765625 + 0.25
+        y = y * 0.9990234375 - 0.25
+    return y
+
+
+def rowfn_branch(x: jax.Array, iters: int) -> jax.Array:
+    """Branch kernel: data-dependent select chains (divergent-warp analog)."""
+    y = x
+    for _ in range(iters):
+        y = jnp.where(y > 0.0, y * 0.5 + 1.0, y * 1.5 - 1.0)
+        y = jnp.where(jnp.abs(y) > 4.0, y * 0.25, y)
+    return y
+
+
+def rowfn_memory(x: jax.Array, iters: int) -> jax.Array:
+    """Memory kernel: shuffles within the row (LD/ST-unit analog)."""
+    y = x
+    for _ in range(iters):
+        y = jnp.roll(y, 1, axis=-1) * 0.5 + jnp.flip(y, axis=-1) * 0.5
+    return y
+
+
+def rowfn_special(x: jax.Array, iters: int) -> jax.Array:
+    """Special-function kernel: transcendental ops (SFU analog)."""
+    y = x
+    for _ in range(max(1, iters // 2)):
+        y = jnp.sin(y) * jnp.cos(y) + jnp.exp(-jnp.abs(y))
+    return y
+
+
+def rowfn_comprehensive(x: jax.Array, iters: int) -> jax.Array:
+    """Comprehensive kernel: all four op classes chained, as in §4.2."""
+    quarter = max(1, iters // 4)
+    y = rowfn_compute(x, quarter)
+    y = rowfn_branch(y, quarter)
+    y = rowfn_memory(y, quarter)
+    y = rowfn_special(y, quarter)
+    return y
+
+
+ROW_FNS: dict[str, Callable[[jax.Array, int], jax.Array]] = {
+    "compute": rowfn_compute,
+    "branch": rowfn_branch,
+    "memory": rowfn_memory,
+    "special": rowfn_special,
+    "comprehensive": rowfn_comprehensive,
+}
+
+
+# ---------------------------------------------------------------------------
+# Persistent-thread grid machinery
+# ---------------------------------------------------------------------------
+
+
+def _pt_row_loop(pid, sm_ref, n_rows: int, interleave: bool, process_row):
+    """Shared persistent-thread control structure (Algorithm 1).
+
+    Runs ``process_row(r)`` for every row ``r`` owned by this program under
+    pinned (self-interleaved) work distribution.  ``process_row`` performs
+    the load/compute/store for one row.
+    """
+    start = sm_ref[0]
+    end = sm_ref[1]
+
+    @pl.when((pid >= start) & (pid <= end))
+    def _():
+        lane = pid - start
+        nact = end - start + 1
+        if interleave:
+            # Self-interleaving: the pinned lanes split into two streams
+            # that interleave on the same physical SMs.  Stream 0 covers
+            # rows [0, R/2), stream 1 covers [R/2, R).
+            half = lax.max(nact // 2, 1)
+            stream = lane // half
+            slot = lane % half
+            r2 = n_rows // 2
+            base = stream * r2
+            limit = base + r2
+            stride = half
+        else:
+            # Naive (non-interleaved) distribution: one stream over all rows.
+            base = 0
+            limit = n_rows
+            slot = lane
+            stride = nact
+
+        def cond(r):
+            return r < limit
+
+        def body(r):
+            process_row(r)
+            return r + stride
+
+        lax.while_loop(cond, body, base + slot)
+
+
+def make_pt_kernel(
+    kind: str,
+    shape: tuple[int, int],
+    num_vsm: int,
+    *,
+    dtype=jnp.float32,
+    work_iters: int = DEFAULT_WORK_ITERS,
+    interleave: bool = True,
+    interpret: bool = True,
+):
+    """Build a pinned self-interleaving persistent-thread synthetic kernel.
+
+    Returns ``apply(sm, x) -> y`` with ``sm: int32[2]`` (inclusive virtual-SM
+    range) and ``x: dtype[R, C]``; ``y`` has the same shape as ``x``.
+    """
+    if kind not in ROW_FNS:
+        raise ValueError(f"unknown kernel kind {kind!r}; expected one of {KINDS}")
+    n_rows, n_cols = shape
+    if n_rows % 2 != 0:
+        raise ValueError(f"row count must be even for self-interleaving, got {n_rows}")
+    if num_vsm < 2:
+        raise ValueError(f"need at least 2 virtual SMs, got {num_vsm}")
+    rowfn = ROW_FNS[kind]
+
+    def kernel(sm_ref, x_ref, o_ref):
+        pid = pl.program_id(0)
+
+        def process_row(r):
+            row = pl.load(x_ref, (pl.dslice(r, 1), slice(None)))
+            pl.store(o_ref, (pl.dslice(r, 1), slice(None)), rowfn(row, work_iters))
+
+        _pt_row_loop(pid, sm_ref, n_rows, interleave, process_row)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(num_vsm,),
+        out_shape=jax.ShapeDtypeStruct((n_rows, n_cols), dtype),
+        interpret=interpret,
+    )
+
+    def apply(sm: jax.Array, x: jax.Array) -> jax.Array:
+        return call(jnp.asarray(sm, jnp.int32), x.astype(dtype))
+
+    return apply
+
+
+def make_pt_linear(
+    batch: int,
+    d_in: int,
+    d_out: int,
+    num_vsm: int,
+    *,
+    activation: str = "relu",
+    dtype=jnp.float32,
+    interleave: bool = True,
+    interpret: bool = True,
+):
+    """Persistent-thread linear layer: each program computes pinned rows of
+    ``act(x @ w + b)``.
+
+    This is the MXU-facing kernel: per-row ``(1, D) @ (D, H)`` contractions,
+    the unit of work the paper's DNN-serving motivation targets.  Returns
+    ``apply(sm, x, w, b) -> y`` with ``y: dtype[batch, d_out]``.
+    """
+    if batch % 2 != 0:
+        raise ValueError(f"batch must be even for self-interleaving, got {batch}")
+    if activation not in ("relu", "none", "gelu"):
+        raise ValueError(f"unknown activation {activation!r}")
+
+    def act(v):
+        if activation == "relu":
+            return jnp.maximum(v, 0.0)
+        if activation == "gelu":
+            return jax.nn.gelu(v)
+        return v
+
+    def kernel(sm_ref, x_ref, w_ref, b_ref, o_ref):
+        pid = pl.program_id(0)
+
+        def process_row(r):
+            row = pl.load(x_ref, (pl.dslice(r, 1), slice(None)))
+            out = act(
+                jnp.dot(row, w_ref[...], preferred_element_type=jnp.float32)
+                + b_ref[...][None, :]
+            )
+            pl.store(o_ref, (pl.dslice(r, 1), slice(None)), out.astype(o_ref.dtype))
+
+        _pt_row_loop(pid, sm_ref, batch, interleave, process_row)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(num_vsm,),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), dtype),
+        interpret=interpret,
+    )
+
+    def apply(sm, x, w, b):
+        return call(jnp.asarray(sm, jnp.int32), x.astype(dtype), w.astype(dtype), b.astype(dtype))
+
+    return apply
+
+
+@functools.lru_cache(maxsize=None)
+def full_range(num_vsm: int) -> tuple[int, int]:
+    """The pinned range covering the whole device (all virtual SMs)."""
+    return (0, num_vsm - 1)

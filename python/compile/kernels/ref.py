@@ -1,0 +1,43 @@
+"""Pure-jnp correctness oracles for the persistent-thread Pallas kernels.
+
+Every oracle applies the *same* op chain as the kernel's per-row function,
+vectorised over the full array.  Because the kernel's row functions only use
+elementwise and last-axis-local ops, the full-array application is
+numerically identical to the kernel's row-at-a-time application: pytest
+asserts exact-tolerance ``allclose`` between the two regardless of the
+pinned virtual-SM range or interleave mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .pallas_kernels import DEFAULT_WORK_ITERS, KINDS, ROW_FNS
+
+
+def ref_synthetic(kind: str, x: jax.Array, work_iters: int = DEFAULT_WORK_ITERS) -> jax.Array:
+    """Oracle for ``make_pt_kernel(kind, ...)``: rowfn over the whole array."""
+    if kind not in ROW_FNS:
+        raise ValueError(f"unknown kernel kind {kind!r}; expected one of {KINDS}")
+    return ROW_FNS[kind](x, work_iters)
+
+
+def ref_linear(x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "relu") -> jax.Array:
+    """Oracle for ``make_pt_linear``: a plain dense layer."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y.astype(x.dtype)
+
+
+def ref_mlp(x, params, activations):
+    """Oracle for the L2 inference model: a stack of dense layers."""
+    y = x
+    for (w, b), a in zip(params, activations):
+        y = ref_linear(y, w, b, a)
+    return y

@@ -1,0 +1,118 @@
+"""Layer 2 — JAX compute graphs for the RTGPU workloads.
+
+Two families of "GPU segment" payloads, both built on the Layer-1
+persistent-thread Pallas kernels:
+
+* **Synthetic applications** — the paper's five synthetic benchmark classes
+  (§4.2).  One kernel invocation per GPU segment; the virtual-SM range is a
+  runtime input so the Rust coordinator can pin each segment to its
+  federated allocation without recompiling.
+
+* **Inference model** — a small dense MLP whose layers are
+  persistent-thread linear kernels.  This is the DNN-serving workload the
+  paper's introduction motivates (object detection / prediction tasks on a
+  shared GPU).  Weights are baked into the artifact at AOT time (constants
+  in the HLO), so the serving path ships a self-contained executable.
+
+Everything here is build-time Python: ``aot.py`` lowers these functions to
+HLO text once, and the Rust runtime executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pallas_kernels import (
+    DEFAULT_WORK_ITERS,
+    make_pt_kernel,
+    make_pt_linear,
+)
+from .kernels.ref import ref_mlp
+
+
+def build_synthetic_app(
+    kind: str,
+    shape: tuple[int, int],
+    num_vsm: int,
+    *,
+    work_iters: int = DEFAULT_WORK_ITERS,
+    interleave: bool = True,
+) -> Callable[[jax.Array, jax.Array], tuple[jax.Array]]:
+    """A one-GPU-segment synthetic application: ``fn(sm, x) -> (y,)``."""
+    kernel = make_pt_kernel(
+        kind, shape, num_vsm, work_iters=work_iters, interleave=interleave
+    )
+
+    def fn(sm, x):
+        return (kernel(sm, x),)
+
+    return fn
+
+
+def mlp_params(
+    d_in: int,
+    hidden: Sequence[int],
+    d_out: int,
+    *,
+    seed: int = 42,
+) -> list[tuple[jax.Array, jax.Array]]:
+    """Deterministic MLP weights (baked into the artifact as constants)."""
+    dims = [d_in, *hidden, d_out]
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i in range(len(dims) - 1):
+        key, wk, bk = jax.random.split(key, 3)
+        scale = (2.0 / dims[i]) ** 0.5
+        w = jax.random.normal(wk, (dims[i], dims[i + 1]), jnp.float32) * scale
+        b = jax.random.normal(bk, (dims[i + 1],), jnp.float32) * 0.01
+        params.append((w, b))
+    return params
+
+
+def mlp_activations(n_layers: int) -> list[str]:
+    """relu on every hidden layer, linear output layer."""
+    return ["relu"] * (n_layers - 1) + ["none"]
+
+
+def build_inference_model(
+    batch: int,
+    d_in: int,
+    hidden: Sequence[int],
+    d_out: int,
+    num_vsm: int,
+    *,
+    seed: int = 42,
+    interleave: bool = True,
+):
+    """The served model: a stack of persistent-thread linear kernels.
+
+    Returns ``(fn, params, activations)`` where ``fn(sm, x) -> (logits,)``.
+    Each layer is pinned to the same runtime virtual-SM range — one GPU
+    segment from the scheduler's point of view.
+    """
+    params = mlp_params(d_in, hidden, d_out, seed=seed)
+    activations = mlp_activations(len(params))
+    dims = [d_in, *hidden, d_out]
+    layers = [
+        make_pt_linear(
+            batch, dims[i], dims[i + 1], num_vsm,
+            activation=activations[i], interleave=interleave,
+        )
+        for i in range(len(params))
+    ]
+
+    def fn(sm, x):
+        y = x
+        for layer, (w, b) in zip(layers, params):
+            y = layer(sm, y, w, b)
+        return (y,)
+
+    return fn, params, activations
+
+
+def ref_inference(x, params, activations):
+    """Oracle for :func:`build_inference_model` (pure jnp, no Pallas)."""
+    return ref_mlp(x, params, activations)

@@ -1,0 +1,82 @@
+"""AOT bridge: HLO text emission, manifest integrity, golden generation."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import build_synthetic_app
+
+
+def test_to_hlo_text_contains_entry_and_full_constants(tmp_path):
+    # Large closed-over constants MUST be printed in full — the 0.5.1 HLO
+    # text parser reads `constant({...})` elisions as garbage.
+    w = jnp.linspace(-1.0, 1.0, 16 * 32).reshape(16, 32)
+
+    def fn(x):
+        return (jnp.dot(x, w),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((8, 16), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "{...}" not in text, "large constants were elided"
+
+
+def test_lower_artifact_writes_file_and_entry(tmp_path):
+    fn = build_synthetic_app("compute", (8, 16), 4)
+    entry = aot.lower_artifact(
+        "unit_compute",
+        fn,
+        [("sm", aot._spec((2,), jnp.int32)), ("x", aot._spec((8, 16)))],
+        tmp_path,
+        {"kind": "compute", "num_vsm": 4},
+    )
+    assert (tmp_path / "unit_compute.hlo.txt").exists()
+    assert entry["inputs"][0] == {"name": "sm", "dtype": "int32", "shape": [2]}
+    assert entry["outputs"][0]["shape"] == [8, 16]
+
+
+@pytest.mark.slow
+def test_build_all_small_only(tmp_path):
+    manifest = aot.build_all(tmp_path, small_only=True)
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert "smoke" in names
+    for kind in ("compute", "branch", "memory", "special", "comprehensive"):
+        assert f"synthetic_{kind}_small" in names
+    assert "inference_small" in names
+    # manifest.json parses and matches the in-memory copy
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk == manifest
+    # goldens exist for every small persistent-thread artifact
+    for a in manifest["artifacts"]:
+        if a["name"].endswith("_small"):
+            golden = json.loads(
+                (tmp_path / "golden" / f"{a['name']}.json").read_text()
+            )
+            x_len = 1
+            for d in a["inputs"][1]["shape"]:
+                x_len *= d
+            assert len(golden["x"]) == x_len
+            out_len = 1
+            for d in a["outputs"][0]["shape"]:
+                out_len *= d
+            assert len(golden["out"]) == out_len
+            assert golden["sm"] == [0, a["num_vsm"] - 1]
+
+
+def test_repo_manifest_is_consistent():
+    """If `make artifacts` has run, the checked manifest must be coherent."""
+    art_dir = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    manifest_path = art_dir / "manifest.json"
+    if not manifest_path.exists():
+        pytest.skip("artifacts not built")
+    manifest = json.loads(manifest_path.read_text())
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    for a in manifest["artifacts"]:
+        assert (art_dir / a["file"]).exists(), f"missing {a['file']}"
+        text = (art_dir / a["file"]).read_text()
+        assert "ENTRY" in text
+        assert "{...}" not in text, f"{a['name']} has elided constants"

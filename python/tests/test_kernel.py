@@ -1,0 +1,208 @@
+"""Layer-1 correctness: persistent-thread Pallas kernels vs the pure-jnp
+oracle — the CORE correctness signal for the AOT artifacts.
+
+Covers (per DESIGN.md §4): every synthetic kernel class, workload pinning
+(arbitrary valid virtual-SM ranges must not change results), self-
+interleaving vs naive distribution, shape/dtype sweeps via hypothesis, and
+the contract violations that must raise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pallas_kernels import (
+    KINDS,
+    full_range,
+    make_pt_kernel,
+    make_pt_linear,
+)
+from compile.kernels.ref import ref_linear, ref_synthetic
+
+# f32 tolerance: the kernel and the oracle trace through different XLA
+# fusions, so bit-equality is not expected; 5e-5 relative is.
+RTOL = 5e-5
+ATOL = 1e-6
+
+
+def grid_input(shape, offset=0.0):
+    n = int(np.prod(shape))
+    return (jnp.arange(n, dtype=jnp.float32) / 37.0 - 3.0 + offset).reshape(shape)
+
+
+def assert_matches_ref(kind, shape, num_vsm, sm_range, **kw):
+    kernel = make_pt_kernel(kind, shape, num_vsm, **kw)
+    x = grid_input(shape)
+    got = kernel(jnp.array(sm_range, jnp.int32), x)
+    want = ref_synthetic(kind, x, kw.get("work_iters", 8))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Every kernel class, full device
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_kernel_matches_ref_full_device(kind):
+    assert_matches_ref(kind, (8, 32), 8, full_range(8))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_kernel_matches_ref_larger_shape(kind):
+    assert_matches_ref(kind, (16, 64), 8, full_range(8))
+
+
+# ---------------------------------------------------------------------------
+# Workload pinning: any valid pinned range produces the full result (§4.4)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "sm_range", [(0, 1), (0, 3), (2, 5), (4, 7), (6, 7), (0, 7), (1, 4)]
+)
+def test_pinning_is_result_invariant(sm_range):
+    assert_matches_ref("compute", (8, 32), 8, sm_range)
+
+
+def test_pinning_even_requirement_is_interleave_only():
+    # Odd active counts are legal for the naive (non-interleaved) variant.
+    assert_matches_ref("compute", (8, 32), 8, (3, 5), interleave=False)
+    assert_matches_ref("compute", (8, 32), 8, (6, 6), interleave=False)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_noninterleaved_matches_ref(kind):
+    assert_matches_ref(kind, (8, 32), 8, (0, 7), interleave=False)
+
+
+# ---------------------------------------------------------------------------
+# Work scaling (the C knob of Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("work_iters", [1, 4, 16])
+def test_work_iters_scaling(work_iters):
+    assert_matches_ref("compute", (8, 32), 8, (0, 7), work_iters=work_iters)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, ranges, kinds
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kind=st.sampled_from(KINDS),
+    rows_half=st.integers(1, 8),
+    cols=st.integers(1, 48),
+    data=st.data(),
+)
+def test_shape_and_range_sweep(kind, rows_half, cols, data):
+    num_vsm = 8
+    shape = (2 * rows_half, cols)
+    # Even-width ranges only (interleaved contract).
+    start = data.draw(st.integers(0, num_vsm - 2))
+    max_pairs = (num_vsm - start) // 2
+    width = 2 * data.draw(st.integers(1, max_pairs))
+    sm_range = (start, start + width - 1)
+    assert_matches_ref(kind, shape, num_vsm, sm_range)
+
+
+@settings(max_examples=10, deadline=None)
+@given(num_vsm=st.sampled_from([2, 4, 6, 12, 16]))
+def test_grid_size_sweep(num_vsm):
+    assert_matches_ref("comprehensive", (8, 16), num_vsm, (0, num_vsm - 1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(offset=st.floats(-50.0, 50.0, allow_nan=False))
+def test_input_distribution_sweep(offset):
+    kernel = make_pt_kernel("branch", (8, 16), 8)
+    x = grid_input((8, 16), offset)
+    got = kernel(jnp.array([0, 7], jnp.int32), x)
+    want = ref_synthetic("branch", x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# dtype handling
+# ---------------------------------------------------------------------------
+
+
+def test_bfloat16_compute_kernel():
+    kernel = make_pt_kernel("compute", (8, 16), 8, dtype=jnp.bfloat16)
+    x = grid_input((8, 16))
+    got = kernel(jnp.array([0, 7], jnp.int32), x).astype(jnp.float32)
+    want = ref_synthetic("compute", x.astype(jnp.bfloat16)).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0.05, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# pt_linear (the MXU-facing kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ["relu", "none", "gelu"])
+def test_linear_matches_ref(activation):
+    B, D, H = 8, 16, 12
+    lin = make_pt_linear(B, D, H, 8, activation=activation)
+    x = grid_input((B, D))
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (D, H), jnp.float32) * 0.3
+    b = jnp.linspace(-1.0, 1.0, H)
+    got = lin(jnp.array([0, 7], jnp.int32), x, w, b)
+    want = ref_linear(x, w, b, activation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batch_half=st.integers(1, 6),
+    d_in=st.integers(1, 24),
+    d_out=st.integers(1, 24),
+    start_pair=st.integers(0, 3),
+)
+def test_linear_pinning_sweep(batch_half, d_in, d_out, start_pair):
+    B = 2 * batch_half
+    lin = make_pt_linear(B, d_in, d_out, 8)
+    x = grid_input((B, d_in))
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * 0.2
+    b = jnp.zeros((d_out,))
+    sm_range = (2 * start_pair, 7)
+    got = lin(jnp.array(sm_range, jnp.int32), x, w, b)
+    want = ref_linear(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Contract violations
+# ---------------------------------------------------------------------------
+
+
+def test_odd_rows_rejected():
+    with pytest.raises(ValueError, match="even"):
+        make_pt_kernel("compute", (7, 16), 8)
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown kernel kind"):
+        make_pt_kernel("quantum", (8, 16), 8)
+
+
+def test_tiny_grid_rejected():
+    with pytest.raises(ValueError, match="virtual SMs"):
+        make_pt_kernel("compute", (8, 16), 1)
+
+
+def test_odd_batch_rejected_for_linear():
+    with pytest.raises(ValueError, match="even"):
+        make_pt_linear(7, 16, 8, 8)
+
+
+def test_unknown_activation_rejected():
+    with pytest.raises(ValueError, match="activation"):
+        make_pt_linear(8, 16, 8, 8, activation="swish")

@@ -1,0 +1,88 @@
+"""Layer-2 correctness: synthetic applications and the inference model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pallas_kernels import KINDS
+from compile.kernels.ref import ref_synthetic
+from compile.model import (
+    build_inference_model,
+    build_synthetic_app,
+    mlp_activations,
+    mlp_params,
+    ref_inference,
+)
+
+
+def grid_input(shape):
+    n = int(np.prod(shape))
+    return (jnp.arange(n, dtype=jnp.float32) / 37.0 - 3.0).reshape(shape)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_synthetic_app_matches_ref(kind):
+    fn = build_synthetic_app(kind, (8, 32), 8)
+    x = grid_input((8, 32))
+    (got,) = fn(jnp.array([0, 7], jnp.int32), x)
+    want = ref_synthetic(kind, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-5, atol=1e-6)
+
+
+def test_inference_matches_ref_oracle():
+    fn, params, acts = build_inference_model(8, 16, [32], 8, num_vsm=8)
+    x = grid_input((8, 16))
+    (got,) = fn(jnp.array([0, 7], jnp.int32), x)
+    want = ref_inference(x, params, acts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_inference_pinning_invariant():
+    fn, params, acts = build_inference_model(8, 16, [32], 8, num_vsm=8)
+    x = grid_input((8, 16))
+    want = ref_inference(x, params, acts)
+    for rng in [(0, 1), (2, 7), (4, 5)]:
+        (got,) = fn(jnp.array(rng, jnp.int32), x)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_inference_deterministic_weights():
+    p1 = mlp_params(16, [32], 8, seed=42)
+    p2 = mlp_params(16, [32], 8, seed=42)
+    for (w1, b1), (w2, b2) in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+        np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    p3 = mlp_params(16, [32], 8, seed=43)
+    assert not np.allclose(np.asarray(p1[0][0]), np.asarray(p3[0][0]))
+
+
+def test_mlp_activations_shape():
+    assert mlp_activations(3) == ["relu", "relu", "none"]
+    assert mlp_activations(1) == ["none"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    hidden=st.lists(st.integers(4, 32), min_size=1, max_size=3),
+    d_out=st.integers(2, 16),
+)
+def test_inference_depth_sweep(hidden, d_out):
+    fn, params, acts = build_inference_model(4, 8, hidden, d_out, num_vsm=4)
+    x = grid_input((4, 8))
+    (got,) = fn(jnp.array([0, 3], jnp.int32), x)
+    assert got.shape == (4, d_out)
+    want = ref_inference(x, params, acts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_inference_jit_roundtrip():
+    fn, params, acts = build_inference_model(8, 16, [32], 8, num_vsm=8)
+    x = grid_input((8, 16))
+    sm = jnp.array([0, 7], jnp.int32)
+    (eager,) = fn(sm, x)
+    (jitted,) = jax.jit(fn)(sm, x)
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted), rtol=1e-6)

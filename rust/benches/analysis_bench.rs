@@ -1,0 +1,66 @@
+//! Analysis hot-path benchmarks + the DESIGN.md §6 ablations:
+//! grid vs greedy allocation search, and the Theorem-5.6 bound ablation
+//! (R1 / R2 / R3 contributions, acceptance + runtime).
+
+use rtgpu::analysis::e2e::E2eBounds;
+use rtgpu::analysis::rtgpu::{evaluate, schedule, RtgpuOpts, Search};
+use rtgpu::analysis::workload::SuspView;
+use rtgpu::analysis::{analyze, Approach};
+use rtgpu::gen::{generate_batch, GenConfig};
+use rtgpu::util::bench::{bench, black_box, header};
+
+fn main() {
+    println!("{}", header());
+    let cfg = GenConfig::default();
+    let sets = generate_batch(42, &cfg, 1.0, 50);
+
+    // Workload function (the innermost kernel of every fixed point).
+    let view = SuspView::new(vec![2.0, 3.0, 1.5, 2.5, 2.0], vec![4.0, 6.0, 3.0, 5.0], 10.0, 40.0);
+    println!("{}", bench("workload_fn_max_t200", || {
+        black_box(view.max_workload(black_box(200.0)));
+    }).row());
+
+    // Single-allocation evaluation (the unit of the grid search).
+    let opts = RtgpuOpts::default();
+    println!("{}", bench("rtgpu_evaluate_one_allocation", || {
+        black_box(evaluate(&sets[0], &vec![2, 2, 2, 2, 2], &opts));
+    }).row());
+
+    // Full schedulability tests.
+    for (name, ap) in [
+        ("rtgpu_grid_full_test", Approach::Rtgpu),
+        ("selfsusp_full_test", Approach::SelfSuspension),
+        ("stgm_full_test", Approach::Stgm),
+    ] {
+        let mut i = 0;
+        println!("{}", bench(name, || {
+            black_box(analyze(&sets[i % sets.len()], 10, ap, Search::Grid));
+            i += 1;
+        }).row());
+    }
+
+    // --- Ablation: grid vs greedy (runtime + schedulability loss) -----
+    let mut i = 0;
+    println!("{}", bench("rtgpu_greedy_full_test", || {
+        black_box(schedule(&sets[i % sets.len()], 10, &opts, Search::Greedy));
+        i += 1;
+    }).row());
+    let grid_ok = sets.iter().filter(|ts| schedule(ts, 10, &opts, Search::Grid).schedulable).count();
+    let greedy_ok =
+        sets.iter().filter(|ts| schedule(ts, 10, &opts, Search::Greedy).schedulable).count();
+    println!("\nallocation ablation @util 1.0: grid accepts {grid_ok}/50, greedy accepts {greedy_ok}/50");
+
+    // --- Ablation: Theorem 5.6 bounds ---------------------------------
+    println!("\nbound ablation @util 1.0 (accepted sets out of 50):");
+    for (name, bounds) in [
+        ("R1 only  ", E2eBounds { use_r1: true, use_r2: false, use_r3: false }),
+        ("R2 only  ", E2eBounds { use_r1: false, use_r2: true, use_r3: false }),
+        ("R3 only  ", E2eBounds { use_r1: false, use_r2: false, use_r3: true }),
+        ("R1+R2    ", E2eBounds { use_r1: true, use_r2: true, use_r3: false }),
+        ("R1+R2+R3 ", E2eBounds::default()),
+    ] {
+        let o = RtgpuOpts { bounds, ..Default::default() };
+        let ok = sets.iter().filter(|ts| schedule(ts, 10, &o, Search::Grid).schedulable).count();
+        println!("  {name} accepts {ok}/50");
+    }
+}

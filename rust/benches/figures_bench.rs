@@ -1,0 +1,55 @@
+//! Figure-regeneration timing: how long each paper experiment takes with
+//! this implementation (reduced set counts; the examples run the full
+//! versions).  This is the end-to-end harness benchmark of the §Perf
+//! pass.
+
+use rtgpu::gen::GenConfig;
+use rtgpu::harness::sweep::{run_sweep, SweepSpec};
+use rtgpu::harness::throughput::throughput_gain;
+use rtgpu::harness::validate::{run_validation, TimeModel};
+use rtgpu::util::bench::{bench_n, black_box, header};
+
+fn main() {
+    println!("{}", header());
+
+    // Fig 8-style sweep (one ratio, 20 sets/point, 12 points, 3 tests).
+    println!("{}", bench_n("fig8_one_ratio_sweep_20sets", 0, 3, || {
+        let spec = SweepSpec::quick(GenConfig::default().with_length_ratio(1.0, 2.0), 42);
+        black_box(run_sweep(&spec, 0).len());
+    }).row());
+
+    // Fig 9/10 variants.
+    println!("{}", bench_n("fig9_subtasks7_sweep_20sets", 0, 3, || {
+        let spec = SweepSpec::quick(GenConfig::default().with_subtasks(7), 42);
+        black_box(run_sweep(&spec, 0).len());
+    }).row());
+    println!("{}", bench_n("fig10_tasks7_sweep_20sets", 0, 3, || {
+        let spec = SweepSpec::quick(GenConfig::default().with_tasks(7), 42);
+        black_box(run_sweep(&spec, 0).len());
+    }).row());
+
+    // Fig 11 (small platform → bigger search space per set).
+    println!("{}", bench_n("fig11_gn5_sweep_20sets", 0, 3, || {
+        let mut spec = SweepSpec::quick(GenConfig::default(), 42);
+        spec.gn_total = 5;
+        black_box(run_sweep(&spec, 0).len());
+    }).row());
+
+    // Fig 12/13 validation (analysis + simulation per set).
+    let utils: Vec<f64> = (1..=6).map(|i| i as f64 * 0.4).collect();
+    println!("{}", bench_n("fig12_validation_10sets", 0, 3, || {
+        black_box(run_validation(&GenConfig::default(), &utils, 10, 42, 10, TimeModel::Worst)
+            .analysis
+            .len());
+    }).row());
+    println!("{}", bench_n("fig13_validation_10sets", 0, 3, || {
+        black_box(run_validation(&GenConfig::default(), &utils, 10, 42, 10, TimeModel::Average)
+            .analysis
+            .len());
+    }).row());
+
+    // Fig 14 throughput gains.
+    println!("{}", bench_n("fig14_throughput_10sets", 0, 3, || {
+        black_box(throughput_gain(&GenConfig::default(), &utils, 10, 42, 10).len());
+    }).row());
+}

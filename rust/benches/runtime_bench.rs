@@ -1,0 +1,47 @@
+//! PJRT runtime hot path: artifact execution latency per kernel class and
+//! input handling overhead — the L3 serving-path numbers behind the
+//! EXPERIMENTS.md §Perf table.
+
+use rtgpu::runtime::{artifact_dir, Engine};
+use rtgpu::util::bench::{bench_n, black_box, header};
+
+fn main() {
+    let engine = match Engine::load_dir_filtered(&artifact_dir(), |m| m.name.ends_with("_small")) {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!("skipping runtime bench (run `make artifacts` first): {err:#}");
+            return;
+        }
+    };
+    println!("platform: {}", engine.platform_name());
+    println!("{}", header());
+
+    for kind in ["compute", "branch", "memory", "special", "comprehensive"] {
+        let name = format!("synthetic_{kind}_small");
+        let n = engine.meta(&name).unwrap().inputs[1].element_count();
+        let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.001).collect();
+        engine.execute_pinned(&name, (0, 7), &[&x]).unwrap();
+        println!("{}", bench_n(&format!("exec_{kind}_full_device"), 3, 50, || {
+            black_box(engine.execute_pinned(&name, (0, 7), &[&x]).unwrap().values.len());
+        }).row());
+    }
+
+    // Pinned-range width sensitivity (should be flat on CPU PJRT —
+    // pinning is functional, not temporal, on this backend).
+    let name = "synthetic_compute_small";
+    let n = engine.meta(name).unwrap().inputs[1].element_count();
+    let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.001).collect();
+    for range in [(0, 1), (0, 3), (0, 7)] {
+        println!("{}", bench_n(&format!("exec_compute_vsm{}-{}", range.0, range.1), 3, 50, || {
+            black_box(engine.execute_pinned(name, range, &[&x]).unwrap().values.len());
+        }).row());
+    }
+
+    // Inference artifact (the serving hot path).
+    let n = engine.meta("inference_small").unwrap().inputs[1].element_count();
+    let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+    engine.execute_pinned("inference_small", (0, 7), &[&x]).unwrap();
+    println!("{}", bench_n("exec_inference_small", 3, 100, || {
+        black_box(engine.execute_pinned("inference_small", (0, 7), &[&x]).unwrap().values.len());
+    }).row());
+}

@@ -1,0 +1,323 @@
+//! The two baseline schedulability tests of §6, with persistent-threads
+//! SM partitioning but an **even-split** allocation (the deadline-aware
+//! grid search is Algorithm 2 — RTGPU's contribution) and their published
+//! analyses (interpretation notes in DESIGN.md §Analysis-Interpretation):
+//!
+//! * **Self-suspension** ([47], Lemmas 2.1–2.3): CPU segments are
+//!   executions; each memory+GPU+memory span is an *undifferentiated*
+//!   suspension taken at face value, modelled as non-preemptive — it can
+//!   block higher-priority tasks (the pessimism §6.2.1 attributes to this
+//!   baseline).  GPU segments run on physical SMs (no interleaving — the
+//!   virtual-SM model is RTGPU's contribution).  The end-to-end bound is
+//!   the segmented Eq.-(1) form.
+//!
+//! * **STGM** ([38]): busy-waiting — the CPU is held during memory copies
+//!   and GPU execution, so a task's entire chain collapses into one
+//!   execution segment on the CPU channel, analysed with the same
+//!   workload machinery.  Effective when suspensions are short,
+//!   collapsing when they are long (Fig. 8's texture).
+
+use crate::model::{RtTask, TaskSet};
+
+use super::fixpoint;
+use super::gpu::{min_allocations, task_gpu_responses, Allocation, SmModel};
+use super::rtgpu::{ScheduleResult, Search, TaskBound};
+use super::workload::SuspView;
+
+/// Suspension bounds of task `i`'s spans between consecutive CPU
+/// segments: `(Š^j, Ŝ^j)` = mem + GPU + mem with the baseline's
+/// physical-SM GPU response bounds.
+fn suspension_bounds(task: &RtTask, gr_lo: &[f64], gr_hi: &[f64]) -> Vec<(f64, f64)> {
+    (0..task.gpu.len())
+        .map(|j| {
+            let before = task.mem[task.mem_before_gpu(j)];
+            let (mut lo, mut hi) = (before.lo + gr_lo[j], before.hi + gr_hi[j]);
+            if let Some(after) = task.mem_after_gpu(j) {
+                lo += task.mem[after].lo;
+                hi += task.mem[after].hi;
+            }
+            (lo, hi)
+        })
+        .collect()
+}
+
+/// Lemma 2.1 view of the CPU for the baseline: executions = CPU segments,
+/// gaps = suspension-span lower bounds.
+fn selfsusp_cpu_view(task: &RtTask, susp: &[(f64, f64)]) -> SuspView {
+    let exec_hi: Vec<f64> = task.cpu.iter().map(|b| b.hi).collect();
+    let inner: Vec<f64> = susp.iter().map(|&(lo, _)| lo).collect();
+    let first_wrap = task.period - task.deadline;
+    let sum_cl_hi: f64 = exec_hi.iter().sum();
+    let sum_s_lo: f64 = inner.iter().sum();
+    let wrap = task.period - sum_cl_hi - sum_s_lo;
+    SuspView::new(exec_hi, inner, first_wrap, wrap)
+}
+
+/// Self-suspension analysis for a given allocation (Lemmas 2.2 / 2.3 with
+/// the §6.2.1 interpretation).
+///
+/// Suspension spans are taken at face value (`Ŝ = M̂L + ĜR + M̂L` with the
+/// physical-SM GPU model — no virtual-SM interleaving, that is RTGPU's
+/// contribution), and because the analysis does not distinguish memory
+/// copies from GPU kernels, the whole span is one non-preemptive block:
+/// each of a task's spans can be blocked by the longest span of a
+/// lower-priority task, and that blocking also delays the task's CPU
+/// segments.  This is exactly the pessimism trade §6.2.1 describes: no
+/// bus-interference windows (unlike RTGPU's Lemma 5.3) but monolithic
+/// blocking and uninflected physical-SM GPU responses.
+pub fn selfsusp_evaluate(ts: &TaskSet, alloc: &Allocation) -> Vec<TaskBound> {
+    let n = ts.len();
+    let mut susp: Vec<Vec<(f64, f64)>> = Vec::with_capacity(n);
+    for (t, &gn) in ts.tasks.iter().zip(alloc) {
+        if t.gpu.is_empty() {
+            susp.push(vec![]);
+        } else {
+            let (lo, hi) = task_gpu_responses(t, gn.max(1), SmModel::Physical);
+            susp.push(suspension_bounds(t, &lo, &hi));
+        }
+    }
+    let cpu_views: Vec<SuspView> =
+        ts.tasks.iter().zip(&susp).map(|(t, s)| selfsusp_cpu_view(t, s)).collect();
+
+    (0..n)
+        .map(|k| {
+            let task = &ts.tasks[k];
+            if !task.gpu.is_empty() && alloc[k] == 0 {
+                return TaskBound { response: None, schedulable: false };
+            }
+            let horizon = task.deadline;
+            // Blocking: each of our spans can be blocked by one in-flight
+            // non-preemptive mem+GPU span of a lower-priority task
+            // (§6.2.1: the undifferentiated suspensions "will block higher
+            // priority tasks").
+            let max_lp_span = ts
+                .lower_priority(k)
+                .iter()
+                .enumerate()
+                .flat_map(|(off, _)| susp[k + 1 + off].iter().map(|&(_, hi)| hi))
+                .fold(0.0, f64::max);
+            let blocking = susp[k].len() as f64 * max_lp_span;
+
+            // Effective suspension total: face value + blocking.
+            let sum_s_hi: f64 = susp[k].iter().map(|&(_, hi)| hi).sum::<f64>() + blocking;
+
+            // Lemma 2.2 per CPU segment (preemptive CPU).
+            let mut crs = Vec::with_capacity(task.cpu.len());
+            let mut cpu_ok = true;
+            for seg in &task.cpu {
+                let base = seg.hi;
+                match fixpoint::solve(base, horizon, |x| {
+                    base + (0..k).map(|i| cpu_views[i].max_workload(x)).sum::<f64>()
+                }) {
+                    Some(r) => crs.push(r),
+                    None => {
+                        cpu_ok = false;
+                        break;
+                    }
+                }
+            }
+            // Lemma 2.3 Eq. (1): R̂1 = Σ(Ŝ + B) + Σ ĈR — the segmented
+            // bound of the published baseline ([47] keeps the segmented
+            // structure; the tighter task-level R2 shortcut is part of the
+            // machinery the RTGPU analysis builds on).
+            let response = if cpu_ok { Some(sum_s_hi + crs.iter().sum::<f64>()) } else { None };
+            let schedulable = response.map_or(false, |r| r <= task.deadline + 1e-9);
+            TaskBound { response, schedulable }
+        })
+        .collect()
+}
+
+/// STGM busy-waiting analysis for a given allocation: the CPU is held for
+/// the entire chain, so each task is a **single** execution segment of
+/// length `ΣĈL + ΣM̂L + ΣĜR` on the CPU channel, analysed with the same
+/// Lemma-2.1/2.2 machinery as the other approaches (all three analyses
+/// share the workload framework and differ only in channel structure —
+/// the comparison the paper's §6.2.1 narrative draws).
+pub fn stgm_evaluate(ts: &TaskSet, alloc: &Allocation) -> Vec<TaskBound> {
+    let n = ts.len();
+    // Busy-wait WCET per task: ΣĈL + ΣM̂L + ΣĜR (physical SM model).
+    let wcet: Vec<f64> = ts
+        .tasks
+        .iter()
+        .zip(alloc)
+        .map(|(t, &gn)| {
+            let gr: f64 = if t.gpu.is_empty() {
+                0.0
+            } else {
+                task_gpu_responses(t, gn.max(1), SmModel::Physical).1.iter().sum()
+            };
+            t.cpu.iter().map(|b| b.hi).sum::<f64>()
+                + t.mem.iter().map(|b| b.hi).sum::<f64>()
+                + gr
+        })
+        .collect();
+    let views: Vec<SuspView> = ts
+        .tasks
+        .iter()
+        .zip(&wcet)
+        .map(|(t, &w)| {
+            let first_wrap = t.period - t.deadline;
+            let wrap = t.period - w;
+            SuspView::new(vec![w], vec![], first_wrap, wrap)
+        })
+        .collect();
+
+    (0..n)
+        .map(|k| {
+            let task = &ts.tasks[k];
+            if !task.gpu.is_empty() && alloc[k] == 0 {
+                return TaskBound { response: None, schedulable: false };
+            }
+            let response = fixpoint::solve(wcet[k], task.deadline, |x| {
+                wcet[k] + (0..k).map(|i| views[i].max_workload(x)).sum::<f64>()
+            });
+            let schedulable = response.map_or(false, |r| r <= task.deadline + 1e-9);
+            TaskBound { response, schedulable }
+        })
+        .collect()
+}
+
+/// Baseline SM allocation: an even split of the available SMs over the
+/// GPU-using tasks (raised to each task's minimum-feasible count when the
+/// slack allows).  The deadline-aware grid/greedy *search* over
+/// allocations is Algorithm 2 — RTGPU's contribution — so the baselines,
+/// which predate it, do not get it.
+pub fn even_allocation(ts: &TaskSet, gn_total: usize) -> Option<Allocation> {
+    let min_gn = min_allocations(ts, gn_total, SmModel::Physical)?;
+    let gpu_tasks = min_gn.iter().filter(|&&g| g > 0).count();
+    if gpu_tasks == 0 {
+        return Some(min_gn);
+    }
+    let even = (gn_total / gpu_tasks).max(1);
+    let mut alloc: Allocation =
+        min_gn.iter().map(|&g| if g == 0 { 0 } else { g.max(even) }).collect();
+    // If raising everyone to max(min, even) busts the budget, fall back
+    // toward the minimums, trimming the largest surpluses first.
+    while alloc.iter().sum::<usize>() > gn_total {
+        let (idx, _) = alloc
+            .iter()
+            .enumerate()
+            .filter(|&(i, &a)| a > min_gn[i])
+            .max_by_key(|&(_, &a)| a)?;
+        alloc[idx] -= 1;
+    }
+    Some(alloc)
+}
+
+fn schedule_with(
+    ts: &TaskSet,
+    gn_total: usize,
+    eval: impl Fn(&TaskSet, &Allocation) -> Vec<TaskBound>,
+) -> ScheduleResult {
+    let n = ts.len();
+    let rejected = ScheduleResult {
+        schedulable: false,
+        allocation: None,
+        responses: vec![None; n],
+    };
+    let Some(alloc) = even_allocation(ts, gn_total) else {
+        return rejected;
+    };
+    let bounds = eval(ts, &alloc);
+    if bounds.iter().all(|b| b.schedulable) {
+        ScheduleResult {
+            schedulable: true,
+            allocation: Some(alloc),
+            responses: bounds.into_iter().map(|b| b.response).collect(),
+        }
+    } else {
+        rejected
+    }
+}
+
+/// Full self-suspension baseline test (even-split allocation; `search` is
+/// accepted for interface symmetry but baselines do not search).
+pub fn selfsusp_schedule(ts: &TaskSet, gn_total: usize, _search: Search) -> ScheduleResult {
+    schedule_with(ts, gn_total, selfsusp_evaluate)
+}
+
+/// Full STGM baseline test (even-split allocation).
+pub fn stgm_schedule(ts: &TaskSet, gn_total: usize, _search: Search) -> ScheduleResult {
+    schedule_with(ts, gn_total, stgm_evaluate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate_taskset, GenConfig};
+    use crate::model::testing::simple_task;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn trivial_set_passes_both_baselines() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        assert!(selfsusp_schedule(&ts, 10, Search::Grid).schedulable);
+        assert!(stgm_schedule(&ts, 10, Search::Grid).schedulable);
+    }
+
+    #[test]
+    fn stgm_charges_suspensions_as_execution() {
+        // Single task: STGM response = full chain WCET; self-suspension is
+        // the same for one task (no interference), so compare two tasks.
+        let ts = TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]);
+        let alloc = vec![1, 1];
+        let stgm = stgm_evaluate(&ts, &alloc);
+        let ss = selfsusp_evaluate(&ts, &alloc);
+        // Low-priority task: STGM interference counts hp mem+GPU time on
+        // the CPU; self-suspension does not.
+        assert!(
+            stgm[1].response.unwrap() > ss[1].response.unwrap(),
+            "stgm {:?} ≤ selfsusp {:?}",
+            stgm[1].response,
+            ss[1].response
+        );
+    }
+
+    #[test]
+    fn long_suspensions_kill_stgm_first() {
+        // Scale GPU segments up: STGM (busy-wait) should reject before
+        // self-suspension does — the Fig. 8(c) effect.
+        let cfg = GenConfig::default().with_length_ratio(1.0, 8.0);
+        let mut rng = Pcg::new(31);
+        let mut stgm_accepts = 0;
+        let mut ss_accepts = 0;
+        for _ in 0..15 {
+            let ts = generate_taskset(&mut rng, &cfg, 1.2);
+            if stgm_schedule(&ts, 10, Search::Grid).schedulable {
+                stgm_accepts += 1;
+            }
+            if selfsusp_schedule(&ts, 10, Search::Grid).schedulable {
+                ss_accepts += 1;
+            }
+        }
+        assert!(
+            ss_accepts >= stgm_accepts,
+            "self-susp {ss_accepts} < stgm {stgm_accepts}"
+        );
+    }
+
+    #[test]
+    fn rtgpu_dominates_baselines_on_generated_sets() {
+        // The paper's headline: RTGPU ≥ self-suspension ≥ STGM (in
+        // aggregate). Check RTGPU accepts at least as many as each
+        // baseline across a small batch.
+        use super::super::rtgpu::{schedule, RtgpuOpts};
+        let cfg = GenConfig::default();
+        let mut rng = Pcg::new(32);
+        let (mut rt, mut ss, mut st) = (0, 0, 0);
+        for _ in 0..20 {
+            let ts = generate_taskset(&mut rng, &cfg, 1.5);
+            if schedule(&ts, 10, &RtgpuOpts::default(), Search::Grid).schedulable {
+                rt += 1;
+            }
+            if selfsusp_schedule(&ts, 10, Search::Grid).schedulable {
+                ss += 1;
+            }
+            if stgm_schedule(&ts, 10, Search::Grid).schedulable {
+                st += 1;
+            }
+        }
+        assert!(rt >= ss, "RTGPU {rt} < self-susp {ss}");
+        assert!(ss >= st, "self-susp {ss} < STGM {st}");
+    }
+}

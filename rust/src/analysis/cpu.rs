@@ -1,0 +1,121 @@
+//! Fixed-priority analysis of CPU segments on the preemptive uniprocessor
+//! (Lemmas 5.4 and 5.5).
+//!
+//! From the CPU's perspective the CPU segments are executions; the
+//! memory-copy + GPU spans are suspensions.  The CPU is preemptive, so —
+//! unlike the bus — there is no blocking term.
+
+use crate::model::{MemoryModel, RtTask, TaskSet};
+
+use super::fixpoint;
+use super::workload::SuspView;
+
+/// Build task `i`'s CPU view (Lemma 5.4).  `gr_lo[j]` is `ǦR_i^j`.
+pub fn cpu_view(task: &RtTask, gr_lo: &[f64]) -> SuspView {
+    let m = task.m();
+    assert_eq!(gr_lo.len(), task.gpu.len());
+    let exec_hi: Vec<f64> = task.cpu.iter().map(|b| b.hi).collect();
+    let inner: Vec<f64> = (0..m - 1)
+        .map(|j| match task.memory_model {
+            // CS_i(j) = M̌L^{2j} + ǦR^j + M̌L^{2j+1}
+            MemoryModel::TwoCopy => task.mem[2 * j].lo + gr_lo[j] + task.mem[2 * j + 1].lo,
+            // one combined copy before the GPU segment
+            MemoryModel::OneCopy => task.mem[j].lo + gr_lo[j],
+        })
+        .collect();
+    let first_wrap = task.period - task.deadline;
+    let sum_cl_hi: f64 = task.cpu.iter().map(|b| b.hi).sum();
+    let sum_ml_lo: f64 = task.mem.iter().map(|b| b.lo).sum();
+    let sum_gr_lo: f64 = gr_lo.iter().sum();
+    let wrap = task.period - sum_cl_hi - sum_ml_lo - sum_gr_lo;
+    SuspView::new(exec_hi, inner, first_wrap, wrap)
+}
+
+/// Worst-case response times `ĈR_k^j` of every CPU segment of task `k`
+/// (Lemma 5.5).  `views[i]` is the CPU view of priority-`i` task.
+pub fn cpu_response_times(ts: &TaskSet, k: usize, views: &[SuspView]) -> Option<Vec<f64>> {
+    let task = &ts.tasks[k];
+    let horizon = task.deadline;
+    let mut out = Vec::with_capacity(task.cpu.len());
+    for seg in &task.cpu {
+        let base = seg.hi;
+        let r = fixpoint::solve(base, horizon, |x| {
+            let interference: f64 = (0..k).map(|i| views[i].max_workload(x)).sum();
+            base + interference
+        })?;
+        out.push(r);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::{cpu_only_task, simple_task};
+    use crate::model::{Bounds, TaskSet};
+
+    #[test]
+    fn view_structure_two_copy() {
+        let t = simple_task(0); // m=2, ǦR=[2.0]
+        let v = cpu_view(&t, &[2.0]);
+        assert_eq!(v.m(), 2);
+        assert_eq!(v.exec_hi, vec![2.0, 2.0]);
+        // inner gap: M̌L^0 + ǦR^0 + M̌L^1 = 0.5 + 2 + 0.5 = 3.
+        assert_eq!(v.inner_gaps, vec![3.0]);
+        // first wrap: T − D = 10.
+        assert_eq!(v.first_wrap_gap, 10.0);
+        // wrap: T − ΣĈL − ΣM̌L − ΣǦR = 60 − 4 − 1 − 2 = 53 (M̌L uses lo).
+        assert_eq!(v.wrap_gap, 53.0);
+    }
+
+    #[test]
+    fn view_structure_one_copy() {
+        let mut t = simple_task(0);
+        t.memory_model = MemoryModel::OneCopy;
+        t.mem = vec![Bounds::new(0.5, 1.0)];
+        let v = cpu_view(&t, &[2.0]);
+        assert_eq!(v.inner_gaps, vec![2.5]); // M̌L + ǦR
+        assert_eq!(v.wrap_gap, 60.0 - 4.0 - 0.5 - 2.0);
+    }
+
+    #[test]
+    fn pure_cpu_task_view() {
+        let t = cpu_only_task(0, 3.0, 12.0);
+        let v = cpu_view(&t, &[]);
+        assert_eq!(v.m(), 1);
+        assert!(v.inner_gaps.is_empty());
+        assert_eq!(v.first_wrap_gap, 0.0); // D = T
+        assert_eq!(v.wrap_gap, 12.0 - 3.0);
+    }
+
+    #[test]
+    fn highest_priority_equals_wcet() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]);
+        let views: Vec<SuspView> = ts.tasks.iter().map(|t| cpu_view(t, &[2.0])).collect();
+        let r = cpu_response_times(&ts, 0, &views).unwrap();
+        assert_eq!(r, vec![2.0, 2.0]); // no interference, no blocking
+    }
+
+    #[test]
+    fn interference_inflates_lower_priority() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]);
+        let views: Vec<SuspView> = ts.tasks.iter().map(|t| cpu_view(t, &[2.0])).collect();
+        let r = cpu_response_times(&ts, 1, &views).unwrap();
+        // ĈL = 2 plus up to one 2 ms hp segment within the window.
+        assert!(r[0] >= 2.0 && r[0] <= 2.0 + 4.0, "r = {r:?}");
+    }
+
+    #[test]
+    fn cpu_saturation_diverges() {
+        // Two hp tasks, each 9 ms WCET every 10 ms: the CPU alone is over
+        // capacity; the victim's recurrence must blow past its deadline.
+        let mut hog1 = cpu_only_task(0, 9.0, 10.0);
+        hog1.period = 10.0;
+        let mut hog2 = cpu_only_task(1, 9.0, 10.0);
+        hog2.period = 10.0;
+        let victim = cpu_only_task(2, 5.0, 100.0);
+        let ts = TaskSet::with_priority_order(vec![hog1, hog2, victim]);
+        let views: Vec<SuspView> = ts.tasks.iter().map(|t| cpu_view(t, &[])).collect();
+        assert!(cpu_response_times(&ts, 2, &views).is_none());
+    }
+}

@@ -1,0 +1,175 @@
+//! End-to-end response-time bound (Theorem 5.6).
+//!
+//! `R̂_k = min(R̂1_k, R̂2_k)` where `R1` sums per-segment response times
+//! and `R2` replaces the CPU response times by CPU WCETs plus a single
+//! task-level interference recurrence.  Either bound alone is sound; the
+//! minimum is tighter (the ablation bench quantifies by how much).
+
+use crate::model::TaskSet;
+
+use super::fixpoint;
+use super::workload::SuspView;
+
+/// Which end-to-end bounds to use (ablation knob; all by default).
+///
+/// `R1`/`R2` are Theorem 5.6 as printed.  `R3` is this implementation's
+/// *holistic* bound (see [`end_to_end_holistic`]): Eq. (7)/(8) charge the
+/// full higher-priority bus interference once per memory segment (the
+/// `Σ M̂R` terms), which compounds with the segment count; `R3` instead
+/// charges bus and CPU interference once across the whole end-to-end
+/// window — sound because the task's chain is sequential, so any unit of
+/// higher-priority bus/CPU work can delay it at most once.  The
+/// `bound_ablation` bench quantifies each bound's contribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct E2eBounds {
+    pub use_r1: bool,
+    pub use_r2: bool,
+    pub use_r3: bool,
+}
+
+impl Default for E2eBounds {
+    fn default() -> Self {
+        E2eBounds { use_r1: true, use_r2: true, use_r3: true }
+    }
+}
+
+/// Theorem 5.6 for task `k`.
+///
+/// * `gr_hi` — `ĜR_k^j` per GPU segment (Lemma 5.1);
+/// * `mr_hi` — `M̂R_k^j` per memory segment (Lemma 5.3);
+/// * `cr_hi` — `ĈR_k^j` per CPU segment (Lemma 5.5), or `None` if a CPU
+///   recurrence diverged (then only R2 can close the bound);
+/// * `cpu_views` — CPU views of all tasks for R2's interference term.
+///
+/// Returns the best available upper bound, or `None` if neither bound
+/// closes below the horizon.
+pub fn end_to_end(
+    ts: &TaskSet,
+    k: usize,
+    gr_hi: &[f64],
+    mr_hi: &[f64],
+    cr_hi: Option<&[f64]>,
+    cpu_views: &[SuspView],
+    bounds: E2eBounds,
+) -> Option<f64> {
+    let task = &ts.tasks[k];
+    let horizon = task.deadline;
+    let sum_gr: f64 = gr_hi.iter().sum();
+    let sum_mr: f64 = mr_hi.iter().sum();
+
+    let r1 = if bounds.use_r1 {
+        cr_hi.map(|crs| sum_gr + sum_mr + crs.iter().sum::<f64>())
+    } else {
+        None
+    };
+
+    let r2 = if bounds.use_r2 {
+        let base = sum_gr + sum_mr + task.cpu.iter().map(|b| b.hi).sum::<f64>();
+        fixpoint::solve(base, horizon, |x| {
+            let interference: f64 = (0..k).map(|i| cpu_views[i].max_workload(x)).sum();
+            base + interference
+        })
+    } else {
+        None
+    };
+
+    [r1, r2].into_iter().flatten().reduce(f64::min)
+}
+
+/// The holistic end-to-end bound `R3`.
+///
+/// The chain `CL⁰ ML⁰ G⁰ … CLᵐ⁻¹` is strictly sequential, so over its
+/// whole response window of length `x` it can be delayed by
+///
+/// * its own demand `ΣĜR + ΣM̂L + ΣĈL` (GPU responses interference-free
+///   under federated scheduling),
+/// * at most one non-preemptive lower-priority copy per own copy
+///   (`mem_count · max_lp M̂L`),
+/// * at most `MW_i(x)` bus time and `CW_i(x)` CPU time of every
+///   higher-priority task — each unit of which stalls the chain at most
+///   once, whether the chain is currently on the CPU or the bus.
+pub fn end_to_end_holistic(
+    ts: &TaskSet,
+    k: usize,
+    gr_hi: &[f64],
+    mem_views: &[SuspView],
+    cpu_views: &[SuspView],
+    with_blocking: bool,
+) -> Option<f64> {
+    let task = &ts.tasks[k];
+    let horizon = task.deadline;
+    let blocking = if with_blocking {
+        let max_lp_ml = ts
+            .lower_priority(k)
+            .iter()
+            .enumerate()
+            .map(|(off, _)| mem_views[k + 1 + off].max_exec())
+            .fold(0.0, f64::max);
+        task.mem_count() as f64 * max_lp_ml
+    } else {
+        0.0
+    };
+    let base: f64 = gr_hi.iter().sum::<f64>()
+        + task.mem.iter().map(|b| b.hi).sum::<f64>()
+        + task.cpu.iter().map(|b| b.hi).sum::<f64>()
+        + blocking;
+    fixpoint::solve(base, horizon, |x| {
+        let interference: f64 = (0..k)
+            .map(|i| mem_views[i].max_workload(x) + cpu_views[i].max_workload(x))
+            .sum();
+        base + interference
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::simple_task;
+    use crate::model::TaskSet;
+
+    fn setup() -> (TaskSet, Vec<SuspView>) {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]);
+        let views: Vec<SuspView> = ts
+            .tasks
+            .iter()
+            .map(|t| super::super::cpu::cpu_view(t, &[2.0]))
+            .collect();
+        (ts, views)
+    }
+
+    #[test]
+    fn highest_priority_r2_equals_base() {
+        let (ts, views) = setup();
+        // k=0: no interference → R2 = ΣĜR + ΣM̂R + ΣĈL.
+        let r = end_to_end(&ts, 0, &[7.68], &[2.0, 2.0], Some(&[2.0, 2.0]), &views,
+            E2eBounds::default()).unwrap();
+        // R1 = 7.68 + 4 + 4 = 15.68; R2 = 7.68 + 4 + 4 = 15.68.
+        assert!((r - 15.68).abs() < 1e-9, "r = {r}");
+    }
+
+    #[test]
+    fn min_of_bounds_is_used() {
+        let (ts, views) = setup();
+        // Give R1 inflated CPU responses: R2 should win.
+        let both = end_to_end(&ts, 1, &[7.68], &[2.0, 2.0], Some(&[20.0, 20.0]), &views,
+            E2eBounds::default()).unwrap();
+        let only_r1 = end_to_end(&ts, 1, &[7.68], &[2.0, 2.0], Some(&[20.0, 20.0]), &views,
+            E2eBounds { use_r1: true, use_r2: false, use_r3: false }).unwrap();
+        let only_r2 = end_to_end(&ts, 1, &[7.68], &[2.0, 2.0], Some(&[20.0, 20.0]), &views,
+            E2eBounds { use_r1: false, use_r2: true, use_r3: false }).unwrap();
+        assert!(both <= only_r1 && both <= only_r2);
+        assert_eq!(both, only_r1.min(only_r2));
+    }
+
+    #[test]
+    fn diverged_cpu_recurrences_fall_back_to_r1() {
+        let (ts, views) = setup();
+        let r = end_to_end(&ts, 1, &[7.68], &[2.0, 2.0], Some(&[3.0, 3.0]), &views,
+            E2eBounds { use_r1: true, use_r2: false, use_r3: false });
+        assert!(r.is_some());
+        // cr_hi = None and R2 disabled → no bound at all.
+        let none = end_to_end(&ts, 1, &[7.68], &[2.0, 2.0], None, &views,
+            E2eBounds { use_r1: true, use_r2: false, use_r3: false });
+        assert!(none.is_none());
+    }
+}

@@ -1,0 +1,308 @@
+//! Federated scheduling of GPU segments (Lemma 5.1) and virtual-SM
+//! allocation handling.
+//!
+//! Each task `τ_i` receives `GN_i` dedicated **physical** SMs
+//! (= `2·GN_i` virtual SMs).  Because SMs are dedicated, GPU segments
+//! start immediately after their preceding memory copy completes and
+//! never compete with other tasks — all GPU interference terms vanish
+//! from the analysis, which is the key structural advantage over the
+//! baselines (§6.2.1).
+
+use crate::model::{GpuSegment, RtTask, TaskSet};
+
+/// How SMs execute a kernel — the paper's ablation axis (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SmModel {
+    /// RTGPU's virtual-SM model: `2·GN_i` virtual SMs retire α-inflated
+    /// work (Lemma 5.1).
+    Virtual,
+    /// Naive physical model (the baselines): `GN_i` SMs, no inflation.
+    Physical,
+}
+
+/// The Lemma 5.1 execution-time model for concrete parameter values:
+/// duration of a kernel with work `gw`, critical-path overhead `gl` and
+/// effective interleave ratio `alpha` on `gn_i` dedicated physical SMs.
+/// Shared by the analysis (bounds) and the simulator (drawn values).
+pub fn duration(gw: f64, gl: f64, alpha: f64, gn_i: usize, model: SmModel) -> f64 {
+    assert!(gn_i >= 1, "GPU segment with zero SMs");
+    match model {
+        SmModel::Virtual => (gw * alpha - gl).max(0.0) / (2 * gn_i) as f64 + gl,
+        SmModel::Physical => (gw - gl).max(0.0) / gn_i as f64 + gl,
+    }
+}
+
+/// Response-time bounds `[ǦR, ĜR]` of one GPU segment on `gn_i` dedicated
+/// physical SMs (Lemma 5.1).
+pub fn gpu_response(seg: &GpuSegment, gn_i: usize, model: SmModel) -> (f64, f64) {
+    let lo = duration(seg.work.lo, 0.0, 1.0, gn_i, model);
+    let hi = duration(seg.work.hi, seg.overhead.hi, seg.alpha, gn_i, model);
+    (lo, hi)
+}
+
+/// Per-task GPU response bounds for a whole task under allocation `gn_i`.
+pub fn task_gpu_responses(task: &RtTask, gn_i: usize, model: SmModel) -> (Vec<f64>, Vec<f64>) {
+    let mut lo = Vec::with_capacity(task.gpu.len());
+    let mut hi = Vec::with_capacity(task.gpu.len());
+    for seg in &task.gpu {
+        let (l, h) = gpu_response(seg, gn_i, model);
+        lo.push(l);
+        hi.push(h);
+    }
+    (lo, hi)
+}
+
+/// An SM allocation: physical SMs per task, in priority order.  Tasks
+/// without GPU segments hold 0.
+pub type Allocation = Vec<usize>;
+
+/// Smallest `GN_i` for which the *isolated* demand bound
+/// `ΣĜR(gn) + ΣM̂L + ΣĈL ≤ D_i` can hold — a necessary condition used to
+/// prune the Algorithm-2 grid (a task that cannot meet its deadline alone
+/// cannot meet it with interference).  Returns `None` if even `gn_max`
+/// SMs are not enough.
+pub fn min_feasible_gn(task: &RtTask, gn_max: usize, model: SmModel) -> Option<usize> {
+    if task.gpu.is_empty() {
+        return Some(0);
+    }
+    let fixed: f64 = task.cpu.iter().map(|b| b.hi).sum::<f64>()
+        + task.mem.iter().map(|b| b.hi).sum::<f64>();
+    for gn in 1..=gn_max {
+        let gr: f64 = task.gpu.iter().map(|g| gpu_response(g, gn, model).1).sum();
+        if fixed + gr <= task.deadline {
+            return Some(gn);
+        }
+    }
+    None
+}
+
+/// Enumerate allocations `gn_i ∈ [min_gn_i, …]` with `Σ gn_i ≤ gn_total`,
+/// invoking `visit`; stops early when `visit` returns `true` (found).
+/// This is Algorithm 2's brute-force grid search with the necessary-
+/// condition pruning described above.
+pub fn search_allocations(
+    min_gn: &[usize],
+    gn_total: usize,
+    mut visit: impl FnMut(&Allocation) -> bool,
+) -> bool {
+    debug_assert!(!min_gn.is_empty());
+    let min_sum: usize = min_gn.iter().sum();
+    if min_sum > gn_total {
+        return false;
+    }
+    let mut alloc: Allocation = min_gn.to_vec();
+    // Depth-first over "extra" SMs given to each task.
+    fn rec(
+        alloc: &mut Allocation,
+        idx: usize,
+        budget: usize,
+        min_gn: &[usize],
+        visit: &mut impl FnMut(&Allocation) -> bool,
+    ) -> bool {
+        if idx == alloc.len() {
+            return visit(alloc);
+        }
+        // A task with no GPU segments never gets extra SMs.
+        let max_extra = if min_gn[idx] == 0 { 0 } else { budget };
+        for extra in 0..=max_extra {
+            alloc[idx] = min_gn[idx] + extra;
+            if rec(alloc, idx + 1, budget - extra, min_gn, visit) {
+                return true;
+            }
+        }
+        alloc[idx] = min_gn[idx];
+        false
+    }
+    rec(&mut alloc, 0, gn_total - min_sum, min_gn, &mut visit)
+}
+
+/// Greedy variant (the paper's suggested fast alternative): start from the
+/// minimum feasible allocation, then repeatedly grant one more SM to the
+/// highest-priority failing task until the test passes or the budget is
+/// exhausted.  `test` returns per-task pass/fail.
+pub fn greedy_allocation(
+    min_gn: &[usize],
+    gn_total: usize,
+    mut test: impl FnMut(&Allocation) -> Vec<bool>,
+) -> Option<Allocation> {
+    let mut alloc: Allocation = min_gn.to_vec();
+    let mut used: usize = alloc.iter().sum();
+    if used > gn_total {
+        return None;
+    }
+    loop {
+        let ok = test(&alloc);
+        if ok.iter().all(|&b| b) {
+            return Some(alloc);
+        }
+        if used == gn_total {
+            return None;
+        }
+        // Bump the highest-priority failing task that can take more SMs.
+        let target = ok
+            .iter()
+            .enumerate()
+            .find(|&(i, &pass)| !pass && min_gn[i] > 0)
+            .map(|(i, _)| i)?;
+        alloc[target] += 1;
+        used += 1;
+    }
+}
+
+/// Minimum allocations for a whole task set; `None` if any task is
+/// individually infeasible or the minimums already exceed the budget.
+pub fn min_allocations(ts: &TaskSet, gn_total: usize, model: SmModel) -> Option<Vec<usize>> {
+    let mut mins = Vec::with_capacity(ts.len());
+    for t in &ts.tasks {
+        mins.push(min_feasible_gn(t, gn_total, model)?);
+    }
+    if mins.iter().sum::<usize>() > gn_total {
+        return None;
+    }
+    Some(mins)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{testing::simple_task, Bounds, KernelClass};
+
+    fn seg(work_hi: f64, gl_hi: f64) -> GpuSegment {
+        GpuSegment::new(
+            Bounds::new(work_hi * 0.5, work_hi),
+            Bounds::new(0.0, gl_hi),
+            KernelClass::Compute, // α = 1.8
+        )
+    }
+
+    #[test]
+    fn lemma_5_1_formulas() {
+        let g = seg(10.0, 1.0);
+        // Virtual, GN=1 → 2 vSMs: hi = (10·1.8 − 1)/2 + 1 = 9.5; lo = 5/2.
+        let (lo, hi) = gpu_response(&g, 1, SmModel::Virtual);
+        assert!((hi - 9.5).abs() < 1e-12);
+        assert!((lo - 2.5).abs() < 1e-12);
+        // Physical, GN=1: hi = (10−1)/1 + 1 = 10; lo = 5.
+        let (lo, hi) = gpu_response(&g, 1, SmModel::Physical);
+        assert!((hi - 10.0).abs() < 1e-12);
+        assert!((lo - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn virtual_model_beats_physical_when_alpha_below_2() {
+        // The §4.3 claim: interleaving wins because α < 2.
+        for &gn in &[1usize, 2, 5] {
+            let g = seg(20.0, 0.5);
+            let (_, v) = gpu_response(&g, gn, SmModel::Virtual);
+            let (_, p) = gpu_response(&g, gn, SmModel::Physical);
+            assert!(v < p, "virtual {v} ≥ physical {p} at gn={gn}");
+        }
+    }
+
+    #[test]
+    fn response_decreases_with_more_sms() {
+        let g = seg(40.0, 2.0);
+        let mut prev = f64::INFINITY;
+        for gn in 1..=10 {
+            let (_, hi) = gpu_response(&g, gn, SmModel::Virtual);
+            assert!(hi < prev);
+            prev = hi;
+        }
+        // ... but never below the critical-path overhead.
+        assert!(prev >= 2.0);
+    }
+
+    #[test]
+    fn overhead_dominates_tiny_kernels() {
+        // ĜW·α < ĜL → clamped parallel part, response = ĜL.
+        let g = GpuSegment::new(
+            Bounds::new(0.01, 0.02),
+            Bounds::new(0.0, 1.0),
+            KernelClass::Special,
+        );
+        let (_, hi) = gpu_response(&g, 4, SmModel::Virtual);
+        assert!((hi - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_feasible_gn_finds_threshold() {
+        let mut t = simple_task(0);
+        // demand: cpu 4 + mem 2 = 6 fixed; GPU work 8 (α=1.8, ĜL=0.96).
+        // gn=1: GR = (14.4−0.96)/2+0.96 = 7.68 → total 13.68 ≤ D=50 ✓.
+        assert_eq!(min_feasible_gn(&t, 10, SmModel::Virtual), Some(1));
+        t.deadline = 13.0;
+        t.period = 13.0;
+        // gn=1 gives 13.68 > 13; gn=2: GR=(13.44)/4+0.96=4.32 → 10.32 ✓.
+        assert_eq!(min_feasible_gn(&t, 10, SmModel::Virtual), Some(2));
+        t.deadline = 6.5;
+        t.period = 6.5;
+        // fixed demand alone is 6.0; GR ≥ ĜL = 0.96 → 6.96 > 6.5 always.
+        assert_eq!(min_feasible_gn(&t, 10, SmModel::Virtual), None);
+    }
+
+    #[test]
+    fn cpu_only_task_needs_zero_sms() {
+        let t = crate::model::testing::cpu_only_task(0, 1.0, 5.0);
+        assert_eq!(min_feasible_gn(&t, 10, SmModel::Virtual), Some(0));
+    }
+
+    #[test]
+    fn search_enumerates_all_compositions() {
+        // 3 GPU tasks, min 1 each, budget 5 → compositions of ≤5 into 3
+        // parts ≥1: C(5,3) = 10.
+        let mut count = 0;
+        let found = search_allocations(&[1, 1, 1], 5, |_| {
+            count += 1;
+            false
+        });
+        assert!(!found);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn search_stops_on_first_hit() {
+        let mut count = 0;
+        let found = search_allocations(&[1, 1], 4, |a| {
+            count += 1;
+            a == &[2, 2]
+        });
+        assert!(found);
+        assert!(count <= 6, "visited {count}");
+    }
+
+    #[test]
+    fn search_respects_budget_and_minimums() {
+        let mut max_sum = 0;
+        search_allocations(&[2, 1, 0], 6, |a| {
+            assert!(a[0] >= 2 && a[1] >= 1);
+            assert_eq!(a[2], 0, "non-GPU task must stay at 0");
+            max_sum = max_sum.max(a.iter().sum::<usize>());
+            false
+        });
+        assert!(max_sum <= 6);
+    }
+
+    #[test]
+    fn infeasible_minimums_short_circuit() {
+        let mut visited = false;
+        let found = search_allocations(&[5, 6], 10, |_| {
+            visited = true;
+            true
+        });
+        assert!(!found);
+        assert!(!visited);
+    }
+
+    #[test]
+    fn greedy_grows_failing_task() {
+        // Pass only when task 0 has ≥ 3 SMs.
+        let result = greedy_allocation(&[1, 1], 6, |a| vec![a[0] >= 3, true]);
+        assert_eq!(result, Some(vec![3, 1]));
+    }
+
+    #[test]
+    fn greedy_gives_up_at_budget() {
+        let result = greedy_allocation(&[1, 1], 3, |a| vec![a[0] >= 4, true]);
+        assert_eq!(result, None);
+    }
+}

@@ -1,0 +1,192 @@
+//! Fixed-priority analysis of memory-copy segments on the non-preemptive
+//! bus (Lemmas 5.2 and 5.3).
+//!
+//! From the bus's perspective the memory copies are the execution
+//! segments; CPU and GPU segments are suspensions.  Because a PCIe/NoC
+//! copy cannot be preempted, a high-priority copy additionally suffers
+//! blocking from at most one already-started lower-priority copy
+//! (Lemma 5.3's `max_{lp} M̂L` term).
+
+use crate::model::{MemoryModel, RtTask, TaskSet};
+
+use super::fixpoint;
+use super::workload::SuspView;
+
+/// Build task `i`'s memory view (Lemma 5.2): execution = memory copies,
+/// gaps from the *lower* bounds of the interleaving CPU/GPU segments.
+/// `gr_lo[j]` is `ǦR_i^j` from Lemma 5.1 under the chosen allocation.
+pub fn mem_view(task: &RtTask, gr_lo: &[f64]) -> SuspView {
+    let m = task.m();
+    assert_eq!(gr_lo.len(), task.gpu.len());
+    let exec_hi: Vec<f64> = task.mem.iter().map(|b| b.hi).collect();
+    if exec_hi.is_empty() {
+        return SuspView::new(vec![], vec![], 0.0, 0.0);
+    }
+    let t_minus_d = task.period - task.deadline;
+    let cl_lo_first = task.cpu[0].lo;
+    let cl_lo_last = task.cpu[m - 1].lo;
+    let sum_ml_hi: f64 = task.mem.iter().map(|b| b.hi).sum();
+    let sum_cl_lo_inner: f64 = task.cpu[1..m - 1].iter().map(|b| b.lo).sum();
+
+    match task.memory_model {
+        MemoryModel::TwoCopy => {
+            // Chain: … ML^{2j} G^j ML^{2j+1} CL^{j+1} ML^{2j+2} …
+            let mm = 2 * (m - 1);
+            let inner: Vec<f64> = (0..mm - 1)
+                .map(|j| {
+                    if j % 2 == 0 {
+                        gr_lo[j / 2] // GPU segment between the copy pair
+                    } else {
+                        task.cpu[(j + 1) / 2].lo // CPU segment between pairs
+                    }
+                })
+                .collect();
+            let first_wrap = t_minus_d + cl_lo_last + cl_lo_first;
+            let sum_gr_lo: f64 = gr_lo.iter().sum();
+            let wrap = task.period - sum_ml_hi - sum_cl_lo_inner - sum_gr_lo;
+            SuspView::new(exec_hi, inner, first_wrap, wrap)
+        }
+        MemoryModel::OneCopy => {
+            // Chain: … ML^j G^j CL^{j+1} ML^{j+1} …
+            let mm = m - 1;
+            let inner: Vec<f64> =
+                (0..mm - 1).map(|j| gr_lo[j] + task.cpu[j + 1].lo).collect();
+            let first_wrap =
+                gr_lo[m - 2] + cl_lo_last + t_minus_d + cl_lo_first;
+            // Span from ML^0 to ML^{m−2} start: copies + G^0..G^{m−3} +
+            // CL^1..CL^{m−2}.
+            let sum_gr_lo_span: f64 = gr_lo[..m.saturating_sub(2)].iter().sum();
+            let wrap = task.period - sum_ml_hi - sum_cl_lo_inner - sum_gr_lo_span;
+            SuspView::new(exec_hi, inner, first_wrap, wrap)
+        }
+    }
+}
+
+/// Worst-case response times `M̂R_k^j` of every memory segment of task `k`
+/// (Lemma 5.3).  `views[i]` must be the memory view of priority-`i` task.
+/// Returns `None` if any recurrence diverges past the deadline.
+pub fn mem_response_times(
+    ts: &TaskSet,
+    k: usize,
+    views: &[SuspView],
+    with_blocking: bool,
+) -> Option<Vec<f64>> {
+    let task = &ts.tasks[k];
+    let horizon = task.deadline;
+    // Non-preemptive blocking: the longest copy of any lower-priority task.
+    let blocking = if with_blocking {
+        ts.lower_priority(k)
+            .iter()
+            .enumerate()
+            .map(|(off, _)| views[k + 1 + off].max_exec())
+            .fold(0.0, f64::max)
+    } else {
+        0.0
+    };
+    let mut out = Vec::with_capacity(task.mem.len());
+    for seg in &task.mem {
+        let base = seg.hi + blocking;
+        let r = fixpoint::solve(base, horizon, |x| {
+            let interference: f64 =
+                (0..k).map(|i| views[i].max_workload(x)).sum();
+            base + interference
+        })?;
+        out.push(r);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::simple_task;
+    use crate::model::{Bounds, TaskSet};
+
+    #[test]
+    fn two_copy_view_structure() {
+        let t = simple_task(0); // m=2: ML0 G0 ML1; gr_lo = [2.0]
+        let v = mem_view(&t, &[2.0]);
+        assert_eq!(v.m(), 2);
+        assert_eq!(v.exec_hi, vec![1.0, 1.0]);
+        // Single inner gap = ǦR^0.
+        assert_eq!(v.inner_gaps, vec![2.0]);
+        // first wrap: (T−D) + ČL^1 + ČL^0 = 10 + 1 + 1.
+        assert_eq!(v.first_wrap_gap, 12.0);
+        // wrap: T − ΣM̂L − 0 − ΣǦR = 60 − 2 − 2 = 56.
+        assert_eq!(v.wrap_gap, 56.0);
+    }
+
+    #[test]
+    fn one_copy_view_structure() {
+        let mut t = simple_task(0);
+        t.memory_model = MemoryModel::OneCopy;
+        t.mem = vec![Bounds::new(0.5, 1.0)];
+        let v = mem_view(&t, &[2.0]);
+        assert_eq!(v.m(), 1);
+        // first wrap: ǦR^0 + ČL^1 + (T−D) + ČL^0 = 2+1+10+1 = 14.
+        assert_eq!(v.first_wrap_gap, 14.0);
+        // wrap: T − M̂L = 60 − 1 = 59 (no inner CPU, no spanned GPU).
+        assert_eq!(v.wrap_gap, 59.0);
+    }
+
+    #[test]
+    fn cpu_only_task_has_empty_view() {
+        let t = crate::model::testing::cpu_only_task(0, 1.0, 10.0);
+        let v = mem_view(&t, &[]);
+        assert_eq!(v.m(), 0);
+        assert_eq!(v.max_workload(100.0), 0.0);
+    }
+
+    #[test]
+    fn highest_priority_segment_sees_only_blocking() {
+        let a = simple_task(0);
+        let b = simple_task(1);
+        let ts = TaskSet::with_priority_order(vec![a, b]);
+        let views: Vec<SuspView> =
+            ts.tasks.iter().map(|t| mem_view(t, &[2.0])).collect();
+        let r = mem_response_times(&ts, 0, &views, true).unwrap();
+        // M̂L = 1.0 + blocking max(M̂L of task 1) = 1.0 → 2.0, no hp interference.
+        assert_eq!(r, vec![2.0, 2.0]);
+        // Without blocking: just M̂L.
+        let r = mem_response_times(&ts, 0, &views, false).unwrap();
+        assert_eq!(r, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn lower_priority_segment_suffers_interference() {
+        let a = simple_task(0);
+        let b = simple_task(1);
+        let ts = TaskSet::with_priority_order(vec![a, b]);
+        let views: Vec<SuspView> =
+            ts.tasks.iter().map(|t| mem_view(t, &[2.0])).collect();
+        let hi = mem_response_times(&ts, 0, &views, true).unwrap();
+        let lo = mem_response_times(&ts, 1, &views, true).unwrap();
+        // Task 1 (no lower-priority blocker) still suffers task-0 workload:
+        // its response must exceed its own M̂L.
+        assert!(lo[0] > 1.0);
+        // And the highest-priority task's bound is no larger than the
+        // low-priority task's own-plus-interference bound shape.
+        assert!(hi[0] <= lo[0] + 1.0);
+    }
+
+    #[test]
+    fn diverging_interference_returns_none() {
+        // Two pathological high-priority tasks that flood the bus beyond
+        // its capacity: the victim's recurrence must blow its deadline.
+        let mut hogs: Vec<_> = (0..2)
+            .map(|id| {
+                let mut h = simple_task(id);
+                h.mem = vec![Bounds::new(5.0, 9.0), Bounds::new(5.0, 9.0)];
+                h.deadline = 20.0;
+                h.period = 20.0;
+                h
+            })
+            .collect();
+        let victim = simple_task(2);
+        hogs.push(victim);
+        let ts = TaskSet::with_priority_order(hogs);
+        let views: Vec<SuspView> =
+            ts.tasks.iter().map(|t| mem_view(t, &[0.1])).collect();
+        assert!(mem_response_times(&ts, 2, &views, true).is_none());
+    }
+}

@@ -1,0 +1,153 @@
+//! Schedulability analysis (§2.2, §5 of the paper).
+//!
+//! Module map (lemma → file):
+//!
+//! | Result                    | Module        |
+//! |---------------------------|---------------|
+//! | Lemma 2.1 workload fn     | [`workload`]  |
+//! | Lemmas 2.2/2.3 (baseline) | [`baselines`] |
+//! | Lemma 5.1 GPU federated   | [`gpu`]       |
+//! | Lemmas 5.2/5.3 bus        | [`memcopy`]   |
+//! | Lemmas 5.4/5.5 CPU        | [`cpu`]       |
+//! | Theorem 5.6 end-to-end    | [`e2e`]       |
+//! | Algorithm 2 grid search   | [`rtgpu`]     |
+//!
+//! The [`Approach`] enum + [`analyze`] front-end is what the harness and
+//! the coordinator's admission control consume.
+
+pub mod baselines;
+pub mod cpu;
+pub mod e2e;
+pub mod fixpoint;
+pub mod gpu;
+pub mod memcopy;
+pub mod rtgpu;
+pub mod workload;
+
+pub use gpu::{Allocation, SmModel};
+pub use rtgpu::{RtgpuOpts, ScheduleResult, Search};
+
+use crate::model::TaskSet;
+
+/// The three schedulability tests compared throughout §6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Approach {
+    /// Proposed: federated virtual-SM scheduling + fixed-priority
+    /// CPU/bus analysis (Algorithm 2).
+    Rtgpu,
+    /// Baseline: multi-segment self-suspension analysis [47].
+    SelfSuspension,
+    /// Baseline: STGM busy-waiting [38].
+    Stgm,
+}
+
+impl Approach {
+    pub const ALL: [Approach; 3] = [Approach::Rtgpu, Approach::SelfSuspension, Approach::Stgm];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Approach::Rtgpu => "RTGPU",
+            Approach::SelfSuspension => "Self-Suspension",
+            Approach::Stgm => "STGM",
+        }
+    }
+}
+
+/// Run the selected schedulability test with its allocation search.
+pub fn analyze(ts: &TaskSet, gn_total: usize, approach: Approach, search: Search) -> ScheduleResult {
+    match approach {
+        Approach::Rtgpu => rtgpu::schedule(ts, gn_total, &RtgpuOpts::default(), search),
+        Approach::SelfSuspension => baselines::selfsusp_schedule(ts, gn_total, search),
+        Approach::Stgm => baselines::stgm_schedule(ts, gn_total, search),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate_taskset, GenConfig};
+    use crate::model::testing::simple_task;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn analyze_dispatches_all_approaches() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        for ap in Approach::ALL {
+            let r = analyze(&ts, 10, ap, Search::Grid);
+            assert!(r.schedulable, "{}", ap.name());
+        }
+    }
+
+    #[test]
+    fn prop_responses_at_most_deadline_when_accepted() {
+        prop::check("accepted_implies_bounds", 41, 30, |g| {
+            let util = g.float(0.3, 3.0);
+            let cfg = GenConfig::default()
+                .with_tasks(g.int(1, 5).max(1))
+                .with_subtasks(g.int(1, 4).max(1));
+            let mut rng = Pcg::new(g.rng.next_u64());
+            let ts = generate_taskset(&mut rng, &cfg, util);
+            let r = analyze(&ts, 10, Approach::Rtgpu, Search::Grid);
+            if r.schedulable {
+                for (resp, task) in r.responses.iter().zip(&ts.tasks) {
+                    let v = resp.ok_or("missing response on accepted set")?;
+                    if v > task.deadline + 1e-6 {
+                        return Err(format!("response {v} > deadline {}", task.deadline));
+                    }
+                    let min_demand: f64 = task.cpu.iter().map(|b| b.hi).sum::<f64>();
+                    if v < min_demand - 1e-6 {
+                        return Err(format!("response {v} below CPU demand {min_demand}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_more_sms_never_reject_previously_accepted() {
+        // Platform monotonicity of the *search* (not of a fixed
+        // allocation): any allocation feasible with GN SMs is still
+        // available with GN+2.
+        prop::check("platform_monotone", 42, 15, |g| {
+            let util = g.float(0.3, 2.5);
+            let mut rng = Pcg::new(g.rng.next_u64());
+            let ts = generate_taskset(&mut rng, &GenConfig::default(), util);
+            let small = analyze(&ts, 6, Approach::Rtgpu, Search::Grid);
+            if small.schedulable {
+                let big = analyze(&ts, 8, Approach::Rtgpu, Search::Grid);
+                if !big.schedulable {
+                    return Err("accepted at 6 SMs but rejected at 8".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_utilization_over_capacity_is_rejected() {
+        // Necessary condition: CPU utilization alone above 1, or bus
+        // utilization above 1, can never be schedulable.
+        prop::check("capacity_bound", 43, 20, |g| {
+            let mut rng = Pcg::new(g.rng.next_u64());
+            let ts = generate_taskset(&mut rng, &GenConfig::default(), g.float(0.5, 4.0));
+            let cpu_util: f64 = ts
+                .tasks
+                .iter()
+                .map(|t| t.cpu.iter().map(|b| b.hi).sum::<f64>() / t.period)
+                .sum();
+            if cpu_util > 1.0 {
+                for ap in Approach::ALL {
+                    if analyze(&ts, 10, ap, Search::Grid).schedulable {
+                        return Err(format!(
+                            "{} accepted a set with CPU util {cpu_util:.3} > 1",
+                            ap.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

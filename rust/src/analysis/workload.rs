@@ -1,0 +1,232 @@
+//! The multi-segment self-suspension workload function (Lemma 2.1),
+//! generalised over "views".
+//!
+//! A **view** projects a task onto one resource: its execution segments
+//! are the segments that run on that resource, and everything in between
+//! is suspension.  The paper instantiates this three times:
+//!
+//! * the *CPU view* (Lemma 5.4): executions = CPU segments, suspensions =
+//!   memory-copy + GPU response times;
+//! * the *memory view* (Lemma 5.2): executions = memory copies on the
+//!   bus, suspensions = CPU + GPU response times;
+//! * the *baseline view* (Lemma 2.1 as used by the self-suspension
+//!   baseline): executions = CPU segments, suspensions = undifferentiated
+//!   memory+GPU spans.
+//!
+//! [`SuspView`] captures all of them as upper-bounded execution lengths +
+//! minimum inter-arrival gaps, with the paper's three gap cases:
+//! within-job gaps, the first job→job wrap (`T − D`-based), and the
+//! steady-state wrap.
+
+/// One task's projection onto a resource.
+#[derive(Debug, Clone)]
+pub struct SuspView {
+    /// Worst-case lengths of the execution segments on this resource
+    /// (`L̂^j`, `j ∈ [0, M)`).
+    pub exec_hi: Vec<f64>,
+    /// Minimum gap between consecutive executions **within one job**
+    /// (`S_i(j)` for `j mod M ≠ M−1`); length `M−1`.
+    pub inner_gaps: Vec<f64>,
+    /// Minimum gap between the last execution of the *first* job in the
+    /// interval and the first execution of the next (`S_i(j)`, `j = M−1`).
+    pub first_wrap_gap: f64,
+    /// Minimum gap for every subsequent job boundary.
+    pub wrap_gap: f64,
+}
+
+impl SuspView {
+    /// Validate shape; `exec_hi` may be empty (a task with no segments on
+    /// this resource contributes zero workload).
+    pub fn new(
+        exec_hi: Vec<f64>,
+        inner_gaps: Vec<f64>,
+        first_wrap_gap: f64,
+        wrap_gap: f64,
+    ) -> SuspView {
+        assert!(
+            exec_hi.is_empty() || inner_gaps.len() + 1 == exec_hi.len(),
+            "need M-1 inner gaps for M executions ({} vs {})",
+            inner_gaps.len(),
+            exec_hi.len()
+        );
+        // Gaps are minimum inter-arrival times; clamp tiny negatives from
+        // aggressive subtraction formulas to zero (safe: smaller gaps mean
+        // more interference counted).
+        let clamp = |v: f64| if v < 0.0 { 0.0 } else { v };
+        SuspView {
+            exec_hi,
+            inner_gaps: inner_gaps.into_iter().map(clamp).collect(),
+            first_wrap_gap: clamp(first_wrap_gap),
+            wrap_gap: clamp(wrap_gap),
+        }
+    }
+
+    /// Number of execution segments `M`.
+    pub fn m(&self) -> usize {
+        self.exec_hi.len()
+    }
+
+    /// `S_i(j)` of Lemma 2.1: the minimum gap after absolute execution
+    /// index `j` (j counts across job boundaries).
+    fn gap(&self, j: usize) -> f64 {
+        let m = self.m();
+        debug_assert!(m > 0);
+        if (j + 1) % m != 0 {
+            self.inner_gaps[j % m]
+        } else if j + 1 == m {
+            self.first_wrap_gap
+        } else {
+            self.wrap_gap
+        }
+    }
+
+    /// `W_i^h(t)`: maximum execution this task performs on the resource in
+    /// any interval of length `t` that starts with execution segment `h`.
+    pub fn workload(&self, h: usize, t: f64) -> f64 {
+        let m = self.m();
+        if m == 0 || t <= 0.0 {
+            return 0.0;
+        }
+        debug_assert!(h < m, "start segment out of range");
+        // Walk segments from h, accumulating full executions while
+        //   Σ (L̂ + S) ≤ t,
+        // then add the clipped head of the next segment.
+        let mut consumed = 0.0; // Σ (L̂ + S) up to and including index j
+        let mut work = 0.0;
+        let mut j = h;
+        // Defensive cap: if a full cycle adds no time the parameters are
+        // degenerate; bail out with the trivially safe bound.
+        let cycle: f64 = self.exec_hi.iter().sum::<f64>()
+            + self.inner_gaps.iter().sum::<f64>()
+            + self.wrap_gap;
+        if cycle <= 0.0 {
+            return t;
+        }
+        loop {
+            let l = self.exec_hi[j % m];
+            if consumed + l + self.gap(j) <= t {
+                work += l;
+                consumed += l + self.gap(j);
+                j += 1;
+            } else {
+                // Partial (or zero) credit for segment j.
+                work += l.min((t - consumed).max(0.0));
+                return work;
+            }
+        }
+    }
+
+    /// `max_{h ∈ [0, M)} W_i^h(t)` — the form used in every interference
+    /// sum (Lemmas 2.2, 5.3, 5.5).
+    pub fn max_workload(&self, t: f64) -> f64 {
+        (0..self.m())
+            .map(|h| self.workload(h, t))
+            .fold(0.0, f64::max)
+    }
+
+    /// Largest single execution segment (used for blocking terms).
+    pub fn max_exec(&self) -> f64 {
+        self.exec_hi.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two 2 ms executions separated by a 3 ms suspension; job wraps of
+    /// 10 ms (first) and 5 ms (rest).
+    fn view() -> SuspView {
+        SuspView::new(vec![2.0, 2.0], vec![3.0], 10.0, 5.0)
+    }
+
+    #[test]
+    fn zero_interval_zero_workload() {
+        assert_eq!(view().workload(0, 0.0), 0.0);
+        assert_eq!(view().max_workload(0.0), 0.0);
+    }
+
+    #[test]
+    fn short_interval_clips_first_segment() {
+        assert_eq!(view().workload(0, 1.5), 1.5);
+        assert_eq!(view().workload(0, 2.0), 2.0);
+    }
+
+    #[test]
+    fn interval_spanning_one_suspension() {
+        // [L0 = 2][S = 3][L1 = 2] → t = 6 gives 2 + min(2, 6-5) = 3.
+        assert_eq!(view().workload(0, 6.0), 3.0);
+        // t = 7 gives both full segments.
+        assert_eq!(view().workload(0, 7.0), 4.0);
+    }
+
+    #[test]
+    fn wrap_gaps_apply() {
+        // From h=1: [L1=2][first wrap=10][L0=2] → t=13 gives 2+1=3.
+        assert_eq!(view().workload(1, 13.0), 3.0);
+        // After the first wrap, inner gap then *steady* wrap=5 apply:
+        // t = 2+10+2+3+2 = 19 → all of L1,L0,L1 = 6
+        assert_eq!(view().workload(1, 19.0), 6.0);
+    }
+
+    #[test]
+    fn max_workload_picks_best_start() {
+        let v = SuspView::new(vec![4.0, 1.0], vec![2.0], 8.0, 8.0);
+        // t=4: starting at h=0 gives 4; h=1 gives 1 + 0 (gap 2 not passed).
+        assert_eq!(v.max_workload(4.0), 4.0);
+        // t=7: h=0 → 4 + min(1, 7-6) = 5; h=1 → 1+gap2+4 → 1+4=5 (7-3=4).
+        assert_eq!(v.max_workload(7.0), 5.0);
+    }
+
+    #[test]
+    fn empty_view_contributes_nothing() {
+        let v = SuspView::new(vec![], vec![], 0.0, 0.0);
+        assert_eq!(v.max_workload(100.0), 0.0);
+    }
+
+    #[test]
+    fn negative_gaps_are_clamped() {
+        let v = SuspView::new(vec![1.0, 1.0], vec![-5.0], -1.0, -1.0);
+        assert_eq!(v.inner_gaps[0], 0.0);
+        // With zero gaps the workload is a staircase of 1s.
+        assert_eq!(v.workload(0, 2.0), 2.0);
+    }
+
+    #[test]
+    fn degenerate_all_zero_cycle_returns_t() {
+        let v = SuspView::new(vec![0.0], vec![], 0.0, 0.0);
+        assert_eq!(v.workload(0, 7.5), 7.5);
+    }
+
+    #[test]
+    fn workload_is_monotone_in_t() {
+        let v = view();
+        let mut prev = 0.0;
+        for i in 0..200 {
+            let t = i as f64 * 0.25;
+            let w = v.max_workload(t);
+            assert!(w + 1e-12 >= prev, "workload decreased at t={t}");
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn workload_never_exceeds_interval() {
+        let v = view();
+        for i in 0..100 {
+            let t = i as f64 * 0.37;
+            assert!(v.max_workload(t) <= t + 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_segment_task() {
+        // M=1: every gap is a wrap gap.
+        let v = SuspView::new(vec![3.0], vec![], 7.0, 4.0);
+        assert_eq!(v.workload(0, 3.0), 3.0);
+        // t = 3+7+3 = 13 → two full executions (first wrap once)...
+        assert_eq!(v.workload(0, 13.0), 6.0);
+        // then steady wrap: t = 3+7+3+4+3 = 20 → three.
+        assert_eq!(v.workload(0, 20.0), 9.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Application specifications and their projection into the task model.
+
+use anyhow::{Context, Result};
+
+use crate::model::{Bounds, GpuSegment, KernelClass, MemoryModel, RtTask};
+use crate::runtime::Engine;
+
+/// GPU-side profile of an application's kernel.
+#[derive(Debug, Clone)]
+pub struct GpuProfile {
+    /// Measured wall-clock execution times (ms) of the artifact.
+    pub samples_ms: Vec<f64>,
+    /// Derived work bounds (physical-SM·ms, §5.1 convention).
+    pub work: Bounds,
+    /// Derived launch-overhead upper bound.
+    pub overhead_hi: f64,
+}
+
+/// A periodic real-time GPU application served by the coordinator.
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub name: String,
+    /// Artifact to execute for the GPU segment (must be in the manifest).
+    pub artifact: String,
+    /// Kernel class (picks the interleave ratio α).
+    pub class: KernelClass,
+    pub period_ms: f64,
+    pub deadline_ms: f64,
+    /// Host compute before launch / after copy-back (ms, busy work).
+    pub cpu_pre_ms: f64,
+    pub cpu_post_ms: f64,
+    /// Host↔device copy durations (ms; the bus station holds the bus for
+    /// this long — on the CPU PJRT backend the copy is simulated, the
+    /// kernel execution is real).
+    pub mem_h2d_ms: f64,
+    pub mem_d2h_ms: f64,
+}
+
+impl AppSpec {
+    /// A convenience constructor for inference-style apps.
+    pub fn inference(name: &str, artifact: &str, period_ms: f64) -> AppSpec {
+        AppSpec {
+            name: name.to_string(),
+            artifact: artifact.to_string(),
+            class: KernelClass::Comprehensive,
+            period_ms,
+            deadline_ms: period_ms,
+            cpu_pre_ms: 0.3,
+            cpu_post_ms: 0.2,
+            mem_h2d_ms: 0.2,
+            mem_d2h_ms: 0.2,
+        }
+    }
+
+    /// Profile the artifact on the engine: `reps` pinned executions over
+    /// the full device, yielding the Lemma 5.1 work/overhead parameters.
+    ///
+    /// On the CPU PJRT backend, wall time barely depends on the pinned
+    /// range (the interpret-mode grid is sequential), so the measured
+    /// time *is* the single-SM work `GW` and the launch floor is the
+    /// observed minimum dispatch overhead.
+    pub fn profile(&self, engine: &Engine, reps: usize) -> Result<GpuProfile> {
+        let meta = engine.meta(&self.artifact)?;
+        if !meta.takes_sm_range() {
+            anyhow::bail!("artifact {:?} is not a persistent-thread kernel", self.artifact);
+        }
+        let n_in = meta.inputs[1].element_count();
+        let x: Vec<f32> = (0..n_in).map(|i| (i as f32) / 97.0 - 1.5).collect();
+        let full = (0, meta.num_vsm as i32 - 1);
+        let mut samples = Vec::with_capacity(reps);
+        // Warm-up execution (compilation caches, allocator).
+        engine.execute_pinned(&self.artifact, full, &[&x])?;
+        for _ in 0..reps.max(3) {
+            let out = engine
+                .execute_pinned(&self.artifact, full, &[&x])
+                .with_context(|| format!("profiling {:?}", self.artifact))?;
+            samples.push(out.elapsed.as_secs_f64() * 1e3);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lo = sorted[0];
+        // Guard the upper bound with a safety margin over the observed
+        // max — profiling 10 000×, as the paper does, would tighten this.
+        let hi = sorted[sorted.len() - 1] * 1.2;
+        Ok(GpuProfile {
+            samples_ms: samples,
+            work: Bounds::new(lo, hi),
+            overhead_hi: 0.12 * hi,
+        })
+    }
+
+    /// Build the Eq.-4 task model from the spec + GPU profile.
+    pub fn to_task(&self, id: usize, profile: &GpuProfile) -> RtTask {
+        let cpu_bounds = |ms: f64| Bounds::new(ms * 0.8, ms);
+        RtTask {
+            id,
+            cpu: vec![cpu_bounds(self.cpu_pre_ms), cpu_bounds(self.cpu_post_ms)],
+            mem: vec![cpu_bounds(self.mem_h2d_ms), cpu_bounds(self.mem_d2h_ms)],
+            gpu: vec![GpuSegment::new(
+                profile.work,
+                Bounds::new(0.0, profile.overhead_hi),
+                self.class,
+            )],
+            memory_model: MemoryModel::TwoCopy,
+            deadline: self.deadline_ms,
+            period: self.period_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_to_task_shape() {
+        let spec = AppSpec::inference("det", "synthetic_compute_small", 50.0);
+        let profile = GpuProfile {
+            samples_ms: vec![2.0, 2.1],
+            work: Bounds::new(2.0, 2.5),
+            overhead_hi: 0.3,
+        };
+        let t = spec.to_task(3, &profile);
+        assert_eq!(t.id, 3);
+        assert_eq!(t.m(), 2);
+        assert_eq!(t.gpu_count(), 1);
+        assert_eq!(t.mem_count(), 2);
+        assert_eq!(t.validate(), Ok(()));
+        assert_eq!(t.gpu[0].work, Bounds::new(2.0, 2.5));
+    }
+}

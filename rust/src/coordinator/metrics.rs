@@ -1,0 +1,118 @@
+//! Serving metrics: per-task latency distributions, deadline misses,
+//! throughput.
+
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+/// Per-application serving statistics.
+#[derive(Debug, Clone)]
+pub struct AppStats {
+    pub name: String,
+    pub released: usize,
+    pub completed: usize,
+    pub misses: usize,
+    /// End-to-end latency samples (ms).
+    pub latencies_ms: Vec<f64>,
+    /// GPU-segment execution samples (ms) as measured at the PJRT call.
+    pub gpu_ms: Vec<f64>,
+    pub deadline_ms: f64,
+}
+
+impl AppStats {
+    pub fn latency_summary(&self) -> Option<Summary> {
+        Summary::of(&self.latencies_ms)
+    }
+}
+
+/// Whole-run serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub per_app: Vec<AppStats>,
+    pub wall: Duration,
+}
+
+impl ServeReport {
+    pub fn total_completed(&self) -> usize {
+        self.per_app.iter().map(|a| a.completed).sum()
+    }
+
+    pub fn total_misses(&self) -> usize {
+        self.per_app.iter().map(|a| a.misses).sum()
+    }
+
+    /// Requests per second across all applications.
+    pub fn throughput(&self) -> f64 {
+        self.total_completed() as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Render the latency/deadline table the serving example prints.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<14} {:>5} {:>5} {:>6} {:>9} {:>9} {:>9} {:>9} {:>8}\n",
+            "app", "rel", "done", "miss", "p50(ms)", "p95(ms)", "max(ms)", "D(ms)", "gpu(ms)"
+        ));
+        for a in &self.per_app {
+            let s = a.latency_summary();
+            let gpu = Summary::of(&a.gpu_ms);
+            out.push_str(&format!(
+                "{:<14} {:>5} {:>5} {:>6} {:>9} {:>9} {:>9} {:>9.2} {:>8}\n",
+                a.name,
+                a.released,
+                a.completed,
+                a.misses,
+                s.map_or("-".into(), |s| format!("{:.2}", s.p50)),
+                s.map_or("-".into(), |s| format!("{:.2}", s.p95)),
+                s.map_or("-".into(), |s| format!("{:.2}", s.max)),
+                a.deadline_ms,
+                gpu.map_or("-".into(), |g| format!("{:.2}", g.p50)),
+            ));
+        }
+        out.push_str(&format!(
+            "completed {} requests in {:.2} s → {:.1} req/s; total misses: {}\n",
+            self.total_completed(),
+            self.wall.as_secs_f64(),
+            self.throughput(),
+            self.total_misses()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_aggregates() {
+        let report = ServeReport {
+            per_app: vec![
+                AppStats {
+                    name: "a".into(),
+                    released: 10,
+                    completed: 9,
+                    misses: 1,
+                    latencies_ms: vec![1.0, 2.0, 3.0],
+                    gpu_ms: vec![0.5],
+                    deadline_ms: 10.0,
+                },
+                AppStats {
+                    name: "b".into(),
+                    released: 5,
+                    completed: 5,
+                    misses: 0,
+                    latencies_ms: vec![4.0],
+                    gpu_ms: vec![],
+                    deadline_ms: 20.0,
+                },
+            ],
+            wall: Duration::from_secs(2),
+        };
+        assert_eq!(report.total_completed(), 14);
+        assert_eq!(report.total_misses(), 1);
+        assert!((report.throughput() - 7.0).abs() < 1e-9);
+        let table = report.table();
+        assert!(table.contains("a") && table.contains("b"));
+    }
+}

@@ -1,0 +1,39 @@
+//! The RTGPU serving coordinator — the framework a deployment would run.
+//!
+//! Python never appears here: the coordinator loads the AOT artifacts via
+//! [`crate::runtime::Engine`] and serves periodic real-time GPU
+//! applications end to end:
+//!
+//! 1. **Registration** — each application declares its chain (CPU
+//!    pre/post work, host↔device copy sizes, the GPU artifact) and its
+//!    period/deadline ([`app::AppSpec`]).
+//! 2. **Admission** ([`admission`]) — the specs are profiled into the
+//!    Eq.-4 task model and Algorithm 2 (grid-searched federated
+//!    scheduling + fixed-priority analysis) decides schedulability and
+//!    assigns each task a dedicated, *contiguous* virtual-SM range.
+//! 3. **Serving** ([`serve`]) — release timers fire jobs through the
+//!    three resource stations that mirror the platform model: a
+//!    uniprocessor CPU station with priority dispatch, a non-preemptive
+//!    priority bus station, and the GPU station that executes the task's
+//!    artifact **pinned to its admitted virtual-SM range** via PJRT.
+//! 4. **Metrics** — per-task response times, deadline misses and
+//!    throughput, reported on drain.
+//!
+//! Implementation notes (deviations documented in DESIGN.md): CPU
+//! segments are dispatched non-preemptively (real threads cannot be
+//! preempted mid-spin); admission therefore treats CPU segments like the
+//! bus — short segments keep the induced blocking negligible.  On the
+//! CPU PJRT backend the virtual-SM pinning is functional (it selects the
+//! persistent-thread lanes, verified against goldens) rather than
+//! temporal; wall-clock GPU times are measured at admission and used as
+//! the model's work parameter.
+
+pub mod admission;
+pub mod app;
+pub mod metrics;
+pub mod serve;
+
+pub use admission::{admit, AdmissionReport, TaskAdmission};
+pub use app::{AppSpec, GpuProfile};
+pub use metrics::ServeReport;
+pub use serve::{serve, ServeConfig};

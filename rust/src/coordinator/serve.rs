@@ -1,0 +1,337 @@
+//! The serving loop: release timers, CPU / bus / GPU stations, drain.
+//!
+//! Thread topology (PJRT handles are not `Sync`, so the engine stays on
+//! the caller's thread):
+//!
+//! ```text
+//!   timer thread ──► CPU station ──► bus station ──► caller thread (GPU)
+//!        ▲               ▲  ▲             ▲  │              │
+//!        │               │  └── post ─────┼──┘◄── d2h ──────┘
+//!        └── releases    └── completion records
+//! ```
+//!
+//! The CPU and bus stations dispatch by task priority (deadline-
+//! monotonic, non-preemptive within a segment — exactly the §3 model for
+//! the bus; a documented approximation for the CPU).  The GPU station
+//! executes each job's artifact pinned to the task's admitted virtual-SM
+//! range.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+
+use super::admission::AdmissionReport;
+use super::metrics::{AppStats, ServeReport};
+
+/// Serving-run parameters.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// How long to keep releasing jobs.
+    pub duration: Duration,
+    /// Cap on total releases (safety valve for tests).
+    pub max_jobs: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { duration: Duration::from_secs(5), max_jobs: 100_000 }
+    }
+}
+
+/// Chain phase of an in-flight job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Pre,
+    H2d,
+    Gpu,
+    D2h,
+    Post,
+}
+
+#[derive(Debug)]
+struct Job {
+    /// Index into `report.admitted`.
+    app: usize,
+    priority: usize,
+    release: Instant,
+    deadline: Instant,
+    phase: Phase,
+    /// GPU execution time observed for this job (ms).
+    gpu_ms: f64,
+}
+
+impl Job {
+    fn key(&self) -> (usize, Instant) {
+        (self.priority, self.release)
+    }
+}
+
+// BinaryHeap is a max-heap; invert the key for priority order.
+struct Ordered(Job);
+impl PartialEq for Ordered {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.key() == other.0.key()
+    }
+}
+impl Eq for Ordered {}
+impl PartialOrd for Ordered {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ordered {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.0.key().cmp(&self.0.key())
+    }
+}
+
+enum Msg {
+    Work(Job),
+    Shutdown,
+}
+
+/// Busy-spin for `ms` (host compute stand-in; sub-millisecond segments).
+fn spin_ms(ms: f64) {
+    let end = Instant::now() + Duration::from_secs_f64(ms / 1e3);
+    while Instant::now() < end {
+        std::hint::spin_loop();
+    }
+}
+
+/// A station thread: priority queue over arriving jobs, `work` applied
+/// non-preemptively, then forwarded via `advance`.
+fn station(
+    rx: Receiver<Msg>,
+    work: impl Fn(&mut Job),
+    advance: impl Fn(Job),
+) {
+    let mut heap: BinaryHeap<Ordered> = BinaryHeap::new();
+    let mut open = true;
+    loop {
+        // Block for at least one message when idle; then drain.
+        if heap.is_empty() {
+            if !open {
+                return;
+            }
+            match rx.recv() {
+                Ok(Msg::Work(j)) => heap.push(Ordered(j)),
+                Ok(Msg::Shutdown) | Err(_) => open = false,
+            }
+        }
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::Work(j) => heap.push(Ordered(j)),
+                Msg::Shutdown => open = false,
+            }
+        }
+        if let Some(Ordered(mut job)) = heap.pop() {
+            work(&mut job);
+            advance(job);
+        }
+    }
+}
+
+/// Run the admitted applications for `cfg.duration`, executing real PJRT
+/// kernels pinned to each task's virtual-SM range.  Returns per-app
+/// latency / miss statistics.
+pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Result<ServeReport> {
+    assert!(report.schedulable, "serve() requires an admitted (schedulable) report");
+    let n = report.admitted.len();
+
+    // Fixed input per app (shape from the manifest).
+    let inputs: Vec<Vec<f32>> = report
+        .admitted
+        .iter()
+        .map(|a| {
+            let count = engine.meta(&a.artifact)?.inputs[1].element_count();
+            Ok((0..count).map(|i| (i as f32) / 61.0 - 2.0).collect())
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let stats: Arc<Mutex<Vec<AppStats>>> = Arc::new(Mutex::new(
+        report
+            .admitted
+            .iter()
+            .map(|a| AppStats {
+                name: a.name.clone(),
+                released: 0,
+                completed: 0,
+                misses: 0,
+                latencies_ms: Vec::new(),
+                gpu_ms: Vec::new(),
+                deadline_ms: a.deadline_ms,
+            })
+            .collect(),
+    ));
+
+    let released = Arc::new(AtomicUsize::new(0));
+    let completed = Arc::new(AtomicUsize::new(0));
+
+    let (cpu_tx, cpu_rx) = channel::<Msg>();
+    let (bus_tx, bus_rx) = channel::<Msg>();
+    let (gpu_tx, gpu_rx) = channel::<Msg>();
+
+    // Segment durations by (app, phase).
+    let pre_ms: Vec<f64> = report.admitted.iter().map(|a| a.cpu_pre_ms).collect();
+    let post_ms: Vec<f64> = report.admitted.iter().map(|a| a.cpu_post_ms).collect();
+    let h2d_ms: Vec<f64> = report.admitted.iter().map(|a| a.mem_h2d_ms).collect();
+    let d2h_ms: Vec<f64> = report.admitted.iter().map(|a| a.mem_d2h_ms).collect();
+
+    let t0 = Instant::now();
+    let result = std::thread::scope(|scope| -> Result<()> {
+        // --- timer thread: periodic releases --------------------------
+        {
+            let cpu_tx = cpu_tx.clone();
+            let released = Arc::clone(&released);
+            let stats = Arc::clone(&stats);
+            let admitted = &report.admitted;
+            let cfg = cfg.clone();
+            scope.spawn(move || {
+                let start = Instant::now();
+                let mut next: Vec<Instant> = vec![start; n];
+                let mut count = 0usize;
+                while start.elapsed() < cfg.duration && count < cfg.max_jobs {
+                    // Earliest next release.
+                    let (app, &when) =
+                        next.iter().enumerate().min_by_key(|&(_, w)| w).unwrap();
+                    let now = Instant::now();
+                    if when > now {
+                        std::thread::sleep(when - now);
+                    }
+                    let release = Instant::now();
+                    let a = &admitted[app];
+                    let job = Job {
+                        app,
+                        priority: a.priority,
+                        release,
+                        deadline: release + Duration::from_secs_f64(a.deadline_ms / 1e3),
+                        phase: Phase::Pre,
+                        gpu_ms: 0.0,
+                    };
+                    released.fetch_add(1, Ordering::SeqCst);
+                    stats.lock().unwrap()[app].released += 1;
+                    if cpu_tx.send(Msg::Work(job)).is_err() {
+                        return;
+                    }
+                    next[app] = when + Duration::from_secs_f64(a.period_ms / 1e3);
+                    count += 1;
+                }
+            });
+        }
+
+        // --- CPU station (pre/post + completion records) ---------------
+        {
+            let bus_tx = bus_tx.clone();
+            let stats = Arc::clone(&stats);
+            let completed = Arc::clone(&completed);
+            let pre = pre_ms.clone();
+            let post = post_ms.clone();
+            scope.spawn(move || {
+                station(
+                    cpu_rx,
+                    |job| match job.phase {
+                        Phase::Pre => spin_ms(pre[job.app]),
+                        Phase::Post => spin_ms(post[job.app]),
+                        _ => unreachable!("CPU station got {:?}", job.phase),
+                    },
+                    |mut job| match job.phase {
+                        Phase::Pre => {
+                            job.phase = Phase::H2d;
+                            let _ = bus_tx.send(Msg::Work(job));
+                        }
+                        Phase::Post => {
+                            let now = Instant::now();
+                            let latency = now.duration_since(job.release).as_secs_f64() * 1e3;
+                            let mut s = stats.lock().unwrap();
+                            let st = &mut s[job.app];
+                            st.completed += 1;
+                            st.latencies_ms.push(latency);
+                            st.gpu_ms.push(job.gpu_ms);
+                            if now > job.deadline {
+                                st.misses += 1;
+                            }
+                            completed.fetch_add(1, Ordering::SeqCst);
+                        }
+                        _ => unreachable!(),
+                    },
+                );
+            });
+        }
+
+        // --- bus station (h2d/d2h; non-preemptive hold) -----------------
+        {
+            let gpu_tx = gpu_tx.clone();
+            let cpu_tx = cpu_tx.clone();
+            let h2d = h2d_ms.clone();
+            let d2h = d2h_ms.clone();
+            scope.spawn(move || {
+                station(
+                    bus_rx,
+                    |job| {
+                        let ms = match job.phase {
+                            Phase::H2d => h2d[job.app],
+                            Phase::D2h => d2h[job.app],
+                            _ => unreachable!("bus station got {:?}", job.phase),
+                        };
+                        // DMA transfer: the bus is held, the CPU is not.
+                        std::thread::sleep(Duration::from_secs_f64(ms / 1e3));
+                    },
+                    |mut job| match job.phase {
+                        Phase::H2d => {
+                            job.phase = Phase::Gpu;
+                            let _ = gpu_tx.send(Msg::Work(job));
+                        }
+                        Phase::D2h => {
+                            job.phase = Phase::Post;
+                            let _ = cpu_tx.send(Msg::Work(job));
+                        }
+                        _ => unreachable!(),
+                    },
+                );
+            });
+        }
+        drop(gpu_tx);
+
+        // --- GPU station: this thread owns the engine -------------------
+        loop {
+            match gpu_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(Msg::Work(mut job)) => {
+                    let adm = &report.admitted[job.app];
+                    let out = engine.execute_pinned(
+                        &adm.artifact,
+                        adm.vsm_range,
+                        &[&inputs[job.app]],
+                    )?;
+                    job.gpu_ms = out.elapsed.as_secs_f64() * 1e3;
+                    job.phase = Phase::D2h;
+                    let _ = bus_tx.send(Msg::Work(job));
+                }
+                Ok(Msg::Shutdown) => break,
+                Err(RecvTimeoutError::Timeout) => {
+                    // Done when the release window closed and everything
+                    // in flight has drained.
+                    if t0.elapsed() > cfg.duration
+                        && released.load(Ordering::SeqCst) == completed.load(Ordering::SeqCst)
+                    {
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Shut the stations down (timer exits on its own).
+        let _ = cpu_tx.send(Msg::Shutdown);
+        let _ = bus_tx.send(Msg::Shutdown);
+        Ok(())
+    });
+    result?;
+
+    let per_app = Arc::try_unwrap(stats).expect("threads joined").into_inner().unwrap();
+    Ok(ServeReport { per_app, wall: t0.elapsed() })
+}

@@ -1,0 +1,255 @@
+//! Synthetic task-set generation (§6.1 / Table 1).
+//!
+//! Procedure, exactly as the paper describes:
+//! 1. draw per-task utilization shares `U_i` uniformly (UUniFast) and
+//!    normalise so they sum to the target task-set utilization;
+//! 2. draw CPU / memory / GPU segment lengths uniformly within their
+//!    configured ranges;
+//! 3. set the deadline from the drawn lengths and the share:
+//!    `D_i = (ΣĈL + ΣM̂L + ΣĜW) / U_i`, `T_i = D_i`;
+//! 4. assign deadline-monotonic priorities.
+//!
+//! Lengths are normalised to unit-rate resources (one CPU, one bus, one
+//! physical SM), so task-set utilizations above 1 are meaningful when the
+//! platform has multiple SMs.
+
+use crate::model::{Bounds, GpuSegment, KernelClass, MemoryModel, RtTask, TaskSet};
+use crate::util::rng::{uunifast, Pcg};
+
+/// Table 1 parameters plus the knobs the evaluation sweeps.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    /// Number of tasks `N` in the set (Fig. 10 sweeps 3/5/7).
+    pub n_tasks: usize,
+    /// Number of subtasks `M` per task = number of CPU segments `m_i`
+    /// (Fig. 9 sweeps 3/5/7).
+    pub n_subtasks: usize,
+    /// CPU segment upper-bound range, ms (Table 1: `[1, 20]`).
+    pub cpu_range: (f64, f64),
+    /// Memory segment upper-bound range, ms (Table 1: `[1, 5]` — ¼ of the
+    /// GPU upper bound, per the §6.1 profiling note).
+    pub mem_range: (f64, f64),
+    /// GPU segment work upper-bound range, ms (Table 1: `[1, 20]`).
+    pub gpu_range: (f64, f64),
+    /// Kernel-launch overhead fraction ε (Table 1: 12%): `ĜL = ε·ĜW`.
+    pub launch_overhead: f64,
+    /// Ratio between a segment's lower and upper execution bound; the
+    /// paper's GTX 1080 Ti profiling (Fig. 4) shows low variance, so the
+    /// default draws `X̌ = β·X̂` with `β ∈ [0.7, 1.0]`.
+    pub bcet_ratio: (f64, f64),
+    pub memory_model: MemoryModel,
+    /// Kernel classes to draw GPU segments from (determines α).
+    pub classes: Vec<KernelClass>,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            n_tasks: 5,
+            n_subtasks: 5,
+            cpu_range: (1.0, 20.0),
+            mem_range: (1.0, 5.0),
+            gpu_range: (1.0, 20.0),
+            launch_overhead: 0.12,
+            bcet_ratio: (0.7, 1.0),
+            memory_model: MemoryModel::TwoCopy,
+            classes: KernelClass::ALL.to_vec(),
+        }
+    }
+}
+
+impl GenConfig {
+    /// Fig. 8 configurations: scale the GPU/memory ranges so that
+    /// CPU:GPU length ratios are `cpu : gpu`, keeping `mem = gpu / 4`.
+    pub fn with_length_ratio(mut self, cpu: f64, gpu: f64) -> Self {
+        let scale = gpu / cpu;
+        self.gpu_range = (self.cpu_range.0 * scale, self.cpu_range.1 * scale);
+        self.mem_range = (self.gpu_range.0 / 4.0, self.gpu_range.1 / 4.0);
+        self
+    }
+
+    pub fn with_memory_model(mut self, mm: MemoryModel) -> Self {
+        self.memory_model = mm;
+        self
+    }
+
+    pub fn with_tasks(mut self, n: usize) -> Self {
+        self.n_tasks = n;
+        self
+    }
+
+    pub fn with_subtasks(mut self, m: usize) -> Self {
+        self.n_subtasks = m;
+        self
+    }
+}
+
+fn draw_bounds(rng: &mut Pcg, range: (f64, f64), bcet: (f64, f64)) -> Bounds {
+    let hi = rng.range_f64(range.0, range.1);
+    let lo = hi * rng.range_f64(bcet.0, bcet.1);
+    Bounds::new(lo, hi)
+}
+
+/// Generate one task set at the target total utilization.
+pub fn generate_taskset(rng: &mut Pcg, cfg: &GenConfig, total_util: f64) -> TaskSet {
+    assert!(total_util > 0.0, "utilization must be positive");
+    assert!(cfg.n_tasks >= 1 && cfg.n_subtasks >= 1);
+    // 1. utilization shares (re-draw until every share is usable: a share
+    //    of ~0 would produce an unbounded deadline).
+    let shares = loop {
+        let s = uunifast(rng, cfg.n_tasks, total_util);
+        if s.iter().all(|&u| u > 1e-4) {
+            break s;
+        }
+    };
+
+    let mut tasks = Vec::with_capacity(cfg.n_tasks);
+    for (id, &share) in shares.iter().enumerate() {
+        let m = cfg.n_subtasks;
+        // 2. segment lengths
+        let cpu: Vec<Bounds> =
+            (0..m).map(|_| draw_bounds(rng, cfg.cpu_range, cfg.bcet_ratio)).collect();
+        let mem: Vec<Bounds> = (0..cfg.memory_model.copies() * (m - 1))
+            .map(|_| draw_bounds(rng, cfg.mem_range, cfg.bcet_ratio))
+            .collect();
+        let gpu: Vec<GpuSegment> = (0..m.saturating_sub(1))
+            .map(|_| {
+                let work = draw_bounds(rng, cfg.gpu_range, cfg.bcet_ratio);
+                let class = *rng.choice(&cfg.classes);
+                let overhead = Bounds::new(0.0, cfg.launch_overhead * work.hi);
+                GpuSegment::new(work, overhead, class)
+            })
+            .collect();
+
+        // 3. deadline from demand and share; T = D (Table 1).
+        let demand: f64 = cpu.iter().map(|b| b.hi).sum::<f64>()
+            + mem.iter().map(|b| b.hi).sum::<f64>()
+            + gpu.iter().map(|g| g.work.hi).sum::<f64>();
+        let deadline = demand / share;
+        tasks.push(RtTask {
+            id,
+            cpu,
+            mem,
+            gpu,
+            memory_model: cfg.memory_model,
+            deadline,
+            period: deadline,
+        });
+    }
+    // 4. deadline-monotonic priorities.
+    TaskSet::new_deadline_monotonic(tasks)
+}
+
+/// Generate the `count` task sets of one acceptance-ratio data point.
+pub fn generate_batch(seed: u64, cfg: &GenConfig, total_util: f64, count: usize) -> Vec<TaskSet> {
+    let mut rng = Pcg::new(seed);
+    (0..count).map(|_| generate_taskset(&mut rng, cfg, total_util)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_sets_validate() {
+        let mut rng = Pcg::new(11);
+        for &u in &[0.5, 1.0, 2.0, 5.0] {
+            let ts = generate_taskset(&mut rng, &GenConfig::default(), u);
+            assert_eq!(ts.validate(), Ok(()));
+            assert_eq!(ts.len(), 5);
+            for t in &ts.tasks {
+                assert_eq!(t.m(), 5);
+                assert_eq!(t.gpu_count(), 4);
+                assert_eq!(t.mem_count(), 8);
+            }
+        }
+    }
+
+    #[test]
+    fn total_utilization_hits_target() {
+        let mut rng = Pcg::new(12);
+        for &u in &[0.5, 1.5, 4.0] {
+            let ts = generate_taskset(&mut rng, &GenConfig::default(), u);
+            assert!(
+                (ts.total_utilization() - u).abs() < 1e-9,
+                "target {u}, got {}",
+                ts.total_utilization()
+            );
+        }
+    }
+
+    #[test]
+    fn segment_lengths_respect_ranges() {
+        let mut rng = Pcg::new(13);
+        let cfg = GenConfig::default();
+        let ts = generate_taskset(&mut rng, &cfg, 2.0);
+        for t in &ts.tasks {
+            for b in &t.cpu {
+                assert!(b.hi >= cfg.cpu_range.0 && b.hi <= cfg.cpu_range.1);
+                assert!(b.lo >= b.hi * cfg.bcet_ratio.0 - 1e-9);
+            }
+            for b in &t.mem {
+                assert!(b.hi >= cfg.mem_range.0 && b.hi <= cfg.mem_range.1);
+            }
+            for g in &t.gpu {
+                assert!(g.work.hi >= cfg.gpu_range.0 && g.work.hi <= cfg.gpu_range.1);
+                assert!((g.overhead.hi - 0.12 * g.work.hi).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn length_ratio_scaling_matches_fig8() {
+        let cfg = GenConfig::default().with_length_ratio(1.0, 8.0);
+        assert_eq!(cfg.gpu_range, (8.0, 160.0));
+        assert_eq!(cfg.mem_range, (2.0, 40.0));
+        let cfg = GenConfig::default().with_length_ratio(2.0, 1.0);
+        assert_eq!(cfg.gpu_range, (0.5, 10.0));
+        assert_eq!(cfg.mem_range, (0.125, 2.5));
+    }
+
+    #[test]
+    fn one_copy_model_generates_half_the_copies() {
+        let mut rng = Pcg::new(14);
+        let cfg = GenConfig::default().with_memory_model(MemoryModel::OneCopy);
+        let ts = generate_taskset(&mut rng, &cfg, 2.0);
+        for t in &ts.tasks {
+            assert_eq!(t.mem_count(), 4);
+        }
+    }
+
+    #[test]
+    fn batches_are_reproducible() {
+        let cfg = GenConfig::default();
+        let a = generate_batch(99, &cfg, 2.0, 3);
+        let b = generate_batch(99, &cfg, 2.0, 3);
+        for (x, y) in a.iter().zip(&b) {
+            for (tx, ty) in x.tasks.iter().zip(&y.tasks) {
+                assert_eq!(tx.deadline, ty.deadline);
+                assert_eq!(tx.cpu.len(), ty.cpu.len());
+                assert_eq!(tx.cpu[0], ty.cpu[0]);
+            }
+        }
+        let c = generate_batch(100, &cfg, 2.0, 3);
+        assert_ne!(a[0].tasks[0].deadline, c[0].tasks[0].deadline);
+    }
+
+    #[test]
+    fn subtask_and_task_knobs() {
+        let mut rng = Pcg::new(15);
+        let cfg = GenConfig::default().with_tasks(3).with_subtasks(7);
+        let ts = generate_taskset(&mut rng, &cfg, 2.0);
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts.tasks[0].m(), 7);
+        assert_eq!(ts.tasks[0].gpu_count(), 6);
+    }
+
+    #[test]
+    fn priorities_are_deadline_monotonic() {
+        let mut rng = Pcg::new(16);
+        let ts = generate_taskset(&mut rng, &GenConfig::default(), 3.0);
+        for w in ts.tasks.windows(2) {
+            assert!(w[0].deadline <= w[1].deadline);
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! ASCII charts and CSV output for the regenerated figures.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One named series over a shared x-axis.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub ys: Vec<f64>,
+}
+
+/// Render aligned acceptance-ratio curves as an ASCII chart, one row per
+/// utilization level, one column block per series.
+pub fn table(xs: &[f64], series: &[Series], x_label: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{:>10}", x_label));
+    for s in series {
+        out.push_str(&format!(" {:>18}", s.name));
+    }
+    out.push('\n');
+    for (i, x) in xs.iter().enumerate() {
+        out.push_str(&format!("{x:>10.2}"));
+        for s in series {
+            let y = s.ys[i];
+            let bar_len = (y * 10.0).round() as usize;
+            out.push_str(&format!(" {:>6.2} {:<11}", y, "#".repeat(bar_len.min(10))));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a CSV with header `x,<series...>`.
+pub fn write_csv(path: &Path, x_label: &str, xs: &[f64], series: &[Series]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "{x_label}")?;
+    for s in series {
+        write!(f, ",{}", s.name)?;
+    }
+    writeln!(f)?;
+    for (i, x) in xs.iter().enumerate() {
+        write!(f, "{x}")?;
+        for s in series {
+            write!(f, ",{}", s.ys[i])?;
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+/// Default results directory (created on demand).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("RTGPU_RESULTS").map(Into::into).unwrap_or_else(|_| "results".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_writes() {
+        let xs = [0.5, 1.0];
+        let series = [
+            Series { name: "RTGPU".into(), ys: vec![1.0, 0.5] },
+            Series { name: "STGM".into(), ys: vec![0.9, 0.1] },
+        ];
+        let t = table(&xs, &series, "util");
+        assert!(t.contains("RTGPU") && t.contains("1.00"));
+
+        let dir = std::env::temp_dir().join("rtgpu_chart_test");
+        let path = dir.join("fig.csv");
+        write_csv(&path, "util", &xs, &series).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("util,RTGPU,STGM"));
+        assert!(text.contains("0.5,1,0.9"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

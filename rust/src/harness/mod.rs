@@ -1,0 +1,19 @@
+//! Evaluation harness: regenerates every table/figure of §6
+//! (per-experiment index in DESIGN.md §5).
+//!
+//! * [`sweep`] — acceptance-ratio curves (Figs. 8–11) for the three
+//!   approaches, multithreaded over task sets.
+//! * [`validate`] — analysis vs simulated-platform acceptance
+//!   (Figs. 12/13), with worst-case and average execution-time models.
+//! * [`throughput`] — virtual-SM throughput gains η₁/η₂ (Eq. 9/10,
+//!   Fig. 14).
+//! * [`chart`] — ASCII rendering + CSV output under `results/`.
+
+pub mod chart;
+pub mod sweep;
+pub mod throughput;
+pub mod validate;
+
+pub use sweep::{run_sweep, AcceptanceCurve, SweepSpec};
+pub use throughput::{throughput_gain, ThroughputPoint};
+pub use validate::{run_validation, ValidationCurve};

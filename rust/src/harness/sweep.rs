@@ -1,0 +1,167 @@
+//! Acceptance-ratio sweeps (Figs. 8–11): for each utilization level,
+//! generate `sets_per_point` task sets and measure the fraction each
+//! approach accepts.  Task sets are generated once (deterministic in the
+//! seed) and analysed in parallel worker threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::analysis::{analyze, Approach, Search};
+use crate::gen::{generate_taskset, GenConfig};
+use crate::model::TaskSet;
+use crate::util::rng::Pcg;
+
+/// One sweep request.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub cfg: GenConfig,
+    pub utils: Vec<f64>,
+    pub sets_per_point: usize,
+    pub seed: u64,
+    pub gn_total: usize,
+    pub approaches: Vec<Approach>,
+    pub search: Search,
+}
+
+impl SweepSpec {
+    /// Table-1 defaults with the standard utilization axis.
+    pub fn standard(cfg: GenConfig, seed: u64) -> SweepSpec {
+        SweepSpec {
+            cfg,
+            utils: (1..=12).map(|i| i as f64 * 0.2).collect(),
+            sets_per_point: 100,
+            seed,
+            gn_total: 10,
+            approaches: Approach::ALL.to_vec(),
+            search: Search::Grid,
+        }
+    }
+
+    /// Reduced size for tests/benches.
+    pub fn quick(cfg: GenConfig, seed: u64) -> SweepSpec {
+        SweepSpec { sets_per_point: 20, ..SweepSpec::standard(cfg, seed) }
+    }
+}
+
+/// One approach's acceptance curve.
+#[derive(Debug, Clone)]
+pub struct AcceptanceCurve {
+    pub approach: Approach,
+    /// Acceptance ratio per utilization level, aligned with the spec's
+    /// `utils`.
+    pub ratios: Vec<f64>,
+}
+
+/// Run the sweep with `threads` workers (0 = auto).
+pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Vec<AcceptanceCurve> {
+    // Generate every task set up front, deterministically.
+    let mut rng = Pcg::new(spec.seed);
+    let batches: Vec<Vec<TaskSet>> = spec
+        .utils
+        .iter()
+        .map(|&u| (0..spec.sets_per_point).map(|_| generate_taskset(&mut rng, &spec.cfg, u)).collect())
+        .collect();
+
+    // Flatten into work items: (util index, set).
+    let work: Vec<(usize, &TaskSet)> = batches
+        .iter()
+        .enumerate()
+        .flat_map(|(ui, sets)| sets.iter().map(move |ts| (ui, ts)))
+        .collect();
+
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        threads
+    };
+
+    // accepts[approach][util] counters.
+    let accepts: Vec<Vec<AtomicUsize>> = spec
+        .approaches
+        .iter()
+        .map(|_| (0..spec.utils.len()).map(|_| AtomicUsize::new(0)).collect())
+        .collect();
+    let next = AtomicUsize::new(0);
+    let panic_slot: Mutex<Option<String>> = Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(&(ui, ts)) = work.get(i) else { break };
+                for (ai, &ap) in spec.approaches.iter().enumerate() {
+                    let verdict = analyze(ts, spec.gn_total, ap, spec.search);
+                    if verdict.schedulable {
+                        accepts[ai][ui].fetch_add(1, Ordering::Relaxed);
+                    }
+                    if verdict.schedulable && verdict.allocation.is_none() {
+                        *panic_slot.lock().unwrap() =
+                            Some("schedulable verdict without allocation".into());
+                    }
+                }
+            });
+        }
+    });
+    if let Some(msg) = panic_slot.into_inner().unwrap() {
+        panic!("{msg}");
+    }
+
+    spec.approaches
+        .iter()
+        .enumerate()
+        .map(|(ai, &approach)| AcceptanceCurve {
+            approach,
+            ratios: (0..spec.utils.len())
+                .map(|ui| accepts[ai][ui].load(Ordering::Relaxed) as f64 / spec.sets_per_point as f64)
+                .collect(),
+        })
+        .collect()
+}
+
+/// Convert curves into chart series.
+pub fn to_series(curves: &[AcceptanceCurve]) -> Vec<super::chart::Series> {
+    curves
+        .iter()
+        .map(|c| super::chart::Series { name: c.approach.name().to_string(), ys: c.ratios.clone() })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_monotone_ish_curves() {
+        let mut spec = SweepSpec::quick(GenConfig::default(), 5);
+        spec.utils = vec![0.3, 2.5];
+        spec.sets_per_point = 10;
+        let curves = run_sweep(&spec, 0);
+        assert_eq!(curves.len(), 3);
+        for c in &curves {
+            assert_eq!(c.ratios.len(), 2);
+            assert!(
+                c.ratios[0] >= c.ratios[1],
+                "{}: acceptance should not rise with utilization: {:?}",
+                c.approach.name(),
+                c.ratios
+            );
+        }
+        // RTGPU dominates at both levels.
+        let rt = &curves[0].ratios;
+        for other in &curves[1..] {
+            for (a, b) in rt.iter().zip(&other.ratios) {
+                assert!(a + 1e-9 >= *b, "RTGPU {rt:?} vs {:?}", other.ratios);
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let mut spec = SweepSpec::quick(GenConfig::default(), 6);
+        spec.utils = vec![0.8];
+        spec.sets_per_point = 8;
+        let a = run_sweep(&spec, 1);
+        let b = run_sweep(&spec, 4);
+        assert_eq!(a[0].ratios, b[0].ratios);
+    }
+}

@@ -1,0 +1,155 @@
+//! Figs. 12/13: schedulability analysis vs the (simulated) platform.
+//!
+//! For each utilization level and SM count, every generated set is
+//! checked two ways:
+//!
+//! * **analysis** — Algorithm 2's verdict;
+//! * **platform** — the discrete-event platform run under the RTGPU
+//!   runtime policy (federated virtual SMs, FP bus/CPU); a set is
+//!   accepted if no deadline is missed.  Rejected-by-analysis sets still
+//!   run, under their best-effort minimum allocation.
+//!
+//! Fig. 12 models segments by worst-case execution times; Fig. 13 by
+//! average times (analysis on mean-collapsed bounds vs a stochastic
+//! platform), which tightens the gap — the paper's observation.
+
+use crate::analysis::gpu::min_allocations;
+use crate::analysis::rtgpu::{schedule, RtgpuOpts, Search};
+use crate::analysis::SmModel;
+use crate::gen::{generate_taskset, GenConfig};
+use crate::model::{Bounds, TaskSet};
+use crate::sim::{simulate, ExecModel, SimConfig};
+use crate::util::rng::Pcg;
+
+/// Which execution-time model the comparison uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeModel {
+    /// Fig. 12: worst-case execution times everywhere.
+    Worst,
+    /// Fig. 13: analysis on average-collapsed bounds; stochastic platform.
+    Average,
+}
+
+/// Analysis + platform acceptance per utilization level.
+#[derive(Debug, Clone)]
+pub struct ValidationCurve {
+    pub gn_total: usize,
+    pub analysis: Vec<f64>,
+    pub platform: Vec<f64>,
+}
+
+/// Collapse each segment's bounds to its midpoint (the "average execution
+/// time model" of Fig. 13).
+pub fn average_bounds(ts: &TaskSet) -> TaskSet {
+    let mut out = ts.clone();
+    let mid = |b: Bounds| {
+        let m = 0.5 * (b.lo + b.hi);
+        Bounds::new(b.lo.min(m), m)
+    };
+    for t in &mut out.tasks {
+        for b in &mut t.cpu {
+            *b = mid(*b);
+        }
+        for b in &mut t.mem {
+            *b = mid(*b);
+        }
+        for g in &mut t.gpu {
+            g.work = mid(g.work);
+            g.overhead = Bounds::new(0.0, 0.5 * g.overhead.hi);
+        }
+    }
+    out
+}
+
+/// Run the validation experiment for one SM count.
+pub fn run_validation(
+    cfg: &GenConfig,
+    utils: &[f64],
+    sets_per_point: usize,
+    seed: u64,
+    gn_total: usize,
+    model: TimeModel,
+) -> ValidationCurve {
+    let mut rng = Pcg::new(seed);
+    let mut analysis = Vec::with_capacity(utils.len());
+    let mut platform = Vec::with_capacity(utils.len());
+    for &u in utils {
+        let mut a_ok = 0usize;
+        let mut p_ok = 0usize;
+        for i in 0..sets_per_point {
+            let ts = generate_taskset(&mut rng, cfg, u);
+            let analysed = match model {
+                TimeModel::Worst => ts.clone(),
+                TimeModel::Average => average_bounds(&ts),
+            };
+            let verdict = schedule(&analysed, gn_total, &RtgpuOpts::default(), Search::Grid);
+            if verdict.schedulable {
+                a_ok += 1;
+            }
+            // Platform run: use the admitted allocation when there is
+            // one, otherwise the minimum-feasible (best-effort) split.
+            let alloc = verdict
+                .allocation
+                .or_else(|| min_allocations(&ts, gn_total, SmModel::Virtual));
+            let Some(alloc) = alloc else { continue };
+            // The platform is the same "real system" in both figures —
+            // stochastic execution inside the profiled bounds; only the
+            // analysis-side time model changes between Figs. 12 and 13.
+            let sim_cfg = SimConfig {
+                exec: ExecModel::Bell,
+                sm_model: SmModel::Virtual,
+                seed: seed ^ (i as u64) << 8,
+                horizon_ms: 0.0,
+                stop_on_first_miss: true,
+            };
+            if simulate(&ts, &alloc, &sim_cfg).schedulable {
+                p_ok += 1;
+            }
+        }
+        analysis.push(a_ok as f64 / sets_per_point as f64);
+        platform.push(p_ok as f64 / sets_per_point as f64);
+    }
+    ValidationCurve { gn_total, analysis, platform }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platform_accepts_at_least_what_analysis_accepts_wcet() {
+        let cfg = GenConfig::default();
+        let utils = [0.5, 1.0, 1.5];
+        let v = run_validation(&cfg, &utils, 10, 900, 10, TimeModel::Worst);
+        for (a, p) in v.analysis.iter().zip(&v.platform) {
+            assert!(p + 1e-9 >= *a, "platform {p} < analysis {a} — unsound");
+        }
+    }
+
+    #[test]
+    fn average_model_tightens_the_gap() {
+        // Analysis acceptance under average bounds ≥ under worst-case
+        // bounds (the mechanism behind Fig. 13's smaller gap).
+        let cfg = GenConfig::default();
+        let utils = [1.0, 1.4];
+        let w = run_validation(&cfg, &utils, 12, 901, 10, TimeModel::Worst);
+        let a = run_validation(&cfg, &utils, 12, 901, 10, TimeModel::Average);
+        let gap_w: f64 = w.platform.iter().zip(&w.analysis).map(|(p, a)| p - a).sum();
+        let gap_a: f64 = a.platform.iter().zip(&a.analysis).map(|(p, an)| p - an).sum();
+        assert!(
+            gap_a <= gap_w + 1e-9,
+            "average-model gap {gap_a} should not exceed WCET gap {gap_w}"
+        );
+    }
+
+    #[test]
+    fn average_bounds_collapse_correctly() {
+        use crate::model::testing::simple_task;
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let avg = average_bounds(&ts);
+        let t = &avg.tasks[0];
+        assert!((t.cpu[0].hi - 1.5).abs() < 1e-12); // [1,2] → hi 1.5
+        assert!((t.gpu[0].work.hi - 6.0).abs() < 1e-12); // [4,8] → 6
+        assert_eq!(t.validate(), Ok(()));
+    }
+}

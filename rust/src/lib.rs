@@ -1,0 +1,39 @@
+//! # RTGPU — Real-Time GPU Scheduling of Hard-Deadline Parallel Tasks
+//!
+//! A Rust + JAX + Pallas reproduction of *"RTGPU: Real-Time GPU Scheduling
+//! of Hard Deadline Parallel Tasks with Fine-Grain Utilization"* (Zou, Li,
+//! Gill, Zhang, 2021).
+//!
+//! The crate is organised as the paper's framework (Fig. 1):
+//!
+//! * [`model`] — the CPU/memory/GPU task model of §3–§5.1 (Eq. 4 tuples,
+//!   GPU segments `(GW, GL, α)`, platforms, priorities).
+//! * [`gen`] — the §6.1 synthetic task-set generator (Table 1).
+//! * [`analysis`] — the schedulability machinery: multi-segment
+//!   self-suspension workload functions (Lemma 2.1–2.3), federated GPU
+//!   response bounds (Lemma 5.1), bus/CPU fixed-priority analyses
+//!   (Lemmas 5.2–5.5), the end-to-end bound (Theorem 5.6), Algorithm 2's
+//!   grid-searched federated allocation, and the two baselines
+//!   (self-suspension, STGM busy-waiting).
+//! * [`sim`] — a discrete-event simulator of the CPU + non-preemptive bus +
+//!   virtual-SM GPU platform; stands in for the paper's GTX 1080 Ti
+//!   testbed (see DESIGN.md §2 for the substitution argument).
+//! * [`runtime`] — the PJRT execution layer: loads the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and runs them on the
+//!   CPU PJRT client.  Python is never on the request path.
+//! * [`coordinator`] — the serving framework: admission control via the
+//!   analysis, federated virtual-SM allocation, fixed-priority CPU/bus
+//!   queues, per-task release timers and metrics.
+//! * [`harness`] — regeneration of every evaluation figure (Figs 4–14).
+//! * [`util`] — self-contained substrates (JSON, RNG, CLI, bench,
+//!   property-test helpers) — the offline build environment has no
+//!   serde/rand/clap/criterion/proptest.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod gen;
+pub mod harness;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,209 @@
+//! `rtgpu` — launcher for the RTGPU framework.
+//!
+//! ```text
+//! rtgpu serve   [--apps N] [--seconds S] [--sms GN]     serve real kernels
+//! rtgpu admit   [--util U] [--tasks N] [--subtasks M]   analyze a random set
+//! rtgpu sweep   [--figure 8|9|10|11] [--sets K]         acceptance curves
+//! rtgpu validate [--model wcet|avg] [--sets K]          Figs. 12/13
+//! rtgpu throughput [--sets K]                           Fig. 14 (Eq. 9/10)
+//! ```
+//!
+//! The heavier experiment drivers also exist as runnable examples (see
+//! `examples/`), which is where EXPERIMENTS.md records the canonical runs.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use rtgpu::analysis::{analyze, Approach, Search};
+use rtgpu::coordinator::{admit, serve, AppSpec, ServeConfig};
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::harness::chart::{results_dir, table, write_csv};
+use rtgpu::harness::sweep::{run_sweep, to_series, SweepSpec};
+use rtgpu::harness::throughput::throughput_gain;
+use rtgpu::harness::validate::{run_validation, TimeModel};
+use rtgpu::model::{KernelClass, Platform};
+use rtgpu::runtime::{artifact_dir, Engine};
+use rtgpu::util::cli::Args;
+use rtgpu::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("admit") => cmd_admit(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("throughput") => cmd_throughput(&args),
+        _ => {
+            eprintln!(
+                "usage: rtgpu <serve|admit|sweep|validate|throughput> [--flags]\n\
+                 see `rust/src/main.rs` header for the flag reference"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let seconds = args.f64_or("seconds", 3.0);
+    let gn = args.usize_or("sms", 4);
+    let small = !args.flag("full-artifacts");
+    args.finish();
+
+    let engine = Engine::load_dir_filtered(&artifact_dir(), |m| {
+        if small { m.name.ends_with("_small") } else { !m.name.ends_with("_small") }
+    })?;
+    println!("engine on {} with artifacts {:?}", engine.platform_name(), engine.loaded_names());
+    let suffix = if small { "_small" } else { "" };
+    let specs = vec![
+        AppSpec {
+            class: KernelClass::Compute,
+            ..AppSpec::inference("detect", &format!("synthetic_compute{suffix}"), 40.0)
+        },
+        AppSpec {
+            class: KernelClass::Branch,
+            ..AppSpec::inference("track", &format!("synthetic_branch{suffix}"), 60.0)
+        },
+        AppSpec {
+            class: KernelClass::Special,
+            ..AppSpec::inference("plan", &format!("synthetic_special{suffix}"), 80.0)
+        },
+        AppSpec::inference("infer", &format!("inference{suffix}"), 100.0),
+    ];
+    let report = admit(&engine, Platform::new(gn), &specs, 10)?;
+    print!("{}", report.table());
+    if !report.schedulable {
+        anyhow::bail!("application set rejected at admission");
+    }
+    let out = serve(
+        &engine,
+        &report,
+        &ServeConfig { duration: Duration::from_secs_f64(seconds), ..Default::default() },
+    )?;
+    print!("{}", out.table());
+    Ok(())
+}
+
+fn cmd_admit(args: &Args) -> Result<()> {
+    let util = args.f64_or("util", 1.0);
+    let cfg = GenConfig::default()
+        .with_tasks(args.usize_or("tasks", 5))
+        .with_subtasks(args.usize_or("subtasks", 5));
+    let gn = args.usize_or("sms", 10);
+    let seed = args.u64_or("seed", 42);
+    args.finish();
+
+    let ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
+    println!("task set: {} tasks, total utilization {:.3}", ts.len(), ts.total_utilization());
+    for ap in Approach::ALL {
+        let v = analyze(&ts, gn, ap, Search::Grid);
+        println!(
+            "{:<16} schedulable={} alloc={:?}",
+            ap.name(),
+            v.schedulable,
+            v.allocation.as_deref().unwrap_or(&[])
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let figure = args.usize_or("figure", 8);
+    let sets = args.usize_or("sets", 100);
+    let seed = args.u64_or("seed", 42);
+    args.finish();
+
+    let variants: Vec<(String, GenConfig)> = match figure {
+        8 => [(2.0, 1.0), (1.0, 2.0), (1.0, 8.0)]
+            .iter()
+            .map(|&(c, g)| {
+                (format!("ratio_{c}_{g}"), GenConfig::default().with_length_ratio(c, g))
+            })
+            .collect(),
+        9 => [3, 5, 7]
+            .iter()
+            .map(|&m| (format!("subtasks_{m}"), GenConfig::default().with_subtasks(m)))
+            .collect(),
+        10 => [3, 5, 7]
+            .iter()
+            .map(|&n| (format!("tasks_{n}"), GenConfig::default().with_tasks(n)))
+            .collect(),
+        11 => vec![("tbl1".to_string(), GenConfig::default())],
+        other => anyhow::bail!("unknown figure {other}; expected 8, 9, 10 or 11"),
+    };
+    let sm_counts: Vec<usize> = if figure == 11 { vec![5, 8, 10] } else { vec![10] };
+
+    for (name, cfg) in variants {
+        for &gn in &sm_counts {
+            let mut spec = SweepSpec::standard(cfg.clone(), seed);
+            spec.sets_per_point = sets;
+            spec.gn_total = gn;
+            let curves = run_sweep(&spec, 0);
+            let series = to_series(&curves);
+            let label = format!("fig{figure}_{name}_gn{gn}");
+            println!("--- {label}");
+            print!("{}", table(&spec.utils, &series, "util"));
+            write_csv(&results_dir().join(format!("{label}.csv")), "util", &spec.utils, &series)?;
+        }
+    }
+    println!("CSV written to {:?}", results_dir());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let model = match args.str_or("model", "wcet") {
+        "wcet" => TimeModel::Worst,
+        "avg" => TimeModel::Average,
+        other => anyhow::bail!("unknown model {other}"),
+    };
+    let sets = args.usize_or("sets", 50);
+    let seed = args.u64_or("seed", 42);
+    let sms = args.list_or("sms", &[5, 8, 10]);
+    args.finish();
+
+    let utils: Vec<f64> = (1..=12).map(|i| i as f64 * 0.2).collect();
+    for gn in sms {
+        let v = run_validation(&GenConfig::default(), &utils, sets, seed, gn, model);
+        let series = vec![
+            rtgpu::harness::chart::Series { name: "analysis".into(), ys: v.analysis.clone() },
+            rtgpu::harness::chart::Series { name: "platform".into(), ys: v.platform.clone() },
+        ];
+        let label =
+            format!("fig{}_gn{gn}", if model == TimeModel::Worst { 12 } else { 13 });
+        println!("--- {label}");
+        print!("{}", table(&utils, &series, "util"));
+        write_csv(&results_dir().join(format!("{label}.csv")), "util", &utils, &series)?;
+    }
+    Ok(())
+}
+
+fn cmd_throughput(args: &Args) -> Result<()> {
+    let sets = args.usize_or("sets", 50);
+    let seed = args.u64_or("seed", 42);
+    args.finish();
+
+    let utils: Vec<f64> = (1..=10).map(|i| i as f64 * 0.15).collect();
+    for (mix, classes) in rtgpu::harness::throughput::benchmark_mixes() {
+        let mut cfg = GenConfig::default();
+        cfg.classes = classes;
+        let pts = throughput_gain(&cfg, &utils, sets, seed, 10);
+        println!("--- fig14 mix={mix}");
+        println!("{:>8} {:>8} {:>8} {:>10}", "util", "eta1", "eta2", "admitted");
+        for p in &pts {
+            println!("{:>8.2} {:>8.3} {:>8.3} {:>10.2}", p.util, p.eta1, p.eta2, p.admitted);
+        }
+        let series = vec![
+            rtgpu::harness::chart::Series {
+                name: "eta1".into(),
+                ys: pts.iter().map(|p| p.eta1).collect(),
+            },
+            rtgpu::harness::chart::Series {
+                name: "eta2".into(),
+                ys: pts.iter().map(|p| p.eta2).collect(),
+            },
+        ];
+        write_csv(&results_dir().join(format!("fig14_{mix}.csv")), "util", &utils, &series)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,434 @@
+//! The RT-GPU task model (§3–§5.1 of the paper).
+//!
+//! A task is the Eq. (4) chain
+//! `CL⁰ ML⁰ G⁰ ML¹ CL¹ ML² G¹ ML³ … CLᵐ⁻¹` — CPU segments executed on a
+//! preemptive fixed-priority uniprocessor, memory-copy segments on a
+//! **non-preemptive** shared bus, and GPU kernel segments on dedicated
+//! virtual SMs under federated scheduling.
+//!
+//! Times are `f64` milliseconds throughout the analysis; the simulator
+//! converts to integer nanosecond ticks at its boundary.
+
+use std::fmt;
+
+/// Milliseconds.
+pub type Time = f64;
+
+/// Closed interval `[lo, hi]` for a bounded random quantity (the paper's
+/// `⟨X̌, X̂⟩` notation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bounds {
+    pub lo: Time,
+    pub hi: Time,
+}
+
+impl Bounds {
+    pub fn new(lo: Time, hi: Time) -> Bounds {
+        assert!(
+            lo.is_finite() && hi.is_finite() && 0.0 <= lo && lo <= hi,
+            "invalid bounds [{lo}, {hi}]"
+        );
+        Bounds { lo, hi }
+    }
+
+    /// A deterministic quantity.
+    pub fn exact(v: Time) -> Bounds {
+        Bounds::new(v, v)
+    }
+
+    pub fn width(&self) -> Time {
+        self.hi - self.lo
+    }
+}
+
+impl fmt::Display for Bounds {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{:.3}, {:.3}]", self.lo, self.hi)
+    }
+}
+
+/// The synthetic kernel classes of §4.2, used to pick interleave ratios
+/// and to map simulated GPU segments onto real AOT artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    Compute,
+    Branch,
+    Memory,
+    Special,
+    Comprehensive,
+}
+
+impl KernelClass {
+    pub const ALL: [KernelClass; 5] = [
+        KernelClass::Compute,
+        KernelClass::Branch,
+        KernelClass::Memory,
+        KernelClass::Special,
+        KernelClass::Comprehensive,
+    ];
+
+    /// Worst-case self-interleaved execution ratio α measured in Fig. 6.
+    /// (`compute` is the worst at 1.8×, `special` the best at 1.45×
+    /// because SFU pipelines are otherwise idle.)
+    pub fn interleave_ratio(&self) -> f64 {
+        match self {
+            KernelClass::Compute => 1.8,
+            KernelClass::Branch => 1.7,
+            KernelClass::Memory => 1.7,
+            KernelClass::Special => 1.45,
+            KernelClass::Comprehensive => 1.7,
+        }
+    }
+
+    /// Artifact name prefix for the runtime layer.
+    pub fn artifact_kind(&self) -> &'static str {
+        match self {
+            KernelClass::Compute => "compute",
+            KernelClass::Branch => "branch",
+            KernelClass::Memory => "memory",
+            KernelClass::Special => "special",
+            KernelClass::Comprehensive => "comprehensive",
+        }
+    }
+}
+
+/// A GPU kernel segment `G = (GW, GL, α)` (§5.1).
+///
+/// * `work` — total parallelisable work `GW`, in **physical-SM
+///   milliseconds**: executing on one non-interleaved physical SM takes
+///   `GW` ms.  Under the virtual-SM model, `2·GN_i` virtual SMs retire the
+///   α-inflated work at unit rate (Lemma 5.1).
+/// * `overhead` — critical-path overhead `GL ∈ [0, ĜL]` (kernel launch +
+///   on-chip memory traffic), not parallelisable and not α-inflated.
+/// * `alpha` — worst-case interleaved execution ratio `α ∈ [1, 1.8]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSegment {
+    pub work: Bounds,
+    pub overhead: Bounds,
+    pub alpha: f64,
+    pub class: KernelClass,
+}
+
+impl GpuSegment {
+    pub fn new(work: Bounds, overhead: Bounds, class: KernelClass) -> GpuSegment {
+        GpuSegment { work, overhead, alpha: class.interleave_ratio(), class }
+    }
+}
+
+/// How many memory copies surround each GPU segment (§6.1 evaluates both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemoryModel {
+    /// `ML^{2j}` (host→device) before and `ML^{2j+1}` (device→host) after
+    /// every GPU segment: `2(m−1)` copies.
+    TwoCopy,
+    /// One combined copy per GPU segment: `m−1` copies.
+    OneCopy,
+}
+
+impl MemoryModel {
+    /// Memory segments per GPU segment.
+    pub fn copies(&self) -> usize {
+        match self {
+            MemoryModel::TwoCopy => 2,
+            MemoryModel::OneCopy => 1,
+        }
+    }
+}
+
+/// A sporadic RT-GPU task (Eq. 4): `m` CPU segments, `m−1` GPU segments
+/// and `copies·(m−1)` memory segments, with constrained deadline `D ≤ T`.
+#[derive(Debug, Clone)]
+pub struct RtTask {
+    /// Stable identifier (index in the original task set).
+    pub id: usize,
+    /// CPU segment execution-time bounds `CL^j`, `j ∈ [0, m)`.
+    pub cpu: Vec<Bounds>,
+    /// Memory-copy bounds in chain order.  TwoCopy: `ML^{2j}` precedes and
+    /// `ML^{2j+1}` follows GPU segment `j`.  OneCopy: `ML^j` precedes GPU
+    /// segment `j`.
+    pub mem: Vec<Bounds>,
+    /// GPU segments `G^j`, `j ∈ [0, m−1)`.
+    pub gpu: Vec<GpuSegment>,
+    pub memory_model: MemoryModel,
+    /// Relative deadline `D ≤ T`.
+    pub deadline: Time,
+    /// Period / minimum inter-arrival time `T`.
+    pub period: Time,
+}
+
+impl RtTask {
+    /// Number of CPU segments `m` (the paper's "subtasks" knob is `m`).
+    pub fn m(&self) -> usize {
+        self.cpu.len()
+    }
+
+    /// Number of GPU segments (`m − 1`).
+    pub fn gpu_count(&self) -> usize {
+        self.gpu.len()
+    }
+
+    /// Number of memory-copy segments.
+    pub fn mem_count(&self) -> usize {
+        self.mem.len()
+    }
+
+    /// Validate structural invariants; returns a description of the first
+    /// violation.
+    pub fn validate(&self) -> Result<(), String> {
+        let m = self.m();
+        if m == 0 {
+            return Err(format!("task {}: no CPU segments", self.id));
+        }
+        if self.gpu.len() + 1 != m {
+            return Err(format!(
+                "task {}: {} GPU segments for {} CPU segments (want m-1)",
+                self.id,
+                self.gpu.len(),
+                m
+            ));
+        }
+        let want_mem = self.memory_model.copies() * (m - 1);
+        if self.mem.len() != want_mem {
+            return Err(format!(
+                "task {}: {} memory segments, want {want_mem}",
+                self.id,
+                self.mem.len()
+            ));
+        }
+        if !(self.deadline > 0.0 && self.period > 0.0 && self.deadline <= self.period) {
+            return Err(format!(
+                "task {}: need 0 < D ≤ T, got D={} T={}",
+                self.id, self.deadline, self.period
+            ));
+        }
+        for g in &self.gpu {
+            if g.alpha < 1.0 {
+                return Err(format!("task {}: alpha {} < 1", self.id, g.alpha));
+            }
+        }
+        Ok(())
+    }
+
+    /// Sum of worst-case segment lengths — the numerator of the §6.1
+    /// utilization definition (`D_i = (ΣĈL + ΣM̂L + ΣĜW) / U_i`).
+    pub fn total_demand_hi(&self) -> Time {
+        self.cpu.iter().map(|b| b.hi).sum::<Time>()
+            + self.mem.iter().map(|b| b.hi).sum::<Time>()
+            + self.gpu.iter().map(|g| g.work.hi).sum::<Time>()
+    }
+
+    /// Task utilization under the §6.1 normalisation (one CPU, one bus,
+    /// one physical SM all count as unit-rate resources).
+    pub fn utilization(&self) -> f64 {
+        self.total_demand_hi() / self.period
+    }
+
+    /// Index of the memory segment preceding GPU segment `j`.
+    pub fn mem_before_gpu(&self, j: usize) -> usize {
+        match self.memory_model {
+            MemoryModel::TwoCopy => 2 * j,
+            MemoryModel::OneCopy => j,
+        }
+    }
+
+    /// Index of the memory segment following GPU segment `j`
+    /// (TwoCopy only).
+    pub fn mem_after_gpu(&self, j: usize) -> Option<usize> {
+        match self.memory_model {
+            MemoryModel::TwoCopy => Some(2 * j + 1),
+            MemoryModel::OneCopy => None,
+        }
+    }
+}
+
+/// The hardware platform (§6.1 / Table 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Platform {
+    /// Physical streaming multiprocessors available to tasks (`GN`).
+    pub gn_physical: usize,
+}
+
+impl Platform {
+    pub fn new(gn_physical: usize) -> Platform {
+        assert!(gn_physical >= 1, "need at least one SM");
+        Platform { gn_physical }
+    }
+
+    /// Virtual SMs (two per physical SM, §4.3).
+    pub fn vsm(&self) -> usize {
+        2 * self.gn_physical
+    }
+}
+
+/// A priority-ordered task set: index 0 is the **highest** priority.
+#[derive(Debug, Clone)]
+pub struct TaskSet {
+    pub tasks: Vec<RtTask>,
+}
+
+impl TaskSet {
+    /// Build a task set, sorting by deadline-monotonic priority (Table 1's
+    /// "D monotonic" assignment; ties broken by id for determinism).
+    pub fn new_deadline_monotonic(mut tasks: Vec<RtTask>) -> TaskSet {
+        tasks.sort_by(|a, b| {
+            a.deadline
+                .partial_cmp(&b.deadline)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        TaskSet { tasks }
+    }
+
+    /// Build with the given order as the priority order (for tests).
+    pub fn with_priority_order(tasks: Vec<RtTask>) -> TaskSet {
+        TaskSet { tasks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tasks.is_empty() {
+            return Err("empty task set".into());
+        }
+        for t in &self.tasks {
+            t.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Total utilization (the x-axis of every acceptance-ratio figure).
+    pub fn total_utilization(&self) -> f64 {
+        self.tasks.iter().map(RtTask::utilization).sum()
+    }
+
+    /// Tasks with strictly higher priority than task index `k`.
+    pub fn higher_priority(&self, k: usize) -> &[RtTask] {
+        &self.tasks[..k]
+    }
+
+    /// Tasks with strictly lower priority than task index `k`.
+    pub fn lower_priority(&self, k: usize) -> &[RtTask] {
+        &self.tasks[k + 1..]
+    }
+}
+
+/// Test-support constructors shared by unit tests across modules.
+pub mod testing {
+    use super::*;
+
+    /// A hand-built two-subtask task: `CL0 ML0 G0 ML1 CL1`.
+    pub fn simple_task(id: usize) -> RtTask {
+        RtTask {
+            id,
+            cpu: vec![Bounds::new(1.0, 2.0), Bounds::new(1.0, 2.0)],
+            mem: vec![Bounds::new(0.5, 1.0), Bounds::new(0.5, 1.0)],
+            gpu: vec![GpuSegment::new(
+                Bounds::new(4.0, 8.0),
+                Bounds::new(0.0, 0.96),
+                KernelClass::Compute,
+            )],
+            memory_model: MemoryModel::TwoCopy,
+            deadline: 50.0,
+            period: 60.0,
+        }
+    }
+
+    /// A pure-CPU task (m = 1): no GPU or memory segments.
+    pub fn cpu_only_task(id: usize, wcet: Time, deadline: Time) -> RtTask {
+        RtTask {
+            id,
+            cpu: vec![Bounds::new(wcet * 0.8, wcet)],
+            mem: vec![],
+            gpu: vec![],
+            memory_model: MemoryModel::TwoCopy,
+            deadline,
+            period: deadline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::*;
+    use super::*;
+
+    #[test]
+    fn valid_task_passes_validation() {
+        assert_eq!(simple_task(0).validate(), Ok(()));
+        assert_eq!(cpu_only_task(1, 3.0, 10.0).validate(), Ok(()));
+    }
+
+    #[test]
+    fn segment_count_mismatches_are_caught() {
+        let mut t = simple_task(0);
+        t.mem.pop();
+        assert!(t.validate().unwrap_err().contains("memory segments"));
+
+        let mut t = simple_task(0);
+        t.gpu.clear();
+        assert!(t.validate().unwrap_err().contains("GPU segments"));
+
+        let mut t = simple_task(0);
+        t.deadline = t.period + 1.0;
+        assert!(t.validate().unwrap_err().contains("D ≤ T"));
+    }
+
+    #[test]
+    fn one_copy_model_counts() {
+        let mut t = simple_task(0);
+        t.memory_model = MemoryModel::OneCopy;
+        t.mem = vec![Bounds::new(1.0, 2.0)];
+        assert_eq!(t.validate(), Ok(()));
+        assert_eq!(t.mem_before_gpu(0), 0);
+        assert_eq!(t.mem_after_gpu(0), None);
+    }
+
+    #[test]
+    fn utilization_matches_definition() {
+        let t = simple_task(0);
+        // ΣĈL = 4, ΣM̂L = 2, ΣĜW = 8 → demand 14, T = 60.
+        assert!((t.total_demand_hi() - 14.0).abs() < 1e-12);
+        assert!((t.utilization() - 14.0 / 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_monotonic_ordering() {
+        let mut a = simple_task(0);
+        a.deadline = 30.0;
+        let mut b = simple_task(1);
+        b.deadline = 10.0;
+        let ts = TaskSet::new_deadline_monotonic(vec![a, b]);
+        assert_eq!(ts.tasks[0].id, 1, "shorter deadline first");
+        assert_eq!(ts.higher_priority(1).len(), 1);
+        assert_eq!(ts.lower_priority(0).len(), 1);
+    }
+
+    #[test]
+    fn bounds_reject_invalid() {
+        assert!(std::panic::catch_unwind(|| Bounds::new(2.0, 1.0)).is_err());
+        assert!(std::panic::catch_unwind(|| Bounds::new(-1.0, 1.0)).is_err());
+        assert!(std::panic::catch_unwind(|| Bounds::new(0.0, f64::NAN)).is_err());
+    }
+
+    #[test]
+    fn platform_vsm_doubles() {
+        assert_eq!(Platform::new(10).vsm(), 20);
+        assert_eq!(Platform::new(28).vsm(), 56);
+    }
+
+    #[test]
+    fn interleave_ratios_match_fig6() {
+        assert_eq!(KernelClass::Compute.interleave_ratio(), 1.8);
+        assert_eq!(KernelClass::Special.interleave_ratio(), 1.45);
+        for c in KernelClass::ALL {
+            let a = c.interleave_ratio();
+            assert!((1.0..=2.0).contains(&a));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Typed view of `artifacts/manifest.json`.
+//!
+//! The AOT step records, for every artifact, the input/output tensor
+//! specs and the kernel metadata (class, virtual-SM grid size, work
+//! iterations).  The engine validates every call against these specs so a
+//! shape mismatch fails with a clear message instead of a PJRT abort.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+        }
+    }
+}
+
+/// One input or output tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_array)
+            .context("tensor spec missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("bad shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: v.str_field("name")?.to_string(),
+            dtype: DType::parse(v.str_field("dtype")?)?,
+            shape,
+        })
+    }
+}
+
+/// Metadata for one AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Kernel class: one of the five synthetic classes, "inference",
+    /// or "smoke".
+    pub kind: String,
+    /// Grid size = number of virtual SMs the kernel was compiled for
+    /// (0 for non-persistent-thread artifacts).
+    pub num_vsm: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    /// Whether this artifact takes a leading `sm: int32[2]` pinned-range
+    /// input (all persistent-thread kernels do).
+    pub fn takes_sm_range(&self) -> bool {
+        self.inputs
+            .first()
+            .map_or(false, |t| t.name == "sm" && t.dtype == DType::I32)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let version = root.usize_field("version")?;
+        let mut artifacts = Vec::new();
+        for art in root
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .context("manifest missing artifacts array")?
+        {
+            let inputs = art
+                .get("inputs")
+                .and_then(Json::as_array)
+                .context("artifact missing inputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = art
+                .get("outputs")
+                .and_then(Json::as_array)
+                .context("artifact missing outputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta {
+                name: art.str_field("name")?.to_string(),
+                file: art.str_field("file")?.to_string(),
+                kind: art.str_field("kind")?.to_string(),
+                num_vsm: art.usize_field("num_vsm")?,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { version, artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| {
+                let known: Vec<&str> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+                format!("unknown artifact {name:?}; manifest has {known:?}")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "synthetic_compute_small", "file": "synthetic_compute_small.hlo.txt",
+         "kind": "compute", "num_vsm": 8, "work_iters": 8,
+         "inputs": [{"name": "sm", "dtype": "int32", "shape": [2]},
+                    {"name": "x", "dtype": "float32", "shape": [8, 32]}],
+         "outputs": [{"name": "out0", "dtype": "float32", "shape": [8, 32]}]},
+        {"name": "smoke", "file": "smoke.hlo.txt", "kind": "smoke", "num_vsm": 0,
+         "inputs": [{"name": "x", "dtype": "float32", "shape": [2, 2]},
+                    {"name": "y", "dtype": "float32", "shape": [2, 2]}],
+         "outputs": [{"name": "out0", "dtype": "float32", "shape": [2, 2]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("synthetic_compute_small").unwrap();
+        assert_eq!(a.num_vsm, 8);
+        assert!(a.takes_sm_range());
+        assert_eq!(a.inputs[1].element_count(), 256);
+        let s = m.get("smoke").unwrap();
+        assert!(!s.takes_sm_range());
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown artifact"));
+    }
+
+    #[test]
+    fn bad_dtype_is_error() {
+        let src = SAMPLE.replace("float32", "float64");
+        assert!(Manifest::parse(&src, Path::new("/tmp")).is_err());
+    }
+}

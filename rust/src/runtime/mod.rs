@@ -1,0 +1,35 @@
+//! PJRT execution layer (the request-path side of the AOT bridge).
+//!
+//! `python/compile/aot.py` lowers every Layer-2 graph to HLO **text** once
+//! at build time; this module loads those artifacts, compiles them on the
+//! PJRT CPU client and executes them from the coordinator's hot path.
+//! Python is never involved at runtime.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json` (shapes,
+//!   dtypes, virtual-SM counts) so calls are validated before they reach
+//!   PJRT.
+//! * [`engine`] — the client + compiled-executable cache, with typed
+//!   `execute_*` wrappers used by the coordinator's GPU executor thread.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, ExecOutput};
+pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$RTGPU_ARTIFACTS`, then `artifacts/`
+/// relative to the current dir, then relative to the crate manifest dir
+/// (so `cargo test` works from any cwd).
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("RTGPU_ARTIFACTS") {
+        return dir.into();
+    }
+    let cwd = std::path::Path::new(DEFAULT_ARTIFACT_DIR);
+    if cwd.join("manifest.json").exists() {
+        return cwd.to_path_buf();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR)
+}

@@ -1,0 +1,541 @@
+//! The discrete-event engine: periodic job releases walking their
+//! segment chains across the preemptive CPU, the non-preemptive bus and
+//! the federated GPU.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::analysis::{Allocation, SmModel};
+use crate::model::TaskSet;
+use crate::util::rng::Pcg;
+use crate::util::stats::Summary;
+
+use super::exec::ExecModel;
+use super::{ms_to_ticks, ticks_to_ms, Tick};
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub exec: ExecModel,
+    pub sm_model: SmModel,
+    pub seed: u64,
+    /// Simulated horizon in milliseconds.  Jobs released before the
+    /// horizon are run to completion.
+    pub horizon_ms: f64,
+    /// Stop at the first deadline miss (fast accept/reject probing).
+    pub stop_on_first_miss: bool,
+}
+
+impl SimConfig {
+    /// Acceptance-test configuration: worst-case times, long horizon.
+    pub fn acceptance(seed: u64) -> SimConfig {
+        SimConfig {
+            exec: ExecModel::Wcet,
+            sm_model: SmModel::Virtual,
+            seed,
+            horizon_ms: 0.0, // auto: 20 × max period
+            stop_on_first_miss: true,
+        }
+    }
+
+    /// Measurement configuration: stochastic times, full statistics.
+    pub fn measurement(seed: u64) -> SimConfig {
+        SimConfig {
+            exec: ExecModel::Bell,
+            sm_model: SmModel::Virtual,
+            seed,
+            horizon_ms: 0.0,
+            stop_on_first_miss: false,
+        }
+    }
+}
+
+/// Per-task outcome.
+#[derive(Debug, Clone)]
+pub struct TaskStats {
+    pub released: usize,
+    pub completed: usize,
+    pub misses: usize,
+    /// Response-time summary (ms) over completed jobs.
+    pub response: Option<Summary>,
+    pub max_response_ms: f64,
+}
+
+/// Whole-run outcome.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub per_task: Vec<TaskStats>,
+    pub total_misses: usize,
+    pub events_processed: usize,
+    /// No job missed its deadline during the horizon.
+    pub schedulable: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Internal structures
+// ---------------------------------------------------------------------------
+
+/// One phase of a job's chain with its drawn duration.
+#[derive(Debug, Clone, Copy)]
+enum Phase {
+    Cpu(Tick),
+    Mem(Tick),
+    Gpu(Tick),
+}
+
+#[derive(Debug)]
+struct Job {
+    task: usize,
+    release: Tick,
+    deadline: Tick,
+    phases: Vec<Phase>,
+    next_phase: usize,
+    /// Remaining ticks of the current CPU phase (preemption bookkeeping).
+    cpu_remaining: Tick,
+    done: Option<Tick>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EvKind {
+    Release { task: usize },
+    CpuDone { token: u64 },
+    BusDone { token: u64 },
+    GpuDone { job: usize },
+    JobStart { job: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Ev {
+    t: Tick,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t, self.seq).cmp(&(other.t, other.seq))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Simulate `ts` under SM allocation `alloc`.
+///
+/// Releases are synchronous periodic (the classic critical-instant
+/// pattern): task `i` releases at `0, T_i, 2T_i, …` up to the horizon.
+/// Jobs of the same task execute in release order.
+pub fn simulate(ts: &TaskSet, alloc: &Allocation, cfg: &SimConfig) -> SimResult {
+    assert_eq!(alloc.len(), ts.len());
+    ts.validate().expect("invalid task set");
+    for (t, &gn) in ts.tasks.iter().zip(alloc) {
+        assert!(t.gpu.is_empty() || gn >= 1, "GPU task with zero SMs");
+    }
+
+    let horizon_ms = if cfg.horizon_ms > 0.0 {
+        cfg.horizon_ms
+    } else {
+        20.0 * ts.tasks.iter().map(|t| t.period).fold(0.0, f64::max)
+    };
+    let horizon = ms_to_ticks(horizon_ms);
+    let mut rng = Pcg::new(cfg.seed);
+
+    let n = ts.len();
+    let mut jobs: Vec<Job> = Vec::new();
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, t: Tick, kind: EvKind| {
+        *seq += 1;
+        heap.push(Reverse(Ev { t, seq: *seq, kind }));
+    };
+
+    // Initial releases.
+    for task in 0..n {
+        push(&mut heap, &mut seq, 0, EvKind::Release { task });
+    }
+
+    // CPU state: ready job ids; running (job, token, started_at).
+    let mut cpu_ready: Vec<usize> = Vec::new();
+    let mut cpu_running: Option<(usize, u64, Tick)> = None;
+    let mut cpu_token: u64 = 0;
+
+    // Bus state: waiting job ids; in-flight (job, token).
+    let mut bus_ready: Vec<usize> = Vec::new();
+    let mut bus_busy: Option<(usize, u64)> = None;
+    let mut bus_token: u64 = 0;
+
+    // Per-task FIFO of pending jobs (job-level precedence).
+    let mut task_queue: Vec<std::collections::VecDeque<usize>> =
+        vec![std::collections::VecDeque::new(); n];
+    let mut task_active: Vec<Option<usize>> = vec![None; n];
+
+    let mut total_misses = 0usize;
+    let mut events = 0usize;
+    let mut stop = false;
+
+    // Priority comparison: lower task index = higher priority; among jobs
+    // of the same priority, earlier release first.
+    let prio = |jobs: &Vec<Job>, a: usize, b: usize| -> std::cmp::Ordering {
+        (jobs[a].task, jobs[a].release).cmp(&(jobs[b].task, jobs[b].release))
+    };
+
+    macro_rules! dispatch_cpu {
+        ($now:expr) => {{
+            // Preemptive: highest-priority ready job must be the runner.
+            if let Some(best_pos) = (0..cpu_ready.len())
+                .min_by(|&x, &y| prio(&jobs, cpu_ready[x], cpu_ready[y]))
+            {
+                let best = cpu_ready[best_pos];
+                let should_switch = match cpu_running {
+                    None => true,
+                    Some((cur, _, _)) => prio(&jobs, best, cur) == std::cmp::Ordering::Less,
+                };
+                if should_switch {
+                    if let Some((cur, _, started)) = cpu_running.take() {
+                        // Preempt: bank the remaining time, invalidate token.
+                        let ran = $now - started;
+                        jobs[cur].cpu_remaining = jobs[cur].cpu_remaining.saturating_sub(ran);
+                        cpu_ready.push(cur);
+                        cpu_token += 1;
+                    }
+                    cpu_ready.swap_remove(best_pos);
+                    cpu_token += 1;
+                    let tok = cpu_token;
+                    cpu_running = Some((best, tok, $now));
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        $now + jobs[best].cpu_remaining,
+                        EvKind::CpuDone { token: tok },
+                    );
+                }
+            }
+        }};
+    }
+
+    macro_rules! dispatch_bus {
+        ($now:expr) => {{
+            if bus_busy.is_none() {
+                if let Some(best_pos) = (0..bus_ready.len())
+                    .min_by(|&x, &y| prio(&jobs, bus_ready[x], bus_ready[y]))
+                {
+                    let job = bus_ready.swap_remove(best_pos);
+                    bus_token += 1;
+                    let d = match jobs[job].phases[jobs[job].next_phase] {
+                        Phase::Mem(d) => d,
+                        _ => unreachable!("bus dispatch on non-mem phase"),
+                    };
+                    bus_busy = Some((job, bus_token));
+                    push(&mut heap, &mut seq, $now + d, EvKind::BusDone { token: bus_token });
+                }
+            }
+        }};
+    }
+
+    // Advance `job` into its next phase (or finish it).
+    macro_rules! start_phase {
+        ($now:expr, $job:expr) => {{
+            let j = $job;
+            if jobs[j].next_phase == jobs[j].phases.len() {
+                // Job complete.
+                jobs[j].done = Some($now);
+                if $now > jobs[j].deadline {
+                    total_misses += 1;
+                    if cfg.stop_on_first_miss {
+                        stop = true;
+                    }
+                }
+                let task = jobs[j].task;
+                task_active[task] = None;
+                if let Some(next) = task_queue[task].pop_front() {
+                    task_active[task] = Some(next);
+                    push(&mut heap, &mut seq, $now, EvKind::JobStart { job: next });
+                }
+            } else {
+                match jobs[j].phases[jobs[j].next_phase] {
+                    Phase::Cpu(d) => {
+                        jobs[j].cpu_remaining = d;
+                        cpu_ready.push(j);
+                        dispatch_cpu!($now);
+                    }
+                    Phase::Mem(_) => {
+                        bus_ready.push(j);
+                        dispatch_bus!($now);
+                    }
+                    Phase::Gpu(d) => {
+                        // Dedicated virtual SMs: starts immediately.
+                        push(&mut heap, &mut seq, $now + d, EvKind::GpuDone { job: j });
+                    }
+                }
+            }
+        }};
+    }
+
+    while let Some(Reverse(ev)) = heap.pop() {
+        if stop {
+            break;
+        }
+        events += 1;
+        let now = ev.t;
+        match ev.kind {
+            EvKind::Release { task } => {
+                if now >= horizon {
+                    continue;
+                }
+                let t = &ts.tasks[task];
+                // Draw all phase durations for this job.
+                let mut phases = Vec::with_capacity(t.m() + t.mem_count() + t.gpu_count());
+                for j in 0..t.m() {
+                    phases.push(Phase::Cpu(ms_to_ticks(cfg.exec.draw(&mut rng, t.cpu[j]))));
+                    if j + 1 < t.m() {
+                        phases.push(Phase::Mem(ms_to_ticks(
+                            cfg.exec.draw(&mut rng, t.mem[t.mem_before_gpu(j)]),
+                        )));
+                        phases.push(Phase::Gpu(ms_to_ticks(cfg.exec.draw_gpu(
+                            &mut rng,
+                            &t.gpu[j],
+                            alloc[task].max(1),
+                            cfg.sm_model,
+                        ))));
+                        if let Some(after) = t.mem_after_gpu(j) {
+                            phases.push(Phase::Mem(ms_to_ticks(
+                                cfg.exec.draw(&mut rng, t.mem[after]),
+                            )));
+                        }
+                    }
+                }
+                let job_id = jobs.len();
+                jobs.push(Job {
+                    task,
+                    release: now,
+                    deadline: now + ms_to_ticks(t.deadline),
+                    phases,
+                    next_phase: 0,
+                    cpu_remaining: 0,
+                    done: None,
+                });
+                // Job-level precedence within the task.
+                if task_active[task].is_none() {
+                    task_active[task] = Some(job_id);
+                    push(&mut heap, &mut seq, now, EvKind::JobStart { job: job_id });
+                } else {
+                    task_queue[task].push_back(job_id);
+                }
+                push(
+                    &mut heap,
+                    &mut seq,
+                    now + ms_to_ticks(t.period),
+                    EvKind::Release { task },
+                );
+            }
+            EvKind::JobStart { job } => {
+                start_phase!(now, job);
+            }
+            EvKind::CpuDone { token } => {
+                if let Some((job, tok, _)) = cpu_running {
+                    if tok == token {
+                        cpu_running = None;
+                        jobs[job].next_phase += 1;
+                        start_phase!(now, job);
+                        dispatch_cpu!(now);
+                    }
+                }
+            }
+            EvKind::BusDone { token } => {
+                if let Some((job, tok)) = bus_busy {
+                    if tok == token {
+                        bus_busy = None;
+                        jobs[job].next_phase += 1;
+                        start_phase!(now, job);
+                        dispatch_bus!(now);
+                    }
+                }
+            }
+            EvKind::GpuDone { job } => {
+                jobs[job].next_phase += 1;
+                start_phase!(now, job);
+            }
+        }
+    }
+
+    // Collect statistics.
+    let mut per_task: Vec<TaskStats> = (0..n)
+        .map(|_| TaskStats {
+            released: 0,
+            completed: 0,
+            misses: 0,
+            response: None,
+            max_response_ms: 0.0,
+        })
+        .collect();
+    let mut responses: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut misses_check = 0usize;
+    for job in &jobs {
+        let s = &mut per_task[job.task];
+        s.released += 1;
+        match job.done {
+            Some(done) => {
+                s.completed += 1;
+                let resp = ticks_to_ms(done - job.release);
+                responses[job.task].push(resp);
+                s.max_response_ms = s.max_response_ms.max(resp);
+                if done > job.deadline {
+                    s.misses += 1;
+                    misses_check += 1;
+                }
+            }
+            None => {
+                // Unfinished at horizon: a miss if its deadline passed and
+                // the run wasn't cut short by stop_on_first_miss.
+                if !stop && ms_to_ticks(horizon_ms) > job.deadline {
+                    s.misses += 1;
+                    misses_check += 1;
+                }
+            }
+        }
+    }
+    let total = if cfg.stop_on_first_miss { total_misses.max(misses_check) } else { misses_check };
+    for (task, rs) in responses.iter().enumerate() {
+        per_task[task].response = Summary::of(rs);
+    }
+    SimResult {
+        per_task,
+        total_misses: total,
+        events_processed: events,
+        schedulable: total == 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::{cpu_only_task, simple_task};
+    use crate::model::{Bounds, TaskSet};
+
+    fn wcet_cfg() -> SimConfig {
+        SimConfig { horizon_ms: 500.0, ..SimConfig::acceptance(7) }
+    }
+
+    #[test]
+    fn single_task_response_is_chain_sum() {
+        // simple_task WCETs: CL 2+2, ML 1+1, GPU (8·1.8−0.96)/2+0.96 = 7.68
+        // (gn = 1) → end-to-end 13.68 ms, every job.
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let r = simulate(&ts, &vec![1], &wcet_cfg());
+        assert!(r.schedulable);
+        let s = &r.per_task[0];
+        assert!(s.released >= 8, "released {}", s.released);
+        assert!((s.max_response_ms - 13.68).abs() < 1e-6, "{}", s.max_response_ms);
+        let mean = s.response.as_ref().unwrap().mean;
+        assert!((mean - 13.68).abs() < 1e-6);
+    }
+
+    #[test]
+    fn more_sms_shrink_gpu_time() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let r1 = simulate(&ts, &vec![1], &wcet_cfg());
+        let r4 = simulate(&ts, &vec![4], &wcet_cfg());
+        // gn=4: GPU = (14.4−0.96)/8+0.96 = 2.64 → total 8.64.
+        assert!(r4.per_task[0].max_response_ms < r1.per_task[0].max_response_ms);
+        assert!((r4.per_task[0].max_response_ms - 8.64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cpu_preemption_priority_order() {
+        // High-priority CPU task (1 ms every 10 ms) preempts a low-priority
+        // CPU hog (6 ms every 20 ms). Low task response = 6 + interference.
+        let mut hi = cpu_only_task(0, 1.0, 10.0);
+        hi.cpu = vec![Bounds::exact(1.0)];
+        let mut lo = cpu_only_task(1, 6.0, 20.0);
+        lo.cpu = vec![Bounds::exact(6.0)];
+        let ts = TaskSet::with_priority_order(vec![hi, lo]);
+        let r = simulate(&ts, &vec![0, 0], &wcet_cfg());
+        assert!(r.schedulable);
+        // lo: starts after hi's 1 ms, runs 6 ms but is preempted at t=10
+        // for 1 ms → finishes at 8? timeline: [0,1) hi, [1,7) lo done at 7.
+        assert!((r.per_task[1].max_response_ms - 7.0).abs() < 1e-6,
+            "lo response {}", r.per_task[1].max_response_ms);
+        assert!((r.per_task[0].max_response_ms - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bus_is_non_preemptive() {
+        // Low-priority task grabs the bus first (its release processes
+        // identically at t=0 but CPU priority lets hi start CPU first).
+        // Build: hi = CL 1, ML 4, G 1, ML 1, CL 1; lo = CL 0.1, ML 10, ...
+        // lo's 10 ms copy starts at t≈0.1 (hi still in CPU until 1.0), so
+        // hi's copy at t=1 must wait until t=10.1: blocking visible.
+        let mk = |id: usize, cl0: f64, ml: f64, d: f64| crate::model::RtTask {
+            id,
+            cpu: vec![Bounds::exact(cl0), Bounds::exact(0.5)],
+            mem: vec![Bounds::exact(ml), Bounds::exact(0.5)],
+            gpu: vec![crate::model::GpuSegment::new(
+                Bounds::exact(1.0),
+                Bounds::exact(0.0),
+                crate::model::KernelClass::Special,
+            )],
+            memory_model: crate::model::MemoryModel::TwoCopy,
+            deadline: d,
+            period: 200.0,
+        };
+        let hi = mk(0, 1.0, 4.0, 200.0);
+        let lo = mk(1, 0.1, 10.0, 200.0);
+        let ts = TaskSet::with_priority_order(vec![hi, lo]);
+        let r = simulate(&ts, &vec![1, 1], &wcet_cfg());
+        // Timeline: CPU serializes the first CL segments (hi first), so
+        // hi's ML0 wins the bus at t=1: [1,5).  lo's 10 ms copy then holds
+        // the bus [5,15) — non-preemptively.  hi's G0 runs [5,5.725), its
+        // ML1 is ready at 5.725 but must wait for lo's copy: [15,15.5),
+        // CL1 [15.5,16) → response 16 (vs 6.725 in isolation).
+        let resp = r.per_task[0].max_response_ms;
+        assert!(
+            (resp - 16.0).abs() < 1e-6,
+            "expected non-preemptive blocking, hi response = {resp}"
+        );
+    }
+
+    #[test]
+    fn overload_misses_deadlines() {
+        let mut t = cpu_only_task(0, 9.0, 8.0); // WCET 9 > D 8
+        t.cpu = vec![Bounds::exact(9.0)];
+        t.period = 8.0;
+        t.deadline = 8.0;
+        let ts = TaskSet::with_priority_order(vec![t]);
+        let r = simulate(&ts, &vec![0], &wcet_cfg());
+        assert!(!r.schedulable);
+        assert!(r.total_misses >= 1);
+    }
+
+    #[test]
+    fn stop_on_first_miss_cuts_run_short() {
+        let mut t = cpu_only_task(0, 9.0, 8.0);
+        t.cpu = vec![Bounds::exact(9.0)];
+        t.period = 8.0;
+        t.deadline = 8.0;
+        let ts = TaskSet::with_priority_order(vec![t]);
+        let fast = simulate(&ts, &vec![0], &SimConfig { horizon_ms: 10_000.0, ..wcet_cfg() });
+        assert!(!fast.schedulable);
+        // Far fewer events than a full 10 s run would need.
+        assert!(fast.events_processed < 100, "{}", fast.events_processed);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]);
+        let cfg = SimConfig { horizon_ms: 300.0, ..SimConfig::measurement(42) };
+        let a = simulate(&ts, &vec![1, 1], &cfg);
+        let b = simulate(&ts, &vec![1, 1], &cfg);
+        assert_eq!(a.per_task[0].max_response_ms, b.per_task[0].max_response_ms);
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn bell_mode_bounded_by_wcet_mode() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let w = simulate(&ts, &vec![1], &SimConfig { horizon_ms: 300.0, ..SimConfig::acceptance(9) });
+        let b = simulate(&ts, &vec![1], &SimConfig { horizon_ms: 300.0, ..SimConfig::measurement(9) });
+        assert!(b.per_task[0].max_response_ms <= w.per_task[0].max_response_ms + 1e-9);
+    }
+}

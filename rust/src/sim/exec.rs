@@ -1,0 +1,101 @@
+//! Execution-time models for the simulator.
+//!
+//! The paper measures segment-time distributions by profiling 10 000 runs
+//! (§6.3, Fig. 4) and observes low variance with firm bounds.  We model a
+//! drawn duration as a truncated bell inside `[lo, hi]` — or pinned at
+//! either bound for worst-/best-case runs.
+
+use crate::analysis::gpu::duration;
+use crate::model::{Bounds, GpuSegment};
+use crate::util::rng::Pcg;
+
+/// How segment durations are drawn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecModel {
+    /// Every segment takes its worst-case length (maximum adversarial
+    /// pressure the analysis must tolerate).
+    Wcet,
+    /// Every segment takes its best-case length.
+    Bcet,
+    /// Truncated-normal draw inside the profiled bounds — the "real
+    /// system" behaviour of Figs. 12/13.
+    Bell,
+}
+
+impl ExecModel {
+    /// Draw a CPU or memory-segment duration in milliseconds.
+    pub fn draw(&self, rng: &mut Pcg, b: Bounds) -> f64 {
+        match self {
+            ExecModel::Wcet => b.hi,
+            ExecModel::Bcet => b.lo,
+            ExecModel::Bell => rng.bounded_bell(b.lo, b.hi),
+        }
+    }
+
+    /// Draw a GPU segment duration on `2·gn_i` virtual SMs (Lemma 5.1's
+    /// execution model with drawn `gw`, `gl`, `α_eff`).
+    pub fn draw_gpu(
+        &self,
+        rng: &mut Pcg,
+        seg: &GpuSegment,
+        gn_i: usize,
+        sm_model: crate::analysis::SmModel,
+    ) -> f64 {
+        assert!(gn_i >= 1);
+        let (gw, gl, alpha) = match self {
+            ExecModel::Wcet => (seg.work.hi, seg.overhead.hi, seg.alpha),
+            ExecModel::Bcet => (seg.work.lo, 0.0, 1.0),
+            ExecModel::Bell => (
+                rng.bounded_bell(seg.work.lo, seg.work.hi),
+                rng.bounded_bell(0.0, seg.overhead.hi),
+                rng.bounded_bell(1.0, seg.alpha),
+            ),
+        };
+        duration(gw, gl, alpha, gn_i, sm_model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::SmModel;
+    use crate::model::KernelClass;
+
+    fn seg() -> GpuSegment {
+        GpuSegment::new(Bounds::new(5.0, 10.0), Bounds::new(0.0, 1.2), KernelClass::Compute)
+    }
+
+    #[test]
+    fn wcet_and_bcet_hit_the_analysis_bounds() {
+        let mut rng = Pcg::new(1);
+        let s = seg();
+        let hi = ExecModel::Wcet.draw_gpu(&mut rng, &s, 2, SmModel::Virtual);
+        let lo = ExecModel::Bcet.draw_gpu(&mut rng, &s, 2, SmModel::Virtual);
+        let (a_lo, a_hi) = crate::analysis::gpu::gpu_response(&s, 2, SmModel::Virtual);
+        assert!((hi - a_hi).abs() < 1e-12, "wcet draw {hi} != bound {a_hi}");
+        assert!((lo - a_lo).abs() < 1e-12, "bcet draw {lo} != bound {a_lo}");
+    }
+
+    #[test]
+    fn bell_draws_stay_inside_analysis_bounds() {
+        let mut rng = Pcg::new(2);
+        let s = seg();
+        let (a_lo, a_hi) = crate::analysis::gpu::gpu_response(&s, 3, SmModel::Virtual);
+        for _ in 0..2000 {
+            let d = ExecModel::Bell.draw_gpu(&mut rng, &s, 3, SmModel::Virtual);
+            assert!(d >= a_lo - 1e-9 && d <= a_hi + 1e-9, "{d} outside [{a_lo}, {a_hi}]");
+        }
+    }
+
+    #[test]
+    fn plain_draws_respect_bounds() {
+        let mut rng = Pcg::new(3);
+        let b = Bounds::new(2.0, 7.0);
+        assert_eq!(ExecModel::Wcet.draw(&mut rng, b), 7.0);
+        assert_eq!(ExecModel::Bcet.draw(&mut rng, b), 2.0);
+        for _ in 0..1000 {
+            let d = ExecModel::Bell.draw(&mut rng, b);
+            assert!((2.0..=7.0).contains(&d));
+        }
+    }
+}

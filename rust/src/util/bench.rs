@@ -1,0 +1,121 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Bench targets are plain binaries with `harness = false`; each calls
+//! [`bench`]/[`bench_n`] and prints one aligned row per case so the
+//! `cargo bench` output doubles as the tables recorded in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub summary: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<48} {:>12} {:>12} {:>12} {:>12}  n={}",
+            self.name,
+            fmt_time(self.summary.mean),
+            fmt_time(self.summary.p50),
+            fmt_time(self.summary.p95),
+            fmt_time(self.summary.max),
+            self.iters,
+        )
+    }
+}
+
+/// Header matching [`BenchResult::row`].
+pub fn header() -> String {
+    format!(
+        "{:<48} {:>12} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p95", "max"
+    )
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Run `f` with auto-calibrated iteration count (~`target_secs` total).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_target(name, 0.5, &mut f)
+}
+
+/// Run `f` exactly `iters` times after `warmup` runs.
+pub fn bench_n<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples).expect("iters > 0"),
+        iters,
+    }
+}
+
+fn bench_target<F: FnMut()>(name: &str, target_secs: f64, f: &mut F) -> BenchResult {
+    // Calibrate: run once, extrapolate an iteration count in [10, 10_000].
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / once) as usize).clamp(10, 10_000);
+    bench_n(name, iters.min(3), iters, f)
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_n_counts_iterations() {
+        let mut count = 0usize;
+        let r = bench_n("t", 2, 25, || count += 1);
+        assert_eq!(count, 27);
+        assert_eq!(r.iters, 25);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn rows_align() {
+        let r = bench_n("x", 0, 10, || {
+            black_box(1 + 1);
+        });
+        assert!(r.row().contains("x"));
+        assert!(!header().is_empty());
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

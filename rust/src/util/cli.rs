@@ -1,0 +1,154 @@
+//! Tiny command-line parser for the launcher and examples (clap is not
+//! available offline).
+//!
+//! Grammar: `prog [subcommand] [--key value | --flag]...`.  Unknown keys
+//! are collected and reported by [`Args::finish`] so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token, if any.
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    args.kv.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.kv.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.flags.push(tok);
+            }
+        }
+        args
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.mark(name);
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list, e.g. `--sms 5,8,10`.
+    pub fn list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad entry {p:?}")))
+                .collect(),
+        }
+    }
+
+    /// Panic on any `--key` that was provided but never queried.
+    pub fn finish(&self) {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if !unknown.is_empty() {
+            panic!("unknown arguments: {unknown:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_kv() {
+        let a = parse("serve --tasks 5 --seed=42 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("tasks", 0), 5);
+        assert_eq!(a.u64_or("seed", 0), 42);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.f64_or("util", 1.5), 1.5);
+        assert_eq!(a.str_or("out", "results"), "results");
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = parse("x --sms 5,8,10");
+        assert_eq!(a.list_or("sms", &[1]), vec![5, 8, 10]);
+        assert_eq!(a.list_or("other", &[3, 4]), vec![3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown arguments")]
+    fn finish_rejects_unknown() {
+        let a = parse("x --oops 3");
+        a.finish();
+    }
+
+    #[test]
+    fn finish_accepts_consumed() {
+        let a = parse("x --tasks 3");
+        let _ = a.usize_or("tasks", 0);
+        a.finish();
+    }
+}

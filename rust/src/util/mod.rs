@@ -1,0 +1,14 @@
+//! Self-contained substrates.
+//!
+//! The build environment is fully offline and the cargo cache only carries
+//! the `xla` crate's dependency closure, so the usual ecosystem crates
+//! (serde/serde_json, rand, clap, criterion, proptest) are unavailable.
+//! Rather than stubbing functionality out, this module implements the
+//! pieces the framework needs — each small, documented and unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,255 @@
+//! Deterministic pseudo-random numbers for task-set generation and the
+//! simulator's execution-time models.
+//!
+//! PCG-XSH-RR-64/32 with a SplitMix64 seeder — small, fast, and
+//! reproducible across platforms, which matters because every experiment
+//! in EXPERIMENTS.md records its seed.
+
+/// A PCG32 generator (64-bit state, 32-bit output), extended with helpers
+/// for 64-bit and floating-point draws.
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+    /// Cached second output of the Box–Muller transform.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl Pcg {
+    /// Create a generator from a seed; distinct seeds give independent
+    /// streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let init_state = splitmix64(&mut sm);
+        let init_inc = splitmix64(&mut sm) | 1;
+        let mut rng = Pcg { state: 0, inc: init_inc, gauss_spare: None };
+        rng.state = init_state.wrapping_add(init_inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child stream (for per-task / per-segment RNGs).
+    pub fn fork(&mut self, tag: u64) -> Pcg {
+        Pcg::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's unbiased method, simplified).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        // Rejection sampling on the top bits to stay unbiased.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "range_u64: {lo} > {hi}");
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo <= hi, "range_f64: {lo} > {hi}");
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// `true` with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.gauss_spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// A value in `[lo, hi]` from a truncated-normal centred between the
+    /// bounds — the simulator's execution-time model: most draws land near
+    /// the middle, the bounds are respected (WCET/BCET contract).
+    pub fn bounded_bell(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo <= hi);
+        if hi - lo < f64::EPSILON {
+            return lo;
+        }
+        let mid = 0.5 * (lo + hi);
+        let sd = (hi - lo) / 6.0;
+        for _ in 0..16 {
+            let v = mid + sd * self.gauss();
+            if v >= lo && v <= hi {
+                return v;
+            }
+        }
+        self.range_f64(lo, hi)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "choice on empty slice");
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// UUniFast (Bini & Buttazzo): split total utilization `u_total` into `n`
+/// non-negative shares, uniformly over the simplex.  Used by the §6.1
+/// task-set generator.
+pub fn uunifast(rng: &mut Pcg, n: usize, u_total: f64) -> Vec<f64> {
+    assert!(n > 0);
+    let mut shares = Vec::with_capacity(n);
+    let mut sum = u_total;
+    for i in 1..n {
+        let next = sum * rng.f64().powf(1.0 / (n - i) as f64);
+        shares.push(sum - next);
+        sum = next;
+    }
+    shares.push(sum);
+    shares
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg::new(7);
+        let mut b = Pcg::new(7);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg::new(3);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg::new(4);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn range_f64_respects_bounds() {
+        let mut r = Pcg::new(5);
+        for _ in 0..1000 {
+            let v = r.range_f64(2.5, 9.75);
+            assert!((2.5..9.75).contains(&v));
+        }
+    }
+
+    #[test]
+    fn gauss_moments_roughly_standard() {
+        let mut r = Pcg::new(6);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn bounded_bell_respects_bounds() {
+        let mut r = Pcg::new(7);
+        for _ in 0..10_000 {
+            let v = r.bounded_bell(1.0, 20.0);
+            assert!((1.0..=20.0).contains(&v));
+        }
+        // Degenerate interval.
+        assert_eq!(r.bounded_bell(3.0, 3.0), 3.0);
+    }
+
+    #[test]
+    fn uunifast_sums_to_total_and_nonnegative() {
+        let mut r = Pcg::new(8);
+        for &n in &[1usize, 2, 5, 16] {
+            for &u in &[0.1, 1.0, 7.5] {
+                let shares = uunifast(&mut r, n, u);
+                assert_eq!(shares.len(), n);
+                assert!(shares.iter().all(|&s| s >= 0.0));
+                let sum: f64 = shares.iter().sum();
+                assert!((sum - u).abs() < 1e-9, "sum {sum} != {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,193 @@
+//! The soundness contract between the analysis and the platform: if the
+//! RTGPU schedulability test accepts a task set, the simulated platform —
+//! which implements exactly the model the analysis assumes — must never
+//! miss a deadline, under worst-case *and* stochastic execution times.
+//!
+//! Also exercises the ablation the paper's design motivates: dropping the
+//! Lemma 5.3 blocking term is unsound, and the simulator can expose it.
+
+use rtgpu::analysis::rtgpu::{evaluate, schedule, RtgpuOpts, Search};
+use rtgpu::analysis::SmModel;
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::model::{Bounds, GpuSegment, KernelClass, MemoryModel, RtTask, TaskSet};
+use rtgpu::sim::{simulate, ExecModel, SimConfig};
+use rtgpu::util::rng::Pcg;
+
+fn check_sound(cfg: &GenConfig, util: f64, seed: u64, sets: usize) {
+    let mut rng = Pcg::new(seed);
+    let mut accepted = 0;
+    for i in 0..sets {
+        let ts = generate_taskset(&mut rng, cfg, util);
+        let verdict = schedule(&ts, 10, &RtgpuOpts::default(), Search::Grid);
+        if !verdict.schedulable {
+            continue;
+        }
+        accepted += 1;
+        let alloc = verdict.allocation.unwrap();
+        for exec in [ExecModel::Wcet, ExecModel::Bell] {
+            let sim_cfg = SimConfig {
+                exec,
+                sm_model: SmModel::Virtual,
+                seed: seed ^ (i as u64),
+                horizon_ms: 0.0,
+                stop_on_first_miss: true,
+            };
+            let r = simulate(&ts, &alloc, &sim_cfg);
+            assert!(
+                r.schedulable,
+                "analysis accepted (util {util}, set {i}, exec {exec:?}) but sim missed \
+                 {} deadlines",
+                r.total_misses
+            );
+        }
+    }
+    assert!(accepted > 0, "no sets accepted at util {util}; test is vacuous");
+}
+
+#[test]
+fn accepted_sets_never_miss_default_config() {
+    check_sound(&GenConfig::default(), 0.8, 101, 20);
+}
+
+#[test]
+fn accepted_sets_never_miss_gpu_heavy() {
+    check_sound(&GenConfig::default().with_length_ratio(1.0, 8.0), 1.0, 102, 15);
+}
+
+#[test]
+fn accepted_sets_never_miss_cpu_heavy() {
+    check_sound(&GenConfig::default().with_length_ratio(2.0, 1.0), 0.6, 103, 15);
+}
+
+#[test]
+fn accepted_sets_never_miss_one_copy_model() {
+    let cfg = GenConfig::default().with_memory_model(MemoryModel::OneCopy);
+    check_sound(&cfg, 0.9, 104, 15);
+}
+
+#[test]
+fn accepted_sets_never_miss_varied_shape() {
+    check_sound(&GenConfig::default().with_tasks(3).with_subtasks(7), 0.7, 105, 10);
+    check_sound(&GenConfig::default().with_tasks(7).with_subtasks(3), 0.7, 106, 10);
+}
+
+#[test]
+fn greedy_allocations_are_also_sound() {
+    let mut rng = Pcg::new(107);
+    let cfg = GenConfig::default();
+    let mut accepted = 0;
+    for i in 0..15 {
+        let ts = generate_taskset(&mut rng, &cfg, 0.8);
+        let verdict = schedule(&ts, 10, &RtgpuOpts::default(), Search::Greedy);
+        if !verdict.schedulable {
+            continue;
+        }
+        accepted += 1;
+        let r = simulate(
+            &ts,
+            &verdict.allocation.unwrap(),
+            &SimConfig { seed: 107 ^ i, ..SimConfig::acceptance(107) },
+        );
+        assert!(r.schedulable, "greedy-accepted set {i} missed deadlines");
+    }
+    assert!(accepted > 0);
+}
+
+/// A hand-crafted scenario where the non-preemptive bus blocking is the
+/// difference between meeting and missing deadlines: with the Lemma 5.3
+/// blocking term disabled the analysis accepts, and the simulator shows a
+/// deadline miss — demonstrating the term is load-bearing (DESIGN.md §6
+/// ablation).
+#[test]
+fn dropping_mem_blocking_is_unsound() {
+    // High-priority task with a tight deadline and a short copy; a
+    // low-priority task with a huge non-preemptive copy.
+    let hi = RtTask {
+        id: 0,
+        cpu: vec![Bounds::exact(0.2), Bounds::exact(0.2)],
+        mem: vec![Bounds::exact(1.0), Bounds::exact(1.0)],
+        gpu: vec![GpuSegment::new(
+            Bounds::exact(2.0),
+            Bounds::exact(0.0),
+            KernelClass::Special,
+        )],
+        memory_model: MemoryModel::TwoCopy,
+        deadline: 6.0,
+        period: 50.0,
+    };
+    let lo = RtTask {
+        id: 1,
+        cpu: vec![Bounds::exact(0.1), Bounds::exact(0.1)],
+        mem: vec![Bounds::exact(20.0), Bounds::exact(0.5)],
+        gpu: vec![GpuSegment::new(
+            Bounds::exact(1.0),
+            Bounds::exact(0.0),
+            KernelClass::Special,
+        )],
+        memory_model: MemoryModel::TwoCopy,
+        deadline: 200.0,
+        period: 200.0,
+    };
+    let ts = TaskSet::with_priority_order(vec![hi, lo]);
+    let alloc = vec![1, 1];
+
+    // Without blocking, the analysis accepts task 0 comfortably…
+    let no_blocking = RtgpuOpts { mem_blocking: false, ..Default::default() };
+    let bounds = evaluate(&ts, &alloc, &no_blocking);
+    assert!(
+        bounds[0].schedulable,
+        "blocking-free analysis should (unsoundly) accept: {:?}",
+        bounds[0]
+    );
+
+    // …but the platform disagrees: lo's 20 ms copy is non-preemptive.
+    let r = simulate(&ts, &alloc, &SimConfig { horizon_ms: 1000.0, ..SimConfig::acceptance(1) });
+    assert!(
+        !r.schedulable,
+        "simulator should expose the blocking miss (hi max response {})",
+        r.per_task[0].max_response_ms
+    );
+
+    // With the blocking term, the analysis correctly rejects.
+    let with_blocking = evaluate(&ts, &alloc, &RtgpuOpts::default());
+    assert!(!with_blocking[0].schedulable, "sound analysis must reject");
+}
+
+/// Analysis response-time bounds dominate simulated response times on
+/// accepted sets (bound correctness, not just accept/reject agreement).
+#[test]
+fn analysis_bounds_dominate_simulated_responses() {
+    let mut rng = Pcg::new(108);
+    let cfg = GenConfig::default();
+    let mut checked = 0;
+    for i in 0..20 {
+        let ts = generate_taskset(&mut rng, &cfg, 0.7);
+        let verdict = schedule(&ts, 10, &RtgpuOpts::default(), Search::Grid);
+        if !verdict.schedulable {
+            continue;
+        }
+        let alloc = verdict.allocation.unwrap();
+        let r = simulate(
+            &ts,
+            &alloc,
+            &SimConfig {
+                exec: ExecModel::Wcet,
+                sm_model: SmModel::Virtual,
+                seed: i,
+                horizon_ms: 0.0,
+                stop_on_first_miss: false,
+            },
+        );
+        for (k, stats) in r.per_task.iter().enumerate() {
+            if let Some(bound) = verdict.responses[k] {
+                checked += 1;
+                assert!(
+                    stats.max_response_ms <= bound + 1e-6,
+                    "set {i} task {k}: simulated {} > analysis bound {bound}",
+                    stats.max_response_ms
+                );
+            }
+        }
+    }
+    assert!(checked > 0);
+}

@@ -1,0 +1,243 @@
+//! Cross-module integration: generator → analysis → simulator pipelines,
+//! figure-shape invariants, memory-model and platform-size effects — the
+//! properties the §6 evaluation narrative rests on, checked end to end.
+
+use rtgpu::analysis::rtgpu::{schedule, RtgpuOpts, Search};
+use rtgpu::analysis::{analyze, Approach, SmModel};
+use rtgpu::gen::{generate_batch, generate_taskset, GenConfig};
+use rtgpu::harness::sweep::{run_sweep, SweepSpec};
+use rtgpu::harness::throughput::throughput_gain;
+use rtgpu::harness::validate::{average_bounds, run_validation, TimeModel};
+use rtgpu::model::{MemoryModel, Platform};
+use rtgpu::sim::{simulate, ExecModel, SimConfig};
+use rtgpu::util::prop;
+use rtgpu::util::rng::Pcg;
+
+// ---------------------------------------------------------------------------
+// Figure-shape invariants (the claims the sweeps must reproduce)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig8_shape_rtgpu_dominates_all_ratios() {
+    for (c, g) in [(2.0, 1.0), (1.0, 2.0), (1.0, 8.0)] {
+        let mut spec = SweepSpec::quick(GenConfig::default().with_length_ratio(c, g), 901);
+        spec.utils = vec![0.6, 1.0, 1.4];
+        spec.sets_per_point = 15;
+        let curves = run_sweep(&spec, 0);
+        let rtgpu = &curves[0];
+        assert_eq!(rtgpu.approach, Approach::Rtgpu);
+        for other in &curves[1..] {
+            for (i, (a, b)) in rtgpu.ratios.iter().zip(&other.ratios).enumerate() {
+                assert!(
+                    a + 0.11 >= *b, // one-set tolerance for sampling noise
+                    "ratio {c}:{g} util idx {i}: RTGPU {a} < {} {b}",
+                    other.approach.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fig8_shape_stgm_collapses_when_suspensions_grow() {
+    // STGM acceptance at util 1.2: fine at 2:1 relative to its own 1:8.
+    let accept_at = |c: f64, g: f64| {
+        let mut spec = SweepSpec::quick(GenConfig::default().with_length_ratio(c, g), 902);
+        spec.utils = vec![1.4];
+        spec.sets_per_point = 15;
+        spec.approaches = vec![Approach::Stgm, Approach::Rtgpu];
+        let curves = run_sweep(&spec, 0);
+        (curves[0].ratios[0], curves[1].ratios[0])
+    };
+    let (stgm_long, rtgpu_long) = accept_at(1.0, 8.0);
+    assert!(
+        rtgpu_long >= stgm_long + 0.2,
+        "at 1:8/util 1.4 RTGPU ({rtgpu_long}) should clearly beat STGM ({stgm_long})"
+    );
+}
+
+#[test]
+fn fig9_shape_more_subtasks_hurt() {
+    let accept = |m: usize| {
+        let mut spec = SweepSpec::quick(GenConfig::default().with_subtasks(m), 903);
+        spec.utils = vec![1.0];
+        spec.sets_per_point = 15;
+        spec.approaches = vec![Approach::Rtgpu];
+        run_sweep(&spec, 0)[0].ratios[0]
+    };
+    let m3 = accept(3);
+    let m7 = accept(7);
+    assert!(m3 >= m7, "acceptance with m=3 ({m3}) < m=7 ({m7})");
+}
+
+#[test]
+fn fig10_shape_more_tasks_hurt() {
+    let accept = |n: usize| {
+        let mut spec = SweepSpec::quick(GenConfig::default().with_tasks(n), 904);
+        spec.utils = vec![1.0];
+        spec.sets_per_point = 15;
+        spec.approaches = vec![Approach::Rtgpu];
+        run_sweep(&spec, 0)[0].ratios[0]
+    };
+    let n3 = accept(3);
+    let n7 = accept(7);
+    assert!(n3 >= n7, "acceptance with n=3 ({n3}) < n=7 ({n7})");
+}
+
+#[test]
+fn fig11_shape_more_sms_help() {
+    let accept = |gn: usize| {
+        let mut spec = SweepSpec::quick(GenConfig::default(), 905);
+        spec.utils = vec![1.0];
+        spec.sets_per_point = 15;
+        spec.gn_total = gn;
+        spec.approaches = vec![Approach::Rtgpu];
+        run_sweep(&spec, 0)[0].ratios[0]
+    };
+    let g5 = accept(5);
+    let g10 = accept(10);
+    assert!(g10 >= g5, "acceptance with 10 SMs ({g10}) < 5 SMs ({g5})");
+}
+
+#[test]
+fn one_copy_model_accepts_at_least_two_copy() {
+    // §6.2.1: merging copies relieves the bus bottleneck.  Compare on
+    // identical structure: take two-copy sets and merge their copies.
+    let mut rng = Pcg::new(906);
+    let cfg = GenConfig::default();
+    let mut two_ok = 0;
+    let mut one_ok = 0;
+    for _ in 0..20 {
+        let ts2 = generate_taskset(&mut rng, &cfg, 1.1);
+        let mut ts1 = ts2.clone();
+        for t in &mut ts1.tasks {
+            // Merge each copy pair into one combined copy.
+            let merged: Vec<_> = t
+                .mem
+                .chunks(2)
+                .map(|pair| {
+                    rtgpu::model::Bounds::new(
+                        pair[0].lo + pair[1].lo,
+                        pair[0].hi + pair[1].hi,
+                    )
+                })
+                .collect();
+            t.mem = merged;
+            t.memory_model = MemoryModel::OneCopy;
+            assert_eq!(t.validate(), Ok(()));
+        }
+        if analyze(&ts2, 10, Approach::Rtgpu, Search::Grid).schedulable {
+            two_ok += 1;
+        }
+        if analyze(&ts1, 10, Approach::Rtgpu, Search::Grid).schedulable {
+            one_ok += 1;
+        }
+    }
+    assert!(
+        one_ok >= two_ok,
+        "one-copy accepted {one_ok} < two-copy {two_ok} — bus bottleneck claim violated"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Validation pipeline invariants (Figs. 12/13 machinery)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn validation_platform_bounds_analysis_everywhere() {
+    let utils = [0.6, 1.0, 1.4];
+    for gn in [5, 10] {
+        let v = run_validation(&GenConfig::default(), &utils, 8, 907, gn, TimeModel::Worst);
+        for (i, (a, p)) in v.analysis.iter().zip(&v.platform).enumerate() {
+            assert!(p + 1e-9 >= *a, "gn {gn} util idx {i}: platform {p} < analysis {a}");
+        }
+    }
+}
+
+#[test]
+fn average_bounds_accept_superset_of_wcet_bounds() {
+    let mut rng = Pcg::new(908);
+    for _ in 0..10 {
+        let ts = generate_taskset(&mut rng, &GenConfig::default(), 1.2);
+        let wcet = analyze(&ts, 10, Approach::Rtgpu, Search::Grid).schedulable;
+        let avg = analyze(&average_bounds(&ts), 10, Approach::Rtgpu, Search::Grid).schedulable;
+        if wcet {
+            assert!(avg, "average-bounds analysis rejected a WCET-accepted set");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Throughput-gain invariants (Fig. 14 machinery)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn throughput_gain_bounded_by_class_extremes() {
+    // Every per-task gain term is (2/α − 1) ∈ [2/1.8 − 1, 2/1.45 − 1];
+    // η₂ (normalised by used SMs) must stay inside.
+    let pts = throughput_gain(&GenConfig::default(), &[0.5, 1.0], 10, 909, 10);
+    for p in &pts {
+        if p.admitted > 0.0 {
+            assert!(p.eta2 >= 2.0 / 1.8 - 1.0 - 1e-9, "η₂ {} below class floor", p.eta2);
+            assert!(p.eta2 <= 2.0 / 1.45 - 1.0 + 1e-9, "η₂ {} above class ceiling", p.eta2);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Randomized cross-checks
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_grid_and_greedy_agree_with_simulator() {
+    prop::check("search_sound_on_platform", 910, 10, |g| {
+        let util = g.float(0.4, 1.0);
+        let mut rng = Pcg::new(g.rng.next_u64());
+        let ts = generate_taskset(&mut rng, &GenConfig::default(), util);
+        for search in [Search::Grid, Search::Greedy] {
+            let v = schedule(&ts, 10, &RtgpuOpts::default(), search);
+            if let Some(alloc) = v.allocation {
+                let r = simulate(
+                    &ts,
+                    &alloc,
+                    &SimConfig {
+                        exec: ExecModel::Wcet,
+                        sm_model: SmModel::Virtual,
+                        seed: 1,
+                        horizon_ms: 0.0,
+                        stop_on_first_miss: true,
+                    },
+                );
+                if !r.schedulable {
+                    return Err(format!("{search:?} accepted but platform missed"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batches_share_no_accidental_state() {
+    // Re-running a batch must be bit-identical (generator + analysis are
+    // pure given the seed) — guards against hidden global state.
+    prop::check("batch_purity", 911, 5, |g| {
+        let seed = g.rng.next_u64();
+        let a = generate_batch(seed, &GenConfig::default(), 0.8, 3);
+        let b = generate_batch(seed, &GenConfig::default(), 0.8, 3);
+        for (x, y) in a.iter().zip(&b) {
+            let va = analyze(x, 8, Approach::Rtgpu, Search::Grid);
+            let vb = analyze(y, 8, Approach::Rtgpu, Search::Grid);
+            if va.schedulable != vb.schedulable || va.allocation != vb.allocation {
+                return Err("same seed produced different verdicts".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn platform_constructor_invariants() {
+    assert_eq!(Platform::new(5).vsm(), 10);
+    assert!(std::panic::catch_unwind(|| Platform::new(0)).is_err());
+}

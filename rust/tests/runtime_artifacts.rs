@@ -1,0 +1,112 @@
+//! Integration: the Rust PJRT engine loads the AOT artifacts and matches
+//! the Python-generated golden outputs bit-for-bit (modulo f32 tolerance).
+//!
+//! Requires `make artifacts` to have produced `artifacts/` including the
+//! `golden/` directory emitted by `python -m compile.aot`.
+
+use rtgpu::runtime::{artifact_dir, Engine};
+use rtgpu::util::json::Json;
+
+fn read_golden(name: &str) -> Option<Json> {
+    let path = artifact_dir().join("golden").join(format!("{name}.json"));
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).expect("golden file parses"))
+}
+
+fn f32s(v: &Json) -> Vec<f32> {
+    v.as_array()
+        .expect("array")
+        .iter()
+        .map(|x| x.as_f64().expect("number") as f32)
+        .collect()
+}
+
+fn small_engine() -> Engine {
+    Engine::load_dir_filtered(&artifact_dir(), |m| {
+        m.name.ends_with("_small") || m.name == "smoke"
+    })
+    .expect("engine loads small artifacts")
+}
+
+fn assert_close(actual: &[f32], expect: &[f32], tol: f32, what: &str) {
+    assert_eq!(actual.len(), expect.len(), "{what}: length mismatch");
+    for (i, (a, e)) in actual.iter().zip(expect).enumerate() {
+        let scale = e.abs().max(1.0);
+        assert!(
+            (a - e).abs() <= tol * scale,
+            "{what}: element {i} differs: {a} vs {e}"
+        );
+    }
+}
+
+#[test]
+fn smoke_artifact_runs() {
+    let eng = small_engine();
+    let x = [1f32, 2., 3., 4.];
+    let y = [1f32, 1., 1., 1.];
+    let out = eng.execute_plain("smoke", &[&x, &y]).unwrap();
+    assert_eq!(out.values, vec![5., 5., 9., 9.]);
+}
+
+#[test]
+fn synthetic_kernels_match_python_goldens() {
+    let eng = small_engine();
+    for kind in ["compute", "branch", "memory", "special", "comprehensive"] {
+        let name = format!("synthetic_{kind}_small");
+        let golden = read_golden(&name)
+            .unwrap_or_else(|| panic!("golden for {name} missing — rerun make artifacts"));
+        let x = f32s(golden.get("x").unwrap());
+        let expect = f32s(golden.get("out").unwrap());
+        let sm = golden.get("sm").unwrap().as_array().unwrap();
+        let range = (sm[0].as_i64().unwrap() as i32, sm[1].as_i64().unwrap() as i32);
+        let out = eng.execute_pinned(&name, range, &[&x]).unwrap();
+        assert_close(&out.values, &expect, 1e-4, &name);
+    }
+}
+
+#[test]
+fn pinned_range_does_not_change_results() {
+    // Workload pinning redistributes rows over the active virtual SMs; the
+    // output must be identical for every valid pinned range (§4.4).
+    let eng = small_engine();
+    let name = "synthetic_compute_small";
+    let n = eng.meta(name).unwrap().inputs[1].element_count();
+    let x: Vec<f32> = (0..n).map(|i| (i as f32) / 37.0 - 3.0).collect();
+    let full = eng.execute_pinned(name, (0, 7), &[&x]).unwrap().values;
+    for range in [(0, 1), (2, 5), (4, 7), (0, 3)] {
+        let got = eng.execute_pinned(name, range, &[&x]).unwrap().values;
+        assert_close(&got, &full, 1e-5, &format!("range {range:?}"));
+    }
+}
+
+#[test]
+fn inference_matches_golden() {
+    let eng = small_engine();
+    let golden = read_golden("inference_small").expect("inference golden");
+    let x = f32s(golden.get("x").unwrap());
+    let expect = f32s(golden.get("out").unwrap());
+    let out = eng.execute_pinned("inference_small", (0, 7), &[&x]).unwrap();
+    assert_close(&out.values, &expect, 1e-3, "inference_small");
+}
+
+#[test]
+fn invalid_sm_range_is_rejected() {
+    let eng = small_engine();
+    let name = "synthetic_compute_small";
+    let n = eng.meta(name).unwrap().inputs[1].element_count();
+    let x = vec![0f32; n];
+    assert!(eng.execute_pinned(name, (-1, 3), &[&x]).is_err());
+    assert!(eng.execute_pinned(name, (0, 8), &[&x]).is_err());
+    assert!(eng.execute_pinned(name, (5, 2), &[&x]).is_err());
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let eng = small_engine();
+    let x = vec![0f32; 7];
+    let err = eng
+        .execute_pinned("synthetic_compute_small", (0, 7), &[&x])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("expected"), "got: {err}");
+}
