@@ -27,8 +27,8 @@ use rtgpu::util::stats::{linear_fit, Summary};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let reps = args.usize_or("reps", 30);
-    args.finish();
+    let reps = args.usize_or("reps", 30)?;
+    args.finish()?;
 
     let engine = Engine::load_dir_filtered(&artifact_dir(), |m| m.name.ends_with("_small"))?;
 
@@ -46,7 +46,10 @@ fn main() -> Result<()> {
     }
     let xs: Vec<f64> = ms.iter().map(|m| 1.0 / m).collect();
     let (slope, intercept, r2) = linear_fit(&xs, &ys);
-    println!("fit: t = {slope:.2}/m + {intercept:.2}  (r² = {r2:.6}; expect C−L = {:.0}, L = {l})", c - l);
+    println!(
+        "fit: t = {slope:.2}/m + {intercept:.2}  (r² = {r2:.6}; expect C−L = {:.0}, L = {l})",
+        c - l
+    );
 
     // ---- pinning invariance on the real runtime (the Eq. 3 contract)
     println!("\n== workload-pinning invariance (real PJRT executions) ==");
@@ -67,7 +70,10 @@ fn main() -> Result<()> {
 
     // ---- Fig. 4(b): wall time vs kernel class (real executions)
     println!("\n== Fig 4(b) analog: per-class wall time on PJRT (reps = {reps}) ==");
-    println!("{:>16} {:>10} {:>10} {:>10} {:>10}", "kernel", "min(ms)", "p50(ms)", "max(ms)", "sd(ms)");
+    println!(
+        "{:>16} {:>10} {:>10} {:>10} {:>10}",
+        "kernel", "min(ms)", "p50(ms)", "max(ms)", "sd(ms)"
+    );
     for kind in ["compute", "branch", "memory", "special", "comprehensive"] {
         let name = format!("synthetic_{kind}_small");
         let count = engine.meta(&name)?.inputs[1].element_count();

@@ -1,0 +1,82 @@
+//! Online-arrival demo: applications join and leave a live coordinator
+//! and incremental admission ([`AdmissionState`]) decides every change,
+//! mostly on the warm path — the scenario that motivates caching the
+//! Algorithm-2 context across membership changes (DESIGN.md §5).
+//!
+//! Pure model-level: no PJRT artifacts required.
+//!
+//! ```bash
+//! cargo run --release --example online_admission -- --apps 8 --churn 40
+//! ```
+
+use anyhow::Result;
+use rtgpu::analysis::RtgpuOpts;
+use rtgpu::coordinator::AdmissionState;
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::model::Platform;
+use rtgpu::util::cli::Args;
+use rtgpu::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let apps = args.usize_or("apps", 8)?;
+    let churn = args.usize_or("churn", 40)?;
+    let gn = args.usize_or("sms", 10)?;
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
+
+    let cfg = GenConfig::default().with_tasks(apps);
+    let mut rng = Pcg::new(seed);
+    let pool = generate_taskset(&mut rng, &cfg, 0.9);
+
+    let mut state = AdmissionState::new(Platform::new(gn), RtgpuOpts::default());
+    let mut live: Vec<u64> = Vec::new();
+    let mut fast = 0usize;
+    let mut total = 0usize;
+
+    let hdr = ("step", "op", "path", "admitted", "apps", "fast");
+    println!("{:<6} {:<8} {:<12} {:>9} {:>6} {:>6}", hdr.0, hdr.1, hdr.2, hdr.3, hdr.4, hdr.5);
+    let report = |step: usize, op: &str, path: &str, ok: bool, n: usize, was_fast: bool| {
+        println!("{step:<6} {op:<8} {path:<12} {ok:>9} {n:>6} {was_fast:>6}");
+    };
+
+    // Initial arrivals.
+    let mut step = 0usize;
+    for t in &pool.tasks {
+        let (key, d) = state.add_app(t.clone());
+        if d.schedulable {
+            live.push(key);
+        }
+        total += 1;
+        fast += usize::from(d.path.is_fast());
+        step += 1;
+        report(step, "add", d.path.name(), d.schedulable, state.len(), d.path.is_fast());
+    }
+
+    // Steady-state churn: oldest app leaves, a fresh one arrives.
+    for i in 0..churn {
+        if !live.is_empty() {
+            let key = live.remove(0);
+            let d = state.remove_app(key);
+            total += 1;
+            fast += usize::from(d.path.is_fast());
+            step += 1;
+            report(step, "remove", d.path.name(), d.schedulable, state.len(), d.path.is_fast());
+        }
+        let (key, d) = state.add_app(pool.tasks[i % pool.tasks.len()].clone());
+        if d.schedulable {
+            live.push(key);
+        }
+        total += 1;
+        fast += usize::from(d.path.is_fast());
+        step += 1;
+        report(step, "add", d.path.name(), d.schedulable, state.len(), d.path.is_fast());
+    }
+
+    println!(
+        "\nfast-path decisions: {fast}/{total}; analysis cache: {} contexts, {:.0}% hit rate",
+        state.cache().len(),
+        state.cache().hit_rate() * 100.0
+    );
+    Ok(())
+}

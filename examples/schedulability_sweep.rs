@@ -31,10 +31,10 @@ fn run_variant(label: &str, cfg: GenConfig, gn: usize, sets: usize, seed: u64) -
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let figure = args.usize_or("figure", 0); // 0 = all
-    let sets = args.usize_or("sets", 100);
-    let seed = args.u64_or("seed", 42);
-    args.finish();
+    let figure = args.usize_or("figure", 0)?; // 0 = all
+    let sets = args.usize_or("sets", 100)?;
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
 
     if figure == 0 || figure == 8 {
         for (c, g) in [(2.0, 1.0), (1.0, 2.0), (1.0, 8.0)] {

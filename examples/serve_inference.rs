@@ -1,8 +1,8 @@
-//! END-TO-END serving driver (the DESIGN.md §5 "E2E" row): load the AOT
+//! END-TO-END serving driver (the DESIGN.md §6 "E2E" row): load the AOT
 //! artifacts, admit four periodic GPU applications via Algorithm 2, and
 //! serve them with real PJRT kernel executions pinned to their federated
 //! virtual-SM ranges.  Reports per-app latency, deadline misses and
-//! total throughput — the numbers recorded in EXPERIMENTS.md.
+//! total throughput.
 //!
 //! ```bash
 //! cargo run --release --example serve_inference -- --seconds 5
@@ -19,10 +19,10 @@ use rtgpu::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let seconds = args.f64_or("seconds", 5.0);
+    let seconds = args.f64_or("seconds", 5.0)?;
     let full = args.flag("full-artifacts");
-    let gn = args.usize_or("sms", 4);
-    args.finish();
+    let gn = args.usize_or("sms", 4)?;
+    args.finish()?;
 
     let suffix = if full { "" } else { "_small" };
     let engine = Engine::load_dir_filtered(&artifact_dir(), |m| {

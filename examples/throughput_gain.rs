@@ -15,9 +15,9 @@ use rtgpu::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let sets = args.usize_or("sets", 50);
-    let seed = args.u64_or("seed", 42);
-    args.finish();
+    let sets = args.usize_or("sets", 50)?;
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
 
     let utils: Vec<f64> = (1..=10).map(|i| i as f64 * 0.15).collect();
     for (mix, classes) in benchmark_mixes() {

@@ -20,10 +20,10 @@ fn main() -> Result<()> {
         "avg" => vec![(TimeModel::Average, 13)],
         _ => vec![(TimeModel::Worst, 12), (TimeModel::Average, 13)],
     };
-    let sets = args.usize_or("sets", 50);
-    let seed = args.u64_or("seed", 42);
-    let sms = args.list_or("sms", &[5, 8, 10]);
-    args.finish();
+    let sets = args.usize_or("sets", 50)?;
+    let seed = args.u64_or("seed", 42)?;
+    let sms = args.list_or("sms", &[5, 8, 10])?;
+    args.finish()?;
 
     let utils: Vec<f64> = (1..=12).map(|i| i as f64 * 0.2).collect();
     for (model, fig) in models {
@@ -36,7 +36,7 @@ fn main() -> Result<()> {
             let label = format!("fig{fig}_gn{gn}");
             println!("--- {label} ({model:?} execution-time model)");
             print!("{}", table(&utils, &series, "util"));
-            // The headline gap metric recorded in EXPERIMENTS.md.
+            // The headline analysis-vs-platform gap metric (DESIGN.md §6).
             let gap: f64 = v
                 .platform
                 .iter()

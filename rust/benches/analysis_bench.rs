@@ -1,13 +1,18 @@
 //! Analysis hot-path benchmarks + the DESIGN.md §6 ablations:
-//! grid vs greedy allocation search, and the Theorem-5.6 bound ablation
-//! (R1 / R2 / R3 contributions, acceptance + runtime).
+//! grid vs greedy allocation search, the Theorem-5.6 bound ablation
+//! (R1 / R2 / R3 contributions, acceptance + runtime), and the
+//! cold-vs-warm incremental-admission comparison (emitted to
+//! `BENCH_admission.json`).
 
 use rtgpu::analysis::e2e::E2eBounds;
 use rtgpu::analysis::rtgpu::{evaluate, schedule, RtgpuOpts, Search};
 use rtgpu::analysis::workload::SuspView;
 use rtgpu::analysis::{analyze, Approach};
-use rtgpu::gen::{generate_batch, GenConfig};
+use rtgpu::coordinator::AdmissionState;
+use rtgpu::gen::{generate_batch, generate_taskset, GenConfig};
+use rtgpu::model::Platform;
 use rtgpu::util::bench::{bench, black_box, header};
+use rtgpu::util::rng::Pcg;
 
 fn main() {
     println!("{}", header());
@@ -45,10 +50,13 @@ fn main() {
         black_box(schedule(&sets[i % sets.len()], 10, &opts, Search::Greedy));
         i += 1;
     }).row());
-    let grid_ok = sets.iter().filter(|ts| schedule(ts, 10, &opts, Search::Grid).schedulable).count();
+    let grid_ok =
+        sets.iter().filter(|ts| schedule(ts, 10, &opts, Search::Grid).schedulable).count();
     let greedy_ok =
         sets.iter().filter(|ts| schedule(ts, 10, &opts, Search::Greedy).schedulable).count();
-    println!("\nallocation ablation @util 1.0: grid accepts {grid_ok}/50, greedy accepts {greedy_ok}/50");
+    println!(
+        "\nallocation ablation @util 1.0: grid accepts {grid_ok}/50, greedy accepts {greedy_ok}/50"
+    );
 
     // --- Ablation: Theorem 5.6 bounds ---------------------------------
     println!("\nbound ablation @util 1.0 (accepted sets out of 50):");
@@ -63,4 +71,72 @@ fn main() {
         let ok = sets.iter().filter(|ts| schedule(ts, 10, &o, Search::Grid).schedulable).count();
         println!("  {name} accepts {ok}/50");
     }
+
+    // --- Incremental admission: cold full grid vs warm add_app --------
+    // An 8-app schedulable set; the warm path admits the 8th app into a
+    // state that already holds the other 7 (cached contexts + cached
+    // feasible allocation), vs rerunning Algorithm 2 from scratch.
+    let cfg8 = GenConfig::default().with_tasks(8);
+    let mut seed = 4242u64;
+    let ts8 = loop {
+        let ts = generate_taskset(&mut Pcg::new(seed), &cfg8, 0.6);
+        if schedule(&ts, 10, &opts, Search::Grid).schedulable {
+            break ts;
+        }
+        seed += 1;
+    };
+
+    println!();
+    let cold = bench("admission_cold_full_grid_8apps", || {
+        black_box(schedule(&ts8, 10, &opts, Search::Grid));
+    });
+    println!("{}", cold.row());
+
+    let mut state = AdmissionState::new(Platform::new(10), opts);
+    for t in ts8.tasks.iter().take(7) {
+        let (_, d) = state.add_app(t.clone());
+        assert!(d.schedulable, "7-app warm base must admit");
+    }
+    let newcomer = ts8.tasks[7].clone();
+    let mut fast = 0usize;
+    let mut admitted = 0usize;
+    let mut iters = 0usize;
+    let warm = bench("admission_warm_add_remove_8th_app", || {
+        let (key, d) = state.add_app(newcomer.clone());
+        fast += usize::from(d.path.is_fast());
+        admitted += usize::from(d.schedulable);
+        iters += 1;
+        black_box(state.remove_app(key));
+    });
+    println!("{}", warm.row());
+    if admitted != iters {
+        println!("WARNING: 8th app admitted only {admitted}/{iters} times (expected all)");
+    }
+
+    let speedup = cold.summary.mean / warm.summary.mean.max(1e-12);
+    let fast_fraction = fast as f64 / iters.max(1) as f64;
+    let json = format!(
+        "{{\n  \"apps\": 8,\n  \"gn_total\": 10,\n  \"seed\": {seed},\n  \
+         \"cold_full_grid_mean_s\": {:.9},\n  \"cold_full_grid_p50_s\": {:.9},\n  \
+         \"warm_add_remove_mean_s\": {:.9},\n  \"warm_add_remove_p50_s\": {:.9},\n  \
+         \"speedup_mean\": {:.3},\n  \"fast_path_fraction\": {:.3},\n  \
+         \"cache_contexts\": {},\n  \"cache_hit_rate\": {:.3}\n}}\n",
+        cold.summary.mean,
+        cold.summary.p50,
+        warm.summary.mean,
+        warm.summary.p50,
+        speedup,
+        fast_fraction,
+        state.cache().len(),
+        state.cache().hit_rate(),
+    );
+    std::fs::write("BENCH_admission.json", &json).expect("write BENCH_admission.json");
+    println!(
+        "\nincremental admission @8 apps: warm add+remove is {speedup:.1}× faster than a cold \
+         full grid (fast path {fast}/{iters}); BENCH_admission.json written"
+    );
+    // Acceptance bar (reported, not asserted — benches should not crash
+    // on machine variance): warm must be ≥5× faster than cold.
+    let bar = if speedup >= 5.0 { "PASS" } else { "BELOW BAR" };
+    println!("acceptance bar (warm ≥5× cold): {bar}");
 }

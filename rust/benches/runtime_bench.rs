@@ -1,6 +1,6 @@
 //! PJRT runtime hot path: artifact execution latency per kernel class and
 //! input handling overhead — the L3 serving-path numbers behind the
-//! EXPERIMENTS.md §Perf table.
+//! DESIGN.md §6 perf table.
 
 use rtgpu::runtime::{artifact_dir, Engine};
 use rtgpu::util::bench::{bench_n, black_box, header};

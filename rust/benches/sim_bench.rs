@@ -69,7 +69,8 @@ fn main() {
         let v = duration(100.0, 2.0, a, 2, SmModel::Virtual);
         let p = duration(100.0, 2.0, 1.0, 2, SmModel::Physical);
         println!(
-            "  {:>14} (α={a:.2}): virtual {v:>6.2} ms vs physical {p:>6.2} ms → {:>5.1} % faster",
+            "  {:>14} (α={a:.2}): virtual {v:>6.2} ms vs physical {p:>6.2} ms → \
+             {:>5.1} % faster",
             class.artifact_kind(),
             100.0 * (1.0 - v / p)
         );

@@ -1,7 +1,7 @@
 //! The two baseline schedulability tests of §6, with persistent-threads
 //! SM partitioning but an **even-split** allocation (the deadline-aware
 //! grid search is Algorithm 2 — RTGPU's contribution) and their published
-//! analyses (interpretation notes in DESIGN.md §Analysis-Interpretation):
+//! analyses (interpretation notes in DESIGN.md §7):
 //!
 //! * **Self-suspension** ([47], Lemmas 2.1–2.3): CPU segments are
 //!   executions; each memory+GPU+memory span is an *undifferentiated*
@@ -121,7 +121,7 @@ pub fn selfsusp_evaluate(ts: &TaskSet, alloc: &Allocation) -> Vec<TaskBound> {
             // structure; the tighter task-level R2 shortcut is part of the
             // machinery the RTGPU analysis builds on).
             let response = if cpu_ok { Some(sum_s_hi + crs.iter().sum::<f64>()) } else { None };
-            let schedulable = response.map_or(false, |r| r <= task.deadline + 1e-9);
+            let schedulable = response.is_some_and(|r| r <= task.deadline + 1e-9);
             TaskBound { response, schedulable }
         })
         .collect()
@@ -171,7 +171,7 @@ pub fn stgm_evaluate(ts: &TaskSet, alloc: &Allocation) -> Vec<TaskBound> {
             let response = fixpoint::solve(wcet[k], task.deadline, |x| {
                 wcet[k] + (0..k).map(|i| views[i].max_workload(x)).sum::<f64>()
             });
-            let schedulable = response.map_or(false, |r| r <= task.deadline + 1e-9);
+            let schedulable = response.is_some_and(|r| r <= task.deadline + 1e-9);
             TaskBound { response, schedulable }
         })
         .collect()

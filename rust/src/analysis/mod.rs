@@ -25,7 +25,7 @@ pub mod rtgpu;
 pub mod workload;
 
 pub use gpu::{Allocation, SmModel};
-pub use rtgpu::{RtgpuOpts, ScheduleResult, Search};
+pub use rtgpu::{Evaluator, RtgpuOpts, ScheduleResult, Search, SharedCache};
 
 use crate::model::TaskSet;
 
@@ -54,7 +54,12 @@ impl Approach {
 }
 
 /// Run the selected schedulability test with its allocation search.
-pub fn analyze(ts: &TaskSet, gn_total: usize, approach: Approach, search: Search) -> ScheduleResult {
+pub fn analyze(
+    ts: &TaskSet,
+    gn_total: usize,
+    approach: Approach,
+    search: Search,
+) -> ScheduleResult {
     match approach {
         Approach::Rtgpu => rtgpu::schedule(ts, gn_total, &RtgpuOpts::default(), search),
         Approach::SelfSuspension => baselines::selfsusp_schedule(ts, gn_total, search),

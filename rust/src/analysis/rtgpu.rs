@@ -44,16 +44,87 @@ pub struct TaskBound {
     pub schedulable: bool,
 }
 
+type SharedMap = std::collections::HashMap<(u64, usize, SmModel), std::rc::Rc<CachedTask>>;
+
+/// Cross-evaluation cache of per-`(task key, gn, sm model)` contexts.
+///
+/// The Lemma 5.1 bounds and Lemma 5.2/5.4 views depend only on a task's
+/// *own* segments and allocation, never on the rest of the set — so they
+/// survive task-set **membership changes**.  The serving coordinator's
+/// incremental admission keeps one of these across `add_app`/`remove_app`
+/// calls (keyed by stable app id, carried in `RtTask::id`), which is what
+/// makes the warm paths cheap: re-admitting `n` apps touches only the new
+/// app's contexts (DESIGN.md §5).
+///
+/// **Contract:** a context is identified by `(RtTask::id, gn, SmModel)`.
+/// Callers sharing one cache across evaluators must keep `RtTask::id`
+/// unique per *task definition* (same id ⇒ same segments), as
+/// `AdmissionState` does with its stable keys; reusing a cache for
+/// unrelated task sets whose ids collide returns stale contexts.
+#[derive(Default)]
+pub struct SharedCache {
+    map: std::cell::RefCell<SharedMap>,
+    hits: std::cell::Cell<usize>,
+    misses: std::cell::Cell<usize>,
+}
+
+impl SharedCache {
+    pub fn new() -> SharedCache {
+        SharedCache::default()
+    }
+
+    fn get(&self, key: u64, gn: usize, model: SmModel) -> Option<std::rc::Rc<CachedTask>> {
+        let hit = self.map.borrow().get(&(key, gn, model)).map(std::rc::Rc::clone);
+        match &hit {
+            Some(_) => self.hits.set(self.hits.get() + 1),
+            None => self.misses.set(self.misses.get() + 1),
+        }
+        hit
+    }
+
+    fn insert(&self, key: u64, gn: usize, model: SmModel, entry: std::rc::Rc<CachedTask>) {
+        self.map.borrow_mut().insert((key, gn, model), entry);
+    }
+
+    /// Number of cached `(task, gn)` contexts.
+    pub fn len(&self) -> usize {
+        self.map.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fraction of lookups served from the cache so far.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits.get(), self.misses.get());
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Drop contexts whose task key is no longer live (app removal).
+    pub fn retain_keys(&self, live: &[u64]) {
+        self.map.borrow_mut().retain(|&(key, _, _), _| live.contains(&key));
+    }
+}
+
+type LocalCache = Vec<Vec<Option<std::rc::Rc<CachedTask>>>>;
+
 /// Reusable evaluation context for one task set: caches the per-`(task,
 /// gn)` Lemma 5.1 bounds and Lemma 5.2/5.4 views, which depend only on a
 /// task's *own* allocation — Algorithm 2 revisits the same `(task, gn)`
 /// pairs hundreds of times across the grid, so this cache removes the
-/// dominant cost of the search (see EXPERIMENTS.md §Perf).
+/// dominant cost of the search (DESIGN.md §5).  Attach a [`SharedCache`]
+/// to reuse contexts across evaluators (incremental admission).
 pub struct Evaluator<'a> {
     ts: &'a TaskSet,
     opts: RtgpuOpts,
+    shared: Option<&'a SharedCache>,
     /// `cache[task][gn]` — lazily filled.
-    cache: std::cell::RefCell<Vec<Vec<Option<std::rc::Rc<CachedTask>>>>>,
+    cache: std::cell::RefCell<LocalCache>,
 }
 
 struct CachedTask {
@@ -67,8 +138,20 @@ impl<'a> Evaluator<'a> {
         Evaluator {
             ts,
             opts: *opts,
+            shared: None,
             cache: std::cell::RefCell::new(vec![vec![None; gn_max + 1]; ts.len()]),
         }
+    }
+
+    /// Like [`Evaluator::new`], but backed by a cross-evaluation
+    /// [`SharedCache`] keyed by each task's stable `id`.
+    pub fn with_shared(
+        ts: &'a TaskSet,
+        gn_max: usize,
+        opts: &RtgpuOpts,
+        shared: &'a SharedCache,
+    ) -> Evaluator<'a> {
+        Evaluator { shared: Some(shared), ..Evaluator::new(ts, gn_max, opts) }
     }
 
     fn cached(&self, k: usize, gn: usize) -> std::rc::Rc<CachedTask> {
@@ -78,6 +161,12 @@ impl<'a> Evaluator<'a> {
             return std::rc::Rc::clone(c);
         }
         let task = &self.ts.tasks[k];
+        if let Some(shared) = self.shared {
+            if let Some(entry) = shared.get(task.id as u64, gn, self.opts.sm_model) {
+                *slot = Some(std::rc::Rc::clone(&entry));
+                return entry;
+            }
+        }
         let (gr_lo, gr_hi) = if task.gpu.is_empty() {
             (vec![], vec![])
         } else {
@@ -88,6 +177,9 @@ impl<'a> Evaluator<'a> {
             mem_view: mem_view(task, &gr_lo),
             cpu_view: cpu_view(task, &gr_lo),
         });
+        if let Some(shared) = self.shared {
+            shared.insert(task.id as u64, gn, self.opts.sm_model, std::rc::Rc::clone(&entry));
+        }
         *slot = Some(std::rc::Rc::clone(&entry));
         entry
     }
@@ -129,7 +221,7 @@ impl<'a> Evaluator<'a> {
             end_to_end(ts, k, &gr_hi[k], &mr, cr.as_deref(), cpu_views, self.opts.bounds)
         });
         let response = [r12, r3].into_iter().flatten().reduce(f64::min);
-        let schedulable = response.map_or(false, |r| r <= task.deadline + 1e-9);
+        let schedulable = response.is_some_and(|r| r <= task.deadline + 1e-9);
         TaskBound { response, schedulable }
     }
 
@@ -211,10 +303,30 @@ pub fn schedule(
         return ScheduleResult::rejected(n);
     };
     let eval = Evaluator::new(ts, gn_total, opts);
-    match search {
+    schedule_with(&eval, &min_gn, gn_total, search)
+}
+
+/// Algorithm 2's allocation search over a caller-supplied evaluator and
+/// per-task floors.  This is the warm entry point of incremental
+/// admission: the coordinator passes an evaluator backed by its
+/// [`SharedCache`] and floors equal to the previously accepted
+/// allocation, so the search resumes from a known-feasible point instead
+/// of the global minimums (DESIGN.md §5).
+pub fn schedule_with(
+    eval: &Evaluator<'_>,
+    floors: &[usize],
+    gn_total: usize,
+    search: Search,
+) -> ScheduleResult {
+    let n = eval.ts.len();
+    debug_assert_eq!(floors.len(), n);
+    if floors.iter().sum::<usize>() > gn_total {
+        return ScheduleResult::rejected(n);
+    }
+    let found = match search {
         Search::Grid => {
             let mut found: Option<Allocation> = None;
-            search_allocations(&min_gn, gn_total, |alloc| {
+            search_allocations(floors, gn_total, |alloc| {
                 if eval.schedulable(alloc) {
                     found = Some(alloc.clone());
                     true
@@ -222,28 +334,18 @@ pub fn schedule(
                     false
                 }
             });
-            match found {
-                Some(alloc) => {
-                    let responses =
-                        eval.bounds(&alloc).into_iter().map(|b| b.response).collect();
-                    ScheduleResult { schedulable: true, allocation: Some(alloc), responses }
-                }
-                None => ScheduleResult::rejected(n),
-            }
+            found
         }
-        Search::Greedy => {
-            let result = greedy_allocation(&min_gn, gn_total, |alloc| {
-                eval.bounds(alloc).iter().map(|b| b.schedulable).collect()
-            });
-            match result {
-                Some(alloc) => {
-                    let responses =
-                        eval.bounds(&alloc).into_iter().map(|b| b.response).collect();
-                    ScheduleResult { schedulable: true, allocation: Some(alloc), responses }
-                }
-                None => ScheduleResult::rejected(n),
-            }
+        Search::Greedy => greedy_allocation(floors, gn_total, |alloc| {
+            eval.bounds(alloc).iter().map(|b| b.schedulable).collect()
+        }),
+    };
+    match found {
+        Some(alloc) => {
+            let responses = eval.bounds(&alloc).into_iter().map(|b| b.response).collect();
+            ScheduleResult { schedulable: true, allocation: Some(alloc), responses }
         }
+        None => ScheduleResult::rejected(n),
     }
 }
 
@@ -352,6 +454,53 @@ mod tests {
                 assert!(grid.schedulable, "greedy accepted what grid rejected");
             }
         }
+    }
+
+    #[test]
+    fn shared_cache_reuses_contexts_across_evaluators() {
+        let shared = SharedCache::new();
+        let ts = two_task_set();
+        let opts = RtgpuOpts::default();
+        {
+            let eval = Evaluator::with_shared(&ts, 10, &opts, &shared);
+            let cold = eval.bounds(&vec![2, 3]);
+            assert!(cold.iter().all(|b| b.response.is_some()));
+        }
+        assert_eq!(shared.len(), 2, "one context per (task, gn)");
+        // A fresh evaluator over the same tasks hits the shared cache.
+        let eval = Evaluator::with_shared(&ts, 10, &opts, &shared);
+        let warm = eval.bounds(&vec![2, 3]);
+        assert!(shared.hit_rate() > 0.0, "second evaluation must hit");
+        let direct = evaluate(&ts, &vec![2, 3], &opts);
+        for (w, d) in warm.iter().zip(&direct) {
+            assert_eq!(w.response, d.response, "cached context changed the bound");
+        }
+        // Dropping a task key evicts only its contexts.
+        shared.retain_keys(&[1]);
+        assert_eq!(shared.len(), 1);
+    }
+
+    #[test]
+    fn schedule_with_floors_matches_schedule_from_minimums() {
+        let ts = two_task_set();
+        let opts = RtgpuOpts::default();
+        let min_gn =
+            crate::analysis::gpu::min_allocations(&ts, 10, opts.sm_model).unwrap();
+        let eval = Evaluator::new(&ts, 10, &opts);
+        let warm = schedule_with(&eval, &min_gn, 10, Search::Grid);
+        let cold = schedule(&ts, 10, &opts, Search::Grid);
+        assert_eq!(warm.schedulable, cold.schedulable);
+        assert_eq!(warm.allocation, cold.allocation);
+    }
+
+    #[test]
+    fn schedule_with_over_budget_floors_rejects() {
+        let ts = two_task_set();
+        let opts = RtgpuOpts::default();
+        let eval = Evaluator::new(&ts, 10, &opts);
+        let r = schedule_with(&eval, &[6, 6], 10, Search::Grid);
+        assert!(!r.schedulable);
+        assert!(r.allocation.is_none());
     }
 
     #[test]

@@ -1,11 +1,25 @@
 //! Admission control: Algorithm 2 over the registered applications, plus
 //! the mapping from abstract SM counts to concrete pinned virtual-SM
 //! ranges for the runtime.
+//!
+//! Two entry points:
+//!
+//! * [`admit`] — the batch path: profile every spec on the engine, run
+//!   Algorithm 2 once, carve virtual-SM ranges.
+//! * [`AdmissionState`] — the online path (DESIGN.md §5): applications
+//!   join and leave continuously; per-`(task, gn)` analysis contexts and
+//!   the accepted allocation are cached so most membership changes decide
+//!   on a cheap warm path instead of a full Algorithm-2 rerun.
+
+use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::analysis::rtgpu::{schedule, RtgpuOpts, Search};
-use crate::model::{Platform, TaskSet};
+use crate::analysis::gpu::min_allocations;
+use crate::analysis::rtgpu::{
+    schedule, schedule_with, Evaluator, RtgpuOpts, ScheduleResult, Search, SharedCache,
+};
+use crate::model::{Platform, RtTask, TaskSet};
 use crate::runtime::Engine;
 
 use super::app::{AppSpec, GpuProfile};
@@ -144,6 +158,230 @@ impl AdmissionReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Incremental (online) admission
+// ---------------------------------------------------------------------------
+
+/// Which decision path settled a membership change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPath {
+    /// The cached allocation (plus the newcomer's minimum) passed as-is.
+    WarmKeep,
+    /// A greedy extension of the cached allocation passed.
+    WarmGreedy,
+    /// A grid search floored at the cached allocation passed.
+    WarmGrid,
+    /// Full Algorithm-2 rerun from the global minimum allocations.
+    FullGrid,
+    /// Some task is individually infeasible — rejected before any search.
+    Infeasible,
+}
+
+impl AdmissionPath {
+    /// `true` when the full Algorithm-2 rerun was avoided.
+    pub fn is_fast(self) -> bool {
+        use AdmissionPath::{WarmGreedy, WarmGrid, WarmKeep};
+        matches!(self, WarmKeep | WarmGreedy | WarmGrid)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionPath::WarmKeep => "warm-keep",
+            AdmissionPath::WarmGreedy => "warm-greedy",
+            AdmissionPath::WarmGrid => "warm-grid",
+            AdmissionPath::FullGrid => "full-grid",
+            AdmissionPath::Infeasible => "infeasible",
+        }
+    }
+}
+
+/// Outcome of one `add_app`/`remove_app` call.
+#[derive(Debug, Clone)]
+pub struct AdmissionDecision {
+    pub schedulable: bool,
+    /// App keys in priority (deadline-monotonic) order.
+    pub order: Vec<u64>,
+    /// Physical SMs per app, parallel to `order` (empty when rejected).
+    pub allocation: Vec<usize>,
+    /// End-to-end response bounds (ms), parallel to `order`.
+    pub responses: Vec<Option<f64>>,
+    /// Which decision path ran; `path.is_fast()` means the full
+    /// Algorithm-2 rerun was avoided.
+    pub path: AdmissionPath,
+}
+
+/// Online admission control: the coordinator's long-lived Algorithm-2
+/// state.  Registered tasks keep a stable key (carried in `RtTask::id`)
+/// so the per-`(task, gn)` Lemma 5.1 bounds and suspension views cached
+/// in the [`SharedCache`] survive membership changes; `add_app` first
+/// tries to extend the currently accepted allocation (keep → greedy →
+/// floored grid) before falling back to a full rerun.  A rejected
+/// `add_app` rolls back: the previously admitted set keeps running.
+pub struct AdmissionState {
+    platform: Platform,
+    opts: RtgpuOpts,
+    next_key: u64,
+    /// Registration order; each task's `id` equals its key.
+    apps: Vec<(u64, RtTask)>,
+    cache: SharedCache,
+    /// Currently accepted physical SMs per app key.
+    current: HashMap<u64, usize>,
+}
+
+impl AdmissionState {
+    pub fn new(platform: Platform, opts: RtgpuOpts) -> AdmissionState {
+        AdmissionState {
+            platform,
+            opts,
+            next_key: 0,
+            apps: Vec::new(),
+            cache: SharedCache::new(),
+            current: HashMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.apps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.apps.is_empty()
+    }
+
+    /// The shared analysis cache (hit-rate / size introspection).
+    pub fn cache(&self) -> &SharedCache {
+        &self.cache
+    }
+
+    /// Currently granted physical SMs for an admitted app.
+    pub fn allocation_of(&self, key: u64) -> Option<usize> {
+        self.current.get(&key).copied()
+    }
+
+    fn live_keys(&self) -> Vec<u64> {
+        self.apps.iter().map(|(k, _)| *k).collect()
+    }
+
+    /// Register a task and re-decide admission.  Returns the app's stable
+    /// key and the decision; on rejection the task is rolled back and the
+    /// previous admitted set stays in force.
+    pub fn add_app(&mut self, mut task: RtTask) -> (u64, AdmissionDecision) {
+        let key = self.next_key;
+        self.next_key += 1;
+        task.id = key as usize;
+        self.apps.push((key, task));
+        let decision = self.decide();
+        if decision.schedulable {
+            self.apply(&decision);
+        } else {
+            self.apps.pop();
+            self.cache.retain_keys(&self.live_keys());
+        }
+        (key, decision)
+    }
+
+    /// Deregister an app and re-decide admission for the remainder.
+    pub fn remove_app(&mut self, key: u64) -> AdmissionDecision {
+        self.apps.retain(|(k, _)| *k != key);
+        self.current.remove(&key);
+        self.cache.retain_keys(&self.live_keys());
+        let decision = self.decide();
+        self.apply(&decision);
+        decision
+    }
+
+    fn apply(&mut self, d: &AdmissionDecision) {
+        if d.schedulable {
+            self.current = d.order.iter().copied().zip(d.allocation.iter().copied()).collect();
+        } else {
+            self.current.clear();
+        }
+    }
+
+    /// Decide admission for the currently registered set (no mutation).
+    fn decide(&self) -> AdmissionDecision {
+        let tasks: Vec<RtTask> = self.apps.iter().map(|(_, t)| t.clone()).collect();
+        if tasks.is_empty() {
+            return AdmissionDecision {
+                schedulable: true,
+                order: Vec::new(),
+                allocation: Vec::new(),
+                responses: Vec::new(),
+                path: AdmissionPath::WarmKeep,
+            };
+        }
+        let ts = TaskSet::new_deadline_monotonic(tasks);
+        let order: Vec<u64> = ts.tasks.iter().map(|t| t.id as u64).collect();
+        let gn_total = self.platform.gn_physical;
+
+        let Some(min_gn) = min_allocations(&ts, gn_total, self.opts.sm_model) else {
+            return AdmissionDecision {
+                schedulable: false,
+                order,
+                allocation: Vec::new(),
+                responses: vec![None; ts.len()],
+                path: AdmissionPath::Infeasible,
+            };
+        };
+
+        let eval = Evaluator::with_shared(&ts, gn_total, &self.opts, &self.cache);
+        let mut settled: Option<(ScheduleResult, AdmissionPath)> = None;
+        if !self.current.is_empty() {
+            // Warm floors: the accepted allocation where known, the
+            // per-task minimum for newcomers.  Survivors deliberately
+            // keep their grants (extra dedicated SMs only shorten their
+            // GPU segments); SMs are fully reclaimed the next time a
+            // decision falls through to the full rerun below.
+            let floors: Vec<usize> = ts
+                .tasks
+                .iter()
+                .zip(&min_gn)
+                .map(|(t, &m)| self.current.get(&(t.id as u64)).map_or(m, |&g| g.max(m)))
+                .collect();
+            if floors.iter().sum::<usize>() <= gn_total {
+                // One full evaluation decides keep-as-is AND yields the
+                // response bounds (the hot path of online admission).
+                let bounds = eval.bounds(&floors);
+                if bounds.iter().all(|b| b.schedulable) {
+                    let responses = bounds.into_iter().map(|b| b.response).collect();
+                    settled = Some((
+                        ScheduleResult {
+                            schedulable: true,
+                            allocation: Some(floors.clone()),
+                            responses,
+                        },
+                        AdmissionPath::WarmKeep,
+                    ));
+                }
+                if settled.is_none() {
+                    let greedy = schedule_with(&eval, &floors, gn_total, Search::Greedy);
+                    if greedy.schedulable {
+                        settled = Some((greedy, AdmissionPath::WarmGreedy));
+                    } else {
+                        let grid = schedule_with(&eval, &floors, gn_total, Search::Grid);
+                        if grid.schedulable {
+                            settled = Some((grid, AdmissionPath::WarmGrid));
+                        }
+                    }
+                }
+            }
+            // Floors over budget (inflated grants + a newcomer): every
+            // warm attempt is doomed, go straight to the full rerun.
+        }
+        let (result, path) = settled.unwrap_or_else(|| {
+            (schedule_with(&eval, &min_gn, gn_total, Search::Grid), AdmissionPath::FullGrid)
+        });
+
+        AdmissionDecision {
+            schedulable: result.schedulable,
+            order,
+            allocation: result.allocation.unwrap_or_default(),
+            responses: result.responses,
+            path,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,5 +400,78 @@ mod tests {
             assert!(pair[0].1 < pair[1].0);
         }
         assert_eq!(next, 8);
+    }
+
+    use crate::gen::{generate_taskset, GenConfig};
+    use crate::model::testing::simple_task;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn add_then_remove_take_the_fast_path() {
+        let mut state = AdmissionState::new(Platform::new(10), RtgpuOpts::default());
+        let (k0, d0) = state.add_app(simple_task(0));
+        assert!(d0.schedulable);
+        assert_eq!(d0.path, AdmissionPath::FullGrid, "first decision is cold");
+        let (k1, d1) = state.add_app(simple_task(1));
+        assert!(d1.schedulable);
+        assert!(d1.path.is_fast(), "second add should extend the cached point: {:?}", d1.path);
+        assert_eq!(state.len(), 2);
+        assert!(state.allocation_of(k0).unwrap() >= 1);
+        let d2 = state.remove_app(k1);
+        assert!(d2.schedulable && d2.path.is_fast(), "removal must be fast: {:?}", d2.path);
+        assert_eq!(state.len(), 1);
+        assert_eq!(state.allocation_of(k1), None);
+    }
+
+    #[test]
+    fn rejected_add_rolls_back() {
+        let mut state = AdmissionState::new(Platform::new(4), RtgpuOpts::default());
+        let (_, d0) = state.add_app(simple_task(0));
+        assert!(d0.schedulable);
+        let before = state.len();
+        let mut impossible = simple_task(1);
+        impossible.deadline = 5.0; // below its fixed demand at any gn
+        impossible.period = 5.0;
+        let (_, d1) = state.add_app(impossible);
+        assert!(!d1.schedulable);
+        assert_eq!(state.len(), before, "rejected app must not linger");
+        // The surviving set still serves with its old allocation.
+        assert!(state.allocation_of(0).is_some());
+    }
+
+    #[test]
+    fn incremental_sequence_matches_cold_verdict() {
+        let cfg = GenConfig::default();
+        let mut rng = Pcg::new(77);
+        for round in 0..6 {
+            let ts = generate_taskset(&mut rng, &cfg, 0.9);
+            let mut state = AdmissionState::new(Platform::new(10), RtgpuOpts::default());
+            let mut all_admitted = true;
+            for t in &ts.tasks {
+                let (_, d) = state.add_app(t.clone());
+                all_admitted &= d.schedulable;
+            }
+            let cold = schedule(&ts, 10, &RtgpuOpts::default(), Search::Grid);
+            assert_eq!(
+                all_admitted, cold.schedulable,
+                "round {round}: incremental and cold admission disagree"
+            );
+            if all_admitted {
+                assert!(
+                    state.cache().hit_rate() > 0.0,
+                    "warm decisions must reuse cached contexts"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_state_is_trivially_schedulable() {
+        let mut state = AdmissionState::new(Platform::new(4), RtgpuOpts::default());
+        let (k, d) = state.add_app(simple_task(0));
+        assert!(d.schedulable);
+        let d = state.remove_app(k);
+        assert!(d.schedulable && d.order.is_empty());
+        assert!(state.is_empty());
     }
 }

@@ -11,6 +11,9 @@
 //!    Eq.-4 task model and Algorithm 2 (grid-searched federated
 //!    scheduling + fixed-priority analysis) decides schedulability and
 //!    assigns each task a dedicated, *contiguous* virtual-SM range.
+//!    For online arrival/departure, [`AdmissionState`] decides
+//!    membership changes incrementally from cached analysis contexts
+//!    (DESIGN.md §5).
 //! 3. **Serving** ([`serve`]) — release timers fire jobs through the
 //!    three resource stations that mirror the platform model: a
 //!    uniprocessor CPU station with priority dispatch, a non-preemptive
@@ -19,7 +22,7 @@
 //! 4. **Metrics** — per-task response times, deadline misses and
 //!    throughput, reported on drain.
 //!
-//! Implementation notes (deviations documented in DESIGN.md): CPU
+//! Implementation notes (deviations documented in DESIGN.md §4): CPU
 //! segments are dispatched non-preemptively (real threads cannot be
 //! preempted mid-spin); admission therefore treats CPU segments like the
 //! bus — short segments keep the induced blocking negligible.  On the
@@ -33,7 +36,9 @@ pub mod app;
 pub mod metrics;
 pub mod serve;
 
-pub use admission::{admit, AdmissionReport, TaskAdmission};
+pub use admission::{
+    admit, AdmissionDecision, AdmissionPath, AdmissionReport, AdmissionState, TaskAdmission,
+};
 pub use app::{AppSpec, GpuProfile};
 pub use metrics::ServeReport;
-pub use serve::{serve, ServeConfig};
+pub use serve::{serve, serve_virtual, ServeConfig, VirtualTask};

@@ -1,7 +1,7 @@
 //! The serving loop: release timers, CPU / bus / GPU stations, drain.
 //!
-//! Thread topology (PJRT handles are not `Sync`, so the engine stays on
-//! the caller's thread):
+//! Thread topology (DESIGN.md §4; PJRT handles are not `Sync`, so the
+//! engine stays on the caller's thread):
 //!
 //! ```text
 //!   timer thread ──► CPU station ──► bus station ──► caller thread (GPU)
@@ -10,21 +10,32 @@
 //!        └── releases    └── completion records
 //! ```
 //!
-//! The CPU and bus stations dispatch by task priority (deadline-
-//! monotonic, non-preemptive within a segment — exactly the §3 model for
-//! the bus; a documented approximation for the CPU).  The GPU station
-//! executes each job's artifact pinned to the task's admitted virtual-SM
-//! range.
+//! The platform *model* — which station serves which phase, and in what
+//! order waiting jobs dispatch — comes from [`crate::sched`]: every job
+//! walks a five-phase [`Chain`] (`Pre → H2d → Gpu → D2h → Post`), each
+//! station pops its [`ReadyQueue`] in canonical priority order
+//! (deadline-monotonic level, then release), and segments are served
+//! non-preemptively — exactly the §3 model for the bus; a documented
+//! approximation for the CPU (DESIGN.md §4).  The GPU station executes
+//! each job's artifact pinned to the task's admitted virtual-SM range.
+//!
+//! [`serve_virtual`] is the same driver with threads and wall-clock time
+//! stripped away: a deterministic single-threaded walk of the shared
+//! platform core, used by `tests/sched_parity.rs` to pin this executor's
+//! model to the simulator's.
 
-use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::runtime::Engine;
+use crate::sched::{
+    ms_to_ticks, ticks_to_ms, Chain, CoreEvent, Phase, PlatformCore, Prio, ReadyQueue, Station,
+    TaskFifo, Tick, TraceEntry, WalkJob,
+};
 
 use super::admission::AdmissionReport;
 use super::metrics::{AppStats, ServeReport};
@@ -44,51 +55,19 @@ impl Default for ServeConfig {
     }
 }
 
-/// Chain phase of an in-flight job.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Phase {
-    Pre,
-    H2d,
-    Gpu,
-    D2h,
-    Post,
-}
-
+/// An in-flight job: position in its app's five-phase chain plus the
+/// canonical priority key shared with the virtual-time drivers.
 #[derive(Debug)]
 struct Job {
     /// Index into `report.admitted`.
     app: usize,
-    priority: usize,
+    prio: Prio,
     release: Instant,
     deadline: Instant,
-    phase: Phase,
+    /// Index into the app's [`Chain`].
+    next_phase: usize,
     /// GPU execution time observed for this job (ms).
     gpu_ms: f64,
-}
-
-impl Job {
-    fn key(&self) -> (usize, Instant) {
-        (self.priority, self.release)
-    }
-}
-
-// BinaryHeap is a max-heap; invert the key for priority order.
-struct Ordered(Job);
-impl PartialEq for Ordered {
-    fn eq(&self, other: &Self) -> bool {
-        self.0.key() == other.0.key()
-    }
-}
-impl Eq for Ordered {}
-impl PartialOrd for Ordered {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Ordered {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        other.0.key().cmp(&self.0.key())
-    }
 }
 
 enum Msg {
@@ -104,37 +83,43 @@ fn spin_ms(ms: f64) {
     }
 }
 
-/// A station thread: priority queue over arriving jobs, `work` applied
-/// non-preemptively, then forwarded via `advance`.
-fn station(
-    rx: Receiver<Msg>,
-    work: impl Fn(&mut Job),
-    advance: impl Fn(Job),
-) {
-    let mut heap: BinaryHeap<Ordered> = BinaryHeap::new();
+/// A station thread: canonical priority queue over arriving jobs, `work`
+/// applied non-preemptively, then forwarded via `advance`.
+fn station(rx: Receiver<Msg>, work: impl Fn(&mut Job), advance: impl Fn(Job)) {
+    let mut queue: ReadyQueue<Job> = ReadyQueue::new();
     let mut open = true;
     loop {
         // Block for at least one message when idle; then drain.
-        if heap.is_empty() {
+        if queue.is_empty() {
             if !open {
                 return;
             }
             match rx.recv() {
-                Ok(Msg::Work(j)) => heap.push(Ordered(j)),
+                Ok(Msg::Work(j)) => queue.push(j.prio, j),
                 Ok(Msg::Shutdown) | Err(_) => open = false,
             }
         }
         while let Ok(msg) = rx.try_recv() {
             match msg {
-                Msg::Work(j) => heap.push(Ordered(j)),
+                Msg::Work(j) => queue.push(j.prio, j),
                 Msg::Shutdown => open = false,
             }
         }
-        if let Some(Ordered(mut job)) = heap.pop() {
+        if let Some(mut job) = queue.pop() {
             work(&mut job);
             advance(job);
         }
     }
+}
+
+/// Forward `job` to the station serving its next phase.
+fn route(job: Job, chain: &Chain, cpu: &Sender<Msg>, bus: &Sender<Msg>, gpu: &Sender<Msg>) {
+    let tx = match chain.phase(job.next_phase).station() {
+        Station::Cpu => cpu,
+        Station::Bus => bus,
+        Station::Gpu => gpu,
+    };
+    let _ = tx.send(Msg::Work(job));
 }
 
 /// Run the admitted applications for `cfg.duration`, executing real PJRT
@@ -177,11 +162,22 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
     let (bus_tx, bus_rx) = channel::<Msg>();
     let (gpu_tx, gpu_rx) = channel::<Msg>();
 
-    // Segment durations by (app, phase).
-    let pre_ms: Vec<f64> = report.admitted.iter().map(|a| a.cpu_pre_ms).collect();
-    let post_ms: Vec<f64> = report.admitted.iter().map(|a| a.cpu_post_ms).collect();
-    let h2d_ms: Vec<f64> = report.admitted.iter().map(|a| a.mem_h2d_ms).collect();
-    let d2h_ms: Vec<f64> = report.admitted.iter().map(|a| a.mem_d2h_ms).collect();
+    // The canonical five-phase chain per app.  The GPU phase duration is
+    // a placeholder: the station runs the real kernel and measures it.
+    let chains: Vec<Chain> = report
+        .admitted
+        .iter()
+        .map(|a| {
+            Chain::five_phase(
+                ms_to_ticks(a.cpu_pre_ms),
+                ms_to_ticks(a.mem_h2d_ms),
+                0,
+                ms_to_ticks(a.mem_d2h_ms),
+                ms_to_ticks(a.cpu_post_ms),
+            )
+        })
+        .collect();
+    let chains = &chains;
 
     let t0 = Instant::now();
     let result = std::thread::scope(|scope| -> Result<()> {
@@ -208,10 +204,10 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
                     let a = &admitted[app];
                     let job = Job {
                         app,
-                        priority: a.priority,
+                        prio: (a.priority, release.duration_since(t0).as_nanos() as Tick),
                         release,
                         deadline: release + Duration::from_secs_f64(a.deadline_ms / 1e3),
-                        phase: Phase::Pre,
+                        next_phase: 0,
                         gpu_ms: 0.0,
                     };
                     released.fetch_add(1, Ordering::SeqCst);
@@ -228,24 +224,25 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
         // --- CPU station (pre/post + completion records) ---------------
         {
             let bus_tx = bus_tx.clone();
+            let gpu_tx = gpu_tx.clone();
+            let cpu_tx2 = cpu_tx.clone();
             let stats = Arc::clone(&stats);
             let completed = Arc::clone(&completed);
-            let pre = pre_ms.clone();
-            let post = post_ms.clone();
             scope.spawn(move || {
                 station(
                     cpu_rx,
-                    |job| match job.phase {
-                        Phase::Pre => spin_ms(pre[job.app]),
-                        Phase::Post => spin_ms(post[job.app]),
-                        _ => unreachable!("CPU station got {:?}", job.phase),
-                    },
-                    |mut job| match job.phase {
-                        Phase::Pre => {
-                            job.phase = Phase::H2d;
-                            let _ = bus_tx.send(Msg::Work(job));
+                    |job| {
+                        let chain = &chains[job.app];
+                        match chain.phase(job.next_phase) {
+                            Phase::Cpu(_) => spin_ms(ticks_to_ms(chain.duration(job.next_phase))),
+                            other => unreachable!("CPU station got {other:?}"),
                         }
-                        Phase::Post => {
+                    },
+                    |mut job| {
+                        job.next_phase += 1;
+                        let chain = &chains[job.app];
+                        if job.next_phase == chain.len() {
+                            // Chain exhausted (the Post segment ran).
                             let now = Instant::now();
                             let latency = now.duration_since(job.release).as_secs_f64() * 1e3;
                             let mut s = stats.lock().unwrap();
@@ -257,8 +254,9 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
                                 st.misses += 1;
                             }
                             completed.fetch_add(1, Ordering::SeqCst);
+                        } else {
+                            route(job, chain, &cpu_tx2, &bus_tx, &gpu_tx);
                         }
-                        _ => unreachable!(),
                     },
                 );
             });
@@ -268,30 +266,24 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
         {
             let gpu_tx = gpu_tx.clone();
             let cpu_tx = cpu_tx.clone();
-            let h2d = h2d_ms.clone();
-            let d2h = d2h_ms.clone();
+            let bus_tx2 = bus_tx.clone();
             scope.spawn(move || {
                 station(
                     bus_rx,
                     |job| {
-                        let ms = match job.phase {
-                            Phase::H2d => h2d[job.app],
-                            Phase::D2h => d2h[job.app],
-                            _ => unreachable!("bus station got {:?}", job.phase),
+                        let chain = &chains[job.app];
+                        let ms = match chain.phase(job.next_phase) {
+                            Phase::H2d(_) | Phase::D2h(_) => {
+                                ticks_to_ms(chain.duration(job.next_phase))
+                            }
+                            other => unreachable!("bus station got {other:?}"),
                         };
                         // DMA transfer: the bus is held, the CPU is not.
                         std::thread::sleep(Duration::from_secs_f64(ms / 1e3));
                     },
-                    |mut job| match job.phase {
-                        Phase::H2d => {
-                            job.phase = Phase::Gpu;
-                            let _ = gpu_tx.send(Msg::Work(job));
-                        }
-                        Phase::D2h => {
-                            job.phase = Phase::Post;
-                            let _ = cpu_tx.send(Msg::Work(job));
-                        }
-                        _ => unreachable!(),
+                    |mut job| {
+                        job.next_phase += 1;
+                        route(job, &chains[job.app], &cpu_tx, &bus_tx2, &gpu_tx);
                     },
                 );
             });
@@ -299,18 +291,39 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
         drop(gpu_tx);
 
         // --- GPU station: this thread owns the engine -------------------
+        // An execution error must still shut the stations down before
+        // this closure returns, or thread::scope would join forever on
+        // station threads blocked in recv().
+        let mut run_err: Option<anyhow::Error> = None;
         loop {
             match gpu_rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(Msg::Work(mut job)) => {
                     let adm = &report.admitted[job.app];
-                    let out = engine.execute_pinned(
-                        &adm.artifact,
-                        adm.vsm_range,
-                        &[&inputs[job.app]],
-                    )?;
-                    job.gpu_ms = out.elapsed.as_secs_f64() * 1e3;
-                    job.phase = Phase::D2h;
-                    let _ = bus_tx.send(Msg::Work(job));
+                    debug_assert!(matches!(
+                        chains[job.app].phase(job.next_phase),
+                        Phase::Gpu(_)
+                    ));
+                    match engine.execute_pinned(&adm.artifact, adm.vsm_range, &[&inputs[job.app]])
+                    {
+                        Ok(out) => {
+                            job.gpu_ms = out.elapsed.as_secs_f64() * 1e3;
+                            job.next_phase += 1;
+                            // Chain-driven routing (D2h under TwoCopy,
+                            // straight to Post under OneCopy).  `gpu_tx`
+                            // was dropped above, and Eq.-4 chains never
+                            // have consecutive GPU phases.
+                            let tx = match chains[job.app].phase(job.next_phase).station() {
+                                Station::Cpu => &cpu_tx,
+                                Station::Bus => &bus_tx,
+                                Station::Gpu => unreachable!("consecutive GPU phases"),
+                            };
+                            let _ = tx.send(Msg::Work(job));
+                        }
+                        Err(e) => {
+                            run_err = Some(e);
+                            break;
+                        }
+                    }
                 }
                 Ok(Msg::Shutdown) => break,
                 Err(RecvTimeoutError::Timeout) => {
@@ -328,10 +341,149 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
         // Shut the stations down (timer exits on its own).
         let _ = cpu_tx.send(Msg::Shutdown);
         let _ = bus_tx.send(Msg::Shutdown);
-        Ok(())
+        match run_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     });
     result?;
 
     let per_app = Arc::try_unwrap(stats).expect("threads joined").into_inner().unwrap();
     Ok(ServeReport { per_app, wall: t0.elapsed() })
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic virtual driver (parity with the simulator)
+// ---------------------------------------------------------------------------
+
+/// A periodic task as the virtual serving driver sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct VirtualTask {
+    pub period: Tick,
+    pub deadline: Tick,
+}
+
+// `Ord` is required by the heap's tuple element; the unique sequence
+// number in front of it always breaks ties first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum VEv {
+    Release(usize),
+    Start(usize),
+    Core(CoreEvent),
+}
+
+/// Deterministic single-threaded counterpart of [`serve`]: periodic
+/// releases (task `i` at `0, T_i, 2T_i, …` strictly before `horizon`,
+/// index = priority) drive chains from `chain_for` through the shared
+/// [`PlatformCore`] in virtual time, running every released job to
+/// completion.  Returns the platform trace, directly comparable to
+/// [`crate::sim::simulate_traced`]'s.
+pub fn serve_virtual(
+    tasks: &[VirtualTask],
+    horizon: Tick,
+    mut chain_for: impl FnMut(usize) -> Chain,
+) -> Vec<TraceEntry> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let n = tasks.len();
+    let mut jobs: Vec<WalkJob> = Vec::new();
+    let mut core = PlatformCore::with_trace();
+    let mut fifo = TaskFifo::new(n);
+    let mut heap: BinaryHeap<Reverse<(Tick, u64, VEv)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut push = |heap: &mut BinaryHeap<Reverse<(Tick, u64, VEv)>>, t: Tick, ev: VEv| {
+        seq += 1;
+        heap.push(Reverse((t, seq, ev)));
+    };
+
+    for task in 0..n {
+        push(&mut heap, 0, VEv::Release(task));
+    }
+
+    let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
+    while let Some(Reverse((now, _, ev))) = heap.pop() {
+        match ev {
+            VEv::Release(task) => {
+                if now >= horizon {
+                    continue;
+                }
+                let job_id = jobs.len();
+                jobs.push(WalkJob::new(
+                    task,
+                    task,
+                    now,
+                    now + tasks[task].deadline,
+                    chain_for(task),
+                ));
+                if let Some(start) = fifo.on_release(task, job_id) {
+                    push(&mut heap, now, VEv::Start(start));
+                }
+                push(&mut heap, now + tasks[task].period, VEv::Release(task));
+            }
+            VEv::Start(job) => {
+                if core.start_phase(&mut jobs, job, now, &mut timers) {
+                    if let Some(next) = fifo.on_job_done(jobs[job].task) {
+                        push(&mut heap, now, VEv::Start(next));
+                    }
+                }
+            }
+            VEv::Core(cev) => {
+                let station = cev.station();
+                if let Some(j) = core.on_event(&mut jobs, cev, now) {
+                    if core.start_phase(&mut jobs, j, now, &mut timers) {
+                        if let Some(next) = fifo.on_job_done(jobs[j].task) {
+                            push(&mut heap, now, VEv::Start(next));
+                        }
+                    }
+                    core.redispatch(station, &mut jobs, now, &mut timers);
+                }
+            }
+        }
+        for (t, cev) in timers.drain(..) {
+            push(&mut heap, t, VEv::Core(cev));
+        }
+    }
+
+    core.take_trace()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::TraceEvent;
+
+    #[test]
+    fn virtual_driver_walks_five_phases_in_order() {
+        let tasks = [VirtualTask { period: 1000, deadline: 1000 }];
+        let trace =
+            serve_virtual(&tasks, 1, |_| Chain::five_phase(10, 20, 30, 40, 50));
+        let events: Vec<TraceEvent> = trace.iter().map(|e| e.event).collect();
+        assert_eq!(
+            events,
+            vec![
+                TraceEvent::PhaseDone(Phase::Cpu(0)),
+                TraceEvent::PhaseDone(Phase::H2d(0)),
+                TraceEvent::PhaseDone(Phase::Gpu(0)),
+                TraceEvent::PhaseDone(Phase::D2h(0)),
+                TraceEvent::PhaseDone(Phase::Cpu(1)),
+                TraceEvent::JobDone,
+            ]
+        );
+        assert_eq!(trace.last().unwrap().t, 150);
+    }
+
+    #[test]
+    fn virtual_driver_serialises_same_task_jobs() {
+        // Period shorter than the chain: second job must wait for the
+        // first (job-level precedence), not overlap it.
+        let tasks = [VirtualTask { period: 50, deadline: 400 }];
+        let trace = serve_virtual(&tasks, 100, |_| Chain::five_phase(20, 20, 20, 20, 20));
+        let done: Vec<Tick> = trace
+            .iter()
+            .filter(|e| e.event == TraceEvent::JobDone)
+            .map(|e| e.t)
+            .collect();
+        assert_eq!(done, vec![100, 200]);
+    }
 }

@@ -1,5 +1,5 @@
 //! Evaluation harness: regenerates every table/figure of §6
-//! (per-experiment index in DESIGN.md §5).
+//! (per-experiment index in DESIGN.md §6).
 //!
 //! * [`sweep`] — acceptance-ratio curves (Figs. 8–11) for the three
 //!   approaches, multithreaded over task sets.

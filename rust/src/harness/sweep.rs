@@ -59,7 +59,9 @@ pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Vec<AcceptanceCurve> {
     let batches: Vec<Vec<TaskSet>> = spec
         .utils
         .iter()
-        .map(|&u| (0..spec.sets_per_point).map(|_| generate_taskset(&mut rng, &spec.cfg, u)).collect())
+        .map(|&u| {
+            (0..spec.sets_per_point).map(|_| generate_taskset(&mut rng, &spec.cfg, u)).collect()
+        })
         .collect();
 
     // Flatten into work items: (util index, set).
@@ -112,7 +114,9 @@ pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Vec<AcceptanceCurve> {
         .map(|(ai, &approach)| AcceptanceCurve {
             approach,
             ratios: (0..spec.utils.len())
-                .map(|ui| accepts[ai][ui].load(Ordering::Relaxed) as f64 / spec.sets_per_point as f64)
+                .map(|ui| {
+                    accepts[ai][ui].load(Ordering::Relaxed) as f64 / spec.sets_per_point as f64
+                })
                 .collect(),
         })
         .collect()

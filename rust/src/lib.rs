@@ -15,15 +15,22 @@
 //!   (Lemmas 5.2–5.5), the end-to-end bound (Theorem 5.6), Algorithm 2's
 //!   grid-searched federated allocation, and the two baselines
 //!   (self-suspension, STGM busy-waiting).
+//! * [`sched`] — the canonical platform core (DESIGN.md §3): the
+//!   `Pre → H2d → Gpu → D2h → Post` phase chain, the preemptive-CPU /
+//!   non-preemptive-bus / federated-GPU station machines, and the
+//!   chain-walker every executor drives.  The simulator and the serving
+//!   coordinator are both *drivers* over this one model.
 //! * [`sim`] — a discrete-event simulator of the CPU + non-preemptive bus +
 //!   virtual-SM GPU platform; stands in for the paper's GTX 1080 Ti
 //!   testbed (see DESIGN.md §2 for the substitution argument).
 //! * [`runtime`] — the PJRT execution layer: loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and runs them on the
-//!   CPU PJRT client.  Python is never on the request path.
+//!   CPU PJRT client (behind the `pjrt` cargo feature).  Python is never
+//!   on the request path.
 //! * [`coordinator`] — the serving framework: admission control via the
-//!   analysis, federated virtual-SM allocation, fixed-priority CPU/bus
-//!   queues, per-task release timers and metrics.
+//!   analysis (batch and incremental — DESIGN.md §5), federated
+//!   virtual-SM allocation, fixed-priority CPU/bus queues, per-task
+//!   release timers and metrics.
 //! * [`harness`] — regeneration of every evaluation figure (Figs 4–14).
 //! * [`util`] — self-contained substrates (JSON, RNG, CLI, bench,
 //!   property-test helpers) — the offline build environment has no
@@ -35,5 +42,6 @@ pub mod gen;
 pub mod harness;
 pub mod model;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod util;

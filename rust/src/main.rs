@@ -9,7 +9,7 @@
 //! ```
 //!
 //! The heavier experiment drivers also exist as runnable examples (see
-//! `examples/`), which is where EXPERIMENTS.md records the canonical runs.
+//! `examples/`); DESIGN.md §6 records the canonical ablation runs.
 
 use std::time::Duration;
 
@@ -24,32 +24,48 @@ use rtgpu::harness::throughput::throughput_gain;
 use rtgpu::harness::validate::{run_validation, TimeModel};
 use rtgpu::model::{KernelClass, Platform};
 use rtgpu::runtime::{artifact_dir, Engine};
-use rtgpu::util::cli::Args;
+use rtgpu::util::cli::{exit_usage, Args, CliError};
 use rtgpu::util::rng::Pcg;
 
-fn main() -> Result<()> {
+const USAGE: &str = "usage: rtgpu <serve|admit|sweep|validate|throughput> [--flags]\n\
+  serve      [--seconds S] [--sms GN] [--full-artifacts]   serve real kernels\n\
+  admit      [--util U] [--tasks N] [--subtasks M]\n\
+             [--sms GN] [--seed S]                         analyze a random set\n\
+  sweep      [--figure 8|9|10|11] [--sets K] [--seed S]    acceptance curves\n\
+  validate   [--model wcet|avg] [--sets K] [--seed S]\n\
+             [--sms A,B,C]                                 Figs. 12/13\n\
+  throughput [--sets K] [--seed S]                         Fig. 14 (Eq. 9/10)";
+
+fn main() {
     let args = Args::from_env();
-    match args.subcommand.as_deref() {
+    let result = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("admit") => cmd_admit(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("validate") => cmd_validate(&args),
         Some("throughput") => cmd_throughput(&args),
         _ => {
-            eprintln!(
-                "usage: rtgpu <serve|admit|sweep|validate|throughput> [--flags]\n\
-                 see `rust/src/main.rs` header for the flag reference"
-            );
-            Ok(())
+            eprintln!("{USAGE}");
+            return;
+        }
+    };
+    if let Err(e) = result {
+        // Bad flags print usage and exit 2; runtime failures exit 1.
+        match e.downcast_ref::<CliError>() {
+            Some(cli) => exit_usage(USAGE, cli),
+            None => {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
         }
     }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let seconds = args.f64_or("seconds", 3.0);
-    let gn = args.usize_or("sms", 4);
+    let seconds = args.f64_or("seconds", 3.0)?;
+    let gn = args.usize_or("sms", 4)?;
     let small = !args.flag("full-artifacts");
-    args.finish();
+    args.finish()?;
 
     let engine = Engine::load_dir_filtered(&artifact_dir(), |m| {
         if small { m.name.ends_with("_small") } else { !m.name.ends_with("_small") }
@@ -86,13 +102,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_admit(args: &Args) -> Result<()> {
-    let util = args.f64_or("util", 1.0);
+    let util = args.f64_or("util", 1.0)?;
     let cfg = GenConfig::default()
-        .with_tasks(args.usize_or("tasks", 5))
-        .with_subtasks(args.usize_or("subtasks", 5));
-    let gn = args.usize_or("sms", 10);
-    let seed = args.u64_or("seed", 42);
-    args.finish();
+        .with_tasks(args.usize_or("tasks", 5)?)
+        .with_subtasks(args.usize_or("subtasks", 5)?);
+    let gn = args.usize_or("sms", 10)?;
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
 
     let ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
     println!("task set: {} tasks, total utilization {:.3}", ts.len(), ts.total_utilization());
@@ -109,10 +125,10 @@ fn cmd_admit(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let figure = args.usize_or("figure", 8);
-    let sets = args.usize_or("sets", 100);
-    let seed = args.u64_or("seed", 42);
-    args.finish();
+    let figure = args.usize_or("figure", 8)?;
+    let sets = args.usize_or("sets", 100)?;
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
 
     let variants: Vec<(String, GenConfig)> = match figure {
         8 => [(2.0, 1.0), (1.0, 2.0), (1.0, 8.0)]
@@ -157,10 +173,10 @@ fn cmd_validate(args: &Args) -> Result<()> {
         "avg" => TimeModel::Average,
         other => anyhow::bail!("unknown model {other}"),
     };
-    let sets = args.usize_or("sets", 50);
-    let seed = args.u64_or("seed", 42);
-    let sms = args.list_or("sms", &[5, 8, 10]);
-    args.finish();
+    let sets = args.usize_or("sets", 50)?;
+    let seed = args.u64_or("seed", 42)?;
+    let sms = args.list_or("sms", &[5, 8, 10])?;
+    args.finish()?;
 
     let utils: Vec<f64> = (1..=12).map(|i| i as f64 * 0.2).collect();
     for gn in sms {
@@ -179,9 +195,9 @@ fn cmd_validate(args: &Args) -> Result<()> {
 }
 
 fn cmd_throughput(args: &Args) -> Result<()> {
-    let sets = args.usize_or("sets", 50);
-    let seed = args.u64_or("seed", 42);
-    args.finish();
+    let sets = args.usize_or("sets", 50)?;
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
 
     let utils: Vec<f64> = (1..=10).map(|i| i as f64 * 0.15).collect();
     for (mix, classes) in rtgpu::harness::throughput::benchmark_mixes() {

@@ -5,14 +5,12 @@
 //! (PJRT handles are not `Sync`); kernel-level parallelism lives *inside*
 //! an artifact (the virtual-SM grid), matching the paper's model where the
 //! GPU is a single device whose SMs are partitioned among tasks.
-
-use std::collections::HashMap;
-use std::path::Path;
-use std::time::Instant;
-
-use anyhow::{bail, Context, Result};
-
-use super::manifest::{ArtifactMeta, DType, Manifest};
+//!
+//! The XLA/PJRT bindings are gated behind the `pjrt` cargo feature:
+//! without it the [`Engine`] API still exists (so the coordinator, the
+//! launcher and the examples compile everywhere) but `load_dir*` returns
+//! a descriptive error — tests that need real artifacts skip themselves
+//! when loading fails (see `tests/runtime_artifacts.rs`).
 
 /// Result of one artifact execution.
 #[derive(Debug, Clone)]
@@ -23,170 +21,265 @@ pub struct ExecOutput {
     pub elapsed: std::time::Duration,
 }
 
-struct LoadedArtifact {
-    meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Engine;
 
-/// PJRT client + compiled artifacts.
-pub struct Engine {
-    client: xla::PjRtClient,
-    artifacts: HashMap<String, LoadedArtifact>,
-    manifest: Manifest,
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
 
-impl Engine {
-    /// Load and compile every artifact in `dir` (see `Manifest::load`).
-    pub fn load_dir(dir: &Path) -> Result<Engine> {
-        Self::load_dir_filtered(dir, |_| true)
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::time::Instant;
+
+    use anyhow::{bail, Context, Result};
+
+    use crate::runtime::manifest::{ArtifactMeta, DType, Manifest};
+
+    use super::ExecOutput;
+
+    struct LoadedArtifact {
+        meta: ArtifactMeta,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Load only artifacts accepted by `pred` — tests use this to compile
-    /// just the small variants.
-    pub fn load_dir_filtered(dir: &Path, pred: impl Fn(&ArtifactMeta) -> bool) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut artifacts = HashMap::new();
-        for meta in &manifest.artifacts {
-            if !pred(meta) {
-                continue;
-            }
-            let path = dir.join(&meta.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact {:?}", meta.name))?;
-            artifacts.insert(meta.name.clone(), LoadedArtifact { meta: meta.clone(), exe });
+    /// PJRT client + compiled artifacts.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        artifacts: HashMap<String, LoadedArtifact>,
+        manifest: Manifest,
+    }
+
+    impl Engine {
+        /// Load and compile every artifact in `dir` (see `Manifest::load`).
+        pub fn load_dir(dir: &Path) -> Result<Engine> {
+            Self::load_dir_filtered(dir, |_| true)
         }
-        Ok(Engine { client, artifacts, manifest })
-    }
 
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Names of the artifacts actually compiled into this engine.
-    pub fn loaded_names(&self) -> Vec<&str> {
-        let mut names: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
-        names.sort_unstable();
-        names
-    }
-
-    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
-        Ok(&self.loaded(name)?.meta)
-    }
-
-    fn loaded(&self, name: &str) -> Result<&LoadedArtifact> {
-        self.artifacts.get(name).with_context(|| {
-            format!("artifact {name:?} not loaded (loaded: {:?})", self.loaded_names())
-        })
-    }
-
-    /// Execute a persistent-thread artifact pinned to the inclusive
-    /// virtual-SM range `[sm_start, sm_end]`.
-    ///
-    /// `inputs` supplies the f32 tensors in manifest order (the `sm`
-    /// scalar input is synthesized from the range).  Returns the flattened
-    /// f32 output.
-    pub fn execute_pinned(
-        &self,
-        name: &str,
-        sm_range: (i32, i32),
-        inputs: &[&[f32]],
-    ) -> Result<ExecOutput> {
-        let art = self.loaded(name)?;
-        if !art.meta.takes_sm_range() {
-            bail!("artifact {name:?} does not take an sm range");
-        }
-        let (lo, hi) = sm_range;
-        let vsm = art.meta.num_vsm as i32;
-        if lo < 0 || hi >= vsm || lo > hi {
-            bail!("invalid sm range [{lo}, {hi}] for {name:?} (num_vsm = {vsm})");
-        }
-        let sm = xla::Literal::vec1(&[lo, hi]);
-        self.run(art, Some(sm), inputs)
-    }
-
-    /// Execute an artifact with no sm range (e.g. the smoke artifact).
-    pub fn execute_plain(&self, name: &str, inputs: &[&[f32]]) -> Result<ExecOutput> {
-        let art = self.loaded(name)?;
-        if art.meta.takes_sm_range() {
-            bail!("artifact {name:?} requires an sm range; use execute_pinned");
-        }
-        self.run(art, None, inputs)
-    }
-
-    fn run(
-        &self,
-        art: &LoadedArtifact,
-        sm: Option<xla::Literal>,
-        inputs: &[&[f32]],
-    ) -> Result<ExecOutput> {
-        let meta = &art.meta;
-        let mut literals: Vec<xla::Literal> = Vec::with_capacity(meta.inputs.len());
-        let mut fidx = 0usize;
-        for spec in &meta.inputs {
-            match spec.dtype {
-                DType::I32 => {
-                    let lit = sm
-                        .as_ref()
-                        .with_context(|| format!("artifact {:?}: missing sm input", meta.name))?;
-                    // Literal isn't Clone in the xla crate; rebuild from the range.
-                    let vals = lit.to_vec::<i32>()?;
-                    literals.push(xla::Literal::vec1(&vals));
+        /// Load only artifacts accepted by `pred` — tests use this to compile
+        /// just the small variants.
+        pub fn load_dir_filtered(
+            dir: &Path,
+            pred: impl Fn(&ArtifactMeta) -> bool,
+        ) -> Result<Engine> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let mut artifacts = HashMap::new();
+            for meta in &manifest.artifacts {
+                if !pred(meta) {
+                    continue;
                 }
-                DType::F32 => {
-                    let data = inputs.get(fidx).with_context(|| {
-                        format!(
-                            "artifact {:?}: expected {} f32 inputs, got {}",
-                            meta.name,
-                            meta.inputs.iter().filter(|s| s.dtype == DType::F32).count(),
-                            inputs.len()
-                        )
-                    })?;
-                    fidx += 1;
-                    if data.len() != spec.element_count() {
-                        bail!(
-                            "artifact {:?} input {:?}: expected {} elements for shape {:?}, got {}",
-                            meta.name,
-                            spec.name,
-                            spec.element_count(),
-                            spec.shape,
-                            data.len()
-                        );
+                let path = dir.join(&meta.file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling artifact {:?}", meta.name))?;
+                artifacts.insert(meta.name.clone(), LoadedArtifact { meta: meta.clone(), exe });
+            }
+            Ok(Engine { client, artifacts, manifest })
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Names of the artifacts actually compiled into this engine.
+        pub fn loaded_names(&self) -> Vec<&str> {
+            let mut names: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+            names.sort_unstable();
+            names
+        }
+
+        pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+            Ok(&self.loaded(name)?.meta)
+        }
+
+        fn loaded(&self, name: &str) -> Result<&LoadedArtifact> {
+            self.artifacts.get(name).with_context(|| {
+                format!("artifact {name:?} not loaded (loaded: {:?})", self.loaded_names())
+            })
+        }
+
+        /// Execute a persistent-thread artifact pinned to the inclusive
+        /// virtual-SM range `[sm_start, sm_end]`.
+        ///
+        /// `inputs` supplies the f32 tensors in manifest order (the `sm`
+        /// scalar input is synthesized from the range).  Returns the flattened
+        /// f32 output.
+        pub fn execute_pinned(
+            &self,
+            name: &str,
+            sm_range: (i32, i32),
+            inputs: &[&[f32]],
+        ) -> Result<ExecOutput> {
+            let art = self.loaded(name)?;
+            if !art.meta.takes_sm_range() {
+                bail!("artifact {name:?} does not take an sm range");
+            }
+            let (lo, hi) = sm_range;
+            let vsm = art.meta.num_vsm as i32;
+            if lo < 0 || hi >= vsm || lo > hi {
+                bail!("invalid sm range [{lo}, {hi}] for {name:?} (num_vsm = {vsm})");
+            }
+            let sm = xla::Literal::vec1(&[lo, hi]);
+            self.run(art, Some(sm), inputs)
+        }
+
+        /// Execute an artifact with no sm range (e.g. the smoke artifact).
+        pub fn execute_plain(&self, name: &str, inputs: &[&[f32]]) -> Result<ExecOutput> {
+            let art = self.loaded(name)?;
+            if art.meta.takes_sm_range() {
+                bail!("artifact {name:?} requires an sm range; use execute_pinned");
+            }
+            self.run(art, None, inputs)
+        }
+
+        fn run(
+            &self,
+            art: &LoadedArtifact,
+            sm: Option<xla::Literal>,
+            inputs: &[&[f32]],
+        ) -> Result<ExecOutput> {
+            let meta = &art.meta;
+            let mut literals: Vec<xla::Literal> = Vec::with_capacity(meta.inputs.len());
+            let mut fidx = 0usize;
+            for spec in &meta.inputs {
+                match spec.dtype {
+                    DType::I32 => {
+                        let lit = sm.as_ref().with_context(|| {
+                            format!("artifact {:?}: missing sm input", meta.name)
+                        })?;
+                        // Literal isn't Clone in the xla crate; rebuild from the range.
+                        let vals = lit.to_vec::<i32>()?;
+                        literals.push(xla::Literal::vec1(&vals));
                     }
-                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-                    let lit = xla::Literal::vec1(data);
-                    let lit =
-                        if dims.len() == 1 { lit } else { lit.reshape(&dims).context("reshape")? };
-                    literals.push(lit);
+                    DType::F32 => {
+                        let data = inputs.get(fidx).with_context(|| {
+                            format!(
+                                "artifact {:?}: expected {} f32 inputs, got {}",
+                                meta.name,
+                                meta.inputs.iter().filter(|s| s.dtype == DType::F32).count(),
+                                inputs.len()
+                            )
+                        })?;
+                        fidx += 1;
+                        if data.len() != spec.element_count() {
+                            bail!(
+                                "artifact {:?} input {:?}: expected {} elements for shape \
+                                 {:?}, got {}",
+                                meta.name,
+                                spec.name,
+                                spec.element_count(),
+                                spec.shape,
+                                data.len()
+                            );
+                        }
+                        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                        let lit = xla::Literal::vec1(data);
+                        let lit = if dims.len() == 1 {
+                            lit
+                        } else {
+                            lit.reshape(&dims).context("reshape")?
+                        };
+                        literals.push(lit);
+                    }
                 }
             }
+            if fidx != inputs.len() {
+                bail!(
+                    "artifact {:?}: {} extra f32 inputs supplied",
+                    meta.name,
+                    inputs.len() - fidx
+                );
+            }
+            let t0 = Instant::now();
+            let result = art.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            let elapsed = t0.elapsed();
+            // aot.py lowers with return_tuple=True; all artifacts return 1-tuples.
+            let out = result.to_tuple1().context("unwrapping output tuple")?;
+            let values = out.to_vec::<f32>().context("reading f32 output")?;
+            let expect: usize = meta.outputs[0].element_count();
+            if values.len() != expect {
+                bail!(
+                    "artifact {:?}: output has {} elements, manifest says {}",
+                    meta.name,
+                    values.len(),
+                    expect
+                );
+            }
+            Ok(ExecOutput { values, elapsed })
         }
-        if fidx != inputs.len() {
-            bail!("artifact {:?}: {} extra f32 inputs supplied", meta.name, inputs.len() - fidx);
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+    use super::ExecOutput;
+
+    /// Built without the `pjrt` feature: the full [`Engine`] API exists
+    /// so every layer compiles, but artifacts cannot be loaded — callers
+    /// get a descriptive error from `load_dir*` and tests skip.
+    pub struct Engine {
+        // Never constructed without `pjrt`; kept so accessors type-check.
+        manifest: Manifest,
+    }
+
+    impl Engine {
+        pub fn load_dir(dir: &Path) -> Result<Engine> {
+            Self::load_dir_filtered(dir, |_| true)
         }
-        let t0 = Instant::now();
-        let result = art.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let elapsed = t0.elapsed();
-        // aot.py lowers with return_tuple=True; all artifacts return 1-tuples.
-        let out = result.to_tuple1().context("unwrapping output tuple")?;
-        let values = out.to_vec::<f32>().context("reading f32 output")?;
-        let expect: usize = meta.outputs[0].element_count();
-        if values.len() != expect {
+
+        pub fn load_dir_filtered(
+            dir: &Path,
+            pred: impl Fn(&ArtifactMeta) -> bool,
+        ) -> Result<Engine> {
+            let _ = (dir, &pred);
             bail!(
-                "artifact {:?}: output has {} elements, manifest says {}",
-                meta.name,
-                values.len(),
-                expect
-            );
+                "rtgpu was built without the `pjrt` feature; \
+                 rebuild with `cargo build --features pjrt` to load PJRT artifacts"
+            )
         }
-        Ok(ExecOutput { values, elapsed })
+
+        pub fn platform_name(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn loaded_names(&self) -> Vec<&str> {
+            Vec::new()
+        }
+
+        pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+            bail!("artifact {name:?}: rtgpu was built without the `pjrt` feature")
+        }
+
+        pub fn execute_pinned(
+            &self,
+            name: &str,
+            _sm_range: (i32, i32),
+            _inputs: &[&[f32]],
+        ) -> Result<ExecOutput> {
+            bail!("cannot execute {name:?}: rtgpu was built without the `pjrt` feature")
+        }
+
+        pub fn execute_plain(&self, name: &str, _inputs: &[&[f32]]) -> Result<ExecOutput> {
+            bail!("cannot execute {name:?}: rtgpu was built without the `pjrt` feature")
+        }
     }
 }

@@ -86,7 +86,7 @@ impl ArtifactMeta {
     pub fn takes_sm_range(&self) -> bool {
         self.inputs
             .first()
-            .map_or(false, |t| t.name == "sm" && t.dtype == DType::I32)
+            .is_some_and(|t| t.name == "sm" && t.dtype == DType::I32)
     }
 }
 

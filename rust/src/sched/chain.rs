@@ -1,0 +1,206 @@
+//! The phase chain a job walks across the platform stations.
+//!
+//! A job of the Eq. (4) task `CL⁰ ML⁰ G⁰ ML¹ CL¹ …` is a [`Chain`] of
+//! phases with concrete durations.  For the common serving shape
+//! (`m = 2`) the chain reads `Pre → H2d → Gpu → D2h → Post`; the general
+//! builder handles any `m` and both memory models.  Host-to-device and
+//! device-to-host copies are distinct phases (they carry direction for
+//! metrics and tracing) but contend on the same non-preemptive bus.
+
+use crate::model::{Bounds, GpuSegment, RtTask};
+
+use super::Tick;
+
+/// The three contended resources of the platform model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Station {
+    /// Preemptive fixed-priority uniprocessor (§3.1).
+    Cpu,
+    /// Non-preemptive priority-ordered copy bus (§3.2).
+    Bus,
+    /// Federated virtual-SM GPU: dedicated SMs, never queues (§5.2).
+    Gpu,
+}
+
+/// One phase of a job's chain.  The index is the subtask position: for
+/// `m = 2` chains, `Cpu(0)` is the *Pre* segment and `Cpu(1)` the *Post*
+/// segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// CPU segment `CL^j`.
+    Cpu(usize),
+    /// Host→device copy preceding GPU segment `j`.
+    H2d(usize),
+    /// GPU kernel segment `G^j`.
+    Gpu(usize),
+    /// Device→host copy following GPU segment `j` (two-copy model only).
+    D2h(usize),
+}
+
+impl Phase {
+    /// Which station serves this phase.
+    pub fn station(self) -> Station {
+        match self {
+            Phase::Cpu(_) => Station::Cpu,
+            Phase::H2d(_) | Phase::D2h(_) => Station::Bus,
+            Phase::Gpu(_) => Station::Gpu,
+        }
+    }
+
+    /// Short label for traces and metrics.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Cpu(_) => "cpu",
+            Phase::H2d(_) => "h2d",
+            Phase::Gpu(_) => "gpu",
+            Phase::D2h(_) => "d2h",
+        }
+    }
+}
+
+/// A segment reference handed to the duration oracle while building a
+/// chain — the simulator draws stochastic times, the coordinator plugs
+/// in profiled wall-clock times.
+#[derive(Debug, Clone, Copy)]
+pub enum Segment<'a> {
+    Cpu(&'a Bounds),
+    Mem(&'a Bounds),
+    Gpu(&'a GpuSegment),
+}
+
+/// A job's phase chain with per-phase durations (ticks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Chain {
+    steps: Vec<(Phase, Tick)>,
+}
+
+impl Chain {
+    /// Build from explicit steps (tests and custom shapes).
+    pub fn new(steps: Vec<(Phase, Tick)>) -> Chain {
+        Chain { steps }
+    }
+
+    /// The canonical five-phase serving chain (`m = 2`, two-copy model).
+    pub fn five_phase(pre: Tick, h2d: Tick, gpu: Tick, d2h: Tick, post: Tick) -> Chain {
+        Chain {
+            steps: vec![
+                (Phase::Cpu(0), pre),
+                (Phase::H2d(0), h2d),
+                (Phase::Gpu(0), gpu),
+                (Phase::D2h(0), d2h),
+                (Phase::Cpu(1), post),
+            ],
+        }
+    }
+
+    /// Build a job chain for `task`, querying `dur` for every segment in
+    /// chain order (`CL^j`, then `ML`/`G`/`ML` between consecutive CPU
+    /// segments).  The call order is part of the contract: stochastic
+    /// duration oracles rely on it for reproducibility.
+    pub fn from_task(task: &RtTask, mut dur: impl FnMut(Segment<'_>) -> Tick) -> Chain {
+        let m = task.m();
+        let mut steps = Vec::with_capacity(m + task.mem_count() + task.gpu_count());
+        for j in 0..m {
+            steps.push((Phase::Cpu(j), dur(Segment::Cpu(&task.cpu[j]))));
+            if j + 1 < m {
+                steps.push((
+                    Phase::H2d(j),
+                    dur(Segment::Mem(&task.mem[task.mem_before_gpu(j)])),
+                ));
+                steps.push((Phase::Gpu(j), dur(Segment::Gpu(&task.gpu[j]))));
+                if let Some(after) = task.mem_after_gpu(j) {
+                    steps.push((Phase::D2h(j), dur(Segment::Mem(&task.mem[after]))));
+                }
+            }
+        }
+        Chain { steps }
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn phase(&self, i: usize) -> Phase {
+        self.steps[i].0
+    }
+
+    pub fn duration(&self, i: usize) -> Tick {
+        self.steps[i].1
+    }
+
+    /// Sum of all phase durations (isolated end-to-end time).
+    pub fn total(&self) -> Tick {
+        self.steps.iter().map(|&(_, d)| d).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::{cpu_only_task, simple_task};
+    use crate::model::MemoryModel;
+
+    #[test]
+    fn five_phase_shape() {
+        let c = Chain::five_phase(1, 2, 3, 4, 5);
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.phase(0), Phase::Cpu(0));
+        assert_eq!(c.phase(1), Phase::H2d(0));
+        assert_eq!(c.phase(2), Phase::Gpu(0));
+        assert_eq!(c.phase(3), Phase::D2h(0));
+        assert_eq!(c.phase(4), Phase::Cpu(1));
+        assert_eq!(c.total(), 15);
+    }
+
+    #[test]
+    fn stations_route_copies_to_the_bus() {
+        assert_eq!(Phase::H2d(0).station(), Station::Bus);
+        assert_eq!(Phase::D2h(3).station(), Station::Bus);
+        assert_eq!(Phase::Cpu(1).station(), Station::Cpu);
+        assert_eq!(Phase::Gpu(0).station(), Station::Gpu);
+    }
+
+    #[test]
+    fn from_task_matches_eq4_order() {
+        // simple_task: CL0 ML0 G0 ML1 CL1 — durations = call index.
+        let t = simple_task(0);
+        let mut i = 0u64;
+        let c = Chain::from_task(&t, |_| {
+            i += 1;
+            i
+        });
+        assert_eq!(c.len(), 5);
+        let phases: Vec<Phase> = (0..c.len()).map(|k| c.phase(k)).collect();
+        assert_eq!(
+            phases,
+            vec![Phase::Cpu(0), Phase::H2d(0), Phase::Gpu(0), Phase::D2h(0), Phase::Cpu(1)]
+        );
+        // Oracle called in chain order.
+        let durs: Vec<Tick> = (0..c.len()).map(|k| c.duration(k)).collect();
+        assert_eq!(durs, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn from_task_one_copy_model_skips_d2h() {
+        let mut t = simple_task(0);
+        t.memory_model = MemoryModel::OneCopy;
+        t.mem = vec![crate::model::Bounds::new(1.0, 2.0)];
+        assert_eq!(t.validate(), Ok(()));
+        let c = Chain::from_task(&t, |_| 1);
+        let phases: Vec<Phase> = (0..c.len()).map(|k| c.phase(k)).collect();
+        assert_eq!(phases, vec![Phase::Cpu(0), Phase::H2d(0), Phase::Gpu(0), Phase::Cpu(1)]);
+    }
+
+    #[test]
+    fn cpu_only_task_is_a_single_phase() {
+        let t = cpu_only_task(0, 2.0, 10.0);
+        let c = Chain::from_task(&t, |_| 7);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.phase(0), Phase::Cpu(0));
+        assert_eq!(c.total(), 7);
+    }
+}

@@ -1,0 +1,73 @@
+//! The canonical platform model shared by every executor (DESIGN.md §3).
+//!
+//! The paper's framework (Fig. 1) has exactly one platform: a preemptive
+//! fixed-priority CPU (§3.1), a non-preemptive priority-ordered memory
+//! bus (§3.2), and a federated virtual-SM GPU whose SMs are dedicated per
+//! task (§5.2).  Historically the discrete-event simulator and the
+//! serving coordinator each reimplemented that model and drifted; this
+//! module owns the single source of truth:
+//!
+//! * [`chain`] — the five-kind phase alphabet (`Pre → H2d → Gpu → D2h →
+//!   Post`, generalised to `m` subtasks) and the [`Chain`] a job walks.
+//! * [`platform`] — station state machines ([`PreemptiveCpu`],
+//!   [`NonPreemptiveBus`]) composed into the [`PlatformCore`]
+//!   chain-walker that advances jobs across stations in virtual time,
+//!   plus the [`TaskFifo`] job-level precedence policy.
+//! * [`queue`] — the priority [`ReadyQueue`] used by the wall-clock
+//!   serving stations.
+//!
+//! Drivers supply the notion of time: `sim::engine` replays the core
+//! under virtual nanosecond ticks, `coordinator::serve` under wall-clock
+//! threads.  Both consume the same dispatch order and phase sequencing,
+//! so analysis-vs-sim-vs-serve cannot disagree on the model.
+
+pub mod chain;
+pub mod platform;
+pub mod queue;
+
+pub use chain::{Chain, Phase, Segment, Station};
+pub use platform::{
+    CoreEvent, JobId, NonPreemptiveBus, PlatformCore, PreemptiveCpu, TaskFifo, TraceEntry,
+    TraceEvent, WalkJob,
+};
+pub use queue::ReadyQueue;
+
+/// Integer platform time: nanoseconds.
+pub type Tick = u64;
+
+/// Job priority key: `(priority level, release tick)` — lower is served
+/// first.  Level 0 is the highest priority (deadline-monotonic index in
+/// a priority-ordered task set); ties between jobs of the same level are
+/// broken by release time (job-level FIFO).
+pub type Prio = (usize, Tick);
+
+/// Convert analysis milliseconds to platform ticks.
+pub fn ms_to_ticks(ms: f64) -> Tick {
+    debug_assert!(ms >= 0.0 && ms.is_finite());
+    (ms * 1e6).round() as Tick
+}
+
+/// Convert ticks back to milliseconds.
+pub fn ticks_to_ms(t: Tick) -> f64 {
+    t as f64 / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_conversion_roundtrips() {
+        for &ms in &[0.0, 0.001, 1.0, 17.25, 1000.0] {
+            assert!((ticks_to_ms(ms_to_ticks(ms)) - ms).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn prio_orders_by_level_then_release() {
+        let a: Prio = (0, 100);
+        let b: Prio = (1, 0);
+        let c: Prio = (1, 50);
+        assert!(a < b && b < c);
+    }
+}

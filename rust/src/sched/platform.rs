@@ -1,0 +1,463 @@
+//! Station state machines and the chain-walker (`PlatformCore`).
+//!
+//! The core owns *scheduling state* (who is ready, who holds each
+//! resource) and *phase sequencing* (what happens when a phase ends);
+//! the driver owns *time* (an event heap of virtual ticks, or wall-clock
+//! threads).  A driver interacts through three calls:
+//!
+//! 1. [`PlatformCore::start_phase`] when a job is released or its
+//!    previous phase completed — the job enters its next station, and
+//!    any resulting completion timers are appended for the driver to
+//!    schedule;
+//! 2. [`PlatformCore::on_event`] when a scheduled timer fires — stale
+//!    timers (invalidated by preemption) are dropped, valid ones return
+//!    the job whose phase just completed;
+//! 3. [`PlatformCore::redispatch`] afterwards, so the freed station can
+//!    start its next waiting job.
+//!
+//! Tokens make preemption safe under an out-of-order driver: every
+//! (re)dispatch invalidates the station's previous timer.
+
+use std::collections::VecDeque;
+
+use super::chain::{Chain, Phase, Station};
+use super::{Prio, Tick};
+
+/// Index into the driver's job arena.
+pub type JobId = usize;
+
+/// A job in flight: its chain plus walker bookkeeping.
+#[derive(Debug, Clone)]
+pub struct WalkJob {
+    /// Task index in priority order (0 = highest priority).
+    pub task: usize,
+    pub prio: Prio,
+    pub release: Tick,
+    pub deadline: Tick,
+    pub chain: Chain,
+    /// Next phase to execute (== `chain.len()` when the chain is done).
+    pub next_phase: usize,
+    /// Remaining ticks of the current CPU phase (preemption bookkeeping).
+    pub cpu_remaining: Tick,
+    pub done: Option<Tick>,
+}
+
+impl WalkJob {
+    pub fn new(task: usize, priority: usize, release: Tick, deadline: Tick, chain: Chain) -> Self {
+        WalkJob {
+            task,
+            prio: (priority, release),
+            release,
+            deadline,
+            chain,
+            next_phase: 0,
+            cpu_remaining: 0,
+            done: None,
+        }
+    }
+}
+
+/// Preemptive fixed-priority uniprocessor (§3.1): the highest-priority
+/// ready job always runs; a preempted job banks its remaining time.
+#[derive(Debug, Default)]
+pub struct PreemptiveCpu {
+    ready: Vec<JobId>,
+    /// `(job, token, started_at)`.
+    running: Option<(JobId, u64, Tick)>,
+    token: u64,
+}
+
+impl PreemptiveCpu {
+    pub fn enqueue(&mut self, j: JobId) {
+        self.ready.push(j);
+    }
+
+    /// Ensure the highest-priority ready job is the runner.  Returns the
+    /// absolute completion tick and token of a newly started run, if a
+    /// (re)dispatch happened; the previous timer, if any, is invalidated.
+    pub fn dispatch(&mut self, jobs: &mut [WalkJob], now: Tick) -> Option<(Tick, u64)> {
+        let best_pos = (0..self.ready.len()).min_by_key(|&i| jobs[self.ready[i]].prio)?;
+        let best = self.ready[best_pos];
+        let switch = match self.running {
+            None => true,
+            Some((cur, _, _)) => jobs[best].prio < jobs[cur].prio,
+        };
+        if !switch {
+            return None;
+        }
+        if let Some((cur, _, started)) = self.running.take() {
+            // Preempt: bank the remaining time, invalidate the timer.
+            let ran = now - started;
+            jobs[cur].cpu_remaining = jobs[cur].cpu_remaining.saturating_sub(ran);
+            self.ready.push(cur);
+            self.token += 1;
+        }
+        self.ready.swap_remove(best_pos);
+        self.token += 1;
+        self.running = Some((best, self.token, now));
+        Some((now + jobs[best].cpu_remaining, self.token))
+    }
+
+    /// Validate a `CpuDone` timer; returns the finished job if current.
+    pub fn complete(&mut self, token: u64) -> Option<JobId> {
+        match self.running {
+            Some((job, tok, _)) if tok == token => {
+                self.running = None;
+                Some(job)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Non-preemptive priority-ordered bus (§3.2): a copy, once started,
+/// runs to completion; the highest-priority waiting copy goes next.
+#[derive(Debug, Default)]
+pub struct NonPreemptiveBus {
+    ready: Vec<JobId>,
+    busy: Option<(JobId, u64)>,
+    token: u64,
+}
+
+impl NonPreemptiveBus {
+    pub fn enqueue(&mut self, j: JobId) {
+        self.ready.push(j);
+    }
+
+    /// Start the highest-priority waiting copy if the bus is idle.
+    pub fn dispatch(&mut self, jobs: &[WalkJob], now: Tick) -> Option<(Tick, u64)> {
+        if self.busy.is_some() {
+            return None;
+        }
+        let best_pos = (0..self.ready.len()).min_by_key(|&i| jobs[self.ready[i]].prio)?;
+        let job = self.ready.swap_remove(best_pos);
+        let phase = jobs[job].chain.phase(jobs[job].next_phase);
+        debug_assert_eq!(phase.station(), Station::Bus, "bus dispatch on {phase:?}");
+        let d = jobs[job].chain.duration(jobs[job].next_phase);
+        self.token += 1;
+        self.busy = Some((job, self.token));
+        Some((now + d, self.token))
+    }
+
+    /// Validate a `BusDone` timer; returns the finished job if current.
+    pub fn complete(&mut self, token: u64) -> Option<JobId> {
+        match self.busy {
+            Some((job, tok)) if tok == token => {
+                self.busy = None;
+                Some(job)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A completion timer the driver schedules and later feeds back through
+/// [`PlatformCore::on_event`].  The `Ord` impl is arbitrary (variant
+/// order) — it exists so drivers can put events in ordered containers
+/// where a unique sequence number already breaks ties.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CoreEvent {
+    CpuDone(u64),
+    BusDone(u64),
+    GpuDone(JobId),
+}
+
+impl CoreEvent {
+    /// The station this timer belongs to (for redispatch).
+    pub fn station(self) -> Station {
+        match self {
+            CoreEvent::CpuDone(_) => Station::Cpu,
+            CoreEvent::BusDone(_) => Station::Bus,
+            CoreEvent::GpuDone(_) => Station::Gpu,
+        }
+    }
+}
+
+/// One observable platform event, for cross-driver parity checks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEvent {
+    PhaseDone(Phase),
+    JobDone,
+}
+
+/// Trace record: what happened, to which job, when.  Jobs are identified
+/// by `(task, release)` so traces from different drivers compare even if
+/// their internal job ids differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEntry {
+    pub t: Tick,
+    pub task: usize,
+    pub release: Tick,
+    pub event: TraceEvent,
+}
+
+/// The composed platform: preemptive CPU + non-preemptive bus +
+/// dedicated GPU, advancing jobs along their chains.
+#[derive(Debug, Default)]
+pub struct PlatformCore {
+    pub cpu: PreemptiveCpu,
+    pub bus: NonPreemptiveBus,
+    trace: Option<Vec<TraceEntry>>,
+}
+
+impl PlatformCore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A core that records a [`TraceEntry`] per phase/job completion.
+    pub fn with_trace() -> Self {
+        PlatformCore { trace: Some(Vec::new()), ..Self::default() }
+    }
+
+    /// Consume the recorded trace (empty when tracing is off).
+    pub fn take_trace(&mut self) -> Vec<TraceEntry> {
+        self.trace.take().unwrap_or_default()
+    }
+
+    fn record(&mut self, jobs: &[WalkJob], j: JobId, now: Tick, event: TraceEvent) {
+        if let Some(tr) = &mut self.trace {
+            tr.push(TraceEntry { t: now, task: jobs[j].task, release: jobs[j].release, event });
+        }
+    }
+
+    /// Enter job `j`'s next phase (or finish the job).  Any completion
+    /// timers to schedule are appended to `timers`.  Returns `true` when
+    /// the chain is exhausted — the job is complete as of `now`.
+    pub fn start_phase(
+        &mut self,
+        jobs: &mut [WalkJob],
+        j: JobId,
+        now: Tick,
+        timers: &mut Vec<(Tick, CoreEvent)>,
+    ) -> bool {
+        if jobs[j].next_phase == jobs[j].chain.len() {
+            jobs[j].done = Some(now);
+            self.record(jobs, j, now, TraceEvent::JobDone);
+            return true;
+        }
+        let i = jobs[j].next_phase;
+        match jobs[j].chain.phase(i).station() {
+            Station::Cpu => {
+                jobs[j].cpu_remaining = jobs[j].chain.duration(i);
+                self.cpu.enqueue(j);
+                if let Some((at, tok)) = self.cpu.dispatch(jobs, now) {
+                    timers.push((at, CoreEvent::CpuDone(tok)));
+                }
+            }
+            Station::Bus => {
+                self.bus.enqueue(j);
+                if let Some((at, tok)) = self.bus.dispatch(jobs, now) {
+                    timers.push((at, CoreEvent::BusDone(tok)));
+                }
+            }
+            Station::Gpu => {
+                // Dedicated virtual SMs: starts immediately, never queues.
+                timers.push((now + jobs[j].chain.duration(i), CoreEvent::GpuDone(j)));
+            }
+        }
+        false
+    }
+
+    /// Handle a fired timer.  Returns the job whose phase completed (its
+    /// `next_phase` already advanced) — the driver must then call
+    /// [`Self::start_phase`] for it and [`Self::redispatch`] for the
+    /// freed station.  Stale timers return `None`.
+    pub fn on_event(&mut self, jobs: &mut [WalkJob], ev: CoreEvent, now: Tick) -> Option<JobId> {
+        let j = match ev {
+            CoreEvent::CpuDone(tok) => self.cpu.complete(tok)?,
+            CoreEvent::BusDone(tok) => self.bus.complete(tok)?,
+            CoreEvent::GpuDone(j) => j,
+        };
+        let phase = jobs[j].chain.phase(jobs[j].next_phase);
+        self.record(jobs, j, now, TraceEvent::PhaseDone(phase));
+        jobs[j].next_phase += 1;
+        Some(j)
+    }
+
+    /// Give a freed station to its next waiting job.
+    pub fn redispatch(
+        &mut self,
+        station: Station,
+        jobs: &mut [WalkJob],
+        now: Tick,
+        timers: &mut Vec<(Tick, CoreEvent)>,
+    ) {
+        match station {
+            Station::Cpu => {
+                if let Some((at, tok)) = self.cpu.dispatch(jobs, now) {
+                    timers.push((at, CoreEvent::CpuDone(tok)));
+                }
+            }
+            Station::Bus => {
+                if let Some((at, tok)) = self.bus.dispatch(jobs, now) {
+                    timers.push((at, CoreEvent::BusDone(tok)));
+                }
+            }
+            Station::Gpu => {}
+        }
+    }
+}
+
+/// Job-level precedence within a task: jobs of the same task execute in
+/// release order, one at a time (the release policy both drivers share).
+#[derive(Debug)]
+pub struct TaskFifo {
+    active: Vec<Option<JobId>>,
+    queue: Vec<VecDeque<JobId>>,
+}
+
+impl TaskFifo {
+    pub fn new(n_tasks: usize) -> TaskFifo {
+        TaskFifo { active: vec![None; n_tasks], queue: vec![VecDeque::new(); n_tasks] }
+    }
+
+    /// Register a released job; returns it if it may start immediately.
+    pub fn on_release(&mut self, task: usize, job: JobId) -> Option<JobId> {
+        if self.active[task].is_none() {
+            self.active[task] = Some(job);
+            Some(job)
+        } else {
+            self.queue[task].push_back(job);
+            None
+        }
+    }
+
+    /// The task's active job finished; returns the next queued job.
+    pub fn on_job_done(&mut self, task: usize) -> Option<JobId> {
+        self.active[task] = self.queue[task].pop_front();
+        self.active[task]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Minimal in-test driver: releases at `jobs[j].release`, runs every
+    /// chain to completion, returns completion ticks.
+    fn run(mut jobs: Vec<WalkJob>) -> Vec<Tick> {
+        let mut core = PlatformCore::new();
+        let mut heap: BinaryHeap<Reverse<(Tick, u64, usize, Option<CoreEvent>)>> =
+            BinaryHeap::new();
+        let mut seq = 0u64;
+        for (j, job) in jobs.iter().enumerate() {
+            seq += 1;
+            heap.push(Reverse((job.release, seq, j, None)));
+        }
+        let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
+        while let Some(Reverse((now, _, j, ev))) = heap.pop() {
+            match ev {
+                None => {
+                    core.start_phase(&mut jobs, j, now, &mut timers);
+                }
+                Some(ev) => {
+                    let station = ev.station();
+                    if let Some(done) = core.on_event(&mut jobs, ev, now) {
+                        core.start_phase(&mut jobs, done, now, &mut timers);
+                        core.redispatch(station, &mut jobs, now, &mut timers);
+                    }
+                }
+            }
+            for (t, ev) in timers.drain(..) {
+                seq += 1;
+                heap.push(Reverse((t, seq, usize::MAX, Some(ev))));
+            }
+        }
+        jobs.iter().map(|j| j.done.expect("job ran to completion")).collect()
+    }
+
+    fn cpu_job(task: usize, prio: usize, release: Tick, d: Tick) -> WalkJob {
+        let chain = Chain::new(vec![(Phase::Cpu(0), d)]);
+        WalkJob::new(task, prio, release, release + 1_000_000, chain)
+    }
+
+    #[test]
+    fn cpu_preempts_lower_priority() {
+        // lo (10 ticks) starts at 0; hi (3 ticks) arrives at 5.
+        // hi runs [5, 8); lo runs [0, 5) + [8, 13).
+        let done = run(vec![cpu_job(1, 1, 0, 10), cpu_job(0, 0, 5, 3)]);
+        assert_eq!(done, vec![13, 8]);
+    }
+
+    #[test]
+    fn cpu_equal_priority_is_release_order() {
+        let done = run(vec![cpu_job(0, 0, 0, 4), cpu_job(0, 0, 1, 4)]);
+        assert_eq!(done, vec![4, 8]);
+    }
+
+    #[test]
+    fn bus_is_non_preemptive() {
+        // lo's 10-tick copy starts at 0 and holds the bus; hi's 2-tick
+        // copy arrives at 1 but must wait until 10.
+        let mk = |task, prio, release, d| {
+            WalkJob::new(task, prio, release, 1_000_000, Chain::new(vec![(Phase::H2d(0), d)]))
+        };
+        let done = run(vec![mk(1, 1, 0, 10), mk(0, 0, 1, 2)]);
+        assert_eq!(done, vec![10, 12]);
+    }
+
+    #[test]
+    fn gpu_phases_never_queue() {
+        let mk = |task, d| {
+            WalkJob::new(task, task, 0, 1_000_000, Chain::new(vec![(Phase::Gpu(0), d)]))
+        };
+        let done = run(vec![mk(0, 10), mk(1, 10)]);
+        // Both overlap on their dedicated SMs.
+        assert_eq!(done, vec![10, 10]);
+    }
+
+    #[test]
+    fn full_chain_walks_all_stations() {
+        let chain = Chain::five_phase(1, 2, 3, 4, 5);
+        let done = run(vec![WalkJob::new(0, 0, 0, 1_000_000, chain)]);
+        assert_eq!(done, vec![15]);
+    }
+
+    #[test]
+    fn stale_cpu_timer_is_dropped() {
+        let mut jobs = vec![cpu_job(1, 1, 0, 10), cpu_job(0, 0, 0, 3)];
+        let mut core = PlatformCore::new();
+        let mut timers = Vec::new();
+        core.start_phase(&mut jobs, 0, 0, &mut timers);
+        let (_, first) = timers[0];
+        timers.clear();
+        // Higher-priority job preempts: the first timer goes stale.
+        core.start_phase(&mut jobs, 1, 0, &mut timers);
+        assert_eq!(core.on_event(&mut jobs, first, 10), None);
+    }
+
+    #[test]
+    fn task_fifo_serialises_same_task_jobs() {
+        let mut fifo = TaskFifo::new(1);
+        assert_eq!(fifo.on_release(0, 7), Some(7));
+        assert_eq!(fifo.on_release(0, 8), None);
+        assert_eq!(fifo.on_job_done(0), Some(8));
+        assert_eq!(fifo.on_job_done(0), None);
+        assert_eq!(fifo.on_release(0, 9), Some(9));
+    }
+
+    #[test]
+    fn trace_records_phase_and_job_completions() {
+        let mut jobs =
+            vec![WalkJob::new(0, 0, 0, 1_000_000, Chain::new(vec![(Phase::Gpu(0), 4)]))];
+        let mut core = PlatformCore::with_trace();
+        let mut timers = Vec::new();
+        core.start_phase(&mut jobs, 0, 0, &mut timers);
+        let (t, ev) = timers[0];
+        let j = core.on_event(&mut jobs, ev, t).unwrap();
+        timers.clear();
+        assert!(core.start_phase(&mut jobs, j, t, &mut timers));
+        let trace = core.take_trace();
+        let phase_done = TraceEvent::PhaseDone(Phase::Gpu(0));
+        assert_eq!(
+            trace,
+            vec![
+                TraceEntry { t: 4, task: 0, release: 0, event: phase_done },
+                TraceEntry { t: 4, task: 0, release: 0, event: TraceEvent::JobDone },
+            ]
+        );
+    }
+}

@@ -1,0 +1,109 @@
+//! Priority ready-queue for wall-clock stations.
+//!
+//! The serving coordinator's station threads each hold one of these:
+//! arriving jobs are ordered by the canonical [`Prio`] key (priority
+//! level, then release), with arrival order breaking exact ties — the
+//! same dispatch order the virtual-time stations in [`super::platform`]
+//! implement, so the two executors cannot disagree on who goes next.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::Prio;
+
+struct Entry<T> {
+    prio: Prio,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.prio, self.seq) == (other.prio, other.seq)
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.prio, self.seq).cmp(&(other.prio, other.seq))
+    }
+}
+
+/// Min-queue over `(Prio, arrival)` — `pop` yields the highest-priority
+/// (lowest-key) item.
+pub struct ReadyQueue<T> {
+    heap: BinaryHeap<Reverse<Entry<T>>>,
+    seq: u64,
+}
+
+impl<T> Default for ReadyQueue<T> {
+    fn default() -> Self {
+        ReadyQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+}
+
+impl<T> ReadyQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, prio: Prio, item: T) {
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { prio, seq: self.seq, item }));
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.heap.pop().map(|Reverse(e)| e.item)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_priority_then_release_order() {
+        let mut q = ReadyQueue::new();
+        q.push((2, 0), "low");
+        q.push((0, 50), "hi-late");
+        q.push((0, 10), "hi-early");
+        q.push((1, 0), "mid");
+        assert_eq!(q.pop(), Some("hi-early"));
+        assert_eq!(q.pop(), Some("hi-late"));
+        assert_eq!(q.pop(), Some("mid"));
+        assert_eq!(q.pop(), Some("low"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn exact_ties_are_fifo() {
+        let mut q = ReadyQueue::new();
+        q.push((0, 0), 1);
+        q.push((0, 0), 2);
+        q.push((0, 0), 3);
+        assert_eq!((q.pop(), q.pop(), q.pop()), (Some(1), Some(2), Some(3)));
+    }
+
+    #[test]
+    fn len_tracks_contents() {
+        let mut q: ReadyQueue<u8> = ReadyQueue::new();
+        assert!(q.is_empty());
+        q.push((0, 0), 9);
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

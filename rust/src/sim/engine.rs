@@ -1,17 +1,21 @@
-//! The discrete-event engine: periodic job releases walking their
-//! segment chains across the preemptive CPU, the non-preemptive bus and
-//! the federated GPU.
+//! The discrete-event driver: periodic job releases walking their
+//! segment chains across the shared platform core ([`crate::sched`]) —
+//! preemptive CPU, non-preemptive bus, federated GPU — in virtual
+//! nanosecond ticks.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::analysis::{Allocation, SmModel};
 use crate::model::TaskSet;
+use crate::sched::{
+    ms_to_ticks, ticks_to_ms, Chain, CoreEvent, PlatformCore, Segment, TaskFifo, Tick,
+    TraceEntry, WalkJob,
+};
 use crate::util::rng::Pcg;
 use crate::util::stats::Summary;
 
 use super::exec::ExecModel;
-use super::{ms_to_ticks, ticks_to_ms, Tick};
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -72,36 +76,14 @@ pub struct SimResult {
 }
 
 // ---------------------------------------------------------------------------
-// Internal structures
+// Event plumbing (driver-owned; stations live in `sched`)
 // ---------------------------------------------------------------------------
-
-/// One phase of a job's chain with its drawn duration.
-#[derive(Debug, Clone, Copy)]
-enum Phase {
-    Cpu(Tick),
-    Mem(Tick),
-    Gpu(Tick),
-}
-
-#[derive(Debug)]
-struct Job {
-    task: usize,
-    release: Tick,
-    deadline: Tick,
-    phases: Vec<Phase>,
-    next_phase: usize,
-    /// Remaining ticks of the current CPU phase (preemption bookkeeping).
-    cpu_remaining: Tick,
-    done: Option<Tick>,
-}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum EvKind {
     Release { task: usize },
-    CpuDone { token: u64 },
-    BusDone { token: u64 },
-    GpuDone { job: usize },
     JobStart { job: usize },
+    Core(CoreEvent),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,6 +110,25 @@ impl PartialOrd for Ev {
 /// pattern): task `i` releases at `0, T_i, 2T_i, …` up to the horizon.
 /// Jobs of the same task execute in release order.
 pub fn simulate(ts: &TaskSet, alloc: &Allocation, cfg: &SimConfig) -> SimResult {
+    simulate_impl(ts, alloc, cfg, false).0
+}
+
+/// Like [`simulate`], but also returns the platform trace (one entry per
+/// phase/job completion) for cross-driver parity checks.
+pub fn simulate_traced(
+    ts: &TaskSet,
+    alloc: &Allocation,
+    cfg: &SimConfig,
+) -> (SimResult, Vec<TraceEntry>) {
+    simulate_impl(ts, alloc, cfg, true)
+}
+
+fn simulate_impl(
+    ts: &TaskSet,
+    alloc: &Allocation,
+    cfg: &SimConfig,
+    trace: bool,
+) -> (SimResult, Vec<TraceEntry>) {
     assert_eq!(alloc.len(), ts.len());
     ts.validate().expect("invalid task set");
     for (t, &gn) in ts.tasks.iter().zip(alloc) {
@@ -143,7 +144,10 @@ pub fn simulate(ts: &TaskSet, alloc: &Allocation, cfg: &SimConfig) -> SimResult 
     let mut rng = Pcg::new(cfg.seed);
 
     let n = ts.len();
-    let mut jobs: Vec<Job> = Vec::new();
+    let mut jobs: Vec<WalkJob> = Vec::new();
+    let mut core = if trace { PlatformCore::with_trace() } else { PlatformCore::new() };
+    let mut fifo = TaskFifo::new(n);
+
     let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     let mut seq: u64 = 0;
     let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, t: Tick, kind: EvKind| {
@@ -156,119 +160,24 @@ pub fn simulate(ts: &TaskSet, alloc: &Allocation, cfg: &SimConfig) -> SimResult 
         push(&mut heap, &mut seq, 0, EvKind::Release { task });
     }
 
-    // CPU state: ready job ids; running (job, token, started_at).
-    let mut cpu_ready: Vec<usize> = Vec::new();
-    let mut cpu_running: Option<(usize, u64, Tick)> = None;
-    let mut cpu_token: u64 = 0;
-
-    // Bus state: waiting job ids; in-flight (job, token).
-    let mut bus_ready: Vec<usize> = Vec::new();
-    let mut bus_busy: Option<(usize, u64)> = None;
-    let mut bus_token: u64 = 0;
-
-    // Per-task FIFO of pending jobs (job-level precedence).
-    let mut task_queue: Vec<std::collections::VecDeque<usize>> =
-        vec![std::collections::VecDeque::new(); n];
-    let mut task_active: Vec<Option<usize>> = vec![None; n];
-
     let mut total_misses = 0usize;
     let mut events = 0usize;
     let mut stop = false;
+    let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
 
-    // Priority comparison: lower task index = higher priority; among jobs
-    // of the same priority, earlier release first.
-    let prio = |jobs: &Vec<Job>, a: usize, b: usize| -> std::cmp::Ordering {
-        (jobs[a].task, jobs[a].release).cmp(&(jobs[b].task, jobs[b].release))
-    };
-
-    macro_rules! dispatch_cpu {
-        ($now:expr) => {{
-            // Preemptive: highest-priority ready job must be the runner.
-            if let Some(best_pos) = (0..cpu_ready.len())
-                .min_by(|&x, &y| prio(&jobs, cpu_ready[x], cpu_ready[y]))
-            {
-                let best = cpu_ready[best_pos];
-                let should_switch = match cpu_running {
-                    None => true,
-                    Some((cur, _, _)) => prio(&jobs, best, cur) == std::cmp::Ordering::Less,
-                };
-                if should_switch {
-                    if let Some((cur, _, started)) = cpu_running.take() {
-                        // Preempt: bank the remaining time, invalidate token.
-                        let ran = $now - started;
-                        jobs[cur].cpu_remaining = jobs[cur].cpu_remaining.saturating_sub(ran);
-                        cpu_ready.push(cur);
-                        cpu_token += 1;
-                    }
-                    cpu_ready.swap_remove(best_pos);
-                    cpu_token += 1;
-                    let tok = cpu_token;
-                    cpu_running = Some((best, tok, $now));
-                    push(
-                        &mut heap,
-                        &mut seq,
-                        $now + jobs[best].cpu_remaining,
-                        EvKind::CpuDone { token: tok },
-                    );
-                }
-            }
-        }};
-    }
-
-    macro_rules! dispatch_bus {
-        ($now:expr) => {{
-            if bus_busy.is_none() {
-                if let Some(best_pos) = (0..bus_ready.len())
-                    .min_by(|&x, &y| prio(&jobs, bus_ready[x], bus_ready[y]))
-                {
-                    let job = bus_ready.swap_remove(best_pos);
-                    bus_token += 1;
-                    let d = match jobs[job].phases[jobs[job].next_phase] {
-                        Phase::Mem(d) => d,
-                        _ => unreachable!("bus dispatch on non-mem phase"),
-                    };
-                    bus_busy = Some((job, bus_token));
-                    push(&mut heap, &mut seq, $now + d, EvKind::BusDone { token: bus_token });
-                }
-            }
-        }};
-    }
-
-    // Advance `job` into its next phase (or finish it).
-    macro_rules! start_phase {
+    // Handle a finished job: misses, stop flag, task-FIFO successor.
+    macro_rules! finish_job {
         ($now:expr, $job:expr) => {{
             let j = $job;
-            if jobs[j].next_phase == jobs[j].phases.len() {
-                // Job complete.
-                jobs[j].done = Some($now);
-                if $now > jobs[j].deadline {
-                    total_misses += 1;
-                    if cfg.stop_on_first_miss {
-                        stop = true;
-                    }
+            if $now > jobs[j].deadline {
+                total_misses += 1;
+                if cfg.stop_on_first_miss {
+                    stop = true;
                 }
-                let task = jobs[j].task;
-                task_active[task] = None;
-                if let Some(next) = task_queue[task].pop_front() {
-                    task_active[task] = Some(next);
-                    push(&mut heap, &mut seq, $now, EvKind::JobStart { job: next });
-                }
-            } else {
-                match jobs[j].phases[jobs[j].next_phase] {
-                    Phase::Cpu(d) => {
-                        jobs[j].cpu_remaining = d;
-                        cpu_ready.push(j);
-                        dispatch_cpu!($now);
-                    }
-                    Phase::Mem(_) => {
-                        bus_ready.push(j);
-                        dispatch_bus!($now);
-                    }
-                    Phase::Gpu(d) => {
-                        // Dedicated virtual SMs: starts immediately.
-                        push(&mut heap, &mut seq, $now + d, EvKind::GpuDone { job: j });
-                    }
-                }
+            }
+            let task = jobs[j].task;
+            if let Some(next) = fifo.on_job_done(task) {
+                push(&mut heap, &mut seq, $now, EvKind::JobStart { job: next });
             }
         }};
     }
@@ -285,43 +194,21 @@ pub fn simulate(ts: &TaskSet, alloc: &Allocation, cfg: &SimConfig) -> SimResult 
                     continue;
                 }
                 let t = &ts.tasks[task];
-                // Draw all phase durations for this job.
-                let mut phases = Vec::with_capacity(t.m() + t.mem_count() + t.gpu_count());
-                for j in 0..t.m() {
-                    phases.push(Phase::Cpu(ms_to_ticks(cfg.exec.draw(&mut rng, t.cpu[j]))));
-                    if j + 1 < t.m() {
-                        phases.push(Phase::Mem(ms_to_ticks(
-                            cfg.exec.draw(&mut rng, t.mem[t.mem_before_gpu(j)]),
-                        )));
-                        phases.push(Phase::Gpu(ms_to_ticks(cfg.exec.draw_gpu(
-                            &mut rng,
-                            &t.gpu[j],
-                            alloc[task].max(1),
-                            cfg.sm_model,
-                        ))));
-                        if let Some(after) = t.mem_after_gpu(j) {
-                            phases.push(Phase::Mem(ms_to_ticks(
-                                cfg.exec.draw(&mut rng, t.mem[after]),
-                            )));
-                        }
-                    }
-                }
-                let job_id = jobs.len();
-                jobs.push(Job {
-                    task,
-                    release: now,
-                    deadline: now + ms_to_ticks(t.deadline),
-                    phases,
-                    next_phase: 0,
-                    cpu_remaining: 0,
-                    done: None,
+                // Draw all phase durations for this job (chain order).
+                let chain = Chain::from_task(t, |seg| match seg {
+                    Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
+                    Segment::Gpu(g) => ms_to_ticks(cfg.exec.draw_gpu(
+                        &mut rng,
+                        g,
+                        alloc[task].max(1),
+                        cfg.sm_model,
+                    )),
                 });
+                let job_id = jobs.len();
+                jobs.push(WalkJob::new(task, task, now, now + ms_to_ticks(t.deadline), chain));
                 // Job-level precedence within the task.
-                if task_active[task].is_none() {
-                    task_active[task] = Some(job_id);
-                    push(&mut heap, &mut seq, now, EvKind::JobStart { job: job_id });
-                } else {
-                    task_queue[task].push_back(job_id);
+                if let Some(start) = fifo.on_release(task, job_id) {
+                    push(&mut heap, &mut seq, now, EvKind::JobStart { job: start });
                 }
                 push(
                     &mut heap,
@@ -331,32 +218,22 @@ pub fn simulate(ts: &TaskSet, alloc: &Allocation, cfg: &SimConfig) -> SimResult 
                 );
             }
             EvKind::JobStart { job } => {
-                start_phase!(now, job);
-            }
-            EvKind::CpuDone { token } => {
-                if let Some((job, tok, _)) = cpu_running {
-                    if tok == token {
-                        cpu_running = None;
-                        jobs[job].next_phase += 1;
-                        start_phase!(now, job);
-                        dispatch_cpu!(now);
-                    }
+                if core.start_phase(&mut jobs, job, now, &mut timers) {
+                    finish_job!(now, job);
                 }
             }
-            EvKind::BusDone { token } => {
-                if let Some((job, tok)) = bus_busy {
-                    if tok == token {
-                        bus_busy = None;
-                        jobs[job].next_phase += 1;
-                        start_phase!(now, job);
-                        dispatch_bus!(now);
+            EvKind::Core(cev) => {
+                let station = cev.station();
+                if let Some(j) = core.on_event(&mut jobs, cev, now) {
+                    if core.start_phase(&mut jobs, j, now, &mut timers) {
+                        finish_job!(now, j);
                     }
+                    core.redispatch(station, &mut jobs, now, &mut timers);
                 }
             }
-            EvKind::GpuDone { job } => {
-                jobs[job].next_phase += 1;
-                start_phase!(now, job);
-            }
+        }
+        for (t, cev) in timers.drain(..) {
+            push(&mut heap, &mut seq, t, EvKind::Core(cev));
         }
     }
 
@@ -400,12 +277,15 @@ pub fn simulate(ts: &TaskSet, alloc: &Allocation, cfg: &SimConfig) -> SimResult 
     for (task, rs) in responses.iter().enumerate() {
         per_task[task].response = Summary::of(rs);
     }
-    SimResult {
-        per_task,
-        total_misses: total,
-        events_processed: events,
-        schedulable: total == 0,
-    }
+    (
+        SimResult {
+            per_task,
+            total_misses: total,
+            events_processed: events,
+            schedulable: total == 0,
+        },
+        core.take_trace(),
+    )
 }
 
 #[cfg(test)]
@@ -534,8 +414,22 @@ mod tests {
     #[test]
     fn bell_mode_bounded_by_wcet_mode() {
         let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
-        let w = simulate(&ts, &vec![1], &SimConfig { horizon_ms: 300.0, ..SimConfig::acceptance(9) });
-        let b = simulate(&ts, &vec![1], &SimConfig { horizon_ms: 300.0, ..SimConfig::measurement(9) });
+        let wcfg = SimConfig { horizon_ms: 300.0, ..SimConfig::acceptance(9) };
+        let bcfg = SimConfig { horizon_ms: 300.0, ..SimConfig::measurement(9) };
+        let w = simulate(&ts, &vec![1], &wcfg);
+        let b = simulate(&ts, &vec![1], &bcfg);
         assert!(b.per_task[0].max_response_ms <= w.per_task[0].max_response_ms + 1e-9);
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_result() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let cfg = wcet_cfg();
+        let plain = simulate(&ts, &vec![1], &cfg);
+        let (traced, trace) = simulate_traced(&ts, &vec![1], &cfg);
+        assert_eq!(plain.events_processed, traced.events_processed);
+        assert!(!trace.is_empty());
+        // 5 phase completions + 1 job completion per released job.
+        assert_eq!(trace.len(), plain.per_task[0].completed * 6);
     }
 }

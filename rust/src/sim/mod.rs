@@ -1,52 +1,29 @@
 //! Discrete-event simulation of the CPU + bus + GPU platform.
 //!
 //! This is the substitute for the paper's GTX 1080 Ti testbed (DESIGN.md
-//! §2): it implements the platform **contract** the analysis assumes —
+//! §2).  The platform **contract** the analysis assumes — one preemptive
+//! fixed-priority CPU (§3.1), one non-preemptive priority-ordered bus
+//! (§3.2), and a GPU of `2·GN` dedicated virtual SMs under federated
+//! allocation (§5.2) — lives in [`crate::sched`]; this module is the
+//! virtual-time *driver* over that shared core, plus the stochastic
+//! execution-time behaviour (Fig. 4's low-variance distributions) that
+//! creates the analysis-vs-measured gaps of Figs. 12/13.
 //!
-//! * one preemptive fixed-priority CPU (§3.1),
-//! * one non-preemptive priority-ordered bus: a copy, once started, runs
-//!   to completion; the highest-priority waiting copy goes next (§3.2),
-//! * a GPU of `2·GN` virtual SMs under federated allocation: every task
-//!   owns its SMs exclusively, so GPU segments start the moment their
-//!   preceding copy completes and never queue (§5.2); execution time
-//!   follows the Lemma 5.1 model `(gw·α_eff − gl)/(2·GN_i) + gl` with the
-//!   drawn parameters inside their profiled bounds,
-//!
-//! plus the stochastic execution-time behaviour (Fig. 4's low-variance
-//! distributions) that creates the analysis-vs-measured gaps of
-//! Figs. 12/13.
+//! GPU execution time follows the Lemma 5.1 model
+//! `(gw·α_eff − gl)/(2·GN_i) + gl` with the drawn parameters inside
+//! their profiled bounds.
 //!
 //! [`simulate`] runs one task set for a configured horizon and reports
-//! deadline misses and response-time statistics.
+//! deadline misses and response-time statistics; [`simulate_traced`]
+//! additionally returns the platform trace for cross-driver parity
+//! checks (see `tests/sched_parity.rs`).
 
 pub mod engine;
 pub mod exec;
 
-pub use engine::{simulate, SimConfig, SimResult, TaskStats};
+pub use engine::{simulate, simulate_traced, SimConfig, SimResult, TaskStats};
 pub use exec::ExecModel;
 
-/// Integer simulation time: nanoseconds.
-pub type Tick = u64;
-
-/// Convert analysis milliseconds to simulator ticks.
-pub fn ms_to_ticks(ms: f64) -> Tick {
-    debug_assert!(ms >= 0.0 && ms.is_finite());
-    (ms * 1e6).round() as Tick
-}
-
-/// Convert ticks back to milliseconds.
-pub fn ticks_to_ms(t: Tick) -> f64 {
-    t as f64 / 1e6
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn tick_conversion_roundtrips() {
-        for &ms in &[0.0, 0.001, 1.0, 17.25, 1000.0] {
-            assert!((ticks_to_ms(ms_to_ticks(ms)) - ms).abs() < 1e-6);
-        }
-    }
-}
+// Time is owned by the shared platform core; re-exported here for
+// backward compatibility.
+pub use crate::sched::{ms_to_ticks, ticks_to_ms, Tick};

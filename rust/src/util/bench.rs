@@ -2,7 +2,7 @@
 //!
 //! Bench targets are plain binaries with `harness = false`; each calls
 //! [`bench`]/[`bench_n`] and prints one aligned row per case so the
-//! `cargo bench` output doubles as the tables recorded in EXPERIMENTS.md.
+//! `cargo bench` output doubles as the tables indexed in DESIGN.md §6.
 
 use std::time::Instant;
 

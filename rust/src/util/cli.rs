@@ -1,10 +1,32 @@
 //! Tiny command-line parser for the launcher and examples (clap is not
 //! available offline).
 //!
-//! Grammar: `prog [subcommand] [--key value | --flag]...`.  Unknown keys
-//! are collected and reported by [`Args::finish`] so typos fail loudly.
+//! Grammar: `prog [subcommand] [--key value | --flag]...`.  Malformed
+//! values and unknown keys surface as [`CliError`]s so binaries can print
+//! a usage message and exit cleanly (see [`exit_usage`]) instead of
+//! aborting with a panic backtrace.
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A bad command line: malformed value or unknown argument.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Print the error and a usage string, then exit with status 2 (the
+/// conventional bad-usage exit code).
+pub fn exit_usage(usage: &str, err: &CliError) -> ! {
+    eprintln!("error: {err}\n\n{usage}");
+    std::process::exit(2);
+}
 
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
@@ -30,7 +52,7 @@ impl Args {
                 // `--key=value`, `--key value`, or bare `--flag`.
                 if let Some((k, v)) = key.split_once('=') {
                     args.kv.insert(k.to_string(), v.to_string());
-                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if iter.peek().is_some_and(|n| !n.starts_with("--")) {
                     args.kv.insert(key.to_string(), iter.next().unwrap());
                 } else {
                     args.flags.push(key.to_string());
@@ -62,37 +84,49 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
-    pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    fn parsed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+        what: &str,
+    ) -> Result<T, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects {what}, got {v:?}"))),
+        }
     }
 
-    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        self.parsed(key, default, "an integer")
     }
 
-    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
-            .unwrap_or(default)
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        self.parsed(key, default, "an integer")
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        self.parsed(key, default, "a number")
     }
 
     /// Comma-separated list, e.g. `--sms 5,8,10`.
-    pub fn list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+    pub fn list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
         match self.get(key) {
-            None => default.to_vec(),
+            None => Ok(default.to_vec()),
             Some(v) => v
                 .split(',')
-                .map(|p| p.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad entry {p:?}")))
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{key}: bad entry {p:?}")))
+                })
                 .collect(),
         }
     }
 
-    /// Panic on any `--key` that was provided but never queried.
-    pub fn finish(&self) {
+    /// Error on any `--key` that was provided but never queried.
+    pub fn finish(&self) -> Result<(), CliError> {
         let consumed = self.consumed.borrow();
         let unknown: Vec<&String> = self
             .kv
@@ -100,8 +134,10 @@ impl Args {
             .chain(self.flags.iter())
             .filter(|k| !consumed.contains(k))
             .collect();
-        if !unknown.is_empty() {
-            panic!("unknown arguments: {unknown:?}");
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError(format!("unknown arguments: {unknown:?}")))
         }
     }
 }
@@ -118,8 +154,8 @@ mod tests {
     fn parses_subcommand_and_kv() {
         let a = parse("serve --tasks 5 --seed=42 --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("serve"));
-        assert_eq!(a.usize_or("tasks", 0), 5);
-        assert_eq!(a.u64_or("seed", 0), 42);
+        assert_eq!(a.usize_or("tasks", 0).unwrap(), 5);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
     }
@@ -127,28 +163,40 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let a = parse("run");
-        assert_eq!(a.f64_or("util", 1.5), 1.5);
+        assert_eq!(a.f64_or("util", 1.5).unwrap(), 1.5);
         assert_eq!(a.str_or("out", "results"), "results");
     }
 
     #[test]
     fn lists_parse() {
         let a = parse("x --sms 5,8,10");
-        assert_eq!(a.list_or("sms", &[1]), vec![5, 8, 10]);
-        assert_eq!(a.list_or("other", &[3, 4]), vec![3, 4]);
+        assert_eq!(a.list_or("sms", &[1]).unwrap(), vec![5, 8, 10]);
+        assert_eq!(a.list_or("other", &[3, 4]).unwrap(), vec![3, 4]);
     }
 
     #[test]
-    #[should_panic(expected = "unknown arguments")]
+    fn bad_values_are_errors_not_panics() {
+        let a = parse("x --tasks banana");
+        let err = a.usize_or("tasks", 0).unwrap_err();
+        assert!(err.0.contains("--tasks"), "{err}");
+        let a = parse("x --sms 5,oops");
+        assert!(a.list_or("sms", &[1]).is_err());
+        let a = parse("x --util 1.x");
+        assert!(a.f64_or("util", 1.0).is_err());
+    }
+
+    #[test]
     fn finish_rejects_unknown() {
         let a = parse("x --oops 3");
-        a.finish();
+        let err = a.finish().unwrap_err();
+        assert!(err.0.contains("unknown arguments"), "{err}");
+        assert!(err.0.contains("oops"), "{err}");
     }
 
     #[test]
     fn finish_accepts_consumed() {
         let a = parse("x --tasks 3");
         let _ = a.usize_or("tasks", 0);
-        a.finish();
+        a.finish().unwrap();
     }
 }

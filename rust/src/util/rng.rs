@@ -3,7 +3,7 @@
 //!
 //! PCG-XSH-RR-64/32 with a SplitMix64 seeder — small, fast, and
 //! reproducible across platforms, which matters because every experiment
-//! in EXPERIMENTS.md records its seed.
+//! in the DESIGN.md §6 index records its seed.
 
 /// A PCG32 generator (64-bit state, 32-bit output), extended with helpers
 /// for 64-bit and floating-point draws.

@@ -8,9 +8,21 @@ use rtgpu::coordinator::{admit, serve, AppSpec, ServeConfig};
 use rtgpu::model::{KernelClass, Platform};
 use rtgpu::runtime::{artifact_dir, Engine};
 
-fn small_engine() -> Engine {
-    Engine::load_dir_filtered(&artifact_dir(), |m| m.name.ends_with("_small"))
-        .expect("engine loads small artifacts")
+/// Environment-dependent: needs the `pjrt` feature AND `make artifacts`.
+/// Tests skip (with a note) when either is missing so `cargo test` stays
+/// green on model-only builds; with both present, a load failure is a
+/// real regression and fails.
+fn small_engine() -> Option<Engine> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
+    if !artifact_dir().join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        return None;
+    }
+    let engine = Engine::load_dir_filtered(&artifact_dir(), |m| m.name.ends_with("_small"));
+    Some(engine.expect("pjrt feature on and artifacts present: engine must load"))
 }
 
 fn specs() -> Vec<AppSpec> {
@@ -29,7 +41,7 @@ fn specs() -> Vec<AppSpec> {
 
 #[test]
 fn admission_assigns_disjoint_vsm_ranges() {
-    let engine = small_engine();
+    let Some(engine) = small_engine() else { return };
     let report = admit(&engine, Platform::new(4), &specs(), 5).unwrap();
     assert!(report.schedulable, "small workload must admit:\n{}", report.table());
     assert_eq!(report.admitted.len(), 3);
@@ -48,7 +60,7 @@ fn admission_assigns_disjoint_vsm_ranges() {
 
 #[test]
 fn infeasible_set_is_rejected() {
-    let engine = small_engine();
+    let Some(engine) = small_engine() else { return };
     let mut bad = specs();
     bad[0].deadline_ms = 0.05; // cannot fit even the CPU segments
     bad[0].period_ms = 0.05;
@@ -59,7 +71,7 @@ fn infeasible_set_is_rejected() {
 
 #[test]
 fn serving_completes_requests_and_reports_latency() {
-    let engine = small_engine();
+    let Some(engine) = small_engine() else { return };
     let report = admit(&engine, Platform::new(4), &specs(), 5).unwrap();
     assert!(report.schedulable);
     let cfg = ServeConfig { duration: Duration::from_millis(600), max_jobs: 200 };
@@ -83,7 +95,7 @@ fn serving_completes_requests_and_reports_latency() {
 fn served_gpu_segments_execute_pinned() {
     // Cross-check: executing with the admitted range gives the same
     // numerics as the full device (workload pinning is result-invariant).
-    let engine = small_engine();
+    let Some(engine) = small_engine() else { return };
     let report = admit(&engine, Platform::new(4), &specs(), 3).unwrap();
     let adm = &report.admitted[0];
     let n = engine.meta(&adm.artifact).unwrap().inputs[1].element_count();

@@ -21,11 +21,23 @@ fn f32s(v: &Json) -> Vec<f32> {
         .collect()
 }
 
-fn small_engine() -> Engine {
-    Engine::load_dir_filtered(&artifact_dir(), |m| {
+/// Environment-dependent: needs the `pjrt` feature AND `make artifacts`
+/// to have produced `artifacts/`.  Tests skip (with a note) when either
+/// is missing so `cargo test` stays green on model-only builds; with
+/// both present, a load failure is a real regression and fails.
+fn small_engine() -> Option<Engine> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
+    if !artifact_dir().join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        return None;
+    }
+    let engine = Engine::load_dir_filtered(&artifact_dir(), |m| {
         m.name.ends_with("_small") || m.name == "smoke"
-    })
-    .expect("engine loads small artifacts")
+    });
+    Some(engine.expect("pjrt feature on and artifacts present: engine must load"))
 }
 
 fn assert_close(actual: &[f32], expect: &[f32], tol: f32, what: &str) {
@@ -41,7 +53,7 @@ fn assert_close(actual: &[f32], expect: &[f32], tol: f32, what: &str) {
 
 #[test]
 fn smoke_artifact_runs() {
-    let eng = small_engine();
+    let Some(eng) = small_engine() else { return };
     let x = [1f32, 2., 3., 4.];
     let y = [1f32, 1., 1., 1.];
     let out = eng.execute_plain("smoke", &[&x, &y]).unwrap();
@@ -50,7 +62,7 @@ fn smoke_artifact_runs() {
 
 #[test]
 fn synthetic_kernels_match_python_goldens() {
-    let eng = small_engine();
+    let Some(eng) = small_engine() else { return };
     for kind in ["compute", "branch", "memory", "special", "comprehensive"] {
         let name = format!("synthetic_{kind}_small");
         let golden = read_golden(&name)
@@ -68,7 +80,7 @@ fn synthetic_kernels_match_python_goldens() {
 fn pinned_range_does_not_change_results() {
     // Workload pinning redistributes rows over the active virtual SMs; the
     // output must be identical for every valid pinned range (§4.4).
-    let eng = small_engine();
+    let Some(eng) = small_engine() else { return };
     let name = "synthetic_compute_small";
     let n = eng.meta(name).unwrap().inputs[1].element_count();
     let x: Vec<f32> = (0..n).map(|i| (i as f32) / 37.0 - 3.0).collect();
@@ -81,7 +93,7 @@ fn pinned_range_does_not_change_results() {
 
 #[test]
 fn inference_matches_golden() {
-    let eng = small_engine();
+    let Some(eng) = small_engine() else { return };
     let golden = read_golden("inference_small").expect("inference golden");
     let x = f32s(golden.get("x").unwrap());
     let expect = f32s(golden.get("out").unwrap());
@@ -91,7 +103,7 @@ fn inference_matches_golden() {
 
 #[test]
 fn invalid_sm_range_is_rejected() {
-    let eng = small_engine();
+    let Some(eng) = small_engine() else { return };
     let name = "synthetic_compute_small";
     let n = eng.meta(name).unwrap().inputs[1].element_count();
     let x = vec![0f32; n];
@@ -102,7 +114,7 @@ fn invalid_sm_range_is_rejected() {
 
 #[test]
 fn wrong_input_shape_is_rejected() {
-    let eng = small_engine();
+    let Some(eng) = small_engine() else { return };
     let x = vec![0f32; 7];
     let err = eng
         .execute_pinned("synthetic_compute_small", (0, 7), &[&x])

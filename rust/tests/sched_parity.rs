@@ -1,0 +1,114 @@
+//! Cross-driver parity (the point of the shared `sched` platform core):
+//! the discrete-event simulator and the coordinator's deterministic
+//! virtual serving driver must produce **identical phase sequences and
+//! completion orders** for the same task sets — the platform model can
+//! no longer fork between executors (DESIGN.md §3).
+
+use rtgpu::analysis::gpu::gpu_response;
+use rtgpu::analysis::SmModel;
+use rtgpu::coordinator::{serve_virtual, VirtualTask};
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::model::{MemoryModel, TaskSet};
+use rtgpu::sched::{ms_to_ticks, Chain, Segment, TraceEntry, TraceEvent};
+use rtgpu::sim::{simulate_traced, ExecModel, SimConfig};
+use rtgpu::util::prop;
+use rtgpu::util::rng::Pcg;
+
+/// The worst-case chain for one task — the exact durations the simulator
+/// uses under `ExecModel::Wcet`.
+fn wcet_chain(ts: &TaskSet, alloc: &[usize], task: usize) -> Chain {
+    let t = &ts.tasks[task];
+    Chain::from_task(t, |seg| match seg {
+        Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(b.hi),
+        Segment::Gpu(g) => {
+            ms_to_ticks(gpu_response(g, alloc[task].max(1), SmModel::Virtual).1)
+        }
+    })
+}
+
+/// Run both drivers over `ts` and return their traces.
+fn both_traces(
+    ts: &TaskSet,
+    alloc: &Vec<usize>,
+    horizon_ms: f64,
+) -> (Vec<TraceEntry>, Vec<TraceEntry>) {
+    let cfg = SimConfig {
+        exec: ExecModel::Wcet,
+        sm_model: SmModel::Virtual,
+        seed: 1,
+        horizon_ms,
+        stop_on_first_miss: false,
+    };
+    let (_, sim_trace) = simulate_traced(ts, alloc, &cfg);
+
+    let vtasks: Vec<VirtualTask> = ts
+        .tasks
+        .iter()
+        .map(|t| VirtualTask {
+            period: ms_to_ticks(t.period),
+            deadline: ms_to_ticks(t.deadline),
+        })
+        .collect();
+    let serve_trace =
+        serve_virtual(&vtasks, ms_to_ticks(horizon_ms), |task| wcet_chain(ts, alloc, task));
+    (sim_trace, serve_trace)
+}
+
+fn first_divergence(a: &[TraceEntry], b: &[TraceEntry]) -> String {
+    let i = a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count();
+    format!(
+        "lengths {}/{}; first divergence at {}: sim={:?} serve={:?}",
+        a.len(),
+        b.len(),
+        i,
+        a.get(i),
+        b.get(i)
+    )
+}
+
+#[test]
+fn prop_sim_and_serve_drivers_agree_on_random_sets() {
+    prop::check("sched_driver_parity", 912, 12, |g| {
+        let util = g.float(0.3, 1.2);
+        let cfg = if g.int(0, 1) == 1 {
+            GenConfig::default().with_memory_model(MemoryModel::OneCopy)
+        } else {
+            GenConfig::default()
+        };
+        let mut rng = Pcg::new(g.rng.next_u64());
+        let ts = generate_taskset(&mut rng, &cfg, util);
+        let alloc: Vec<usize> = ts
+            .tasks
+            .iter()
+            .map(|t| if t.gpu.is_empty() { 0 } else { g.int(1, 3).max(1) })
+            .collect();
+        let horizon_ms = 2.5 * ts.tasks.iter().map(|t| t.period).fold(0.0, f64::max);
+        let (sim_trace, serve_trace) = both_traces(&ts, &alloc, horizon_ms);
+        if sim_trace.is_empty() {
+            return Err("empty trace — the property is vacuous".into());
+        }
+        if sim_trace != serve_trace {
+            return Err(first_divergence(&sim_trace, &serve_trace));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn drivers_agree_on_the_simple_task() {
+    let ts = TaskSet::with_priority_order(vec![
+        rtgpu::model::testing::simple_task(0),
+        rtgpu::model::testing::simple_task(1),
+    ]);
+    let alloc = vec![1, 2];
+    let (sim_trace, serve_trace) = both_traces(&ts, &alloc, 130.0);
+    assert!(!sim_trace.is_empty());
+    assert_eq!(sim_trace, serve_trace, "{}", first_divergence(&sim_trace, &serve_trace));
+    // Completion orders are embedded in the common trace.
+    let completions: Vec<(usize, u64)> = sim_trace
+        .iter()
+        .filter(|e| e.event == TraceEvent::JobDone)
+        .map(|e| (e.task, e.release))
+        .collect();
+    assert!(!completions.is_empty());
+}
