@@ -1,0 +1,91 @@
+//! Fleet acceptance-ratio sweep: how many random application sets place
+//! fully onto `G ∈ {1, 2, 4, 8}` devices, per placement policy — the
+//! cluster layer's analogue of the paper's Figs. 8–11 acceptance curves
+//! (DESIGN.md §8), plus a per-device utilization-balance comparison.
+//!
+//! ```bash
+//! cargo run --release --example cluster_sweep -- --sets 20 --devices 1,2,4,8
+//! ```
+
+use anyhow::Result;
+use rtgpu::analysis::RtgpuOpts;
+use rtgpu::cluster::{ClusterState, PlacementPolicy};
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::harness::chart::{results_dir, table, write_csv, Series};
+use rtgpu::model::ClusterPlatform;
+use rtgpu::util::cli::Args;
+use rtgpu::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sets = args.usize_or("sets", 20)?;
+    let gn = args.usize_or("sms", 10)?;
+    let tasks = args.usize_or("tasks", 8)?;
+    let device_counts = args.list_or("devices", &[1, 2, 4, 8])?;
+    let seed = args.u64_or("seed", 42)?;
+    let shared = args.flag("shared-cpu");
+    args.finish()?;
+
+    let cfg = GenConfig::default().with_tasks(tasks);
+    let platform = |g: usize| {
+        let p = ClusterPlatform::homogeneous(g, gn);
+        if shared {
+            p.with_shared_cpu()
+        } else {
+            p
+        }
+    };
+    let utils: Vec<f64> = (1..=8).map(|i| i as f64 * 0.5).collect();
+
+    for &g in &device_counts {
+        let mut series = Vec::new();
+        for policy in PlacementPolicy::ALL {
+            let mut ys = Vec::with_capacity(utils.len());
+            for &util in &utils {
+                // Same seed per point: every (G, policy) cell sees the
+                // same random sets, so curves are comparable.
+                let mut rng = Pcg::new(seed ^ (util * 1000.0) as u64);
+                let accepted = (0..sets)
+                    .filter(|_| {
+                        let ts = generate_taskset(&mut rng, &cfg, util);
+                        let mut state =
+                            ClusterState::new(platform(g), RtgpuOpts::default());
+                        state.place_all(&ts.tasks, policy).all_placed()
+                    })
+                    .count();
+                ys.push(accepted as f64 / sets as f64);
+            }
+            series.push(Series { name: policy.name().into(), ys });
+        }
+        let label = format!("cluster_accept_g{g}_gn{gn}");
+        println!("--- {label} (acceptance over {sets} sets, {} apps)", tasks);
+        print!("{}", table(&utils, &series, "util"));
+        write_csv(&results_dir().join(format!("{label}.csv")), "util", &utils, &series)?;
+    }
+
+    // Balance snapshot: at a mid utilization, how evenly do the two
+    // policies spread GPU load across the largest fleet?
+    if let Some(&g) = device_counts.iter().max() {
+        if g > 1 {
+            let ts = generate_taskset(&mut Pcg::new(seed), &cfg, 1.5);
+            println!("--- balance at util 1.5 on {g} devices");
+            for policy in PlacementPolicy::ALL {
+                let mut state = ClusterState::new(platform(g), RtgpuOpts::default());
+                let report = state.place_all(&ts.tasks, policy);
+                let utils = state.gpu_utils();
+                let spread = utils.iter().fold(0.0_f64, |a, &b| a.max(b))
+                    - utils.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+                println!(
+                    "{:<10} placed {}/{}: per-device GPU util {:?}, spread {:.3}",
+                    policy.name(),
+                    report.placed.len(),
+                    ts.len(),
+                    utils.iter().map(|u| (u * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+                    spread
+                );
+            }
+        }
+    }
+    println!("CSV written to {:?}", results_dir());
+    Ok(())
+}

@@ -11,7 +11,8 @@
 use crate::model::{GpuSegment, RtTask, TaskSet};
 
 /// How SMs execute a kernel — the paper's ablation axis (§4.3).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// (`Ord` exists so cache snapshots sort deterministically.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum SmModel {
     /// RTGPU's virtual-SM model: `2·GN_i` virtual SMs retire α-inflated
     /// work (Lemma 5.1).

@@ -27,7 +27,26 @@ pub mod workload;
 pub use gpu::{Allocation, SmModel};
 pub use rtgpu::{Evaluator, RtgpuOpts, ScheduleResult, Search, SharedCache};
 
-use crate::model::TaskSet;
+use crate::model::{RtTask, TaskSet};
+
+/// GPU utilization of one task under the §6.1 normalisation (one
+/// physical SM is a unit-rate resource): `ΣĜW / T`.  The cluster
+/// placement bin-packs on this axis (DESIGN.md §8).
+pub fn gpu_utilization(task: &RtTask) -> f64 {
+    task.gpu.iter().map(|g| g.work.hi).sum::<f64>() / task.period
+}
+
+/// CPU utilization of one task: `ΣĈL / T`.  Above 1 summed over the
+/// tasks sharing a CPU, no fixed-priority schedule exists — the
+/// necessary condition shared-CPU cluster admission leans on.
+pub fn cpu_utilization(task: &RtTask) -> f64 {
+    task.cpu.iter().map(|b| b.hi).sum::<f64>() / task.period
+}
+
+/// Memory-bus utilization of one task: `ΣM̂L / T`.
+pub fn bus_utilization(task: &RtTask) -> f64 {
+    task.mem.iter().map(|b| b.hi).sum::<f64>() / task.period
+}
 
 /// The three schedulability tests compared throughout §6.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -74,6 +93,17 @@ mod tests {
     use crate::model::testing::simple_task;
     use crate::util::prop;
     use crate::util::rng::Pcg;
+
+    #[test]
+    fn utilization_accessors_partition_total() {
+        let t = simple_task(0);
+        // ΣĈL = 4, ΣM̂L = 2, ΣĜW = 8, T = 60 (model::tests).
+        assert!((cpu_utilization(&t) - 4.0 / 60.0).abs() < 1e-12);
+        assert!((bus_utilization(&t) - 2.0 / 60.0).abs() < 1e-12);
+        assert!((gpu_utilization(&t) - 8.0 / 60.0).abs() < 1e-12);
+        let total = cpu_utilization(&t) + bus_utilization(&t) + gpu_utilization(&t);
+        assert!((total - t.utilization()).abs() < 1e-12);
+    }
 
     #[test]
     fn analyze_dispatches_all_approaches() {

@@ -109,6 +109,24 @@ impl SharedCache {
     pub fn retain_keys(&self, live: &[u64]) {
         self.map.borrow_mut().retain(|&(key, _, _), _| live.contains(&key));
     }
+
+    /// Snapshot the identities of every cached context, sorted — taken
+    /// before a speculative membership change so a rejection can roll the
+    /// cache back exactly (see [`Self::retain_entries`]).
+    pub fn entry_keys(&self) -> Vec<(u64, usize, SmModel)> {
+        let mut keys: Vec<(u64, usize, SmModel)> = self.map.borrow().keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Drop every context not present in `keep` (a **sorted** snapshot
+    /// from [`Self::entry_keys`]), restoring the cached-context set to
+    /// what it was at snapshot time.  Contexts are immutable once
+    /// inserted, so key-set equality is content equality; only the
+    /// hit/miss observability counters keep counting across a rollback.
+    pub fn retain_entries(&self, keep: &[(u64, usize, SmModel)]) {
+        self.map.borrow_mut().retain(|k, _| keep.binary_search(k).is_ok());
+    }
 }
 
 type LocalCache = Vec<Vec<Option<std::rc::Rc<CachedTask>>>>;
@@ -478,6 +496,23 @@ mod tests {
         // Dropping a task key evicts only its contexts.
         shared.retain_keys(&[1]);
         assert_eq!(shared.len(), 1);
+    }
+
+    #[test]
+    fn shared_cache_snapshot_restores_exactly() {
+        let shared = SharedCache::new();
+        let ts = two_task_set();
+        let opts = RtgpuOpts::default();
+        let eval = Evaluator::with_shared(&ts, 10, &opts, &shared);
+        let _ = eval.bounds(&vec![1, 1]);
+        let snapshot = shared.entry_keys();
+        assert_eq!(snapshot.len(), 2);
+        // Speculative work adds contexts at new (task, gn) points…
+        let _ = eval.bounds(&vec![3, 4]);
+        assert_eq!(shared.len(), 4);
+        // …and the rollback drops exactly those.
+        shared.retain_entries(&snapshot);
+        assert_eq!(shared.entry_keys(), snapshot);
     }
 
     #[test]

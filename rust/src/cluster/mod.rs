@@ -1,0 +1,36 @@
+//! Multi-GPU fleet scheduling (DESIGN.md §8): placement, per-device
+//! admission, and a sharded execution path.
+//!
+//! The paper's federated scheduling dedicates virtual SMs per task on
+//! **one** GPU.  A deployment serving heavy traffic runs a *fleet*: this
+//! layer bin-packs applications onto `G` devices — each with its own
+//! non-preemptive bus and federated SM pool, the host CPU per-device or
+//! shared ([`crate::model::ClusterPlatform`]) — and executes the result
+//! under one virtual clock.
+//!
+//! * [`placement`] — [`ClusterState`]: first-fit-decreasing /
+//!   worst-fit placement by GPU utilization, every candidate validated
+//!   by the device's incremental [`crate::coordinator::AdmissionState`]
+//!   (warm analysis caches survive re-placements and drains).
+//! * [`sim`] — [`ClusterWorkload`] + [`simulate_cluster`]: one
+//!   [`crate::sched::PlatformCore`] per device under a single virtual
+//!   clock; a one-device cluster replays `sim::engine` trace for trace.
+//! * The serving router lives with its peers in the coordinator:
+//!   [`crate::coordinator::ClusterServe`] dispatches arriving requests
+//!   to the owning device's serve loop and has a deterministic virtual
+//!   mode checked against [`simulate_cluster`] in
+//!   `tests/cluster_parity.rs`.
+//!
+//! Soundness: per-device federation means a task's CPU, bus and SMs are
+//! all local to its device (per-device CPU topology), so per-device
+//! Algorithm 2 verdicts are independent and placement composes; the
+//! shared-CPU topology adds a merged whole-cluster evaluation (see
+//! `placement::ClusterState::try_place`).
+
+pub mod placement;
+pub mod sim;
+
+pub use placement::{ClusterState, DrainOutcome, PlacementPolicy, PlacementReport};
+pub use sim::{
+    simulate_cluster, simulate_cluster_traced, ClusterSimResult, ClusterWorkload, DeviceWorkload,
+};

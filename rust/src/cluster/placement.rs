@@ -1,0 +1,497 @@
+//! Placement: bin-packing applications onto the devices of a
+//! [`ClusterPlatform`], every candidate validated by the existing
+//! per-device admission control.
+//!
+//! Two policies ship (DESIGN.md §8):
+//!
+//! * **First-fit-decreasing** — apps sorted by decreasing GPU
+//!   utilization, each placed on the first device whose Algorithm-2
+//!   admission accepts it.  Packs tightly; early devices fill first.
+//! * **Worst-fit** (decreasing) — same order, but devices are tried
+//!   most-headroom-first (lowest current GPU utilization), spreading
+//!   load and CPU/bus interference across the fleet.
+//!
+//! Soundness composes from the single-device analysis: under
+//! [`CpuTopology::PerDevice`] every resource a task touches (CPU, bus,
+//! dedicated SMs) is local to its device, so per-device Algorithm 2 is
+//! independent and a fully admitted placement is fleet-schedulable.
+//! Under [`CpuTopology::Shared`] the host CPU couples devices, so a
+//! candidate must additionally pass a *merged* evaluation over all
+//! placed tasks — pessimistic on the bus (it pretends one bus serves
+//! every copy) and exact on the shared CPU, hence still sound.
+//!
+//! The per-device [`AdmissionState`]s live as long as the
+//! [`ClusterState`], so their `SharedCache`s keep each survivor's
+//! analysis contexts warm across re-placements — draining a failed
+//! device re-admits its apps onto survivors on the warm paths
+//! (`benches/cluster_bench.rs` measures the gap to a cold rebuild).
+
+use crate::analysis::rtgpu::evaluate;
+use crate::analysis::{gpu_utilization, RtgpuOpts};
+use crate::coordinator::{AdmissionState, VirtualTask};
+use crate::model::{ClusterPlatform, CpuTopology, RtTask, TaskSet};
+use crate::sched::{ms_to_ticks, DeviceId};
+
+use super::sim::{ClusterWorkload, DeviceWorkload};
+
+/// Device-selection policy for placing one application.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Apps in decreasing GPU utilization, first admitting device wins.
+    FirstFitDecreasing,
+    /// Apps in decreasing GPU utilization, devices tried in increasing
+    /// current GPU utilization (spread / most headroom first).
+    WorstFit,
+}
+
+impl PlacementPolicy {
+    pub const ALL: [PlacementPolicy; 2] =
+        [PlacementPolicy::FirstFitDecreasing, PlacementPolicy::WorstFit];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::FirstFitDecreasing => "ffd",
+            PlacementPolicy::WorstFit => "worst-fit",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s {
+            "ffd" | "first-fit" | "first-fit-decreasing" => {
+                Some(PlacementPolicy::FirstFitDecreasing)
+            }
+            "worst" | "worst-fit" | "spread" => Some(PlacementPolicy::WorstFit),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of placing a batch of applications ([`ClusterState::place_all`]).
+#[derive(Debug, Clone)]
+pub struct PlacementReport {
+    pub policy: PlacementPolicy,
+    /// `(input index, cluster key, device)` per placed app.
+    pub placed: Vec<(usize, u64, DeviceId)>,
+    /// Input indices no device admitted (sorted).
+    pub rejected: Vec<usize>,
+}
+
+impl PlacementReport {
+    /// Every input app found a device — the fleet acceptance criterion.
+    pub fn all_placed(&self) -> bool {
+        self.rejected.is_empty()
+    }
+}
+
+/// Outcome of a device drain ([`ClusterState::drain_device`]).
+#[derive(Debug, Clone)]
+pub struct DrainOutcome {
+    /// Apps that lived on the drained device.
+    pub displaced: usize,
+    /// `(new cluster key, new device)` per successfully re-placed app.
+    pub replaced: Vec<(u64, DeviceId)>,
+    /// Apps the surviving devices could not admit.
+    pub rejected: usize,
+}
+
+/// Long-lived fleet scheduling state: one [`AdmissionState`] per device
+/// (its analysis cache stays warm across membership changes) plus the
+/// app → device routing table the serving layer consumes.
+pub struct ClusterState {
+    platform: ClusterPlatform,
+    opts: RtgpuOpts,
+    devices: Vec<AdmissionState>,
+    online: Vec<bool>,
+    /// `(cluster key, device, device-local admission key, task)` in
+    /// placement order.  The task clone is kept for drains/migrations.
+    apps: Vec<(u64, DeviceId, u64, RtTask)>,
+    next_key: u64,
+}
+
+impl ClusterState {
+    pub fn new(platform: ClusterPlatform, opts: RtgpuOpts) -> ClusterState {
+        ClusterState {
+            platform,
+            opts,
+            devices: (0..platform.devices)
+                .map(|_| AdmissionState::new(platform.device, opts))
+                .collect(),
+            online: vec![true; platform.devices],
+            apps: Vec::new(),
+            next_key: 0,
+        }
+    }
+
+    pub fn platform(&self) -> ClusterPlatform {
+        self.platform
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Placed apps across the fleet.
+    pub fn len(&self) -> usize {
+        self.apps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.apps.is_empty()
+    }
+
+    /// Apps currently placed on `dev`.
+    pub fn device_len(&self, dev: DeviceId) -> usize {
+        self.apps.iter().filter(|a| a.1 == dev).count()
+    }
+
+    /// The device owning a placed app (the serving router's lookup).
+    pub fn device_of(&self, key: u64) -> Option<DeviceId> {
+        self.apps.iter().find(|a| a.0 == key).map(|a| a.1)
+    }
+
+    /// Summed GPU utilization of the apps placed on `dev` — the
+    /// bin-packing axis.
+    pub fn device_gpu_util(&self, dev: DeviceId) -> f64 {
+        self.apps.iter().filter(|a| a.1 == dev).map(|a| gpu_utilization(&a.3)).sum()
+    }
+
+    /// Per-device GPU utilizations (balance metric for the bench).
+    pub fn gpu_utils(&self) -> Vec<f64> {
+        (0..self.n_devices()).map(|d| self.device_gpu_util(d)).collect()
+    }
+
+    /// Devices to try for a new app, in policy order (offline devices —
+    /// drained / failed — are skipped).
+    fn candidate_devices(&self, policy: PlacementPolicy) -> Vec<DeviceId> {
+        let mut devs: Vec<DeviceId> =
+            (0..self.devices.len()).filter(|&d| self.online[d]).collect();
+        if policy == PlacementPolicy::WorstFit {
+            let utils = self.gpu_utils();
+            devs.sort_by(|&a, &b| utils[a].partial_cmp(&utils[b]).unwrap().then(a.cmp(&b)));
+        }
+        devs
+    }
+
+    /// Merged whole-cluster evaluation for the shared-CPU topology: all
+    /// placed tasks in deadline order (stable, so device-major on ties —
+    /// matching `sched::merge_priority_levels`), each with its per-device
+    /// allocation.  CPU interference is exact (one host CPU is reality);
+    /// bus interference is over-counted (buses are per-device), so a pass
+    /// is sound.
+    fn merged_ok(&self) -> bool {
+        let mut entries: Vec<(RtTask, usize)> = Vec::new();
+        for state in &self.devices {
+            let (ts, alloc) = state.snapshot();
+            entries.extend(ts.tasks.into_iter().zip(alloc));
+        }
+        if entries.is_empty() {
+            return true;
+        }
+        entries.sort_by(|a, b| a.0.deadline.partial_cmp(&b.0.deadline).unwrap());
+        let alloc: Vec<usize> = entries.iter().map(|e| e.1).collect();
+        let ts = TaskSet::with_priority_order(entries.into_iter().map(|e| e.0).collect());
+        evaluate(&ts, &alloc, &self.opts).iter().all(|b| b.schedulable)
+    }
+
+    /// Place one app: try candidate devices in policy order, each
+    /// validated by that device's incremental admission (and, under a
+    /// shared CPU, the merged evaluation).  Returns the cluster key and
+    /// chosen device, or `None` when no device admits — every speculative
+    /// admission was then rolled back: the membership is exactly what it
+    /// was (per-device rejections are byte-exact no-ops; the shared-CPU
+    /// rollback re-decides the device, which keeps the same admitted set
+    /// but may legally re-balance its SM grants).
+    pub fn try_place(
+        &mut self,
+        task: &RtTask,
+        policy: PlacementPolicy,
+    ) -> Option<(u64, DeviceId)> {
+        for dev in self.candidate_devices(policy) {
+            let (local_key, decision) = self.devices[dev].add_app(task.clone());
+            if !decision.schedulable {
+                continue; // add_app already rolled itself back
+            }
+            if self.platform.cpu == CpuTopology::Shared && !self.merged_ok() {
+                self.devices[dev].remove_app(local_key);
+                continue;
+            }
+            let key = self.next_key;
+            self.next_key += 1;
+            self.apps.push((key, dev, local_key, task.clone()));
+            return Some((key, dev));
+        }
+        None
+    }
+
+    /// Place a batch, largest GPU utilization first (the "decreasing" in
+    /// both policies).  Apps no device admits are reported, not placed —
+    /// the rest of the batch still serves.
+    pub fn place_all(&mut self, tasks: &[RtTask], policy: PlacementPolicy) -> PlacementReport {
+        let mut order: Vec<usize> = (0..tasks.len()).collect();
+        order.sort_by(|&a, &b| {
+            gpu_utilization(&tasks[b])
+                .partial_cmp(&gpu_utilization(&tasks[a]))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut placed = Vec::new();
+        let mut rejected = Vec::new();
+        for idx in order {
+            match self.try_place(&tasks[idx], policy) {
+                Some((key, dev)) => placed.push((idx, key, dev)),
+                None => rejected.push(idx),
+            }
+        }
+        rejected.sort_unstable();
+        PlacementReport { policy, placed, rejected }
+    }
+
+    /// Deregister a placed app (its device re-decides for the rest).
+    pub fn remove(&mut self, key: u64) -> bool {
+        match self.apps.iter().position(|a| a.0 == key) {
+            Some(pos) => {
+                let (_, dev, local_key, _) = self.apps.remove(pos);
+                self.devices[dev].remove_app(local_key);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Device failure / maintenance drain: the device's admission state
+    /// is lost wholesale, the device goes offline, and its apps are
+    /// re-placed onto the surviving (warm) devices.  Re-admit warmth is
+    /// what `BENCH_cluster.json` measures against a cold rebuild.
+    pub fn drain_device(&mut self, dev: DeviceId, policy: PlacementPolicy) -> DrainOutcome {
+        assert!(dev < self.devices.len());
+        self.devices[dev] = AdmissionState::new(self.platform.device, self.opts);
+        self.online[dev] = false;
+        let (gone, keep): (Vec<_>, Vec<_>) =
+            std::mem::take(&mut self.apps).into_iter().partition(|a| a.1 == dev);
+        self.apps = keep;
+        let mut replaced = Vec::new();
+        let mut rejected = 0usize;
+        for (_, _, _, task) in &gone {
+            match self.try_place(task, policy) {
+                Some(pair) => replaced.push(pair),
+                None => rejected += 1,
+            }
+        }
+        DrainOutcome { displaced: gone.len(), replaced, rejected }
+    }
+
+    /// Bring a drained device back online (empty; apps placed later may
+    /// land on it again).
+    pub fn restore_device(&mut self, dev: DeviceId) {
+        self.online[dev] = true;
+    }
+
+    /// Routing inputs for [`crate::coordinator::ClusterServe`]: one entry
+    /// per placed app, device-major and in per-device deadline (priority)
+    /// order — exactly the layout of [`Self::workload`], so router app
+    /// `i` is the same job source as the workload's task at its local
+    /// index.  Returns `(route, virtual tasks)` with periods/deadlines in
+    /// ticks.
+    pub fn router(&self) -> (Vec<DeviceId>, Vec<VirtualTask>) {
+        let mut route = Vec::new();
+        let mut vtasks = Vec::new();
+        for (dev, state) in self.devices.iter().enumerate() {
+            let (ts, _) = state.snapshot();
+            for t in &ts.tasks {
+                route.push(dev);
+                vtasks.push(VirtualTask {
+                    period: ms_to_ticks(t.period),
+                    deadline: ms_to_ticks(t.deadline),
+                });
+            }
+        }
+        (route, vtasks)
+    }
+
+    /// The executable fleet workload: per-device priority-ordered task
+    /// sets with their accepted allocations, ready for
+    /// `cluster::simulate_cluster` or `ClusterServe`.
+    pub fn workload(&self) -> ClusterWorkload {
+        let devices = self
+            .devices
+            .iter()
+            .map(|s| {
+                let (ts, alloc) = s.snapshot();
+                DeviceWorkload { ts, alloc }
+            })
+            .collect();
+        ClusterWorkload::new(self.platform.cpu, devices)
+    }
+
+    /// Render a per-device fleet table.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<6} {:>7} {:>5} {:>10} {:>10}\n",
+            "device", "state", "apps", "GPU util", "SMs used"
+        ));
+        for (d, state) in self.devices.iter().enumerate() {
+            let (_, alloc) = state.snapshot();
+            out.push_str(&format!(
+                "{:<6} {:>7} {:>5} {:>10.3} {:>7}/{}\n",
+                d,
+                if self.online[d] { "online" } else { "off" },
+                self.device_len(d),
+                self.device_gpu_util(d),
+                alloc.iter().sum::<usize>(),
+                self.platform.device.gn_physical,
+            ));
+        }
+        out.push_str(&format!(
+            "{} apps on {} devices ({} CPU topology)\n",
+            self.len(),
+            self.n_devices(),
+            self.platform.cpu.name()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::{cpu_only_task, simple_task};
+
+    fn small_platform(devices: usize) -> ClusterPlatform {
+        ClusterPlatform::homogeneous(devices, 4)
+    }
+
+    #[test]
+    fn ffd_packs_first_device_before_spilling() {
+        let mut state = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        let report = state.place_all(
+            &(0..2).map(simple_task).collect::<Vec<_>>(),
+            PlacementPolicy::FirstFitDecreasing,
+        );
+        assert!(report.all_placed());
+        assert_eq!(state.device_len(0), 2, "first fit keeps filling device 0");
+        assert_eq!(state.device_len(1), 0);
+    }
+
+    #[test]
+    fn worst_fit_spreads_across_devices() {
+        let mut state = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        let report = state
+            .place_all(&(0..2).map(simple_task).collect::<Vec<_>>(), PlacementPolicy::WorstFit);
+        assert!(report.all_placed());
+        assert_eq!(state.device_len(0), 1);
+        assert_eq!(state.device_len(1), 1);
+        let utils = state.gpu_utils();
+        assert!((utils[0] - utils[1]).abs() < 1e-9, "identical apps balance exactly");
+    }
+
+    #[test]
+    fn unplaceable_app_leaves_fleet_untouched() {
+        let mut state = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        assert!(state.try_place(&simple_task(0), PlacementPolicy::FirstFitDecreasing).is_some());
+        let before = state.len();
+        let mut impossible = simple_task(1);
+        impossible.deadline = 5.0; // below its fixed demand at any gn
+        impossible.period = 5.0;
+        assert!(state.try_place(&impossible, PlacementPolicy::FirstFitDecreasing).is_none());
+        assert_eq!(state.len(), before);
+        let report = state.place_all(&[impossible], PlacementPolicy::WorstFit);
+        assert_eq!(report.rejected, vec![0]);
+        assert!(!report.all_placed());
+    }
+
+    #[test]
+    fn drain_replaces_onto_survivors() {
+        let mut state = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        let report = state
+            .place_all(&(0..2).map(simple_task).collect::<Vec<_>>(), PlacementPolicy::WorstFit);
+        assert!(report.all_placed());
+        let out = state.drain_device(0, PlacementPolicy::WorstFit);
+        assert_eq!(out.displaced, 1);
+        assert_eq!(out.rejected, 0);
+        assert_eq!(out.replaced.len(), 1);
+        assert_eq!(out.replaced[0].1, 1, "survivor device takes the displaced app");
+        assert_eq!(state.device_len(0), 0);
+        assert_eq!(state.device_len(1), 2);
+        // Offline devices take no new apps until restored.
+        let (_, dev) = state.try_place(&simple_task(7), PlacementPolicy::WorstFit).unwrap();
+        assert_eq!(dev, 1);
+        state.restore_device(0);
+        let (_, dev) = state.try_place(&simple_task(8), PlacementPolicy::WorstFit).unwrap();
+        assert_eq!(dev, 0, "restored (empty) device has the most headroom");
+    }
+
+    #[test]
+    fn workload_carries_allocations() {
+        let mut state = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        state.place_all(&(0..3).map(simple_task).collect::<Vec<_>>(), PlacementPolicy::WorstFit);
+        let wl = state.workload();
+        assert_eq!(wl.n_devices(), 2);
+        assert_eq!(wl.n_tasks(), 3);
+        for d in &wl.devices {
+            for (t, &gn) in d.ts.tasks.iter().zip(&d.alloc) {
+                assert!(t.gpu.is_empty() || gn >= 1, "GPU app placed without SMs");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_cpu_rejects_what_per_device_accepts() {
+        // Two CPU-hogs (0.7 utilization each) fit on separate devices —
+        // but not on one shared host CPU (merged utilization 1.4 > 1).
+        let hog = |id| cpu_only_task(id, 7.0, 10.0);
+        let mut per_device = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        let r = per_device.place_all(&[hog(0), hog(1)], PlacementPolicy::WorstFit);
+        assert!(r.all_placed(), "independent CPUs admit both");
+
+        let mut shared =
+            ClusterState::new(small_platform(2).with_shared_cpu(), RtgpuOpts::default());
+        assert!(shared.try_place(&hog(0), PlacementPolicy::WorstFit).is_some());
+        assert!(
+            shared.try_place(&hog(1), PlacementPolicy::WorstFit).is_none(),
+            "shared host CPU cannot hold both hogs"
+        );
+        assert_eq!(shared.len(), 1, "speculative admissions rolled back");
+    }
+
+    #[test]
+    fn router_matches_workload_layout() {
+        let mut state = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        let mut tasks: Vec<_> = (0..4).map(simple_task).collect();
+        // Distinct deadlines so the per-device priority order is visible.
+        for (i, t) in tasks.iter_mut().enumerate() {
+            t.deadline = 50.0 - i as f64;
+            t.period = 60.0;
+        }
+        state.place_all(&tasks, PlacementPolicy::WorstFit);
+        let (route, vtasks) = state.router();
+        let wl = state.workload();
+        assert_eq!(route.len(), wl.n_tasks());
+        let mut cursor = vec![0usize; wl.n_devices()];
+        for (app, &dev) in route.iter().enumerate() {
+            let t = &wl.devices[dev].ts.tasks[cursor[dev]];
+            assert_eq!(vtasks[app].deadline, crate::sched::ms_to_ticks(t.deadline));
+            assert_eq!(vtasks[app].period, crate::sched::ms_to_ticks(t.period));
+            cursor[dev] += 1;
+        }
+        // Device-major: route is non-decreasing.
+        assert!(route.windows(2).all(|w| w[0] <= w[1]));
+        // Per-device deadline-monotonic (the ClusterServe contract).
+        for dev in 0..wl.n_devices() {
+            let on_dev = route.iter().zip(&vtasks).filter(|(&d, _)| d == dev);
+            let ds: Vec<_> = on_dev.map(|(_, v)| v.deadline).collect();
+            assert!(ds.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn device_of_routes_placed_apps() {
+        let mut state = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        let (key, dev) = state.try_place(&simple_task(0), PlacementPolicy::WorstFit).unwrap();
+        assert_eq!(state.device_of(key), Some(dev));
+        assert!(state.remove(key));
+        assert_eq!(state.device_of(key), None);
+        assert!(!state.remove(key));
+    }
+}

@@ -1,0 +1,440 @@
+//! The multi-device discrete-event driver: one [`PlatformCore`] per GPU
+//! device under a **single virtual clock**.
+//!
+//! `ClusterSim` is `sim::engine` lifted to a fleet: every device owns its
+//! non-preemptive bus and federated SM pool; CPU phases run on the
+//! owning device's CPU station, or — under [`CpuTopology::Shared`] — all
+//! funnel through device 0's CPU station (the one host CPU).  The event
+//! loop mirrors `sim::engine` *exactly* (same push order at equal
+//! timestamps, same RNG draw order), so a one-device cluster replays the
+//! single-device simulator trace for trace — the G=1 anchor of
+//! `tests/cluster_parity.rs`.  `coordinator::ClusterServe`'s virtual
+//! driver mirrors this loop from the serving side; parity between the
+//! two pins the fleet model the way `tests/sched_parity.rs` pins the
+//! single-device model.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::analysis::Allocation;
+use crate::model::{CpuTopology, TaskSet};
+use crate::sched::{
+    merge_priority_levels, ms_to_ticks, route_station, ticks_to_ms, Chain, CoreEvent, DeviceId,
+    PlatformCore, Segment, TaskFifo, Tick, TraceEntry, WalkJob,
+};
+use crate::sim::{SimConfig, TaskStats};
+use crate::util::rng::Pcg;
+use crate::util::stats::Summary;
+
+/// One device's share of the cluster workload: its task subset in local
+/// priority order, and the physical SMs granted per task.
+#[derive(Debug, Clone)]
+pub struct DeviceWorkload {
+    pub ts: TaskSet,
+    pub alloc: Allocation,
+}
+
+/// The whole fleet's workload, as produced by `cluster::placement`.
+#[derive(Debug, Clone)]
+pub struct ClusterWorkload {
+    pub cpu: CpuTopology,
+    pub devices: Vec<DeviceWorkload>,
+}
+
+impl ClusterWorkload {
+    pub fn new(cpu: CpuTopology, devices: Vec<DeviceWorkload>) -> ClusterWorkload {
+        assert!(!devices.is_empty(), "cluster workload needs at least one device");
+        ClusterWorkload { cpu, devices }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Total tasks across the fleet.
+    pub fn n_tasks(&self) -> usize {
+        self.devices.iter().map(|d| d.ts.len()).sum()
+    }
+
+    /// Global priority levels per `(device, local index)`, merged from
+    /// tick-rounded deadlines (see [`merge_priority_levels`] for why the
+    /// rounding must happen before the merge).
+    pub fn levels(&self) -> Vec<Vec<usize>> {
+        let deadlines: Vec<Vec<Tick>> = self
+            .devices
+            .iter()
+            .map(|d| d.ts.tasks.iter().map(|t| ms_to_ticks(t.deadline)).collect())
+            .collect();
+        merge_priority_levels(&deadlines)
+    }
+}
+
+/// Whole-fleet outcome: per-device, per-task statistics plus the global
+/// verdict.
+#[derive(Debug, Clone)]
+pub struct ClusterSimResult {
+    /// `per_device[d][k]` — device `d`'s task `k` (local priority order).
+    pub per_device: Vec<Vec<TaskStats>>,
+    pub total_misses: usize,
+    pub events_processed: usize,
+    /// No job on any device missed its deadline during the horizon.
+    pub schedulable: bool,
+}
+
+impl ClusterSimResult {
+    /// Completed jobs across the fleet.
+    pub fn total_completed(&self) -> usize {
+        self.per_device.iter().flatten().map(|s| s.completed).sum()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EvKind {
+    Release { dev: DeviceId, task: usize },
+    JobStart { job: usize },
+    Core { core: DeviceId, ev: CoreEvent },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Ev {
+    t: Tick,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t, self.seq).cmp(&(other.t, other.seq))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Simulate the fleet workload under one virtual clock.
+pub fn simulate_cluster(wl: &ClusterWorkload, cfg: &SimConfig) -> ClusterSimResult {
+    simulate_cluster_impl(wl, cfg, false).0
+}
+
+/// Like [`simulate_cluster`], but also returns one platform trace per
+/// device core for cross-driver parity checks (under a shared CPU, CPU
+/// phase completions of every device land in core 0's trace).
+pub fn simulate_cluster_traced(
+    wl: &ClusterWorkload,
+    cfg: &SimConfig,
+) -> (ClusterSimResult, Vec<Vec<TraceEntry>>) {
+    simulate_cluster_impl(wl, cfg, true)
+}
+
+fn simulate_cluster_impl(
+    wl: &ClusterWorkload,
+    cfg: &SimConfig,
+    trace: bool,
+) -> (ClusterSimResult, Vec<Vec<TraceEntry>>) {
+    let n_dev = wl.devices.len();
+    assert!(n_dev >= 1, "empty cluster");
+    for d in &wl.devices {
+        assert_eq!(d.alloc.len(), d.ts.len());
+        if !d.ts.is_empty() {
+            d.ts.validate().expect("invalid device task set");
+        }
+        for (t, &gn) in d.ts.tasks.iter().zip(&d.alloc) {
+            assert!(t.gpu.is_empty() || gn >= 1, "GPU task with zero SMs");
+        }
+    }
+
+    let max_period = wl
+        .devices
+        .iter()
+        .flat_map(|d| d.ts.tasks.iter())
+        .map(|t| t.period)
+        .fold(0.0, f64::max);
+    let horizon_ms = if cfg.horizon_ms > 0.0 { cfg.horizon_ms } else { 20.0 * max_period };
+    let horizon = ms_to_ticks(horizon_ms);
+    let mut rng = Pcg::new(cfg.seed);
+    let levels = wl.levels();
+
+    let mut cores: Vec<PlatformCore> = (0..n_dev)
+        .map(|_| if trace { PlatformCore::with_trace() } else { PlatformCore::new() })
+        .collect();
+    let mut fifos: Vec<TaskFifo> = wl.devices.iter().map(|d| TaskFifo::new(d.ts.len())).collect();
+    let mut jobs: Vec<WalkJob> = Vec::new();
+    let mut job_dev: Vec<DeviceId> = Vec::new();
+
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, t: Tick, kind: EvKind| {
+        *seq += 1;
+        heap.push(Reverse(Ev { t, seq: *seq, kind }));
+    };
+
+    // Initial releases, device-major (ClusterServe's virtual driver must
+    // seed its heap in the same order or same-instant pops diverge).
+    for (dev, d) in wl.devices.iter().enumerate() {
+        for task in 0..d.ts.len() {
+            push(&mut heap, &mut seq, 0, EvKind::Release { dev, task });
+        }
+    }
+
+    let mut total_misses = 0usize;
+    let mut events = 0usize;
+    let mut stop = false;
+    let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
+
+    // Enter job `j`'s next phase on the serving core — the shared-CPU
+    // topology funnels CPU phases to device 0 — or finish it on its own
+    // device's core (deadline bookkeeping + task-FIFO successor).
+    macro_rules! start_next {
+        ($now:expr, $job:expr) => {{
+            let j = $job;
+            let dev = job_dev[j];
+            let core = if jobs[j].next_phase == jobs[j].chain.len() {
+                dev
+            } else {
+                route_station(wl.cpu, dev, jobs[j].chain.phase(jobs[j].next_phase).station())
+            };
+            let finished = cores[core].start_phase(&mut jobs, j, $now, &mut timers);
+            for (t, cev) in timers.drain(..) {
+                push(&mut heap, &mut seq, t, EvKind::Core { core, ev: cev });
+            }
+            if finished {
+                if $now > jobs[j].deadline {
+                    total_misses += 1;
+                    if cfg.stop_on_first_miss {
+                        stop = true;
+                    }
+                }
+                if let Some(next) = fifos[dev].on_job_done(jobs[j].task) {
+                    push(&mut heap, &mut seq, $now, EvKind::JobStart { job: next });
+                }
+            }
+        }};
+    }
+
+    while let Some(Reverse(ev)) = heap.pop() {
+        if stop {
+            break;
+        }
+        events += 1;
+        let now = ev.t;
+        match ev.kind {
+            EvKind::Release { dev, task } => {
+                if now >= horizon {
+                    continue;
+                }
+                let d = &wl.devices[dev];
+                let t = &d.ts.tasks[task];
+                let chain = Chain::from_task(t, |seg| match seg {
+                    Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
+                    Segment::Gpu(g) => ms_to_ticks(cfg.exec.draw_gpu(
+                        &mut rng,
+                        g,
+                        d.alloc[task].max(1),
+                        cfg.sm_model,
+                    )),
+                });
+                let job_id = jobs.len();
+                jobs.push(WalkJob::new(
+                    task,
+                    levels[dev][task],
+                    now,
+                    now + ms_to_ticks(t.deadline),
+                    chain,
+                ));
+                job_dev.push(dev);
+                if let Some(start) = fifos[dev].on_release(task, job_id) {
+                    push(&mut heap, &mut seq, now, EvKind::JobStart { job: start });
+                }
+                push(
+                    &mut heap,
+                    &mut seq,
+                    now + ms_to_ticks(t.period),
+                    EvKind::Release { dev, task },
+                );
+            }
+            EvKind::JobStart { job } => {
+                start_next!(now, job);
+            }
+            EvKind::Core { core, ev: cev } => {
+                let station = cev.station();
+                if let Some(j) = cores[core].on_event(&mut jobs, cev, now) {
+                    start_next!(now, j);
+                    cores[core].redispatch(station, &mut jobs, now, &mut timers);
+                    for (t, cev2) in timers.drain(..) {
+                        push(&mut heap, &mut seq, t, EvKind::Core { core, ev: cev2 });
+                    }
+                }
+            }
+        }
+    }
+
+    // Collect per-device statistics (same rules as the single-device
+    // simulator: unfinished jobs count as misses only when the run was
+    // not cut short and their deadline fell inside the horizon).
+    let mut per_device: Vec<Vec<TaskStats>> = wl
+        .devices
+        .iter()
+        .map(|d| {
+            (0..d.ts.len())
+                .map(|_| TaskStats {
+                    released: 0,
+                    completed: 0,
+                    misses: 0,
+                    response: None,
+                    max_response_ms: 0.0,
+                })
+                .collect()
+        })
+        .collect();
+    let mut responses: Vec<Vec<Vec<f64>>> =
+        wl.devices.iter().map(|d| vec![Vec::new(); d.ts.len()]).collect();
+    let mut misses_check = 0usize;
+    for (j, job) in jobs.iter().enumerate() {
+        let dev = job_dev[j];
+        let s = &mut per_device[dev][job.task];
+        s.released += 1;
+        match job.done {
+            Some(done) => {
+                s.completed += 1;
+                let resp = ticks_to_ms(done - job.release);
+                responses[dev][job.task].push(resp);
+                s.max_response_ms = s.max_response_ms.max(resp);
+                if done > job.deadline {
+                    s.misses += 1;
+                    misses_check += 1;
+                }
+            }
+            None => {
+                if !stop && horizon > job.deadline {
+                    s.misses += 1;
+                    misses_check += 1;
+                }
+            }
+        }
+    }
+    let total = if cfg.stop_on_first_miss { total_misses.max(misses_check) } else { misses_check };
+    for (dev, per_task) in responses.iter().enumerate() {
+        for (task, rs) in per_task.iter().enumerate() {
+            per_device[dev][task].response = Summary::of(rs);
+        }
+    }
+    let traces = cores.iter_mut().map(PlatformCore::take_trace).collect();
+    (
+        ClusterSimResult {
+            per_device,
+            total_misses: total,
+            events_processed: events,
+            schedulable: total == 0,
+        },
+        traces,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::simple_task;
+    use crate::sim::simulate;
+
+    fn wcet_cfg() -> SimConfig {
+        SimConfig { horizon_ms: 300.0, ..SimConfig::acceptance(7) }
+    }
+
+    fn one_device(n: usize) -> ClusterWorkload {
+        let ts = TaskSet::with_priority_order((0..n).map(simple_task).collect());
+        let alloc = vec![1; n];
+        ClusterWorkload::new(CpuTopology::PerDevice, vec![DeviceWorkload { ts, alloc }])
+    }
+
+    #[test]
+    fn single_device_cluster_matches_flat_sim() {
+        let wl = one_device(2);
+        let cfg = wcet_cfg();
+        let flat = simulate(&wl.devices[0].ts, &wl.devices[0].alloc, &cfg);
+        let fleet = simulate_cluster(&wl, &cfg);
+        assert_eq!(fleet.events_processed, flat.events_processed);
+        assert_eq!(fleet.total_misses, flat.total_misses);
+        for (a, b) in fleet.per_device[0].iter().zip(&flat.per_task) {
+            assert_eq!(a.released, b.released);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.max_response_ms, b.max_response_ms);
+        }
+    }
+
+    #[test]
+    fn independent_devices_do_not_interfere() {
+        // Two devices each running the single-task workload complete with
+        // the same isolated response as one device running it alone.
+        let ts = || TaskSet::with_priority_order(vec![simple_task(0)]);
+        let wl = ClusterWorkload::new(
+            CpuTopology::PerDevice,
+            vec![
+                DeviceWorkload { ts: ts(), alloc: vec![1] },
+                DeviceWorkload { ts: ts(), alloc: vec![1] },
+            ],
+        );
+        let r = simulate_cluster(&wl, &wcet_cfg());
+        assert!(r.schedulable);
+        // Isolated chain sum (see sim::engine tests): 13.68 ms.
+        for dev in &r.per_device {
+            assert!((dev[0].max_response_ms - 13.68).abs() < 1e-6, "{}", dev[0].max_response_ms);
+        }
+    }
+
+    #[test]
+    fn shared_cpu_serialises_across_devices() {
+        // Same two-device workload, but one host CPU: the devices' CPU
+        // segments now contend, so at least one device's response must
+        // exceed its isolated 13.68 ms.
+        let ts = || TaskSet::with_priority_order(vec![simple_task(0)]);
+        let wl = ClusterWorkload::new(
+            CpuTopology::Shared,
+            vec![
+                DeviceWorkload { ts: ts(), alloc: vec![1] },
+                DeviceWorkload { ts: ts(), alloc: vec![1] },
+            ],
+        );
+        let r = simulate_cluster(&wl, &wcet_cfg());
+        let worst = r.per_device.iter().map(|d| d[0].max_response_ms).fold(0.0, f64::max);
+        assert!(worst > 13.68 + 1e-9, "shared CPU showed no contention: {worst}");
+    }
+
+    #[test]
+    fn empty_device_is_tolerated() {
+        let busy = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let idle = TaskSet::with_priority_order(vec![]);
+        let wl = ClusterWorkload::new(
+            CpuTopology::PerDevice,
+            vec![
+                DeviceWorkload { ts: busy, alloc: vec![1] },
+                DeviceWorkload { ts: idle, alloc: vec![] },
+            ],
+        );
+        let r = simulate_cluster(&wl, &wcet_cfg());
+        assert!(r.schedulable);
+        assert!(r.per_device[1].is_empty());
+        assert!(r.total_completed() > 0);
+    }
+
+    #[test]
+    fn levels_merge_across_devices() {
+        let mut a = simple_task(0);
+        a.deadline = 10.0;
+        a.period = 10.0;
+        let mut b = simple_task(0);
+        b.deadline = 20.0;
+        b.period = 20.0;
+        let wl = ClusterWorkload::new(
+            CpuTopology::Shared,
+            vec![
+                DeviceWorkload { ts: TaskSet::with_priority_order(vec![b]), alloc: vec![1] },
+                DeviceWorkload { ts: TaskSet::with_priority_order(vec![a]), alloc: vec![1] },
+            ],
+        );
+        assert_eq!(wl.levels(), vec![vec![1], vec![0]]);
+        assert_eq!(wl.n_tasks(), 2);
+        assert_eq!(wl.n_devices(), 2);
+    }
+}

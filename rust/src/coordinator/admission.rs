@@ -258,24 +258,43 @@ impl AdmissionState {
         self.current.get(&key).copied()
     }
 
+    /// The registered set in priority (deadline-monotonic) order together
+    /// with its currently accepted allocation (0 for an app with no grant
+    /// yet).  Task `id`s are the stable app keys.  This is what the
+    /// cluster layer feeds to `ClusterSim` / merged evaluation per device.
+    pub fn snapshot(&self) -> (TaskSet, Vec<usize>) {
+        let ts =
+            TaskSet::new_deadline_monotonic(self.apps.iter().map(|(_, t)| t.clone()).collect());
+        let alloc = ts
+            .tasks
+            .iter()
+            .map(|t| self.current.get(&(t.id as u64)).copied().unwrap_or(0))
+            .collect();
+        (ts, alloc)
+    }
+
     fn live_keys(&self) -> Vec<u64> {
         self.apps.iter().map(|(k, _)| *k).collect()
     }
 
     /// Register a task and re-decide admission.  Returns the app's stable
     /// key and the decision; on rejection the task is rolled back and the
-    /// previous admitted set stays in force.
+    /// previous admitted set — including the cached analysis contexts —
+    /// stays exactly as it was (the speculative decision may have cached
+    /// contexts for *surviving* tasks at allocations the search visited;
+    /// those are dropped too, so a rejected add is a true no-op).
     pub fn add_app(&mut self, mut task: RtTask) -> (u64, AdmissionDecision) {
         let key = self.next_key;
         self.next_key += 1;
         task.id = key as usize;
+        let cache_snapshot = self.cache.entry_keys();
         self.apps.push((key, task));
         let decision = self.decide();
         if decision.schedulable {
             self.apply(&decision);
         } else {
             self.apps.pop();
-            self.cache.retain_keys(&self.live_keys());
+            self.cache.retain_entries(&cache_snapshot);
         }
         (key, decision)
     }

@@ -1,0 +1,297 @@
+//! The fleet serving router: arriving requests dispatch to the owning
+//! device's serve loop.
+//!
+//! [`ClusterServe`] owns the app → device routing table a placement
+//! produced (`cluster::ClusterState` hands it over as a plain vector, so
+//! the router stays decoupled from how placement decided).  Serving a
+//! fleet is then `G` independent single-device loops — the shape of
+//! [`super::serve`] — fed by one router; only a shared host CPU couples
+//! them.
+//!
+//! [`ClusterServe::serve_virtual`] is the whole arrangement with threads
+//! and wall-clock time stripped away: a deterministic single-threaded
+//! walk of one [`PlatformCore`] per device under a single virtual clock,
+//! releases routed to the owning device exactly like
+//! `cluster::simulate_cluster` routes them.  `tests/cluster_parity.rs`
+//! pins the two drivers' traces to each other — the fleet model cannot
+//! fork between the simulator and the serving path, extending the
+//! single-device guarantee of `tests/sched_parity.rs`.
+//!
+//! A production wall-clock deployment runs one [`super::serve`] loop per
+//! device (each engine stays on its own host thread exactly as the
+//! single-device topology requires); the router's `device_of` is the
+//! dispatch decision those loops share.
+
+use crate::model::CpuTopology;
+use crate::sched::{
+    merge_priority_levels, route_station, Chain, CoreEvent, DeviceId, PlatformCore, TaskFifo,
+    Tick, TraceEntry, WalkJob,
+};
+
+use super::serve::VirtualTask;
+
+/// Request router for a placed fleet.
+#[derive(Debug, Clone)]
+pub struct ClusterServe {
+    cpu: CpuTopology,
+    /// Device owning each app (index = global app id).
+    route: Vec<DeviceId>,
+    /// Per device: its apps (global ids) in local priority order.
+    local: Vec<Vec<usize>>,
+    /// Per app: its local index on its device.
+    local_idx: Vec<usize>,
+}
+
+impl ClusterServe {
+    /// Build the router from an app → device table (`route[app]` is the
+    /// owning device).  Per-device local order is app-id order and
+    /// **defines each device's priority order** — it must be
+    /// deadline-monotonic, the order per-device admission analyzed.
+    /// `cluster::ClusterState::router()` produces exactly this layout;
+    /// [`Self::serve_virtual`] rejects violations loudly.
+    pub fn new(cpu: CpuTopology, route: Vec<DeviceId>, n_devices: usize) -> ClusterServe {
+        assert!(n_devices >= 1, "router needs at least one device");
+        let mut local: Vec<Vec<usize>> = vec![Vec::new(); n_devices];
+        let mut local_idx = vec![0usize; route.len()];
+        for (app, &dev) in route.iter().enumerate() {
+            assert!(dev < n_devices, "app {app} routed to unknown device {dev}");
+            local_idx[app] = local[dev].len();
+            local[dev].push(app);
+        }
+        ClusterServe { cpu, route, local, local_idx }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.local.len()
+    }
+
+    pub fn n_apps(&self) -> usize {
+        self.route.len()
+    }
+
+    /// The dispatch decision: which device serves this app's requests.
+    pub fn device_of(&self, app: usize) -> DeviceId {
+        self.route[app]
+    }
+
+    /// Apps owned by `dev`, in local priority order.
+    pub fn apps_on(&self, dev: DeviceId) -> &[usize] {
+        &self.local[dev]
+    }
+
+    /// Deterministic virtual-time counterpart of the fleet serving path:
+    /// periodic releases of app `a` (at `0, T_a, 2T_a, …` strictly before
+    /// `horizon`) are routed to the owning device's stations and run to
+    /// completion through one shared-core chain-walker per device.
+    /// Returns one platform trace per device core, directly comparable to
+    /// [`crate::cluster::simulate_cluster_traced`]'s.
+    pub fn serve_virtual(
+        &self,
+        tasks: &[VirtualTask],
+        horizon: Tick,
+        mut chain_for: impl FnMut(usize) -> Chain,
+    ) -> Vec<Vec<TraceEntry>> {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        assert_eq!(tasks.len(), self.route.len(), "one VirtualTask per routed app");
+        let n_dev = self.n_devices();
+        // Per-device app order is the priority order the admission
+        // analysis assumed — a non-monotone order would silently
+        // misprioritize (and fork from ClusterSim), so fail loudly.
+        for apps in &self.local {
+            for w in apps.windows(2) {
+                assert!(
+                    tasks[w[0]].deadline <= tasks[w[1]].deadline,
+                    "per-device app order must be deadline-monotonic \
+                     (apps {} then {}) — see ClusterState::router()",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+        // Global priority levels from tick deadlines, merged exactly as
+        // the cluster simulator merges them.
+        let deadlines: Vec<Vec<Tick>> = self
+            .local
+            .iter()
+            .map(|apps| apps.iter().map(|&a| tasks[a].deadline).collect())
+            .collect();
+        let levels = merge_priority_levels(&deadlines);
+
+        let mut cores: Vec<PlatformCore> =
+            (0..n_dev).map(|_| PlatformCore::with_trace()).collect();
+        let mut fifos: Vec<TaskFifo> =
+            self.local.iter().map(|apps| TaskFifo::new(apps.len())).collect();
+        let mut jobs: Vec<WalkJob> = Vec::new();
+        let mut job_dev: Vec<DeviceId> = Vec::new();
+
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+        enum VEv {
+            Release(usize),
+            Start(usize),
+            Core(CoreEvent),
+        }
+
+        // Heap entries order by (t, seq); the VEv itself never decides.
+        let mut heap: BinaryHeap<Reverse<(Tick, u64, DeviceId, VEv)>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let push =
+            |heap: &mut BinaryHeap<Reverse<(Tick, u64, DeviceId, VEv)>>,
+             seq: &mut u64,
+             t: Tick,
+             core: DeviceId,
+             ev: VEv| {
+                *seq += 1;
+                heap.push(Reverse((t, *seq, core, ev)));
+            };
+
+        // Seed releases device-major — the same order the cluster
+        // simulator seeds its heap, so same-instant pops agree.
+        for (dev, apps) in self.local.iter().enumerate() {
+            for &app in apps {
+                push(&mut heap, &mut seq, 0, dev, VEv::Release(app));
+            }
+        }
+
+        let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
+
+        macro_rules! start_next {
+            ($now:expr, $job:expr) => {{
+                let j = $job;
+                let dev = job_dev[j];
+                let core = if jobs[j].next_phase == jobs[j].chain.len() {
+                    dev
+                } else {
+                    route_station(
+                        self.cpu,
+                        dev,
+                        jobs[j].chain.phase(jobs[j].next_phase).station(),
+                    )
+                };
+                let finished = cores[core].start_phase(&mut jobs, j, $now, &mut timers);
+                for (t, cev) in timers.drain(..) {
+                    push(&mut heap, &mut seq, t, core, VEv::Core(cev));
+                }
+                if finished {
+                    if let Some(next) = fifos[dev].on_job_done(jobs[j].task) {
+                        push(&mut heap, &mut seq, $now, dev, VEv::Start(next));
+                    }
+                }
+            }};
+        }
+
+        while let Some(Reverse((now, _, core, ev))) = heap.pop() {
+            match ev {
+                VEv::Release(app) => {
+                    if now >= horizon {
+                        continue;
+                    }
+                    let dev = self.route[app];
+                    let task = self.local_idx[app];
+                    let job_id = jobs.len();
+                    jobs.push(WalkJob::new(
+                        task,
+                        levels[dev][task],
+                        now,
+                        now + tasks[app].deadline,
+                        chain_for(app),
+                    ));
+                    job_dev.push(dev);
+                    if let Some(start) = fifos[dev].on_release(task, job_id) {
+                        push(&mut heap, &mut seq, now, dev, VEv::Start(start));
+                    }
+                    push(&mut heap, &mut seq, now + tasks[app].period, dev, VEv::Release(app));
+                }
+                VEv::Start(job) => {
+                    start_next!(now, job);
+                }
+                VEv::Core(cev) => {
+                    let station = cev.station();
+                    if let Some(j) = cores[core].on_event(&mut jobs, cev, now) {
+                        start_next!(now, j);
+                        cores[core].redispatch(station, &mut jobs, now, &mut timers);
+                        for (t, cev2) in timers.drain(..) {
+                            push(&mut heap, &mut seq, t, core, VEv::Core(cev2));
+                        }
+                    }
+                }
+            }
+        }
+
+        cores.iter_mut().map(PlatformCore::take_trace).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Phase, TraceEvent};
+
+    #[test]
+    fn router_partitions_apps() {
+        let r = ClusterServe::new(CpuTopology::PerDevice, vec![0, 1, 0, 1], 2);
+        assert_eq!(r.n_devices(), 2);
+        assert_eq!(r.n_apps(), 4);
+        assert_eq!(r.device_of(2), 0);
+        assert_eq!(r.apps_on(0), &[0, 2]);
+        assert_eq!(r.apps_on(1), &[1, 3]);
+    }
+
+    #[test]
+    fn virtual_fleet_walks_devices_independently() {
+        // Two identical single-app devices: both traces are the isolated
+        // five-phase walk, finishing at the same instant.
+        let r = ClusterServe::new(CpuTopology::PerDevice, vec![0, 1], 2);
+        let tasks = [
+            VirtualTask { period: 1000, deadline: 1000 },
+            VirtualTask { period: 1000, deadline: 1000 },
+        ];
+        let traces = r.serve_virtual(&tasks, 1, |_| Chain::five_phase(10, 20, 30, 40, 50));
+        assert_eq!(traces.len(), 2);
+        for trace in &traces {
+            let events: Vec<TraceEvent> = trace.iter().map(|e| e.event).collect();
+            assert_eq!(
+                events,
+                vec![
+                    TraceEvent::PhaseDone(Phase::Cpu(0)),
+                    TraceEvent::PhaseDone(Phase::H2d(0)),
+                    TraceEvent::PhaseDone(Phase::Gpu(0)),
+                    TraceEvent::PhaseDone(Phase::D2h(0)),
+                    TraceEvent::PhaseDone(Phase::Cpu(1)),
+                    TraceEvent::JobDone,
+                ]
+            );
+            assert_eq!(trace.last().unwrap().t, 150);
+        }
+    }
+
+    #[test]
+    fn shared_cpu_funnels_cpu_phases_to_core_zero() {
+        let r = ClusterServe::new(CpuTopology::Shared, vec![0, 1], 2);
+        let tasks = [
+            VirtualTask { period: 1000, deadline: 1000 },
+            VirtualTask { period: 1000, deadline: 1000 },
+        ];
+        let traces = r.serve_virtual(&tasks, 1, |_| Chain::five_phase(10, 20, 30, 40, 50));
+        // Device 1's CPU phases were recorded by core 0; its own core
+        // only saw bus/GPU phases and the job completion.
+        let cpu_on_core0 = traces[0]
+            .iter()
+            .filter(|e| matches!(e.event, TraceEvent::PhaseDone(Phase::Cpu(_))))
+            .count();
+        assert_eq!(cpu_on_core0, 4, "both devices' pre+post run on the shared CPU");
+        assert!(traces[1]
+            .iter()
+            .all(|e| !matches!(e.event, TraceEvent::PhaseDone(Phase::Cpu(_)))));
+        // The shared CPU serialises both devices' CPU work.  Device 1's
+        // Pre runs [10,20), so its chain trails device 0 by 10 ticks up
+        // to its Post (ready at 110) — which must then wait behind
+        // device 0's higher-priority Post [100,150) and runs [150,200).
+        let done: Vec<Tick> = traces
+            .iter()
+            .map(|t| t.iter().find(|e| e.event == TraceEvent::JobDone).unwrap().t)
+            .collect();
+        assert_eq!(done, vec![150, 200]);
+    }
+}

@@ -23,6 +23,16 @@ impl AppStats {
     pub fn latency_summary(&self) -> Option<Summary> {
         Summary::of(&self.latencies_ms)
     }
+
+    /// Fraction of completed jobs that missed their deadline (0.0 when
+    /// nothing completed yet).
+    pub fn miss_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.completed as f64
+        }
+    }
 }
 
 /// Whole-run serving report.
@@ -41,27 +51,36 @@ impl ServeReport {
         self.per_app.iter().map(|a| a.misses).sum()
     }
 
-    /// Requests per second across all applications.
+    /// Requests per second across all applications.  A run that never
+    /// accumulated wall time (e.g. a zero-duration config or a report
+    /// built before serving started) reports 0.0 instead of NaN/inf.
     pub fn throughput(&self) -> f64 {
-        self.total_completed() as f64 / self.wall.as_secs_f64()
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.total_completed() as f64 / secs
+        } else {
+            0.0
+        }
     }
 
     /// Render the latency/deadline table the serving example prints.
     pub fn table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<14} {:>5} {:>5} {:>6} {:>9} {:>9} {:>9} {:>9} {:>8}\n",
-            "app", "rel", "done", "miss", "p50(ms)", "p95(ms)", "max(ms)", "D(ms)", "gpu(ms)"
+            "{:<14} {:>5} {:>5} {:>6} {:>7} {:>9} {:>9} {:>9} {:>9} {:>8}\n",
+            "app", "rel", "done", "miss", "miss%", "p50(ms)", "p95(ms)", "max(ms)", "D(ms)",
+            "gpu(ms)"
         ));
         for a in &self.per_app {
             let s = a.latency_summary();
             let gpu = Summary::of(&a.gpu_ms);
             out.push_str(&format!(
-                "{:<14} {:>5} {:>5} {:>6} {:>9} {:>9} {:>9} {:>9.2} {:>8}\n",
+                "{:<14} {:>5} {:>5} {:>6} {:>6.1}% {:>9} {:>9} {:>9} {:>9.2} {:>8}\n",
                 a.name,
                 a.released,
                 a.completed,
                 a.misses,
+                a.miss_rate() * 100.0,
                 s.map_or("-".into(), |s| format!("{:.2}", s.p50)),
                 s.map_or("-".into(), |s| format!("{:.2}", s.p95)),
                 s.map_or("-".into(), |s| format!("{:.2}", s.max)),
@@ -112,7 +131,32 @@ mod tests {
         assert_eq!(report.total_completed(), 14);
         assert_eq!(report.total_misses(), 1);
         assert!((report.throughput() - 7.0).abs() < 1e-9);
+        // Per-app miss rate: 1/9 for "a", 0 for "b".
+        assert!((report.per_app[0].miss_rate() - 1.0 / 9.0).abs() < 1e-12);
+        assert_eq!(report.per_app[1].miss_rate(), 0.0);
         let table = report.table();
         assert!(table.contains("a") && table.contains("b"));
+        assert!(table.contains("miss%"), "table lists the per-app miss rate");
+    }
+
+    #[test]
+    fn zero_wall_throughput_is_finite() {
+        let empty = ServeReport { per_app: vec![], wall: Duration::ZERO };
+        assert_eq!(empty.throughput(), 0.0);
+        let some = ServeReport {
+            per_app: vec![AppStats {
+                name: "a".into(),
+                released: 1,
+                completed: 1,
+                misses: 0,
+                latencies_ms: vec![1.0],
+                gpu_ms: vec![],
+                deadline_ms: 10.0,
+            }],
+            wall: Duration::ZERO,
+        };
+        // completed > 0 over zero wall must not be inf either.
+        assert_eq!(some.throughput(), 0.0);
+        assert!(some.table().contains("req/s"));
     }
 }

@@ -21,6 +21,11 @@
 //!    artifact **pinned to its admitted virtual-SM range** via PJRT.
 //! 4. **Metrics** — per-task response times, deadline misses and
 //!    throughput, reported on drain.
+//! 5. **Fleet routing** ([`cluster_serve`]) — for multi-GPU deployments,
+//!    [`ClusterServe`] dispatches arriving requests to the owning
+//!    device's serve loop (placement decided ownership — see
+//!    `crate::cluster`), with a deterministic virtual mode pinned to the
+//!    fleet simulator in `tests/cluster_parity.rs`.
 //!
 //! Implementation notes (deviations documented in DESIGN.md §4): CPU
 //! segments are dispatched non-preemptively (real threads cannot be
@@ -33,6 +38,7 @@
 
 pub mod admission;
 pub mod app;
+pub mod cluster_serve;
 pub mod metrics;
 pub mod serve;
 
@@ -40,5 +46,6 @@ pub use admission::{
     admit, AdmissionDecision, AdmissionPath, AdmissionReport, AdmissionState, TaskAdmission,
 };
 pub use app::{AppSpec, GpuProfile};
+pub use cluster_serve::ClusterServe;
 pub use metrics::ServeReport;
 pub use serve::{serve, serve_virtual, ServeConfig, VirtualTask};

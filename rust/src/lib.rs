@@ -31,12 +31,17 @@
 //!   analysis (batch and incremental — DESIGN.md §5), federated
 //!   virtual-SM allocation, fixed-priority CPU/bus queues, per-task
 //!   release timers and metrics.
+//! * [`cluster`] — multi-GPU fleet scheduling: placement over per-device
+//!   admission, and the fleet simulator (`ClusterSim`) running one
+//!   platform core per device under a single virtual clock (DESIGN.md
+//!   §8).
 //! * [`harness`] — regeneration of every evaluation figure (Figs 4–14).
 //! * [`util`] — self-contained substrates (JSON, RNG, CLI, bench,
 //!   property-test helpers) — the offline build environment has no
 //!   serde/rand/clap/criterion/proptest.
 
 pub mod analysis;
+pub mod cluster;
 pub mod coordinator;
 pub mod gen;
 pub mod harness;

@@ -15,22 +15,27 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use rtgpu::analysis::{analyze, Approach, Search};
+use rtgpu::analysis::{analyze, Approach, RtgpuOpts, Search};
+use rtgpu::cluster::{simulate_cluster, ClusterState, PlacementPolicy};
 use rtgpu::coordinator::{admit, serve, AppSpec, ServeConfig};
 use rtgpu::gen::{generate_taskset, GenConfig};
 use rtgpu::harness::chart::{results_dir, table, write_csv};
 use rtgpu::harness::sweep::{run_sweep, to_series, SweepSpec};
 use rtgpu::harness::throughput::throughput_gain;
 use rtgpu::harness::validate::{run_validation, TimeModel};
-use rtgpu::model::{KernelClass, Platform};
+use rtgpu::model::{ClusterPlatform, KernelClass, Platform};
 use rtgpu::runtime::{artifact_dir, Engine};
+use rtgpu::sim::SimConfig;
 use rtgpu::util::cli::{exit_usage, Args, CliError};
 use rtgpu::util::rng::Pcg;
 
-const USAGE: &str = "usage: rtgpu <serve|admit|sweep|validate|throughput> [--flags]\n\
+const USAGE: &str = "usage: rtgpu <serve|admit|cluster|sweep|validate|throughput> [--flags]\n\
   serve      [--seconds S] [--sms GN] [--full-artifacts]   serve real kernels\n\
   admit      [--util U] [--tasks N] [--subtasks M]\n\
              [--sms GN] [--seed S]                         analyze a random set\n\
+  cluster    [--devices G] [--sms GN] [--util U] [--tasks N]\n\
+             [--subtasks M] [--policy ffd|worst-fit]\n\
+             [--shared-cpu] [--seed S]                     place + run a fleet\n\
   sweep      [--figure 8|9|10|11] [--sets K] [--seed S]    acceptance curves\n\
   validate   [--model wcet|avg] [--sets K] [--seed S]\n\
              [--sms A,B,C]                                 Figs. 12/13\n\
@@ -41,6 +46,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("admit") => cmd_admit(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("validate") => cmd_validate(&args),
         Some("throughput") => cmd_throughput(&args),
@@ -119,6 +125,68 @@ fn cmd_admit(args: &Args) -> Result<()> {
             ap.name(),
             v.schedulable,
             v.allocation.as_deref().unwrap_or(&[])
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let devices = args.usize_or("devices", 4)?;
+    let gn = args.usize_or("sms", 10)?;
+    let util = args.f64_or("util", 2.0)?;
+    let cfg = GenConfig::default()
+        .with_tasks(args.usize_or("tasks", 8)?)
+        .with_subtasks(args.usize_or("subtasks", 5)?);
+    let policy = PlacementPolicy::parse(args.str_or("policy", "worst-fit"))
+        .ok_or_else(|| CliError("--policy expects ffd or worst-fit".into()))?;
+    let shared = args.flag("shared-cpu");
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
+
+    let mut platform = ClusterPlatform::homogeneous(devices, gn);
+    if shared {
+        platform = platform.with_shared_cpu();
+    }
+    let ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
+    println!(
+        "fleet: {} × {}-SM devices ({} CPU); {} apps at total utilization {:.3}",
+        devices,
+        gn,
+        platform.cpu.name(),
+        ts.len(),
+        ts.total_utilization()
+    );
+
+    let mut state = ClusterState::new(platform, RtgpuOpts::default());
+    let report = state.place_all(&ts.tasks, policy);
+    print!("{}", state.table());
+    if !report.all_placed() {
+        println!(
+            "placement ({}) rejected {} of {} apps: {:?}",
+            policy.name(),
+            report.rejected.len(),
+            ts.len(),
+            report.rejected
+        );
+        anyhow::bail!("fleet admission rejected the application set");
+    }
+    println!("placement ({}) admitted all {} apps", policy.name(), ts.len());
+
+    let sim = simulate_cluster(&state.workload(), &SimConfig::acceptance(seed));
+    println!(
+        "fleet run: {} jobs completed, {} deadline misses ({} events) → {}",
+        sim.total_completed(),
+        sim.total_misses,
+        sim.events_processed,
+        if sim.schedulable { "schedulable" } else { "MISSED DEADLINES" }
+    );
+    for (d, per_task) in sim.per_device.iter().enumerate() {
+        let max = per_task.iter().map(|s| s.max_response_ms).fold(0.0, f64::max);
+        println!(
+            "  device {d}: {} apps, max response {:.2} ms, GPU util {:.3}",
+            per_task.len(),
+            max,
+            state.device_gpu_util(d)
         );
     }
     Ok(())

@@ -260,6 +260,69 @@ impl Platform {
     }
 }
 
+/// Where CPU segments execute in a multi-device deployment (the cluster
+/// layer, DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CpuTopology {
+    /// Every device ships its own host CPU: per-device Algorithm 2 is
+    /// independent, so placement composes soundly device by device.
+    PerDevice,
+    /// One host CPU drives all devices: CPU segments of every placed
+    /// application contend on it, so admission must additionally pass a
+    /// merged (whole-cluster) evaluation.
+    Shared,
+}
+
+impl CpuTopology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CpuTopology::PerDevice => "per-device",
+            CpuTopology::Shared => "shared",
+        }
+    }
+}
+
+/// A fleet of `devices` identical GPUs, each its own [`Platform`] — its
+/// own non-preemptive copy bus and federated SM pool.  The host CPU is
+/// either per-device or shared across the fleet ([`CpuTopology`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterPlatform {
+    /// Number of GPU devices `G ≥ 1`.
+    pub devices: usize,
+    /// The per-device platform (homogeneous fleet).
+    pub device: Platform,
+    pub cpu: CpuTopology,
+}
+
+impl ClusterPlatform {
+    /// A homogeneous `G`-device fleet with per-device CPUs (the sound
+    /// default for placement, DESIGN.md §8).
+    pub fn homogeneous(devices: usize, gn_per_device: usize) -> ClusterPlatform {
+        assert!(devices >= 1, "need at least one device");
+        ClusterPlatform {
+            devices,
+            device: Platform::new(gn_per_device),
+            cpu: CpuTopology::PerDevice,
+        }
+    }
+
+    /// Same fleet, with one host CPU shared across every device.
+    pub fn with_shared_cpu(mut self) -> ClusterPlatform {
+        self.cpu = CpuTopology::Shared;
+        self
+    }
+
+    /// Physical SMs across the whole fleet.
+    pub fn gn_total(&self) -> usize {
+        self.devices * self.device.gn_physical
+    }
+
+    /// Virtual SMs across the whole fleet.
+    pub fn vsm_total(&self) -> usize {
+        self.devices * self.device.vsm()
+    }
+}
+
 /// A priority-ordered task set: index 0 is the **highest** priority.
 #[derive(Debug, Clone)]
 pub struct TaskSet {
@@ -420,6 +483,18 @@ mod tests {
     fn platform_vsm_doubles() {
         assert_eq!(Platform::new(10).vsm(), 20);
         assert_eq!(Platform::new(28).vsm(), 56);
+    }
+
+    #[test]
+    fn cluster_platform_totals() {
+        let c = ClusterPlatform::homogeneous(4, 10);
+        assert_eq!(c.cpu, CpuTopology::PerDevice);
+        assert_eq!(c.gn_total(), 40);
+        assert_eq!(c.vsm_total(), 80);
+        let shared = c.with_shared_cpu();
+        assert_eq!(shared.cpu, CpuTopology::Shared);
+        assert_eq!(shared.gn_total(), 40, "topology does not change SM counts");
+        assert!(std::panic::catch_unwind(|| ClusterPlatform::homogeneous(0, 1)).is_err());
     }
 
     #[test]

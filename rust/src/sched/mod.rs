@@ -35,11 +35,51 @@ pub use queue::ReadyQueue;
 /// Integer platform time: nanoseconds.
 pub type Tick = u64;
 
+/// Index of a GPU device in a multi-device fleet.  Single-device drivers
+/// implicitly run device 0; the cluster drivers tag every job and every
+/// [`PlatformCore`] with its device so per-device traces stay
+/// attributable (`cluster::sim`, `coordinator::ClusterServe`).
+pub type DeviceId = usize;
+
 /// Job priority key: `(priority level, release tick)` — lower is served
 /// first.  Level 0 is the highest priority (deadline-monotonic index in
 /// a priority-ordered task set); ties between jobs of the same level are
 /// broken by release time (job-level FIFO).
 pub type Prio = (usize, Tick);
+
+/// Merge per-device deadline lists into **global** priority levels,
+/// `levels[device][local index]`, for the cluster drivers' shared-CPU
+/// station: a k-way merge by `(deadline, device)` that is *stable within
+/// each device* — local relative order is preserved exactly, so for a
+/// single device the levels are `0..n` whatever its internal order, and
+/// per-device station behaviour (the bus) is unchanged by clustering.
+/// Both `cluster::sim` and `coordinator::ClusterServe` must derive their
+/// levels here, from the *same tick-rounded* deadlines, or their traces
+/// could diverge on rounding-induced ties.
+pub fn merge_priority_levels(deadlines: &[Vec<Tick>]) -> Vec<Vec<usize>> {
+    let mut levels: Vec<Vec<usize>> = deadlines.iter().map(|d| vec![0; d.len()]).collect();
+    let mut heads = vec![0usize; deadlines.len()];
+    let total: usize = deadlines.iter().map(Vec::len).sum();
+    for level in 0..total {
+        let dev = (0..deadlines.len())
+            .filter(|&d| heads[d] < deadlines[d].len())
+            .min_by_key(|&d| (deadlines[d][heads[d]], d))
+            .expect("heads exhausted before all levels assigned");
+        levels[dev][heads[dev]] = level;
+        heads[dev] += 1;
+    }
+    levels
+}
+
+/// Which device's [`PlatformCore`] serves `station` for a job owned by
+/// `dev`: under a shared host CPU every CPU phase funnels through device
+/// 0's CPU station; buses and SM pools are always per-device.
+pub fn route_station(cpu: crate::model::CpuTopology, dev: DeviceId, station: Station) -> DeviceId {
+    match (cpu, station) {
+        (crate::model::CpuTopology::Shared, Station::Cpu) => 0,
+        _ => dev,
+    }
+}
 
 /// Convert analysis milliseconds to platform ticks.
 pub fn ms_to_ticks(ms: f64) -> Tick {
@@ -69,5 +109,34 @@ mod tests {
         let b: Prio = (1, 0);
         let c: Prio = (1, 50);
         assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn merge_levels_single_device_is_identity() {
+        // Whatever the local order (even non-monotone), one device keeps
+        // levels 0..n — the invariant G=1 cluster parity rests on.
+        let levels = merge_priority_levels(&[vec![30, 10, 20]]);
+        assert_eq!(levels, vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn merge_levels_interleaves_by_deadline_then_device() {
+        let levels = merge_priority_levels(&[vec![10, 40], vec![20, 30]]);
+        // Global order: d0t0 (10) < d1t0 (20) < d1t1 (30) < d0t1 (40).
+        assert_eq!(levels, vec![vec![0, 3], vec![1, 2]]);
+        // Ties break towards the lower device index.
+        let tied = merge_priority_levels(&[vec![5], vec![5]]);
+        assert_eq!(tied, vec![vec![0], vec![1]]);
+        // Empty devices are fine.
+        assert_eq!(merge_priority_levels(&[vec![], vec![7]]), vec![vec![], vec![0]]);
+    }
+
+    #[test]
+    fn route_station_funnels_shared_cpu_to_device_zero() {
+        use crate::model::CpuTopology;
+        assert_eq!(route_station(CpuTopology::Shared, 3, Station::Cpu), 0);
+        assert_eq!(route_station(CpuTopology::Shared, 3, Station::Bus), 3);
+        assert_eq!(route_station(CpuTopology::Shared, 3, Station::Gpu), 3);
+        assert_eq!(route_station(CpuTopology::PerDevice, 3, Station::Cpu), 3);
     }
 }

@@ -1,0 +1,232 @@
+//! Fleet-model parity and soundness (DESIGN.md §8):
+//!
+//! (a) a one-device `ClusterSim` replays the single-device simulator
+//!     trace for trace — the cluster layer adds no model drift;
+//! (b) `ClusterSim` and the serving router's deterministic virtual
+//!     driver (`ClusterServe::serve_virtual`) agree on every per-device
+//!     trace for `G ∈ {2, 4}`, per-device and shared-CPU topologies —
+//!     the fleet analogue of `tests/sched_parity.rs`;
+//! (c) a placement admitted by `cluster::placement` never misses a
+//!     deadline in `ClusterSim` under worst-case times, and four devices
+//!     accept strictly more of the sweep workload than one.
+
+use rtgpu::analysis::gpu::gpu_response;
+use rtgpu::analysis::{RtgpuOpts, SmModel};
+use rtgpu::cluster::{
+    simulate_cluster, simulate_cluster_traced, ClusterState, ClusterWorkload, DeviceWorkload,
+    PlacementPolicy,
+};
+use rtgpu::coordinator::{ClusterServe, VirtualTask};
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::model::{ClusterPlatform, CpuTopology, TaskSet};
+use rtgpu::sched::{ms_to_ticks, Chain, Segment, TraceEntry};
+use rtgpu::sim::{simulate_traced, ExecModel, SimConfig};
+use rtgpu::util::prop;
+use rtgpu::util::rng::Pcg;
+
+fn first_divergence(a: &[TraceEntry], b: &[TraceEntry]) -> String {
+    let i = a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count();
+    format!(
+        "lengths {}/{}; first divergence at {}: sim={:?} serve={:?}",
+        a.len(),
+        b.len(),
+        i,
+        a.get(i),
+        b.get(i)
+    )
+}
+
+/// The worst-case chain for one task — exactly what the simulator builds
+/// under `ExecModel::Wcet`.
+fn wcet_chain(ts: &TaskSet, alloc: &[usize], task: usize) -> Chain {
+    let t = &ts.tasks[task];
+    Chain::from_task(t, |seg| match seg {
+        Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(b.hi),
+        Segment::Gpu(g) => ms_to_ticks(gpu_response(g, alloc[task].max(1), SmModel::Virtual).1),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// (a) G = 1: the cluster driver replays the flat simulator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_single_device_cluster_replays_flat_simulator() {
+    prop::check("cluster_g1_parity", 2024, 10, |g| {
+        let util = g.float(0.3, 1.2);
+        let exec = if g.int(0, 1) == 1 { ExecModel::Bell } else { ExecModel::Wcet };
+        // Shared vs per-device CPU is indistinguishable at G = 1.
+        let cpu = if g.int(0, 1) == 1 { CpuTopology::Shared } else { CpuTopology::PerDevice };
+        let mut rng = Pcg::new(g.rng.next_u64());
+        let ts = generate_taskset(&mut rng, &GenConfig::default(), util);
+        let alloc: Vec<usize> = ts
+            .tasks
+            .iter()
+            .map(|t| if t.gpu.is_empty() { 0 } else { g.int(1, 3).max(1) })
+            .collect();
+        let horizon_ms = 2.5 * ts.tasks.iter().map(|t| t.period).fold(0.0, f64::max);
+        let cfg = SimConfig {
+            exec,
+            sm_model: SmModel::Virtual,
+            seed: g.rng.next_u64(),
+            horizon_ms,
+            stop_on_first_miss: false,
+        };
+        let (flat, flat_trace) = simulate_traced(&ts, &alloc, &cfg);
+        let wl = ClusterWorkload::new(
+            cpu,
+            vec![DeviceWorkload { ts: ts.clone(), alloc: alloc.clone() }],
+        );
+        let (fleet, fleet_traces) = simulate_cluster_traced(&wl, &cfg);
+        if flat_trace.is_empty() {
+            return Err("empty trace — the property is vacuous".into());
+        }
+        if fleet_traces[0] != flat_trace {
+            return Err(first_divergence(&flat_trace, &fleet_traces[0]));
+        }
+        if fleet.events_processed != flat.events_processed {
+            return Err(format!(
+                "event counts diverge: flat {} vs fleet {}",
+                flat.events_processed, fleet.events_processed
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (b) ClusterSim vs ClusterServe-virtual, G ∈ {2, 4}
+// ---------------------------------------------------------------------------
+
+fn assert_sim_serve_parity(n_devices: usize, cpu: CpuTopology, seed: u64) {
+    let cfg_gen = GenConfig::default().with_tasks(3);
+    let mut rng = Pcg::new(seed);
+    let devices: Vec<DeviceWorkload> = (0..n_devices)
+        .map(|_| {
+            let ts = generate_taskset(&mut rng, &cfg_gen, 0.8);
+            let alloc: Vec<usize> =
+                ts.tasks.iter().map(|t| if t.gpu.is_empty() { 0 } else { 2 }).collect();
+            DeviceWorkload { ts, alloc }
+        })
+        .collect();
+    let wl = ClusterWorkload::new(cpu, devices);
+    let horizon_ms = 2.5
+        * wl.devices
+            .iter()
+            .flat_map(|d| d.ts.tasks.iter())
+            .map(|t| t.period)
+            .fold(0.0, f64::max);
+    let cfg = SimConfig {
+        exec: ExecModel::Wcet,
+        sm_model: SmModel::Virtual,
+        seed: 1,
+        horizon_ms,
+        stop_on_first_miss: false,
+    };
+    let (_, sim_traces) = simulate_cluster_traced(&wl, &cfg);
+
+    // Router inputs: apps device-major, as placement lays them out.
+    let mut route = Vec::new();
+    let mut vtasks = Vec::new();
+    let mut chains = Vec::new();
+    for (dev, d) in wl.devices.iter().enumerate() {
+        for k in 0..d.ts.len() {
+            route.push(dev);
+            vtasks.push(VirtualTask {
+                period: ms_to_ticks(d.ts.tasks[k].period),
+                deadline: ms_to_ticks(d.ts.tasks[k].deadline),
+            });
+            chains.push(wcet_chain(&d.ts, &d.alloc, k));
+        }
+    }
+    let router = ClusterServe::new(cpu, route, n_devices);
+    let serve_traces =
+        router.serve_virtual(&vtasks, ms_to_ticks(horizon_ms), |app| chains[app].clone());
+
+    assert_eq!(sim_traces.len(), serve_traces.len());
+    let mut total = 0usize;
+    for (dev, (a, b)) in sim_traces.iter().zip(&serve_traces).enumerate() {
+        assert_eq!(a, b, "G={n_devices} {} device {dev}: {}", cpu.name(), first_divergence(a, b));
+        total += a.len();
+    }
+    assert!(total > 0, "vacuous parity run");
+}
+
+#[test]
+fn cluster_sim_and_serve_agree_two_devices() {
+    assert_sim_serve_parity(2, CpuTopology::PerDevice, 7);
+}
+
+#[test]
+fn cluster_sim_and_serve_agree_four_devices() {
+    assert_sim_serve_parity(4, CpuTopology::PerDevice, 8);
+}
+
+#[test]
+fn cluster_sim_and_serve_agree_under_shared_cpu() {
+    assert_sim_serve_parity(2, CpuTopology::Shared, 9);
+    assert_sim_serve_parity(4, CpuTopology::Shared, 10);
+}
+
+// ---------------------------------------------------------------------------
+// (c) Placement soundness + fleet acceptance gain
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_admitted_placement_never_misses_in_cluster_sim() {
+    prop::check("cluster_admission_sound", 77, 8, |g| {
+        let util = g.float(0.5, 2.0);
+        let mut platform = ClusterPlatform::homogeneous(2, 8);
+        if g.int(0, 1) == 1 {
+            platform = platform.with_shared_cpu();
+        }
+        let policy = if g.int(0, 1) == 1 {
+            PlacementPolicy::WorstFit
+        } else {
+            PlacementPolicy::FirstFitDecreasing
+        };
+        let n_tasks = g.int(2, 6).max(2);
+        let mut rng = Pcg::new(g.rng.next_u64());
+        let ts = generate_taskset(&mut rng, &GenConfig::default().with_tasks(n_tasks), util);
+        let mut state = ClusterState::new(platform, RtgpuOpts::default());
+        if !state.place_all(&ts.tasks, policy).all_placed() {
+            return Ok(()); // rejected sets promise nothing
+        }
+        // Worst-case adversarial run over the default 20×max-period
+        // horizon: an admitted fleet must be miss-free.
+        let sim = simulate_cluster(&state.workload(), &SimConfig::acceptance(g.rng.next_u64()));
+        if !sim.schedulable {
+            return Err(format!(
+                "admitted placement ({}, {} CPU) missed {} deadlines",
+                policy.name(),
+                platform.cpu.name(),
+                sim.total_misses
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn acceptance_at_four_devices_strictly_exceeds_one() {
+    // The sweep workload: 8 apps at total utilization 3.0 — its CPU
+    // demand alone usually exceeds one host CPU, so a single device
+    // rejects essentially every set while a 4-device fleet spreads it.
+    let cfg = GenConfig::default().with_tasks(8);
+    let accept = |devices: usize| {
+        let mut rng = Pcg::new(4242);
+        (0..10)
+            .filter(|_| {
+                let ts = generate_taskset(&mut rng, &cfg, 3.0);
+                let mut state = ClusterState::new(
+                    ClusterPlatform::homogeneous(devices, 10),
+                    RtgpuOpts::default(),
+                );
+                state.place_all(&ts.tasks, PlacementPolicy::WorstFit).all_placed()
+            })
+            .count()
+    };
+    let one = accept(1);
+    let four = accept(4);
+    assert!(four > one, "fleet acceptance must grow: G=4 {four}/10 vs G=1 {one}/10");
+}
