@@ -1,0 +1,74 @@
+//! Acceptance-ratio sweep of the two GPU dispatch policies: federated
+//! virtual-SM partitioning (paper §5.2, Algorithm 2) vs the GCAPS-style
+//! preemptive-priority whole-device claim (DESIGN.md §9) — plus a
+//! soundness spot-check that every preemptive-admitted set survives a
+//! worst-case run of the shared driver under that policy.
+//!
+//! ```bash
+//! cargo run --release --example policy_compare -- --sets 20 --sms 4
+//! ```
+
+use anyhow::Result;
+use rtgpu::analysis::{schedule_gpu_policy, RtgpuOpts, Search};
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::harness::chart::{results_dir, table, write_csv, Series};
+use rtgpu::sched::GpuPolicyKind;
+use rtgpu::sim::{simulate, SimConfig};
+use rtgpu::util::cli::Args;
+use rtgpu::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sets = args.usize_or("sets", 20)?;
+    let gn = args.usize_or("sms", 4)?;
+    let tasks = args.usize_or("tasks", 5)?;
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
+
+    let cfg = GenConfig::default().with_tasks(tasks);
+    let opts = RtgpuOpts::default();
+    let utils: Vec<f64> = (1..=8).map(|i| i as f64 * 0.25).collect();
+
+    let mut series: Vec<Series> = GpuPolicyKind::ALL
+        .iter()
+        .map(|p| Series { name: p.name().into(), ys: Vec::with_capacity(utils.len()) })
+        .collect();
+    let mut validated = 0usize;
+    for &util in &utils {
+        for (pi, &policy) in GpuPolicyKind::ALL.iter().enumerate() {
+            // Same seed per point: both policies judge the same sets.
+            let mut rng = Pcg::new(seed ^ (util * 1000.0) as u64);
+            let accepted = (0..sets)
+                .filter(|_| {
+                    let ts = generate_taskset(&mut rng, &cfg, util);
+                    let v = schedule_gpu_policy(&ts, gn, policy, &opts, Search::Grid);
+                    if v.schedulable && policy == GpuPolicyKind::PreemptivePriority {
+                        // Admitted ⇒ no deadline miss under the policy's
+                        // own worst-case execution (the property
+                        // tests/policy_parity.rs checks at scale).
+                        let alloc = v.allocation.expect("accepted sets carry allocations");
+                        let sim_cfg =
+                            SimConfig { gpu_policy: policy, ..SimConfig::acceptance(seed) };
+                        let r = simulate(&ts, &alloc, &sim_cfg);
+                        assert!(
+                            r.schedulable,
+                            "preemptive bound unsound: {} misses",
+                            r.total_misses
+                        );
+                        validated += 1;
+                    }
+                    v.schedulable
+                })
+                .count();
+            series[pi].ys.push(accepted as f64 / sets as f64);
+        }
+    }
+
+    let label = format!("policy_compare_gn{gn}");
+    println!("--- {label} (acceptance over {sets} sets, {tasks} apps, {gn} SMs)");
+    print!("{}", table(&utils, &series, "util"));
+    println!("{validated} preemptive-admitted sets validated miss-free in the driver");
+    write_csv(&results_dir().join(format!("{label}.csv")), "util", &utils, &series)?;
+    println!("CSV written to {:?}", results_dir());
+    Ok(())
+}

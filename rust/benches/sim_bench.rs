@@ -1,15 +1,54 @@
 //! Simulator throughput: events/second on representative workloads (the
-//! §Perf target is ≥ 10⁶ events/s) plus the virtual-vs-physical SM
-//! ablation on simulated response times.
+//! §Perf target is ≥ 10⁶ events/s), the virtual-vs-physical SM ablation,
+//! and the driver event-queue race — the pre-refactor `BinaryHeap`
+//! baseline vs the indexed two-level queue the shared driver now runs on
+//! (DESIGN.md §9) — emitted to `BENCH_driver.json`.
+
+use std::collections::BTreeMap;
 
 use rtgpu::analysis::SmModel;
 use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::sched::{EventQueue, HeapQueue, Tick};
 use rtgpu::sim::{simulate, ExecModel, SimConfig};
 use rtgpu::util::bench::{bench_n, black_box, header};
+use rtgpu::util::json::Json;
 use rtgpu::util::rng::Pcg;
+
+/// One DES-shaped pass over a queue: exactly `pops` pops at a steady
+/// population of 64 pending events — every pop schedules one successor
+/// at `now + delta` (mostly near-future, one in eight release-scale, so
+/// the far heap is exercised), the way a simulation keeps a bounded set
+/// of timers in flight.  The queue never drains, so throughput is
+/// `pops / elapsed` with no dark pops; the returned checksum lets the
+/// two queues be asserted to pop the identical sequence.
+macro_rules! queue_workload {
+    ($queue:expr, $pops:expr) => {{
+        let mut q = $queue;
+        let mut rng = Pcg::new(4242);
+        let mut id = 0u64;
+        for _ in 0..64 {
+            q.push(rng.below(1 << 22), id);
+            id += 1;
+        }
+        let mut checksum = 0u64;
+        for _ in 0..$pops {
+            let (now, ev) = q.pop().expect("steady-state workload never drains");
+            checksum = checksum.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(now ^ ev);
+            let delta: Tick = if rng.below(8) == 0 {
+                rng.below(1 << 28)
+            } else {
+                rng.below(1 << 20)
+            };
+            q.push(now + delta, id);
+            id += 1;
+        }
+        checksum
+    }};
+}
 
 fn main() {
     println!("{}", header());
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
     let mut rng = Pcg::new(42);
     let ts = generate_taskset(&mut rng, &GenConfig::default(), 1.0);
     let alloc = vec![2, 2, 2, 2, 2];
@@ -20,12 +59,13 @@ fn main() {
         seed: 1,
         horizon_ms,
         stop_on_first_miss: false,
+        ..SimConfig::acceptance(1)
     };
 
     for (name, cfg) in [
-        ("sim_wcet_20periods", mk(ExecModel::Wcet, 0.0)),
-        ("sim_bell_20periods", mk(ExecModel::Bell, 0.0)),
-        ("sim_bell_horizon_10s", mk(ExecModel::Bell, 10_000.0)),
+        ("sim_wcet_20periods", mk(ExecModel::Wcet, None)),
+        ("sim_bell_20periods", mk(ExecModel::Bell, None)),
+        ("sim_bell_horizon_10s", mk(ExecModel::Bell, Some(10_000.0))),
     ] {
         let mut events = 0usize;
         let r = bench_n(name, 2, 20, || {
@@ -35,7 +75,45 @@ fn main() {
         });
         let evps = events as f64 / r.summary.mean;
         println!("{}  [{} events → {:.2} Mev/s]", r.row(), events, evps / 1e6);
+        obj.insert(format!("{name}_events_per_s"), Json::Num(evps.round()));
     }
+
+    // --- driver event queue: heap baseline vs indexed two-level ---------
+    // Identical synthetic schedules (same seed, same successor pattern);
+    // the checksum pins the pop sequences to each other before timing.
+    const POPS: usize = 200_000;
+    let heap_sum = queue_workload!(HeapQueue::<u64>::new(), POPS);
+    let wheel_sum = queue_workload!(EventQueue::<u64>::new(), POPS);
+    assert_eq!(heap_sum, wheel_sum, "queues diverged on the same schedule");
+
+    let heap = bench_n("equeue_heap_baseline_200k", 1, 10, || {
+        black_box(queue_workload!(HeapQueue::<u64>::new(), POPS));
+    });
+    println!("{}", heap.row());
+    let wheel = bench_n("equeue_indexed_two_level_200k", 1, 10, || {
+        black_box(queue_workload!(EventQueue::<u64>::new(), POPS));
+    });
+    println!("{}", wheel.row());
+    let heap_evps = POPS as f64 / heap.summary.mean;
+    let wheel_evps = POPS as f64 / wheel.summary.mean;
+    let ratio = wheel_evps / heap_evps.max(1e-12);
+    obj.insert("queue_heap_events_per_s".into(), Json::Num(heap_evps.round()));
+    obj.insert("queue_indexed_events_per_s".into(), Json::Num(wheel_evps.round()));
+    obj.insert("queue_indexed_vs_heap_ratio".into(), Json::Num((ratio * 1000.0).round() / 1000.0));
+    println!(
+        "\nevent-queue race: heap {:.2} Mops/s vs indexed {:.2} Mops/s → {:.2}×",
+        heap_evps / 1e6,
+        wheel_evps / 1e6,
+        ratio
+    );
+    // Reported, not asserted (machine variance): the acceptance bar is
+    // the indexed queue at ≥ the heap's events/sec.
+    let bar = if ratio >= 1.0 { "PASS" } else { "BELOW BAR" };
+    println!("acceptance bar (indexed ≥ heap events/s): {bar}");
+
+    let json = Json::Obj(obj);
+    std::fs::write("BENCH_driver.json", format!("{json}\n")).expect("write BENCH_driver.json");
+    println!("BENCH_driver.json written");
 
     // Ablation: interleaved virtual SMs vs physical SMs (simulated
     // worst-case response of the lowest-priority task) on a GPU-heavy
@@ -44,11 +122,11 @@ fn main() {
     let ts = generate_taskset(&mut rng, &GenConfig::default().with_length_ratio(1.0, 8.0), 0.8);
     let virt = simulate(&ts, &alloc, &SimConfig {
         sm_model: SmModel::Virtual,
-        ..mk(ExecModel::Wcet, 0.0)
+        ..mk(ExecModel::Wcet, None)
     });
     let phys = simulate(&ts, &alloc, &SimConfig {
         sm_model: SmModel::Physical,
-        ..mk(ExecModel::Wcet, 0.0)
+        ..mk(ExecModel::Wcet, None)
     });
     let k = ts.len() - 1;
     println!(

@@ -21,13 +21,16 @@ pub mod e2e;
 pub mod fixpoint;
 pub mod gpu;
 pub mod memcopy;
+pub mod preemptive;
 pub mod rtgpu;
 pub mod workload;
 
 pub use gpu::{Allocation, SmModel};
+pub use preemptive::schedule_preemptive;
 pub use rtgpu::{Evaluator, RtgpuOpts, ScheduleResult, Search, SharedCache};
 
 use crate::model::{RtTask, TaskSet};
+use crate::sched::GpuPolicyKind;
 
 /// GPU utilization of one task under the §6.1 normalisation (one
 /// physical SM is a unit-rate resource): `ΣĜW / T`.  The cluster
@@ -83,6 +86,23 @@ pub fn analyze(
         Approach::Rtgpu => rtgpu::schedule(ts, gn_total, &RtgpuOpts::default(), search),
         Approach::SelfSuspension => baselines::selfsusp_schedule(ts, gn_total, search),
         Approach::Stgm => baselines::stgm_schedule(ts, gn_total, search),
+    }
+}
+
+/// Run the RTGPU admission test for the chosen GPU dispatch policy:
+/// Algorithm 2's federated allocation search, or the preemptive-priority
+/// holistic bound (no allocation search — an admitted task is granted
+/// the whole device, [`preemptive::schedule_preemptive`]).
+pub fn schedule_gpu_policy(
+    ts: &TaskSet,
+    gn_total: usize,
+    policy: GpuPolicyKind,
+    opts: &RtgpuOpts,
+    search: Search,
+) -> ScheduleResult {
+    match policy {
+        GpuPolicyKind::Federated => rtgpu::schedule(ts, gn_total, opts, search),
+        GpuPolicyKind::PreemptivePriority => preemptive::schedule_preemptive(ts, gn_total, opts),
     }
 }
 

@@ -1,0 +1,204 @@
+//! Schedulability bound for the preemptive-priority GPU policy
+//! (GCAPS-style, DESIGN.md §9).
+//!
+//! Under [`crate::sched::GpuPolicyKind::PreemptivePriority`] the device
+//! is not partitioned: the highest-priority ready kernel claims **all**
+//! `2·GN` virtual SMs and lower-priority kernels wait, preempting only
+//! at segment boundaries.  The platform is then three fixed-priority
+//! stations — a preemptive CPU, a non-preemptive bus, and a
+//! non-preemptive (per segment) GPU — and a holistic response-time bound
+//! closes over all three at once:
+//!
+//! `R_k = C_k + B_k + Σ_{i<k} ⌈(R_k + D_i)/T_i⌉ · C_i`
+//!
+//! where `C_i` is task `i`'s total worst-case demand across the three
+//! stations (GPU segments at the full device width, Lemma 5.1 with
+//! `gn = GN`), and `B_k` charges one maximal lower-priority segment per
+//! own segment on each non-preemptive station (once a copy/kernel of
+//! `k` waits, priority dispatch admits no further lower-priority work
+//! ahead of it).  Every unit of time `k`'s job spends released-but-
+//! unfinished is either its own execution, one of those blocking
+//! segments, or a higher-priority job executing on *some* station — so
+//! the recurrence over-counts and the bound is sound; the
+//! `prop_preemptive_admitted_never_misses` property in
+//! `tests/policy_parity.rs` checks `admitted ⇒ no deadline miss`
+//! against worst-case driver runs.
+//!
+//! The bound requires constrained deadlines (`D ≤ T`): job-level FIFO
+//! then keeps at most one job of each task in flight inside any window
+//! of length `≤ D_k`, which the carry-in term `⌈(x + D_i)/T_i⌉`
+//! presumes.  Sets with `D > T` are rejected (conservative, not wrong).
+
+use crate::model::TaskSet;
+
+use super::fixpoint;
+use super::gpu::gpu_response;
+use super::rtgpu::{RtgpuOpts, ScheduleResult};
+
+/// One task's worst-case demand under the whole-device claim.
+#[derive(Debug, Clone)]
+struct Demand {
+    /// Σ ĈL + Σ M̂L + Σ ĜR(GN) — total execution across the stations.
+    total: f64,
+    /// Largest single copy (bus blocking candidate).
+    max_bus_seg: f64,
+    /// Largest single kernel at full width (GPU blocking candidate).
+    max_gpu_seg: f64,
+    n_bus: usize,
+    n_gpu: usize,
+    period: f64,
+    deadline: f64,
+}
+
+fn demand(task: &crate::model::RtTask, gn_total: usize, opts: &RtgpuOpts) -> Demand {
+    let gpu_hi: Vec<f64> = task
+        .gpu
+        .iter()
+        .map(|g| gpu_response(g, gn_total.max(1), opts.sm_model).1)
+        .collect();
+    let cpu: f64 = task.cpu.iter().map(|b| b.hi).sum();
+    let bus: f64 = task.mem.iter().map(|b| b.hi).sum();
+    let gpu: f64 = gpu_hi.iter().sum();
+    Demand {
+        total: cpu + bus + gpu,
+        max_bus_seg: task.mem.iter().map(|b| b.hi).fold(0.0, f64::max),
+        max_gpu_seg: gpu_hi.iter().copied().fold(0.0, f64::max),
+        n_bus: task.mem.len(),
+        n_gpu: task.gpu.len(),
+        period: task.period,
+        deadline: task.deadline,
+    }
+}
+
+/// Admit `ts` (priority order) on a `gn_total`-SM device under the
+/// preemptive-priority GPU policy.  No allocation search happens — an
+/// admitted task's grant is the whole device (`allocation = gn_total`
+/// per task, which is also what the executors must draw GPU durations
+/// with).
+pub fn schedule_preemptive(ts: &TaskSet, gn_total: usize, opts: &RtgpuOpts) -> ScheduleResult {
+    let n = ts.len();
+    let rejected = || ScheduleResult {
+        schedulable: false,
+        allocation: None,
+        responses: vec![None; n],
+    };
+    if n == 0 {
+        return ScheduleResult { schedulable: true, allocation: Some(vec![]), responses: vec![] };
+    }
+    if ts.tasks.iter().any(|t| t.deadline > t.period + 1e-12) {
+        return rejected(); // the bound assumes constrained deadlines
+    }
+    let d: Vec<Demand> = ts.tasks.iter().map(|t| demand(t, gn_total, opts)).collect();
+
+    let mut responses: Vec<Option<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        let bus_block = d[k + 1..].iter().map(|x| x.max_bus_seg).fold(0.0, f64::max);
+        let gpu_block = d[k + 1..].iter().map(|x| x.max_gpu_seg).fold(0.0, f64::max);
+        let base =
+            d[k].total + d[k].n_bus as f64 * bus_block + d[k].n_gpu as f64 * gpu_block;
+        let Some(r) = fixpoint::solve(base, d[k].deadline, |x| {
+            let interference: f64 = d[..k]
+                .iter()
+                .map(|i| ((x + i.deadline) / i.period).ceil().max(0.0) * i.total)
+                .sum();
+            base + interference
+        }) else {
+            return rejected();
+        };
+        responses.push(Some(r));
+    }
+    ScheduleResult {
+        schedulable: true,
+        allocation: Some(vec![gn_total; n]),
+        responses,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate_taskset, GenConfig};
+    use crate::model::testing::{cpu_only_task, simple_task};
+    use crate::model::Bounds;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn singleton_response_is_chain_sum_plus_nothing() {
+        // One task, full device: no interference, no blocking — the
+        // bound is exactly its demand at gn = GN.
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let r = schedule_preemptive(&ts, 2, &RtgpuOpts::default());
+        assert!(r.schedulable);
+        assert_eq!(r.allocation, Some(vec![2]));
+        // simple_task at gn=2: CL 4 + ML 2 + (8·1.8−0.96)/4+0.96 = 4.32.
+        let expect = 4.0 + 2.0 + 4.32;
+        assert!((r.responses[0].unwrap() - expect).abs() < 1e-9, "{:?}", r.responses);
+    }
+
+    #[test]
+    fn more_sms_tighten_the_bound() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]);
+        let r2 = schedule_preemptive(&ts, 2, &RtgpuOpts::default());
+        let r8 = schedule_preemptive(&ts, 8, &RtgpuOpts::default());
+        assert!(r2.schedulable && r8.schedulable);
+        for (a, b) in r8.responses.iter().zip(&r2.responses) {
+            assert!(a.unwrap() <= b.unwrap() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn overload_is_rejected() {
+        let mut hog = cpu_only_task(0, 9.0, 8.0);
+        hog.cpu = vec![Bounds::exact(9.0)];
+        hog.deadline = 8.0;
+        hog.period = 8.0;
+        let ts = TaskSet::with_priority_order(vec![hog]);
+        assert!(!schedule_preemptive(&ts, 10, &RtgpuOpts::default()).schedulable);
+    }
+
+    #[test]
+    fn unconstrained_deadlines_are_rejected_conservatively() {
+        let mut t = simple_task(0);
+        t.deadline = 2.0 * t.period;
+        let ts = TaskSet::with_priority_order(vec![t]);
+        assert!(!schedule_preemptive(&ts, 10, &RtgpuOpts::default()).schedulable);
+    }
+
+    #[test]
+    fn bound_dominates_per_task_demand_and_respects_deadlines() {
+        let cfg = GenConfig::default();
+        let mut rng = Pcg::new(31);
+        for _ in 0..20 {
+            let ts = generate_taskset(&mut rng, &cfg, 1.0);
+            let r = schedule_preemptive(&ts, 10, &RtgpuOpts::default());
+            if !r.schedulable {
+                continue;
+            }
+            for (resp, task) in r.responses.iter().zip(&ts.tasks) {
+                let v = resp.expect("accepted sets carry bounds");
+                assert!(v <= task.deadline + 1e-9);
+                let own: f64 = task.cpu.iter().map(|b| b.hi).sum();
+                assert!(v >= own - 1e-9, "bound below the task's own CPU demand");
+            }
+        }
+    }
+
+    #[test]
+    fn preemptive_admits_more_gpu_tasks_than_sms() {
+        // The structural win over federated partitioning: with three GPU
+        // tasks on a two-SM device, federation cannot even allocate (one
+        // dedicated SM per GPU task is its floor), while the whole-device
+        // claim simply serialises kernels — and the demand fits.
+        let mut tasks: Vec<_> = (0..3).map(simple_task).collect();
+        for t in &mut tasks {
+            t.period = 100.0;
+            t.deadline = 40.0;
+        }
+        let ts = TaskSet::with_priority_order(tasks);
+        let opts = RtgpuOpts::default();
+        let fed = super::super::rtgpu::schedule(&ts, 2, &opts, super::super::Search::Grid);
+        assert!(!fed.schedulable, "federation cannot split 2 SMs three ways");
+        let pre = schedule_preemptive(&ts, 2, &opts);
+        assert!(pre.schedulable, "whole-device serialisation fits: {:?}", pre.responses);
+    }
+}

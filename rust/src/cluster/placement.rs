@@ -26,11 +26,12 @@
 //! device re-admits its apps onto survivors on the warm paths
 //! (`benches/cluster_bench.rs` measures the gap to a cold rebuild).
 
+use crate::analysis::preemptive::schedule_preemptive;
 use crate::analysis::rtgpu::evaluate;
 use crate::analysis::{gpu_utilization, RtgpuOpts};
 use crate::coordinator::{AdmissionState, VirtualTask};
 use crate::model::{ClusterPlatform, CpuTopology, RtTask, TaskSet};
-use crate::sched::{ms_to_ticks, DeviceId};
+use crate::sched::{ms_to_ticks, DeviceId, GpuPolicyKind};
 
 use super::sim::{ClusterWorkload, DeviceWorkload};
 
@@ -102,6 +103,9 @@ pub struct ClusterState {
     platform: ClusterPlatform,
     opts: RtgpuOpts,
     devices: Vec<AdmissionState>,
+    /// GPU dispatch policy per device (the placement-time choice each
+    /// device's admission validates against).
+    gpu_policy: Vec<GpuPolicyKind>,
     online: Vec<bool>,
     /// `(cluster key, device, device-local admission key, task)` in
     /// placement order.  The task clone is kept for drains/migrations.
@@ -117,10 +121,42 @@ impl ClusterState {
             devices: (0..platform.devices)
                 .map(|_| AdmissionState::new(platform.device, opts))
                 .collect(),
+            gpu_policy: vec![GpuPolicyKind::Federated; platform.devices],
             online: vec![true; platform.devices],
             apps: Vec::new(),
             next_key: 0,
         }
+    }
+
+    /// Choose GPU dispatch policies per device (before any placement —
+    /// the per-device admission states are rebuilt for the new policies).
+    /// Under a shared host CPU the merged evaluation needs one analysis
+    /// family, so mixed policies are rejected there.
+    pub fn with_gpu_policies(mut self, policies: Vec<GpuPolicyKind>) -> ClusterState {
+        assert_eq!(policies.len(), self.devices.len(), "one GPU policy per device");
+        assert!(self.is_empty(), "set device policies before placing apps");
+        if self.platform.cpu == CpuTopology::Shared {
+            assert!(
+                policies.windows(2).all(|w| w[0] == w[1]),
+                "mixed GPU policies are unsupported under a shared host CPU"
+            );
+        }
+        for (state, &p) in self.devices.iter_mut().zip(&policies) {
+            *state = AdmissionState::with_gpu_policy(self.platform.device, self.opts, p);
+        }
+        self.gpu_policy = policies;
+        self
+    }
+
+    /// The GPU dispatch policy device `dev` admits under.
+    pub fn device_gpu_policy(&self, dev: DeviceId) -> GpuPolicyKind {
+        self.gpu_policy[dev]
+    }
+
+    /// Per-device GPU policies in device order (what the serving router
+    /// and the fleet simulator must run with).
+    pub fn gpu_policies(&self) -> Vec<GpuPolicyKind> {
+        self.gpu_policy.clone()
     }
 
     pub fn platform(&self) -> ClusterPlatform {
@@ -178,7 +214,11 @@ impl ClusterState {
     /// matching `sched::merge_priority_levels`), each with its per-device
     /// allocation.  CPU interference is exact (one host CPU is reality);
     /// bus interference is over-counted (buses are per-device), so a pass
-    /// is sound.
+    /// is sound.  Under the preemptive-priority policy (uniform across
+    /// the fleet — `with_gpu_policies` enforces it here) the merged check
+    /// is the preemptive holistic bound, which additionally over-counts
+    /// GPU interference (it pretends one device serves every kernel) —
+    /// conservative on every axis, hence still sound.
     fn merged_ok(&self) -> bool {
         let mut entries: Vec<(RtTask, usize)> = Vec::new();
         for state in &self.devices {
@@ -191,6 +231,10 @@ impl ClusterState {
         entries.sort_by(|a, b| a.0.deadline.partial_cmp(&b.0.deadline).unwrap());
         let alloc: Vec<usize> = entries.iter().map(|e| e.1).collect();
         let ts = TaskSet::with_priority_order(entries.into_iter().map(|e| e.0).collect());
+        if self.gpu_policy[0] == GpuPolicyKind::PreemptivePriority {
+            return schedule_preemptive(&ts, self.platform.device.gn_physical, &self.opts)
+                .schedulable;
+        }
         evaluate(&ts, &alloc, &self.opts).iter().all(|b| b.schedulable)
     }
 
@@ -265,7 +309,8 @@ impl ClusterState {
     /// what `BENCH_cluster.json` measures against a cold rebuild.
     pub fn drain_device(&mut self, dev: DeviceId, policy: PlacementPolicy) -> DrainOutcome {
         assert!(dev < self.devices.len());
-        self.devices[dev] = AdmissionState::new(self.platform.device, self.opts);
+        self.devices[dev] =
+            AdmissionState::with_gpu_policy(self.platform.device, self.opts, self.gpu_policy[dev]);
         self.online[dev] = false;
         let (gone, keep): (Vec<_>, Vec<_>) =
             std::mem::take(&mut self.apps).into_iter().partition(|a| a.1 == dev);
@@ -287,12 +332,29 @@ impl ClusterState {
         self.online[dev] = true;
     }
 
+    /// The fully configured serving router for this placement: the
+    /// [`Self::router`] table plus the per-device GPU policies the apps
+    /// were admitted under.  Prefer this over assembling a
+    /// [`crate::coordinator::ClusterServe`] by hand — a router built
+    /// from the raw table alone defaults to federated dispatch and
+    /// would silently serve a preemptive placement under the wrong
+    /// policy.
+    pub fn serve_router(&self) -> (crate::coordinator::ClusterServe, Vec<VirtualTask>) {
+        let (route, vtasks) = self.router();
+        let router =
+            crate::coordinator::ClusterServe::new(self.platform.cpu, route, self.n_devices())
+                .with_gpu_policies(self.gpu_policy.clone());
+        (router, vtasks)
+    }
+
     /// Routing inputs for [`crate::coordinator::ClusterServe`]: one entry
     /// per placed app, device-major and in per-device deadline (priority)
     /// order — exactly the layout of [`Self::workload`], so router app
     /// `i` is the same job source as the workload's task at its local
     /// index.  Returns `(route, virtual tasks)` with periods/deadlines in
-    /// ticks.
+    /// ticks.  NOTE: the table does not carry the GPU policies — pair it
+    /// with [`Self::gpu_policies`] via `ClusterServe::with_gpu_policies`,
+    /// or use [`Self::serve_router`] which does both.
     pub fn router(&self) -> (Vec<DeviceId>, Vec<VirtualTask>) {
         let mut route = Vec::new();
         let mut vtasks = Vec::new();
@@ -322,6 +384,7 @@ impl ClusterState {
             })
             .collect();
         ClusterWorkload::new(self.platform.cpu, devices)
+            .with_gpu_policies(self.gpu_policy.clone())
     }
 
     /// Render a per-device fleet table.
@@ -483,6 +546,40 @@ mod tests {
             let ds: Vec<_> = on_dev.map(|(_, v)| v.deadline).collect();
             assert!(ds.windows(2).all(|w| w[0] <= w[1]));
         }
+    }
+
+    #[test]
+    fn preemptive_devices_admit_more_gpu_tasks_than_sms() {
+        // One 2-SM device, three GPU apps: federated placement must
+        // reject someone (one dedicated SM per GPU task is its floor);
+        // a preemptive-policy device serialises kernels and fits all
+        // three, granting each the whole device — and the admitted
+        // placement survives a worst-case fleet run.
+        let mut tasks: Vec<_> = (0..3).map(simple_task).collect();
+        for t in &mut tasks {
+            t.period = 100.0;
+            t.deadline = 40.0;
+        }
+        let mut fed =
+            ClusterState::new(ClusterPlatform::homogeneous(1, 2), RtgpuOpts::default());
+        assert!(!fed.place_all(&tasks, PlacementPolicy::WorstFit).all_placed());
+
+        let mut pre =
+            ClusterState::new(ClusterPlatform::homogeneous(1, 2), RtgpuOpts::default())
+                .with_gpu_policies(vec![GpuPolicyKind::PreemptivePriority]);
+        assert_eq!(pre.device_gpu_policy(0), GpuPolicyKind::PreemptivePriority);
+        let r = pre.place_all(&tasks, PlacementPolicy::WorstFit);
+        assert!(r.all_placed(), "rejected {:?}", r.rejected);
+        let wl = pre.workload();
+        assert_eq!(wl.gpu_policies, vec![GpuPolicyKind::PreemptivePriority]);
+        assert!(wl.devices[0].alloc.iter().all(|&g| g == 2), "whole-device grants");
+        let sim = crate::cluster::simulate_cluster(&wl, &crate::sim::SimConfig::acceptance(5));
+        assert!(sim.schedulable, "{} misses", sim.total_misses);
+        // The serving router inherits the admitted policy — a hand-built
+        // router would default to federated and fork from the model.
+        let (router, vtasks) = pre.serve_router();
+        assert_eq!(router.gpu_policies(), &[GpuPolicyKind::PreemptivePriority]);
+        assert_eq!(vtasks.len(), 3);
     }
 
     #[test]

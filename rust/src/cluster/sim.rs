@@ -1,27 +1,27 @@
-//! The multi-device discrete-event driver: one [`PlatformCore`] per GPU
-//! device under a **single virtual clock**.
+//! The multi-device simulator: one [`PlatformCore`] per GPU device under
+//! a **single virtual clock** — a statistics adapter over the shared
+//! generic driver ([`crate::sched::driver`]).
 //!
 //! `ClusterSim` is `sim::engine` lifted to a fleet: every device owns its
-//! non-preemptive bus and federated SM pool; CPU phases run on the
+//! non-preemptive bus and its GPU policy station; CPU phases run on the
 //! owning device's CPU station, or — under [`CpuTopology::Shared`] — all
-//! funnel through device 0's CPU station (the one host CPU).  The event
-//! loop mirrors `sim::engine` *exactly* (same push order at equal
-//! timestamps, same RNG draw order), so a one-device cluster replays the
-//! single-device simulator trace for trace — the G=1 anchor of
-//! `tests/cluster_parity.rs`.  `coordinator::ClusterServe`'s virtual
-//! driver mirrors this loop from the serving side; parity between the
-//! two pins the fleet model the way `tests/sched_parity.rs` pins the
-//! single-device model.
-
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+//! funnel through device 0's CPU station (the one host CPU).  Both the
+//! flat simulator and this one *are the same event loop* (they adapt the
+//! same `sched::driver::run`), so a one-device cluster replays the
+//! single-device simulator trace for trace by construction — the G=1
+//! anchor of `tests/cluster_parity.rs` now pins the adapters, not two
+//! hand-mirrored loops.
+//!
+//! [`PlatformCore`]: crate::sched::PlatformCore
 
 use crate::analysis::Allocation;
 use crate::model::{CpuTopology, TaskSet};
+use crate::sched::driver;
 use crate::sched::{
-    merge_priority_levels, ms_to_ticks, route_station, ticks_to_ms, Chain, CoreEvent, DeviceId,
-    PlatformCore, Segment, TaskFifo, Tick, TraceEntry, WalkJob,
+    merge_priority_levels, ms_to_ticks, ticks_to_ms, Chain, DriverConfig, DriverTask,
+    GpuPolicyKind, Segment, Tick, TraceEntry,
 };
+use crate::sim::engine::resolve_horizon_ms;
 use crate::sim::{SimConfig, TaskStats};
 use crate::util::rng::Pcg;
 use crate::util::stats::Summary;
@@ -39,12 +39,24 @@ pub struct DeviceWorkload {
 pub struct ClusterWorkload {
     pub cpu: CpuTopology,
     pub devices: Vec<DeviceWorkload>,
+    /// GPU dispatch policy per device (federated unless overridden via
+    /// [`Self::with_gpu_policies`]).  The fleet drivers honour this over
+    /// any flat `SimConfig::gpu_policy`.
+    pub gpu_policies: Vec<GpuPolicyKind>,
 }
 
 impl ClusterWorkload {
     pub fn new(cpu: CpuTopology, devices: Vec<DeviceWorkload>) -> ClusterWorkload {
         assert!(!devices.is_empty(), "cluster workload needs at least one device");
-        ClusterWorkload { cpu, devices }
+        let gpu_policies = vec![GpuPolicyKind::Federated; devices.len()];
+        ClusterWorkload { cpu, devices, gpu_policies }
+    }
+
+    /// Override the per-device GPU policies (placement's choice).
+    pub fn with_gpu_policies(mut self, policies: Vec<GpuPolicyKind>) -> ClusterWorkload {
+        assert_eq!(policies.len(), self.devices.len(), "one GPU policy per device");
+        self.gpu_policies = policies;
+        self
     }
 
     pub fn n_devices(&self) -> usize {
@@ -88,31 +100,6 @@ impl ClusterSimResult {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum EvKind {
-    Release { dev: DeviceId, task: usize },
-    JobStart { job: usize },
-    Core { core: DeviceId, ev: CoreEvent },
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-struct Ev {
-    t: Tick,
-    seq: u64,
-    kind: EvKind,
-}
-
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.t, self.seq).cmp(&(other.t, other.seq))
-    }
-}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
 /// Simulate the fleet workload under one virtual clock.
 pub fn simulate_cluster(wl: &ClusterWorkload, cfg: &SimConfig) -> ClusterSimResult {
     simulate_cluster_impl(wl, cfg, false).0
@@ -151,124 +138,42 @@ fn simulate_cluster_impl(
         .flat_map(|d| d.ts.tasks.iter())
         .map(|t| t.period)
         .fold(0.0, f64::max);
-    let horizon_ms = if cfg.horizon_ms > 0.0 { cfg.horizon_ms } else { 20.0 * max_period };
-    let horizon = ms_to_ticks(horizon_ms);
+    let horizon = ms_to_ticks(resolve_horizon_ms(cfg.horizon_ms, max_period));
     let mut rng = Pcg::new(cfg.seed);
     let levels = wl.levels();
 
-    let mut cores: Vec<PlatformCore> = (0..n_dev)
-        .map(|_| if trace { PlatformCore::with_trace() } else { PlatformCore::new() })
+    let tasks: Vec<Vec<DriverTask>> = wl
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(dev, d)| {
+            d.ts.tasks
+                .iter()
+                .enumerate()
+                .map(|(k, t)| DriverTask {
+                    period: ms_to_ticks(t.period),
+                    deadline: ms_to_ticks(t.deadline),
+                    priority: levels[dev][k],
+                })
+                .collect()
+        })
         .collect();
-    let mut fifos: Vec<TaskFifo> = wl.devices.iter().map(|d| TaskFifo::new(d.ts.len())).collect();
-    let mut jobs: Vec<WalkJob> = Vec::new();
-    let mut job_dev: Vec<DeviceId> = Vec::new();
-
-    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
-    let mut seq: u64 = 0;
-    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, t: Tick, kind: EvKind| {
-        *seq += 1;
-        heap.push(Reverse(Ev { t, seq: *seq, kind }));
+    let dcfg = DriverConfig {
+        cpu: wl.cpu,
+        gpu_policy: wl.gpu_policies.clone(),
+        horizon,
+        stop_on_first_miss: cfg.stop_on_first_miss,
+        trace,
     };
-
-    // Initial releases, device-major (ClusterServe's virtual driver must
-    // seed its heap in the same order or same-instant pops diverge).
-    for (dev, d) in wl.devices.iter().enumerate() {
-        for task in 0..d.ts.len() {
-            push(&mut heap, &mut seq, 0, EvKind::Release { dev, task });
-        }
-    }
-
-    let mut total_misses = 0usize;
-    let mut events = 0usize;
-    let mut stop = false;
-    let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
-
-    // Enter job `j`'s next phase on the serving core — the shared-CPU
-    // topology funnels CPU phases to device 0 — or finish it on its own
-    // device's core (deadline bookkeeping + task-FIFO successor).
-    macro_rules! start_next {
-        ($now:expr, $job:expr) => {{
-            let j = $job;
-            let dev = job_dev[j];
-            let core = if jobs[j].next_phase == jobs[j].chain.len() {
-                dev
-            } else {
-                route_station(wl.cpu, dev, jobs[j].chain.phase(jobs[j].next_phase).station())
-            };
-            let finished = cores[core].start_phase(&mut jobs, j, $now, &mut timers);
-            for (t, cev) in timers.drain(..) {
-                push(&mut heap, &mut seq, t, EvKind::Core { core, ev: cev });
+    let out = driver::run(&tasks, &dcfg, |dev, task| {
+        let d = &wl.devices[dev];
+        Chain::from_task(&d.ts.tasks[task], |seg| match seg {
+            Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
+            Segment::Gpu(g) => {
+                ms_to_ticks(cfg.exec.draw_gpu(&mut rng, g, d.alloc[task].max(1), cfg.sm_model))
             }
-            if finished {
-                if $now > jobs[j].deadline {
-                    total_misses += 1;
-                    if cfg.stop_on_first_miss {
-                        stop = true;
-                    }
-                }
-                if let Some(next) = fifos[dev].on_job_done(jobs[j].task) {
-                    push(&mut heap, &mut seq, $now, EvKind::JobStart { job: next });
-                }
-            }
-        }};
-    }
-
-    while let Some(Reverse(ev)) = heap.pop() {
-        if stop {
-            break;
-        }
-        events += 1;
-        let now = ev.t;
-        match ev.kind {
-            EvKind::Release { dev, task } => {
-                if now >= horizon {
-                    continue;
-                }
-                let d = &wl.devices[dev];
-                let t = &d.ts.tasks[task];
-                let chain = Chain::from_task(t, |seg| match seg {
-                    Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
-                    Segment::Gpu(g) => ms_to_ticks(cfg.exec.draw_gpu(
-                        &mut rng,
-                        g,
-                        d.alloc[task].max(1),
-                        cfg.sm_model,
-                    )),
-                });
-                let job_id = jobs.len();
-                jobs.push(WalkJob::new(
-                    task,
-                    levels[dev][task],
-                    now,
-                    now + ms_to_ticks(t.deadline),
-                    chain,
-                ));
-                job_dev.push(dev);
-                if let Some(start) = fifos[dev].on_release(task, job_id) {
-                    push(&mut heap, &mut seq, now, EvKind::JobStart { job: start });
-                }
-                push(
-                    &mut heap,
-                    &mut seq,
-                    now + ms_to_ticks(t.period),
-                    EvKind::Release { dev, task },
-                );
-            }
-            EvKind::JobStart { job } => {
-                start_next!(now, job);
-            }
-            EvKind::Core { core, ev: cev } => {
-                let station = cev.station();
-                if let Some(j) = cores[core].on_event(&mut jobs, cev, now) {
-                    start_next!(now, j);
-                    cores[core].redispatch(station, &mut jobs, now, &mut timers);
-                    for (t, cev2) in timers.drain(..) {
-                        push(&mut heap, &mut seq, t, EvKind::Core { core, ev: cev2 });
-                    }
-                }
-            }
-        }
-    }
+        })
+    });
 
     // Collect per-device statistics (same rules as the single-device
     // simulator: unfinished jobs count as misses only when the run was
@@ -291,8 +196,8 @@ fn simulate_cluster_impl(
     let mut responses: Vec<Vec<Vec<f64>>> =
         wl.devices.iter().map(|d| vec![Vec::new(); d.ts.len()]).collect();
     let mut misses_check = 0usize;
-    for (j, job) in jobs.iter().enumerate() {
-        let dev = job_dev[j];
+    for (j, job) in out.jobs.iter().enumerate() {
+        let dev = out.job_dev[j];
         let s = &mut per_device[dev][job.task];
         s.released += 1;
         match job.done {
@@ -307,28 +212,31 @@ fn simulate_cluster_impl(
                 }
             }
             None => {
-                if !stop && horizon > job.deadline {
+                if !out.stopped && horizon > job.deadline {
                     s.misses += 1;
                     misses_check += 1;
                 }
             }
         }
     }
-    let total = if cfg.stop_on_first_miss { total_misses.max(misses_check) } else { misses_check };
+    let total = if cfg.stop_on_first_miss {
+        out.total_misses.max(misses_check)
+    } else {
+        misses_check
+    };
     for (dev, per_task) in responses.iter().enumerate() {
         for (task, rs) in per_task.iter().enumerate() {
             per_device[dev][task].response = Summary::of(rs);
         }
     }
-    let traces = cores.iter_mut().map(PlatformCore::take_trace).collect();
     (
         ClusterSimResult {
             per_device,
             total_misses: total,
-            events_processed: events,
+            events_processed: out.events_processed,
             schedulable: total == 0,
         },
-        traces,
+        out.traces,
     )
 }
 
@@ -339,7 +247,7 @@ mod tests {
     use crate::sim::simulate;
 
     fn wcet_cfg() -> SimConfig {
-        SimConfig { horizon_ms: 300.0, ..SimConfig::acceptance(7) }
+        SimConfig { horizon_ms: Some(300.0), ..SimConfig::acceptance(7) }
     }
 
     fn one_device(n: usize) -> ClusterWorkload {
@@ -436,5 +344,25 @@ mod tests {
         assert_eq!(wl.levels(), vec![vec![1], vec![0]]);
         assert_eq!(wl.n_tasks(), 2);
         assert_eq!(wl.n_devices(), 2);
+    }
+
+    #[test]
+    fn per_device_policies_apply_independently() {
+        // Two identical two-task devices, one federated and one
+        // preemptive: the preemptive device's low-priority task queues
+        // behind the high-priority kernel, the federated one's does not.
+        let mk = || DeviceWorkload {
+            ts: TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]),
+            alloc: vec![1, 1],
+        };
+        let wl = ClusterWorkload::new(CpuTopology::PerDevice, vec![mk(), mk()])
+            .with_gpu_policies(vec![
+                GpuPolicyKind::Federated,
+                GpuPolicyKind::PreemptivePriority,
+            ]);
+        let r = simulate_cluster(&wl, &wcet_cfg());
+        let fed_lo = r.per_device[0][1].max_response_ms;
+        let pre_lo = r.per_device[1][1].max_response_ms;
+        assert!(pre_lo > fed_lo + 1e-9, "federated {fed_lo} vs preemptive {pre_lo}");
     }
 }

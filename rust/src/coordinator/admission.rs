@@ -16,11 +16,13 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::analysis::gpu::min_allocations;
+use crate::analysis::preemptive::schedule_preemptive;
 use crate::analysis::rtgpu::{
     schedule, schedule_with, Evaluator, RtgpuOpts, ScheduleResult, Search, SharedCache,
 };
 use crate::model::{Platform, RtTask, TaskSet};
 use crate::runtime::Engine;
+use crate::sched::GpuPolicyKind;
 
 use super::app::{AppSpec, GpuProfile};
 
@@ -173,6 +175,9 @@ pub enum AdmissionPath {
     WarmGrid,
     /// Full Algorithm-2 rerun from the global minimum allocations.
     FullGrid,
+    /// A policy-specific closed-form bound decided (no allocation search
+    /// exists for the policy — e.g. preemptive-priority GPU dispatch).
+    PolicyBound,
     /// Some task is individually infeasible — rejected before any search.
     Infeasible,
 }
@@ -180,8 +185,8 @@ pub enum AdmissionPath {
 impl AdmissionPath {
     /// `true` when the full Algorithm-2 rerun was avoided.
     pub fn is_fast(self) -> bool {
-        use AdmissionPath::{WarmGreedy, WarmGrid, WarmKeep};
-        matches!(self, WarmKeep | WarmGreedy | WarmGrid)
+        use AdmissionPath::{PolicyBound, WarmGreedy, WarmGrid, WarmKeep};
+        matches!(self, WarmKeep | WarmGreedy | WarmGrid | PolicyBound)
     }
 
     pub fn name(self) -> &'static str {
@@ -190,6 +195,7 @@ impl AdmissionPath {
             AdmissionPath::WarmGreedy => "warm-greedy",
             AdmissionPath::WarmGrid => "warm-grid",
             AdmissionPath::FullGrid => "full-grid",
+            AdmissionPath::PolicyBound => "policy-bound",
             AdmissionPath::Infeasible => "infeasible",
         }
     }
@@ -220,6 +226,8 @@ pub struct AdmissionDecision {
 pub struct AdmissionState {
     platform: Platform,
     opts: RtgpuOpts,
+    /// GPU dispatch policy this device admits under.
+    gpu_policy: GpuPolicyKind,
     next_key: u64,
     /// Registration order; each task's `id` equals its key.
     apps: Vec<(u64, RtTask)>,
@@ -230,14 +238,33 @@ pub struct AdmissionState {
 
 impl AdmissionState {
     pub fn new(platform: Platform, opts: RtgpuOpts) -> AdmissionState {
+        Self::with_gpu_policy(platform, opts, GpuPolicyKind::Federated)
+    }
+
+    /// An admission state deciding under the given GPU dispatch policy.
+    /// Under [`GpuPolicyKind::PreemptivePriority`] every decision runs
+    /// the (cheap) holistic preemptive bound — there is no allocation
+    /// search and no warm/cold distinction; admitted apps are granted
+    /// the whole device.
+    pub fn with_gpu_policy(
+        platform: Platform,
+        opts: RtgpuOpts,
+        gpu_policy: GpuPolicyKind,
+    ) -> AdmissionState {
         AdmissionState {
             platform,
             opts,
+            gpu_policy,
             next_key: 0,
             apps: Vec::new(),
             cache: SharedCache::new(),
             current: HashMap::new(),
         }
+    }
+
+    /// The GPU dispatch policy this device admits under.
+    pub fn gpu_policy(&self) -> GpuPolicyKind {
+        self.gpu_policy
     }
 
     pub fn len(&self) -> usize {
@@ -332,6 +359,19 @@ impl AdmissionState {
         let ts = TaskSet::new_deadline_monotonic(tasks);
         let order: Vec<u64> = ts.tasks.iter().map(|t| t.id as u64).collect();
         let gn_total = self.platform.gn_physical;
+
+        if self.gpu_policy == GpuPolicyKind::PreemptivePriority {
+            // No allocation search to warm up: one holistic bound per
+            // decision, whole-device grants on acceptance.
+            let result = schedule_preemptive(&ts, gn_total, &self.opts);
+            return AdmissionDecision {
+                schedulable: result.schedulable,
+                order,
+                allocation: result.allocation.unwrap_or_default(),
+                responses: result.responses,
+                path: AdmissionPath::PolicyBound,
+            };
+        }
 
         let Some(min_gn) = min_allocations(&ts, gn_total, self.opts.sm_model) else {
             return AdmissionDecision {
@@ -482,6 +522,38 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn preemptive_policy_admits_beyond_the_federated_floor() {
+        // Three GPU apps on a two-SM device: federation's one-SM-per-task
+        // floor makes this unplaceable, while the preemptive policy
+        // serialises kernels and grants each admitted app the device.
+        let mut fed = AdmissionState::new(Platform::new(2), RtgpuOpts::default());
+        let mut pre = AdmissionState::with_gpu_policy(
+            Platform::new(2),
+            RtgpuOpts::default(),
+            GpuPolicyKind::PreemptivePriority,
+        );
+        assert_eq!(pre.gpu_policy(), GpuPolicyKind::PreemptivePriority);
+        let mut fed_all = true;
+        for i in 0..3 {
+            let mut t = simple_task(i);
+            t.period = 100.0;
+            t.deadline = 40.0;
+            fed_all &= fed.add_app(t.clone()).1.schedulable;
+            let (k, d) = pre.add_app(t);
+            assert!(d.schedulable, "preemptive admission must serialise app {i}");
+            assert_eq!(d.path, AdmissionPath::PolicyBound);
+            assert!(d.path.is_fast(), "the closed-form bound avoids the grid");
+            assert_eq!(pre.allocation_of(k), Some(2), "whole-device grant");
+        }
+        assert!(!fed_all, "two SMs cannot be federated three ways");
+        // Removal re-decides on the same (cheap) path and stays sound.
+        let keys: Vec<u64> = (0..3).collect();
+        let d = pre.remove_app(keys[0]);
+        assert!(d.schedulable);
+        assert_eq!(pre.len(), 2);
     }
 
     #[test]

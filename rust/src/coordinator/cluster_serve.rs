@@ -9,13 +9,13 @@
 //! them.
 //!
 //! [`ClusterServe::serve_virtual`] is the whole arrangement with threads
-//! and wall-clock time stripped away: a deterministic single-threaded
-//! walk of one [`PlatformCore`] per device under a single virtual clock,
-//! releases routed to the owning device exactly like
-//! `cluster::simulate_cluster` routes them.  `tests/cluster_parity.rs`
-//! pins the two drivers' traces to each other — the fleet model cannot
-//! fork between the simulator and the serving path, extending the
-//! single-device guarantee of `tests/sched_parity.rs`.
+//! and wall-clock time stripped away: an adapter over the shared generic
+//! driver (`crate::sched::driver`) walking one platform core per device
+//! under a single virtual clock, releases routed to the owning device
+//! exactly like `cluster::simulate_cluster` routes them — the two are
+//! the *same loop* by construction, and `tests/cluster_parity.rs` keeps
+//! pinning their traces to each other, extending the single-device
+//! guarantee of `tests/sched_parity.rs`.
 //!
 //! A production wall-clock deployment runs one [`super::serve`] loop per
 //! device (each engine stays on its own host thread exactly as the
@@ -23,9 +23,10 @@
 //! dispatch decision those loops share.
 
 use crate::model::CpuTopology;
+use crate::sched::driver;
 use crate::sched::{
-    merge_priority_levels, route_station, Chain, CoreEvent, DeviceId, PlatformCore, TaskFifo,
-    Tick, TraceEntry, WalkJob,
+    merge_priority_levels, Chain, DeviceId, DriverConfig, DriverTask, GpuPolicyKind, Tick,
+    TraceEntry,
 };
 
 use super::serve::VirtualTask;
@@ -40,6 +41,8 @@ pub struct ClusterServe {
     local: Vec<Vec<usize>>,
     /// Per app: its local index on its device.
     local_idx: Vec<usize>,
+    /// GPU dispatch policy per device (placement's choice).
+    gpu_policies: Vec<GpuPolicyKind>,
 }
 
 impl ClusterServe {
@@ -58,11 +61,26 @@ impl ClusterServe {
             local_idx[app] = local[dev].len();
             local[dev].push(app);
         }
-        ClusterServe { cpu, route, local, local_idx }
+        let gpu_policies = vec![GpuPolicyKind::Federated; n_devices];
+        ClusterServe { cpu, route, local, local_idx, gpu_policies }
+    }
+
+    /// Override the per-device GPU policies (must match the policies the
+    /// owning placement admitted under — chains for a preemptive device
+    /// carry whole-device GPU durations).
+    pub fn with_gpu_policies(mut self, policies: Vec<GpuPolicyKind>) -> ClusterServe {
+        assert_eq!(policies.len(), self.local.len(), "one GPU policy per device");
+        self.gpu_policies = policies;
+        self
     }
 
     pub fn n_devices(&self) -> usize {
         self.local.len()
+    }
+
+    /// The per-device GPU dispatch policies this router serves under.
+    pub fn gpu_policies(&self) -> &[GpuPolicyKind] {
+        &self.gpu_policies
     }
 
     pub fn n_apps(&self) -> usize {
@@ -91,11 +109,7 @@ impl ClusterServe {
         horizon: Tick,
         mut chain_for: impl FnMut(usize) -> Chain,
     ) -> Vec<Vec<TraceEntry>> {
-        use std::cmp::Reverse;
-        use std::collections::BinaryHeap;
-
         assert_eq!(tasks.len(), self.route.len(), "one VirtualTask per routed app");
-        let n_dev = self.n_devices();
         // Per-device app order is the priority order the admission
         // analysis assumed — a non-monotone order would silently
         // misprioritize (and fork from ClusterSim), so fail loudly.
@@ -119,107 +133,29 @@ impl ClusterServe {
             .collect();
         let levels = merge_priority_levels(&deadlines);
 
-        let mut cores: Vec<PlatformCore> =
-            (0..n_dev).map(|_| PlatformCore::with_trace()).collect();
-        let mut fifos: Vec<TaskFifo> =
-            self.local.iter().map(|apps| TaskFifo::new(apps.len())).collect();
-        let mut jobs: Vec<WalkJob> = Vec::new();
-        let mut job_dev: Vec<DeviceId> = Vec::new();
-
-        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-        enum VEv {
-            Release(usize),
-            Start(usize),
-            Core(CoreEvent),
-        }
-
-        // Heap entries order by (t, seq); the VEv itself never decides.
-        let mut heap: BinaryHeap<Reverse<(Tick, u64, DeviceId, VEv)>> = BinaryHeap::new();
-        let mut seq = 0u64;
-        let push =
-            |heap: &mut BinaryHeap<Reverse<(Tick, u64, DeviceId, VEv)>>,
-             seq: &mut u64,
-             t: Tick,
-             core: DeviceId,
-             ev: VEv| {
-                *seq += 1;
-                heap.push(Reverse((t, *seq, core, ev)));
-            };
-
-        // Seed releases device-major — the same order the cluster
-        // simulator seeds its heap, so same-instant pops agree.
-        for (dev, apps) in self.local.iter().enumerate() {
-            for &app in apps {
-                push(&mut heap, &mut seq, 0, dev, VEv::Release(app));
-            }
-        }
-
-        let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
-
-        macro_rules! start_next {
-            ($now:expr, $job:expr) => {{
-                let j = $job;
-                let dev = job_dev[j];
-                let core = if jobs[j].next_phase == jobs[j].chain.len() {
-                    dev
-                } else {
-                    route_station(
-                        self.cpu,
-                        dev,
-                        jobs[j].chain.phase(jobs[j].next_phase).station(),
-                    )
-                };
-                let finished = cores[core].start_phase(&mut jobs, j, $now, &mut timers);
-                for (t, cev) in timers.drain(..) {
-                    push(&mut heap, &mut seq, t, core, VEv::Core(cev));
-                }
-                if finished {
-                    if let Some(next) = fifos[dev].on_job_done(jobs[j].task) {
-                        push(&mut heap, &mut seq, $now, dev, VEv::Start(next));
-                    }
-                }
-            }};
-        }
-
-        while let Some(Reverse((now, _, core, ev))) = heap.pop() {
-            match ev {
-                VEv::Release(app) => {
-                    if now >= horizon {
-                        continue;
-                    }
-                    let dev = self.route[app];
-                    let task = self.local_idx[app];
-                    let job_id = jobs.len();
-                    jobs.push(WalkJob::new(
-                        task,
-                        levels[dev][task],
-                        now,
-                        now + tasks[app].deadline,
-                        chain_for(app),
-                    ));
-                    job_dev.push(dev);
-                    if let Some(start) = fifos[dev].on_release(task, job_id) {
-                        push(&mut heap, &mut seq, now, dev, VEv::Start(start));
-                    }
-                    push(&mut heap, &mut seq, now + tasks[app].period, dev, VEv::Release(app));
-                }
-                VEv::Start(job) => {
-                    start_next!(now, job);
-                }
-                VEv::Core(cev) => {
-                    let station = cev.station();
-                    if let Some(j) = cores[core].on_event(&mut jobs, cev, now) {
-                        start_next!(now, j);
-                        cores[core].redispatch(station, &mut jobs, now, &mut timers);
-                        for (t, cev2) in timers.drain(..) {
-                            push(&mut heap, &mut seq, t, core, VEv::Core(cev2));
-                        }
-                    }
-                }
-            }
-        }
-
-        cores.iter_mut().map(PlatformCore::take_trace).collect()
+        let dtasks: Vec<Vec<DriverTask>> = self
+            .local
+            .iter()
+            .enumerate()
+            .map(|(dev, apps)| {
+                apps.iter()
+                    .enumerate()
+                    .map(|(k, &app)| DriverTask {
+                        period: tasks[app].period,
+                        deadline: tasks[app].deadline,
+                        priority: levels[dev][k],
+                    })
+                    .collect()
+            })
+            .collect();
+        let cfg = DriverConfig {
+            cpu: self.cpu,
+            gpu_policy: self.gpu_policies.clone(),
+            horizon,
+            stop_on_first_miss: false,
+            trace: true,
+        };
+        driver::run(&dtasks, &cfg, |dev, task| chain_for(self.local[dev][task])).traces
     }
 }
 

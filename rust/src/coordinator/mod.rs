@@ -48,4 +48,4 @@ pub use admission::{
 pub use app::{AppSpec, GpuProfile};
 pub use cluster_serve::ClusterServe;
 pub use metrics::ServeReport;
-pub use serve::{serve, serve_virtual, ServeConfig, VirtualTask};
+pub use serve::{serve, serve_virtual, serve_virtual_policy, ServeConfig, VirtualTask};

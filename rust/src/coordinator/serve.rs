@@ -32,9 +32,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::runtime::Engine;
+use crate::sched::driver;
 use crate::sched::{
-    ms_to_ticks, ticks_to_ms, Chain, CoreEvent, Phase, PlatformCore, Prio, ReadyQueue, Station,
-    TaskFifo, Tick, TraceEntry, WalkJob,
+    ms_to_ticks, ticks_to_ms, Chain, DriverConfig, DriverTask, GpuPolicyKind, Phase, Prio,
+    ReadyQueue, Station, Tick, TraceEntry,
 };
 
 use super::admission::AdmissionReport;
@@ -363,89 +364,43 @@ pub struct VirtualTask {
     pub deadline: Tick,
 }
 
-// `Ord` is required by the heap's tuple element; the unique sequence
-// number in front of it always breaks ties first.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum VEv {
-    Release(usize),
-    Start(usize),
-    Core(CoreEvent),
-}
-
 /// Deterministic single-threaded counterpart of [`serve`]: periodic
 /// releases (task `i` at `0, T_i, 2T_i, …` strictly before `horizon`,
 /// index = priority) drive chains from `chain_for` through the shared
-/// [`PlatformCore`] in virtual time, running every released job to
-/// completion.  Returns the platform trace, directly comparable to
-/// [`crate::sim::simulate_traced`]'s.
+/// generic driver ([`crate::sched::driver`]) in virtual time, running
+/// every released job to completion.  Returns the platform trace,
+/// directly comparable to [`crate::sim::simulate_traced`]'s.
 pub fn serve_virtual(
     tasks: &[VirtualTask],
     horizon: Tick,
+    chain_for: impl FnMut(usize) -> Chain,
+) -> Vec<TraceEntry> {
+    serve_virtual_policy(tasks, horizon, GpuPolicyKind::Federated, chain_for)
+}
+
+/// [`serve_virtual`] under an explicit GPU dispatch policy (the chains
+/// from `chain_for` must have been built for that policy — whole-device
+/// GPU durations under [`GpuPolicyKind::PreemptivePriority`]).
+pub fn serve_virtual_policy(
+    tasks: &[VirtualTask],
+    horizon: Tick,
+    policy: GpuPolicyKind,
     mut chain_for: impl FnMut(usize) -> Chain,
 ) -> Vec<TraceEntry> {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-
-    let n = tasks.len();
-    let mut jobs: Vec<WalkJob> = Vec::new();
-    let mut core = PlatformCore::with_trace();
-    let mut fifo = TaskFifo::new(n);
-    let mut heap: BinaryHeap<Reverse<(Tick, u64, VEv)>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    let mut push = |heap: &mut BinaryHeap<Reverse<(Tick, u64, VEv)>>, t: Tick, ev: VEv| {
-        seq += 1;
-        heap.push(Reverse((t, seq, ev)));
+    let dtasks: Vec<DriverTask> = tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| DriverTask { period: t.period, deadline: t.deadline, priority: i })
+        .collect();
+    let cfg = DriverConfig {
+        cpu: crate::model::CpuTopology::PerDevice,
+        gpu_policy: vec![policy],
+        horizon,
+        stop_on_first_miss: false,
+        trace: true,
     };
-
-    for task in 0..n {
-        push(&mut heap, 0, VEv::Release(task));
-    }
-
-    let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
-    while let Some(Reverse((now, _, ev))) = heap.pop() {
-        match ev {
-            VEv::Release(task) => {
-                if now >= horizon {
-                    continue;
-                }
-                let job_id = jobs.len();
-                jobs.push(WalkJob::new(
-                    task,
-                    task,
-                    now,
-                    now + tasks[task].deadline,
-                    chain_for(task),
-                ));
-                if let Some(start) = fifo.on_release(task, job_id) {
-                    push(&mut heap, now, VEv::Start(start));
-                }
-                push(&mut heap, now + tasks[task].period, VEv::Release(task));
-            }
-            VEv::Start(job) => {
-                if core.start_phase(&mut jobs, job, now, &mut timers) {
-                    if let Some(next) = fifo.on_job_done(jobs[job].task) {
-                        push(&mut heap, now, VEv::Start(next));
-                    }
-                }
-            }
-            VEv::Core(cev) => {
-                let station = cev.station();
-                if let Some(j) = core.on_event(&mut jobs, cev, now) {
-                    if core.start_phase(&mut jobs, j, now, &mut timers) {
-                        if let Some(next) = fifo.on_job_done(jobs[j].task) {
-                            push(&mut heap, now, VEv::Start(next));
-                        }
-                    }
-                    core.redispatch(station, &mut jobs, now, &mut timers);
-                }
-            }
-        }
-        for (t, cev) in timers.drain(..) {
-            push(&mut heap, t, VEv::Core(cev));
-        }
-    }
-
-    core.take_trace()
+    let mut out = driver::run(&[dtasks], &cfg, |_, task| chain_for(task));
+    out.traces.swap_remove(0)
 }
 
 #[cfg(test)]

@@ -97,10 +97,8 @@ pub fn run_validation(
             // analysis-side time model changes between Figs. 12 and 13.
             let sim_cfg = SimConfig {
                 exec: ExecModel::Bell,
-                sm_model: SmModel::Virtual,
                 seed: seed ^ (i as u64) << 8,
-                horizon_ms: 0.0,
-                stop_on_first_miss: true,
+                ..SimConfig::acceptance(0)
             };
             if simulate(&ts, &alloc, &sim_cfg).schedulable {
                 p_ok += 1;

@@ -15,11 +15,13 @@
 //!   (Lemmas 5.2–5.5), the end-to-end bound (Theorem 5.6), Algorithm 2's
 //!   grid-searched federated allocation, and the two baselines
 //!   (self-suspension, STGM busy-waiting).
-//! * [`sched`] — the canonical platform core (DESIGN.md §3): the
+//! * [`sched`] — the canonical platform core (DESIGN.md §3, §9): the
 //!   `Pre → H2d → Gpu → D2h → Post` phase chain, the preemptive-CPU /
-//!   non-preemptive-bus / federated-GPU station machines, and the
-//!   chain-walker every executor drives.  The simulator and the serving
-//!   coordinator are both *drivers* over this one model.
+//!   non-preemptive-bus station machines, the pluggable `GpuPolicy`
+//!   stations (federated vs GCAPS-style preemptive-priority), the
+//!   chain-walker every executor drives, and the one generic
+//!   virtual-time event-loop driver (over an indexed two-level event
+//!   queue) that the simulators and virtual serving paths all adapt.
 //! * [`sim`] — a discrete-event simulator of the CPU + non-preemptive bus +
 //!   virtual-SM GPU platform; stands in for the paper's GTX 1080 Ti
 //!   testbed (see DESIGN.md §2 for the substitution argument).

@@ -15,8 +15,9 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use rtgpu::analysis::{analyze, Approach, RtgpuOpts, Search};
+use rtgpu::analysis::{analyze, schedule_gpu_policy, Approach, RtgpuOpts, Search};
 use rtgpu::cluster::{simulate_cluster, ClusterState, PlacementPolicy};
+use rtgpu::sched::GpuPolicyKind;
 use rtgpu::coordinator::{admit, serve, AppSpec, ServeConfig};
 use rtgpu::gen::{generate_taskset, GenConfig};
 use rtgpu::harness::chart::{results_dir, table, write_csv};
@@ -31,10 +32,11 @@ use rtgpu::util::rng::Pcg;
 
 const USAGE: &str = "usage: rtgpu <serve|admit|cluster|sweep|validate|throughput> [--flags]\n\
   serve      [--seconds S] [--sms GN] [--full-artifacts]   serve real kernels\n\
-  admit      [--util U] [--tasks N] [--subtasks M]\n\
-             [--sms GN] [--seed S]                         analyze a random set\n\
+  admit      [--util U] [--tasks N] [--subtasks M] [--sms GN]\n\
+             [--gpu-policy federated|preemptive] [--seed S] analyze a random set\n\
   cluster    [--devices G] [--sms GN] [--util U] [--tasks N]\n\
              [--subtasks M] [--policy ffd|worst-fit]\n\
+             [--gpu-policy federated|preemptive]\n\
              [--shared-cpu] [--seed S]                     place + run a fleet\n\
   sweep      [--figure 8|9|10|11] [--sets K] [--seed S]    acceptance curves\n\
   validate   [--model wcet|avg] [--sets K] [--seed S]\n\
@@ -113,6 +115,8 @@ fn cmd_admit(args: &Args) -> Result<()> {
         .with_tasks(args.usize_or("tasks", 5)?)
         .with_subtasks(args.usize_or("subtasks", 5)?);
     let gn = args.usize_or("sms", 10)?;
+    let gpu_policy = GpuPolicyKind::parse(args.str_or("gpu-policy", "federated"))
+        .ok_or_else(|| CliError("--gpu-policy expects federated or preemptive".into()))?;
     let seed = args.u64_or("seed", 42)?;
     args.finish()?;
 
@@ -123,6 +127,15 @@ fn cmd_admit(args: &Args) -> Result<()> {
         println!(
             "{:<16} schedulable={} alloc={:?}",
             ap.name(),
+            v.schedulable,
+            v.allocation.as_deref().unwrap_or(&[])
+        );
+    }
+    if gpu_policy == GpuPolicyKind::PreemptivePriority {
+        let v = schedule_gpu_policy(&ts, gn, gpu_policy, &RtgpuOpts::default(), Search::Grid);
+        println!(
+            "{:<16} schedulable={} alloc={:?}",
+            "RTGPU-preemptive",
             v.schedulable,
             v.allocation.as_deref().unwrap_or(&[])
         );
@@ -139,6 +152,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         .with_subtasks(args.usize_or("subtasks", 5)?);
     let policy = PlacementPolicy::parse(args.str_or("policy", "worst-fit"))
         .ok_or_else(|| CliError("--policy expects ffd or worst-fit".into()))?;
+    let gpu_policy = GpuPolicyKind::parse(args.str_or("gpu-policy", "federated"))
+        .ok_or_else(|| CliError("--gpu-policy expects federated or preemptive".into()))?;
     let shared = args.flag("shared-cpu");
     let seed = args.u64_or("seed", 42)?;
     args.finish()?;
@@ -149,15 +164,17 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
     println!(
-        "fleet: {} × {}-SM devices ({} CPU); {} apps at total utilization {:.3}",
+        "fleet: {} × {}-SM devices ({} CPU, {} GPU policy); {} apps at total utilization {:.3}",
         devices,
         gn,
         platform.cpu.name(),
+        gpu_policy.name(),
         ts.len(),
         ts.total_utilization()
     );
 
-    let mut state = ClusterState::new(platform, RtgpuOpts::default());
+    let mut state = ClusterState::new(platform, RtgpuOpts::default())
+        .with_gpu_policies(vec![gpu_policy; devices]);
     let report = state.place_all(&ts.tasks, policy);
     print!("{}", state.table());
     if !report.all_placed() {

@@ -1,0 +1,291 @@
+//! The one generic event-loop driver every virtual-time executor is an
+//! adapter over (DESIGN.md §9).
+//!
+//! Four hand-mirrored loops used to re-implement the same schedule —
+//! `sim::engine`, `cluster::sim`, `coordinator::serve_virtual` and
+//! `ClusterServe::serve_virtual` — kept consistent only by parity tests.
+//! [`run`] owns the whole mechanism once:
+//!
+//! * the [`EventQueue`] and the `(tick, sequence)` total order;
+//! * periodic release generation (device-major seeding, task `k` at
+//!   `0, T_k, 2T_k, …` strictly before the horizon);
+//! * the chain-oracle call discipline (one call per release, in pop
+//!   order — stochastic oracles rely on this for RNG reproducibility);
+//! * horizon and stop-on-first-miss handling, deadline bookkeeping, and
+//!   the [`TaskFifo`] job-level precedence;
+//! * station routing across devices ([`route_station`]) and the trace
+//!   sink per device core.
+//!
+//! Adapters differ only in shape: the simulators compute statistics from
+//! the returned job arena; the virtual serving drivers take the traces.
+//! Policy behaviour (who claims the GPU) is delegated to the per-device
+//! [`GpuPolicyKind`] stations inside each [`PlatformCore`].
+
+use crate::model::CpuTopology;
+
+use super::equeue::EventQueue;
+use super::platform::{CoreEvent, JobId, PlatformCore, TaskFifo, TraceEntry, WalkJob};
+use super::policy::GpuPolicyKind;
+use super::{route_station, Chain, DeviceId, Tick};
+
+/// One periodic task as the driver sees it (times in ticks; `priority`
+/// is the global level — lower is served first).
+#[derive(Debug, Clone, Copy)]
+pub struct DriverTask {
+    pub period: Tick,
+    pub deadline: Tick,
+    pub priority: usize,
+}
+
+/// Driver parameters shared by every adapter.
+#[derive(Debug, Clone)]
+pub struct DriverConfig {
+    /// CPU-station routing: per-device, or all funnelled to device 0.
+    pub cpu: CpuTopology,
+    /// GPU dispatch policy per device.
+    pub gpu_policy: Vec<GpuPolicyKind>,
+    /// Releases at or after this tick are suppressed.
+    pub horizon: Tick,
+    /// Stop the run at the first deadline miss (fast accept/reject).
+    pub stop_on_first_miss: bool,
+    /// Record per-core [`TraceEntry`]s.
+    pub trace: bool,
+}
+
+/// Everything a run produced; adapters project what they need.
+#[derive(Debug)]
+pub struct DriverOutcome {
+    /// Every released job, in release (pop) order.
+    pub jobs: Vec<WalkJob>,
+    /// Owning device per job, parallel to `jobs`.
+    pub job_dev: Vec<DeviceId>,
+    /// Deadline misses observed online (completions only; unfinished
+    /// jobs are the adapter's accounting).
+    pub total_misses: usize,
+    pub events_processed: usize,
+    /// The run was cut short by `stop_on_first_miss`.
+    pub stopped: bool,
+    /// One platform trace per device core (empty vectors when tracing is
+    /// off; under a shared CPU, every device's CPU completions land in
+    /// core 0's trace).
+    pub traces: Vec<Vec<TraceEntry>>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Release { dev: DeviceId, task: usize },
+    Start { job: JobId },
+    Core { core: DeviceId, ev: CoreEvent },
+}
+
+/// Drive `devices` (per-device task lists in local priority order) to
+/// the horizon.  `chain_for(dev, task)` supplies each released job's
+/// concrete phase chain and is called exactly once per release, in
+/// event-pop order.
+pub fn run(
+    devices: &[Vec<DriverTask>],
+    cfg: &DriverConfig,
+    mut chain_for: impl FnMut(DeviceId, usize) -> Chain,
+) -> DriverOutcome {
+    let n_dev = devices.len();
+    assert!(n_dev >= 1, "driver needs at least one device");
+    assert_eq!(cfg.gpu_policy.len(), n_dev, "one GPU policy per device");
+
+    let mut cores: Vec<PlatformCore> =
+        cfg.gpu_policy.iter().map(|&p| PlatformCore::with_policy(p, cfg.trace)).collect();
+    let mut fifos: Vec<TaskFifo> = devices.iter().map(|d| TaskFifo::new(d.len())).collect();
+    let mut jobs: Vec<WalkJob> = Vec::new();
+    let mut job_dev: Vec<DeviceId> = Vec::new();
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    // Initial releases, device-major — the seeding order every executor
+    // shared before the extraction, so same-instant pops keep agreeing.
+    for (dev, tasks) in devices.iter().enumerate() {
+        for task in 0..tasks.len() {
+            q.push(0, Ev::Release { dev, task });
+        }
+    }
+
+    let mut total_misses = 0usize;
+    let mut events = 0usize;
+    let mut stop = false;
+    let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
+
+    // Enter job `j`'s next phase on the serving core (shared-CPU routing
+    // funnels CPU phases to device 0) or finish it: deadline bookkeeping
+    // plus the task-FIFO successor.
+    macro_rules! start_next {
+        ($now:expr, $job:expr) => {{
+            let j = $job;
+            let dev = job_dev[j];
+            let core = if jobs[j].next_phase == jobs[j].chain.len() {
+                dev
+            } else {
+                route_station(cfg.cpu, dev, jobs[j].chain.phase(jobs[j].next_phase).station())
+            };
+            let finished = cores[core].start_phase(&mut jobs, j, $now, &mut timers);
+            for (t, cev) in timers.drain(..) {
+                q.push(t, Ev::Core { core, ev: cev });
+            }
+            if finished {
+                if $now > jobs[j].deadline {
+                    total_misses += 1;
+                    if cfg.stop_on_first_miss {
+                        stop = true;
+                    }
+                }
+                if let Some(next) = fifos[dev].on_job_done(jobs[j].task) {
+                    q.push($now, Ev::Start { job: next });
+                }
+            }
+        }};
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        if stop {
+            break;
+        }
+        events += 1;
+        match ev {
+            Ev::Release { dev, task } => {
+                if now >= cfg.horizon {
+                    continue;
+                }
+                let dt = &devices[dev][task];
+                let chain = chain_for(dev, task);
+                let job_id = jobs.len();
+                jobs.push(WalkJob::new(task, dt.priority, now, now + dt.deadline, chain));
+                job_dev.push(dev);
+                if let Some(start) = fifos[dev].on_release(task, job_id) {
+                    q.push(now, Ev::Start { job: start });
+                }
+                q.push(now + dt.period, Ev::Release { dev, task });
+            }
+            Ev::Start { job } => {
+                start_next!(now, job);
+            }
+            Ev::Core { core, ev: cev } => {
+                let station = cev.station();
+                if let Some(j) = cores[core].on_event(&mut jobs, cev, now) {
+                    start_next!(now, j);
+                    cores[core].redispatch(station, &mut jobs, now, &mut timers);
+                    for (t, cev2) in timers.drain(..) {
+                        q.push(t, Ev::Core { core, ev: cev2 });
+                    }
+                }
+            }
+        }
+    }
+
+    let traces = cores.iter_mut().map(PlatformCore::take_trace).collect();
+    DriverOutcome {
+        jobs,
+        job_dev,
+        total_misses,
+        events_processed: events,
+        stopped: stop,
+        traces,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Phase, TraceEvent};
+
+    fn cfg(policies: Vec<GpuPolicyKind>, horizon: Tick) -> DriverConfig {
+        DriverConfig {
+            cpu: CpuTopology::PerDevice,
+            gpu_policy: policies,
+            horizon,
+            stop_on_first_miss: false,
+            trace: true,
+        }
+    }
+
+    #[test]
+    fn single_task_walks_its_chain() {
+        let tasks = vec![vec![DriverTask { period: 1000, deadline: 1000, priority: 0 }]];
+        let out = run(&tasks, &cfg(vec![GpuPolicyKind::Federated], 1), |_, _| {
+            Chain::five_phase(10, 20, 30, 40, 50)
+        });
+        assert_eq!(out.jobs.len(), 1);
+        assert_eq!(out.jobs[0].done, Some(150));
+        assert_eq!(out.total_misses, 0);
+        let events: Vec<TraceEvent> = out.traces[0].iter().map(|e| e.event).collect();
+        assert_eq!(
+            events,
+            vec![
+                TraceEvent::PhaseDone(Phase::Cpu(0)),
+                TraceEvent::PhaseDone(Phase::H2d(0)),
+                TraceEvent::PhaseDone(Phase::Gpu(0)),
+                TraceEvent::PhaseDone(Phase::D2h(0)),
+                TraceEvent::PhaseDone(Phase::Cpu(1)),
+                TraceEvent::JobDone,
+            ]
+        );
+    }
+
+    #[test]
+    fn stop_on_first_miss_cuts_the_run() {
+        let tasks = vec![vec![DriverTask { period: 10, deadline: 8, priority: 0 }]];
+        let mut c = cfg(vec![GpuPolicyKind::Federated], 10_000);
+        c.stop_on_first_miss = true;
+        let out = run(&tasks, &c, |_, _| Chain::new(vec![(Phase::Cpu(0), 9)]));
+        assert!(out.stopped);
+        assert_eq!(out.total_misses, 1);
+        assert!(out.events_processed < 20, "{}", out.events_processed);
+    }
+
+    #[test]
+    fn federated_gpu_phases_overlap_but_preemptive_serialise() {
+        let tasks = |n: usize| {
+            vec![(0..n)
+                .map(|i| DriverTask { period: 1000, deadline: 1000, priority: i })
+                .collect::<Vec<_>>()]
+        };
+        let chain = |_: DeviceId, _: usize| Chain::new(vec![(Phase::Gpu(0), 10)]);
+        let fed = run(&tasks(2), &cfg(vec![GpuPolicyKind::Federated], 1), chain);
+        assert_eq!(fed.jobs.iter().map(|j| j.done.unwrap()).collect::<Vec<_>>(), vec![10, 10]);
+        let pre = run(&tasks(2), &cfg(vec![GpuPolicyKind::PreemptivePriority], 1), chain);
+        assert_eq!(pre.jobs.iter().map(|j| j.done.unwrap()).collect::<Vec<_>>(), vec![10, 20]);
+    }
+
+    #[test]
+    fn shared_cpu_funnels_to_core_zero() {
+        let tasks: Vec<Vec<DriverTask>> = (0..2)
+            .map(|_| vec![DriverTask { period: 1000, deadline: 1000, priority: 0 }])
+            .collect();
+        let c = DriverConfig {
+            cpu: CpuTopology::Shared,
+            gpu_policy: vec![GpuPolicyKind::Federated; 2],
+            horizon: 1,
+            stop_on_first_miss: false,
+            trace: true,
+        };
+        let out = run(&tasks, &c, |_, _| Chain::new(vec![(Phase::Cpu(0), 10)]));
+        // Both CPU phases run (serialised) on core 0; each job's
+        // completion is still recorded on its own device's core.
+        let cpu_on_core0 = out.traces[0]
+            .iter()
+            .filter(|e| matches!(e.event, TraceEvent::PhaseDone(Phase::Cpu(_))))
+            .count();
+        assert_eq!(cpu_on_core0, 2, "both devices' CPU work lands on core 0");
+        assert_eq!(
+            out.traces[1].iter().map(|e| e.event).collect::<Vec<_>>(),
+            vec![TraceEvent::JobDone]
+        );
+        let done: Vec<Tick> = out.jobs.iter().map(|j| j.done.unwrap()).collect();
+        assert_eq!(done, vec![10, 20], "one host CPU serialises the devices");
+    }
+
+    #[test]
+    fn same_task_jobs_serialise_via_fifo() {
+        let tasks = vec![vec![DriverTask { period: 50, deadline: 400, priority: 0 }]];
+        let out = run(&tasks, &cfg(vec![GpuPolicyKind::Federated], 100), |_, _| {
+            Chain::five_phase(20, 20, 20, 20, 20)
+        });
+        let done: Vec<Tick> = out.jobs.iter().map(|j| j.done.unwrap()).collect();
+        assert_eq!(done, vec![100, 200]);
+    }
+}

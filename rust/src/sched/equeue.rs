@@ -1,0 +1,314 @@
+//! The driver's event queue: an indexed two-level structure (near-future
+//! bucket wheel + far-future heap) replacing per-phase `BinaryHeap`
+//! churn (DESIGN.md §9).
+//!
+//! A discrete-event schedule is overwhelmingly near-future: phase
+//! completions land microseconds-to-milliseconds ahead, and only the
+//! periodic releases reach further out.  [`EventQueue`] exploits that
+//! shape: events within the wheel window (256 slots × 131 µs ≈ 33 ms of
+//! virtual time) go to their slot's unsorted bucket — push is an
+//! amortised O(1) `Vec` append — and are lazily sorted when the cursor
+//! reaches the slot; everything beyond the window sits in a conventional
+//! binary heap and migrates into the wheel as the cursor advances.
+//!
+//! Pop order is **exactly** global `(tick, sequence)` order — the same
+//! total order the previous `BinaryHeap<Reverse<…>>` drivers used, so
+//! traces are bit-identical (`queue_orders_match_heap_oracle` pins this
+//! against the reference [`HeapQueue`], which `benches/sim_bench.rs`
+//! also races for `BENCH_driver.json`).
+//!
+//! Invariants:
+//! * pushes never go to the past: `t` ≥ the tick of the last popped
+//!   event (a DES schedules completions and releases at `now + d ≥ now`);
+//! * wheel events all have slot ∈ `[base_slot, base_slot + SLOTS)`; far
+//!   events all have slot ≥ `base_slot + SLOTS` (maintained by draining
+//!   the far heap each time the cursor advances a slot).
+
+use std::collections::BinaryHeap;
+
+use super::Tick;
+
+/// Wheel slots (power of two).
+const SLOTS: usize = 256;
+const MASK: u64 = SLOTS as u64 - 1;
+/// log2 of the slot width in ticks: 2^17 ≈ 131 µs, window ≈ 33.5 ms.
+const SLOT_SHIFT: u32 = 17;
+
+struct Entry<E> {
+    t: Tick,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.t, self.seq) == (other.t, other.seq)
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t, self.seq).cmp(&(other.t, other.seq))
+    }
+}
+
+struct Slot<E> {
+    events: Vec<(Tick, u64, E)>,
+    /// Descending by `(t, seq)` so `pop()` takes the minimum from the end.
+    sorted: bool,
+}
+
+impl<E> Default for Slot<E> {
+    fn default() -> Self {
+        Slot { events: Vec::new(), sorted: true }
+    }
+}
+
+/// Two-level monotone event queue: push in any order at or after the last
+/// popped tick, pop in global `(tick, arrival)` order.
+pub struct EventQueue<E> {
+    slots: Vec<Slot<E>>,
+    /// Absolute slot index (`t >> SLOT_SHIFT`) of the wheel cursor.
+    base_slot: u64,
+    wheel_len: usize,
+    far: BinaryHeap<std::cmp::Reverse<Entry<E>>>,
+    seq: u64,
+    len: usize,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue {
+            slots: (0..SLOTS).map(|_| Slot::default()).collect(),
+            base_slot: 0,
+            wheel_len: 0,
+            far: BinaryHeap::new(),
+            seq: 0,
+            len: 0,
+        }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue `ev` at tick `t`.  Ties at the same tick pop in push order.
+    pub fn push(&mut self, t: Tick, ev: E) {
+        self.seq += 1;
+        self.len += 1;
+        let slot = t >> SLOT_SHIFT;
+        debug_assert!(slot >= self.base_slot, "event pushed into the past");
+        if slot < self.base_slot + SLOTS as u64 {
+            let s = &mut self.slots[(slot & MASK) as usize];
+            if slot == self.base_slot && s.sorted && !s.events.is_empty() {
+                // The cursor's slot is being drained: keep it sorted with
+                // a positioned insert instead of forcing a full re-sort
+                // on the next pop (the hot zero-delay Start/Core pattern
+                // pushes at `now`, whose position is near the tail).
+                let key = (t, self.seq);
+                let pos = s.events.partition_point(|e| (e.0, e.1) > key);
+                s.events.insert(pos, (t, self.seq, ev));
+            } else {
+                s.events.push((t, self.seq, ev));
+                s.sorted = s.events.len() <= 1;
+            }
+            self.wheel_len += 1;
+        } else {
+            self.far.push(std::cmp::Reverse(Entry { t, seq: self.seq, ev }));
+        }
+    }
+
+    /// Move far-heap events whose slot entered the wheel window.
+    fn drain_far(&mut self) {
+        let limit = self.base_slot + SLOTS as u64;
+        while let Some(std::cmp::Reverse(top)) = self.far.peek() {
+            if top.t >> SLOT_SHIFT >= limit {
+                break;
+            }
+            let std::cmp::Reverse(e) = self.far.pop().expect("peeked");
+            let s = &mut self.slots[((e.t >> SLOT_SHIFT) & MASK) as usize];
+            s.events.push((e.t, e.seq, e.ev));
+            s.sorted = s.events.len() <= 1;
+            self.wheel_len += 1;
+        }
+    }
+
+    /// Dequeue the earliest event.
+    pub fn pop(&mut self) -> Option<(Tick, E)> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.wheel_len == 0 {
+            // The whole backlog is far-future: jump the cursor straight to
+            // its earliest slot (no empty-slot scanning on sparse runs).
+            let t_min = self.far.peek().expect("len > 0").0.t;
+            self.base_slot = t_min >> SLOT_SHIFT;
+            self.drain_far();
+        }
+        loop {
+            let idx = (self.base_slot & MASK) as usize;
+            if self.slots[idx].events.is_empty() {
+                self.base_slot += 1;
+                self.drain_far();
+                continue;
+            }
+            let s = &mut self.slots[idx];
+            if !s.sorted {
+                s.events.sort_unstable_by(|a, b| (b.0, b.1).cmp(&(a.0, a.1)));
+                s.sorted = true;
+            }
+            let (t, _, ev) = s.events.pop().expect("checked non-empty");
+            self.wheel_len -= 1;
+            self.len -= 1;
+            return Some((t, ev));
+        }
+    }
+}
+
+/// Reference single-level heap queue with the identical push/pop contract
+/// — the pre-refactor driver structure, kept as the correctness oracle
+/// and the `BENCH_driver.json` baseline.
+pub struct HeapQueue<E> {
+    heap: BinaryHeap<std::cmp::Reverse<Entry<E>>>,
+    seq: u64,
+}
+
+impl<E> Default for HeapQueue<E> {
+    fn default() -> Self {
+        HeapQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+}
+
+impl<E> HeapQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn push(&mut self, t: Tick, ev: E) {
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse(Entry { t, seq: self.seq, ev }));
+    }
+
+    pub fn pop(&mut self) -> Option<(Tick, E)> {
+        self.heap.pop().map(|std::cmp::Reverse(e)| (e.t, e.ev))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn pops_in_time_then_push_order() {
+        let mut q = EventQueue::new();
+        q.push(50, "b");
+        q.push(10, "a");
+        q.push(50, "c");
+        q.push(0, "z");
+        assert_eq!(q.pop(), Some((0, "z")));
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((50, "b")));
+        assert_eq!(q.pop(), Some((50, "c")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn far_future_events_cross_the_window() {
+        let mut q = EventQueue::new();
+        let far = (SLOTS as u64) << (SLOT_SHIFT + 2); // well past the window
+        q.push(far, 1u32);
+        q.push(far + 1, 2);
+        q.push(3, 0);
+        assert_eq!(q.pop(), Some((3, 0)));
+        assert_eq!(q.pop(), Some((far, 1)));
+        assert_eq!(q.pop(), Some((far + 1, 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order_within_a_slot() {
+        // Pops interleaved with same-tick pushes (the zero-duration-phase
+        // pattern): later pushes at the same tick pop after earlier ones.
+        let mut q = EventQueue::new();
+        q.push(5, 0u32);
+        q.push(5, 1);
+        assert_eq!(q.pop(), Some((5, 0)));
+        q.push(5, 2);
+        assert_eq!(q.pop(), Some((5, 1)));
+        assert_eq!(q.pop(), Some((5, 2)));
+    }
+
+    #[test]
+    fn queue_orders_match_heap_oracle() {
+        // Random DES-shaped schedule: every pop schedules 0–2 successors
+        // at now + delta, deltas spanning wheel and far-heap scales.
+        let mut wheel: EventQueue<u64> = EventQueue::new();
+        let mut heap: HeapQueue<u64> = HeapQueue::new();
+        let mut rng = Pcg::new(99);
+        let mut id = 0u64;
+        for _ in 0..64 {
+            let t = rng.below(1 << 22);
+            wheel.push(t, id);
+            heap.push(t, id);
+            id += 1;
+        }
+        for round in 0..20_000 {
+            let a = wheel.pop();
+            let b = heap.pop();
+            assert_eq!(a, b, "divergence at round {round}");
+            let Some((now, _)) = a else { break };
+            let successors = rng.below(3);
+            for _ in 0..successors {
+                // Mostly near-future, occasionally far (release-scale).
+                let delta = if rng.below(8) == 0 {
+                    rng.below(1 << 28)
+                } else {
+                    rng.below(1 << 20)
+                };
+                wheel.push(now + delta, id);
+                heap.push(now + delta, id);
+                id += 1;
+            }
+            assert_eq!(wheel.len(), heap.len());
+        }
+    }
+
+    #[test]
+    fn sparse_schedule_jumps_without_scanning() {
+        // Events many windows apart: each pop must land directly.
+        let mut q = EventQueue::new();
+        let step = (SLOTS as u64) << (SLOT_SHIFT + 4);
+        for i in 0..16u64 {
+            q.push(i * step, i);
+        }
+        for i in 0..16u64 {
+            assert_eq!(q.pop(), Some((i * step, i)));
+        }
+        assert!(q.pop().is_none());
+    }
+}

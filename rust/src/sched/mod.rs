@@ -15,21 +15,34 @@
 //!   plus the [`TaskFifo`] job-level precedence policy.
 //! * [`queue`] — the priority [`ReadyQueue`] used by the wall-clock
 //!   serving stations.
+//! * [`policy`] — the pluggable [`GpuPolicy`] station contract
+//!   ([`Federated`] dedicated SMs vs [`PreemptivePriority`] whole-device
+//!   claim, DESIGN.md §9).
+//! * [`driver`] — the one generic virtual-time event loop every
+//!   simulator / virtual serving path adapts ([`driver::run`]), over the
+//!   indexed two-level [`EventQueue`] in [`equeue`].
 //!
-//! Drivers supply the notion of time: `sim::engine` replays the core
-//! under virtual nanosecond ticks, `coordinator::serve` under wall-clock
-//! threads.  Both consume the same dispatch order and phase sequencing,
-//! so analysis-vs-sim-vs-serve cannot disagree on the model.
+//! Drivers supply the notion of time: the shared [`driver`] replays the
+//! core under virtual nanosecond ticks for every executor,
+//! `coordinator::serve` under wall-clock threads.  Both consume the same
+//! dispatch order and phase sequencing, so analysis-vs-sim-vs-serve
+//! cannot disagree on the model.
 
 pub mod chain;
+pub mod driver;
+pub mod equeue;
 pub mod platform;
+pub mod policy;
 pub mod queue;
 
 pub use chain::{Chain, Phase, Segment, Station};
+pub use driver::{DriverConfig, DriverOutcome, DriverTask};
+pub use equeue::{EventQueue, HeapQueue};
 pub use platform::{
     CoreEvent, JobId, NonPreemptiveBus, PlatformCore, PreemptiveCpu, TaskFifo, TraceEntry,
     TraceEvent, WalkJob,
 };
+pub use policy::{Federated, GpuPolicy, GpuPolicyKind, PreemptivePriority};
 pub use queue::ReadyQueue;
 
 /// Integer platform time: nanoseconds.

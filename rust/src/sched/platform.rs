@@ -21,6 +21,7 @@
 use std::collections::VecDeque;
 
 use super::chain::{Chain, Phase, Station};
+use super::policy::{GpuPolicy, GpuPolicyKind};
 use super::{Prio, Tick};
 
 /// Index into the driver's job arena.
@@ -191,13 +192,26 @@ pub struct TraceEntry {
     pub event: TraceEvent,
 }
 
-/// The composed platform: preemptive CPU + non-preemptive bus +
-/// dedicated GPU, advancing jobs along their chains.
-#[derive(Debug, Default)]
+/// The composed platform: preemptive CPU + non-preemptive bus + a
+/// pluggable GPU station ([`GpuPolicy`], federated by default),
+/// advancing jobs along their chains.
+#[derive(Debug)]
 pub struct PlatformCore {
     pub cpu: PreemptiveCpu,
     pub bus: NonPreemptiveBus,
+    gpu: Box<dyn GpuPolicy>,
     trace: Option<Vec<TraceEntry>>,
+}
+
+impl Default for PlatformCore {
+    fn default() -> Self {
+        PlatformCore {
+            cpu: PreemptiveCpu::default(),
+            bus: NonPreemptiveBus::default(),
+            gpu: GpuPolicyKind::Federated.station(),
+            trace: None,
+        }
+    }
 }
 
 impl PlatformCore {
@@ -208,6 +222,15 @@ impl PlatformCore {
     /// A core that records a [`TraceEntry`] per phase/job completion.
     pub fn with_trace() -> Self {
         PlatformCore { trace: Some(Vec::new()), ..Self::default() }
+    }
+
+    /// A core whose GPU station runs the given policy, optionally traced.
+    pub fn with_policy(policy: GpuPolicyKind, trace: bool) -> Self {
+        PlatformCore {
+            gpu: policy.station(),
+            trace: if trace { Some(Vec::new()) } else { None },
+            ..Self::default()
+        }
     }
 
     /// Consume the recorded trace (empty when tracing is off).
@@ -252,8 +275,9 @@ impl PlatformCore {
                 }
             }
             Station::Gpu => {
-                // Dedicated virtual SMs: starts immediately, never queues.
-                timers.push((now + jobs[j].chain.duration(i), CoreEvent::GpuDone(j)));
+                // Policy-dependent: federated SMs start immediately and
+                // never queue; other policies may hold the job waiting.
+                self.gpu.enqueue(jobs, j, now, timers);
             }
         }
         false
@@ -267,7 +291,7 @@ impl PlatformCore {
         let j = match ev {
             CoreEvent::CpuDone(tok) => self.cpu.complete(tok)?,
             CoreEvent::BusDone(tok) => self.bus.complete(tok)?,
-            CoreEvent::GpuDone(j) => j,
+            CoreEvent::GpuDone(j) => self.gpu.complete(j)?,
         };
         let phase = jobs[j].chain.phase(jobs[j].next_phase);
         self.record(jobs, j, now, TraceEvent::PhaseDone(phase));
@@ -294,7 +318,7 @@ impl PlatformCore {
                     timers.push((at, CoreEvent::BusDone(tok)));
                 }
             }
-            Station::Gpu => {}
+            Station::Gpu => self.gpu.redispatch(jobs, now, timers),
         }
     }
 }
@@ -437,6 +461,57 @@ mod tests {
         assert_eq!(fifo.on_job_done(0), Some(8));
         assert_eq!(fifo.on_job_done(0), None);
         assert_eq!(fifo.on_release(0, 9), Some(9));
+    }
+
+    #[test]
+    fn task_fifo_releases_while_in_flight_queue_in_order() {
+        // Three releases land while job 1 is still in flight; the backlog
+        // must drain strictly in release order, one job per completion.
+        let mut fifo = TaskFifo::new(1);
+        assert_eq!(fifo.on_release(0, 1), Some(1));
+        assert_eq!(fifo.on_release(0, 2), None);
+        assert_eq!(fifo.on_release(0, 3), None);
+        assert_eq!(fifo.on_release(0, 4), None);
+        assert_eq!(fifo.on_job_done(0), Some(2));
+        assert_eq!(fifo.on_job_done(0), Some(3));
+        assert_eq!(fifo.on_job_done(0), Some(4));
+        assert_eq!(fifo.on_job_done(0), None);
+    }
+
+    #[test]
+    fn task_fifo_job_done_with_empty_backlog_clears_active() {
+        // After a completion with nothing queued, the task is idle: the
+        // next release starts immediately instead of queueing behind a
+        // phantom active job.
+        let mut fifo = TaskFifo::new(2);
+        assert_eq!(fifo.on_release(1, 5), Some(5));
+        assert_eq!(fifo.on_job_done(1), None);
+        assert_eq!(fifo.on_release(1, 6), Some(6), "idle task must restart immediately");
+        assert_eq!(fifo.on_job_done(1), None);
+        // A double job-done on an idle task stays a no-op.
+        assert_eq!(fifo.on_job_done(1), None);
+        assert_eq!(fifo.on_release(1, 7), Some(7));
+    }
+
+    #[test]
+    fn task_fifo_tasks_are_independent_under_interleaved_releases() {
+        // Interleaved releases of two tasks: each task's queue serialises
+        // its own jobs without ever gating the other task's.
+        let mut fifo = TaskFifo::new(2);
+        assert_eq!(fifo.on_release(0, 10), Some(10));
+        assert_eq!(fifo.on_release(1, 20), Some(20));
+        assert_eq!(fifo.on_release(0, 11), None);
+        assert_eq!(fifo.on_release(1, 21), None);
+        assert_eq!(fifo.on_release(0, 12), None);
+        // Task 1 finishing releases task 1's backlog only.
+        assert_eq!(fifo.on_job_done(1), Some(21));
+        assert_eq!(fifo.on_job_done(0), Some(11));
+        assert_eq!(fifo.on_job_done(0), Some(12));
+        assert_eq!(fifo.on_job_done(1), None);
+        assert_eq!(fifo.on_job_done(0), None);
+        // Both idle again: fresh releases start immediately.
+        assert_eq!(fifo.on_release(1, 22), Some(22));
+        assert_eq!(fifo.on_release(0, 13), Some(13));
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Pluggable GPU dispatch policies (DESIGN.md §9).
+//!
+//! The platform model fixes the CPU (preemptive fixed-priority) and the
+//! bus (non-preemptive priority-ordered); *how kernels claim the GPU* is
+//! the policy axis the literature actually varies.  [`GpuPolicy`] is the
+//! station-machine contract a [`super::PlatformCore`] drives:
+//!
+//! * **Dispatch points** — `enqueue` (a job's GPU phase becomes ready)
+//!   and `redispatch` (a kernel finished, the pool re-decides).  A policy
+//!   may only start work at these two points; between them the driver's
+//!   clock is authoritative.
+//! * **Suspend points** — segment boundaries only.  A dispatched kernel
+//!   runs to the completion tick the policy returned; policies preempt by
+//!   *not redispatching* a lower-priority job, never by cancelling a
+//!   running segment mid-flight.
+//! * **Timer validity** — a `GpuDone(j)` timer is valid iff `complete(j)`
+//!   returns `Some`.  Policies that queue must track the dispatched job
+//!   and treat any other completion as stale (the job id doubles as the
+//!   token, mirroring the CPU/bus token scheme in [`super::platform`]).
+//!
+//! Two policies ship: [`Federated`] (paper §5.2 — dedicated virtual SMs,
+//! kernels never queue) and [`PreemptivePriority`] (GCAPS-style — the
+//! highest-priority ready kernel claims the whole device; lower-priority
+//! kernels wait, and a multi-segment task yields between its segments).
+
+use super::platform::{CoreEvent, JobId, WalkJob};
+use super::Tick;
+
+/// Station machine for the GPU resource of one device.
+pub trait GpuPolicy: std::fmt::Debug {
+    /// Job `j`'s next phase is a GPU segment: admit it to the pool.  If
+    /// the policy dispatches it now, a `GpuDone(j)` completion timer is
+    /// appended to `timers`.
+    fn enqueue(
+        &mut self,
+        jobs: &[WalkJob],
+        j: JobId,
+        now: Tick,
+        timers: &mut Vec<(Tick, CoreEvent)>,
+    );
+
+    /// Validate a fired `GpuDone(j)` timer: `Some(j)` when `j` is the
+    /// kernel this policy dispatched (its phase completed), `None` for a
+    /// stale timer.
+    fn complete(&mut self, j: JobId) -> Option<JobId>;
+
+    /// A kernel finished (or the pool was otherwise freed): dispatch the
+    /// next waiting kernel, if any.
+    fn redispatch(&mut self, jobs: &[WalkJob], now: Tick, timers: &mut Vec<(Tick, CoreEvent)>);
+}
+
+/// Paper §5.2: every task owns its virtual SMs exclusively, so a GPU
+/// segment starts the moment it becomes ready and never queues.
+#[derive(Debug, Default)]
+pub struct Federated;
+
+impl GpuPolicy for Federated {
+    fn enqueue(
+        &mut self,
+        jobs: &[WalkJob],
+        j: JobId,
+        now: Tick,
+        timers: &mut Vec<(Tick, CoreEvent)>,
+    ) {
+        let d = jobs[j].chain.duration(jobs[j].next_phase);
+        timers.push((now + d, CoreEvent::GpuDone(j)));
+    }
+
+    fn complete(&mut self, j: JobId) -> Option<JobId> {
+        Some(j)
+    }
+
+    fn redispatch(&mut self, _: &[WalkJob], _: Tick, _: &mut Vec<(Tick, CoreEvent)>) {}
+}
+
+/// GCAPS-style priority-based GPU scheduling: the highest-priority ready
+/// kernel claims **all** SMs of the device; lower-priority kernels wait,
+/// and preemption happens at segment boundaries (a running kernel is
+/// never cancelled — on its completion the pool re-decides by priority).
+///
+/// Segment durations must therefore be drawn at the *full device width*
+/// (the executors pass `gn_total` as every task's allocation under this
+/// policy; `analysis::schedule_preemptive` admits on the same basis).
+#[derive(Debug, Default)]
+pub struct PreemptivePriority {
+    ready: Vec<JobId>,
+    busy: Option<JobId>,
+}
+
+impl PreemptivePriority {
+    fn dispatch(&mut self, jobs: &[WalkJob], now: Tick, timers: &mut Vec<(Tick, CoreEvent)>) {
+        if self.busy.is_some() {
+            return;
+        }
+        let Some(best_pos) = (0..self.ready.len()).min_by_key(|&i| jobs[self.ready[i]].prio)
+        else {
+            return;
+        };
+        let j = self.ready.swap_remove(best_pos);
+        let d = jobs[j].chain.duration(jobs[j].next_phase);
+        self.busy = Some(j);
+        timers.push((now + d, CoreEvent::GpuDone(j)));
+    }
+}
+
+impl GpuPolicy for PreemptivePriority {
+    fn enqueue(
+        &mut self,
+        jobs: &[WalkJob],
+        j: JobId,
+        now: Tick,
+        timers: &mut Vec<(Tick, CoreEvent)>,
+    ) {
+        self.ready.push(j);
+        self.dispatch(jobs, now, timers);
+    }
+
+    fn complete(&mut self, j: JobId) -> Option<JobId> {
+        match self.busy {
+            Some(b) if b == j => {
+                self.busy = None;
+                Some(j)
+            }
+            _ => None,
+        }
+    }
+
+    fn redispatch(&mut self, jobs: &[WalkJob], now: Tick, timers: &mut Vec<(Tick, CoreEvent)>) {
+        self.dispatch(jobs, now, timers);
+    }
+}
+
+/// Value-level policy selector — what configs, CLIs and placement carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuPolicyKind {
+    /// Dedicated virtual SMs per task (paper §5.2, the default).
+    Federated,
+    /// Whole-device claim by priority, preemption at segment boundaries.
+    PreemptivePriority,
+}
+
+impl GpuPolicyKind {
+    pub const ALL: [GpuPolicyKind; 2] =
+        [GpuPolicyKind::Federated, GpuPolicyKind::PreemptivePriority];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuPolicyKind::Federated => "federated",
+            GpuPolicyKind::PreemptivePriority => "preemptive",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<GpuPolicyKind> {
+        match s {
+            "federated" | "fed" => Some(GpuPolicyKind::Federated),
+            "preemptive" | "preemptive-priority" | "gcaps" => {
+                Some(GpuPolicyKind::PreemptivePriority)
+            }
+            _ => None,
+        }
+    }
+
+    /// Instantiate the station machine for one device.
+    pub fn station(self) -> Box<dyn GpuPolicy> {
+        match self {
+            GpuPolicyKind::Federated => Box::new(Federated),
+            GpuPolicyKind::PreemptivePriority => Box::<PreemptivePriority>::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Chain, Phase};
+
+    fn gpu_job(task: usize, prio: usize, release: Tick, d: Tick) -> WalkJob {
+        WalkJob::new(task, prio, release, release + 1_000_000, Chain::new(vec![(Phase::Gpu(0), d)]))
+    }
+
+    #[test]
+    fn federated_never_queues() {
+        let jobs = vec![gpu_job(0, 0, 0, 10), gpu_job(1, 1, 0, 10)];
+        let mut p = Federated;
+        let mut timers = Vec::new();
+        p.enqueue(&jobs, 0, 0, &mut timers);
+        p.enqueue(&jobs, 1, 0, &mut timers);
+        // Both dispatched immediately, overlapping on dedicated SMs.
+        assert_eq!(
+            timers,
+            vec![(10, CoreEvent::GpuDone(0)), (10, CoreEvent::GpuDone(1))]
+        );
+        assert_eq!(p.complete(0), Some(0));
+        assert_eq!(p.complete(1), Some(1));
+    }
+
+    #[test]
+    fn preemptive_serialises_by_priority() {
+        // Low-priority kernel holds the device; the high-priority one
+        // waits for the segment boundary, then wins the redispatch.
+        let jobs = vec![gpu_job(1, 1, 0, 10), gpu_job(0, 0, 0, 3)];
+        let mut p = PreemptivePriority::default();
+        let mut timers = Vec::new();
+        p.enqueue(&jobs, 0, 0, &mut timers);
+        assert_eq!(timers, vec![(10, CoreEvent::GpuDone(0))]);
+        timers.clear();
+        p.enqueue(&jobs, 1, 2, &mut timers);
+        assert!(timers.is_empty(), "running segment must not be cancelled");
+        // The waiting job's completion is stale while job 0 runs.
+        assert_eq!(p.complete(1), None);
+        assert_eq!(p.complete(0), Some(0));
+        p.redispatch(&jobs, 10, &mut timers);
+        assert_eq!(timers, vec![(13, CoreEvent::GpuDone(1))]);
+        assert_eq!(p.complete(1), Some(1));
+    }
+
+    #[test]
+    fn preemptive_picks_highest_priority_waiter() {
+        let jobs = vec![gpu_job(0, 2, 0, 5), gpu_job(1, 1, 0, 5), gpu_job(2, 0, 0, 5)];
+        let mut p = PreemptivePriority::default();
+        let mut timers = Vec::new();
+        p.enqueue(&jobs, 0, 0, &mut timers); // runs
+        p.enqueue(&jobs, 1, 1, &mut timers); // waits
+        p.enqueue(&jobs, 2, 2, &mut timers); // waits, higher priority
+        timers.clear();
+        assert_eq!(p.complete(0), Some(0));
+        p.redispatch(&jobs, 5, &mut timers);
+        assert_eq!(timers, vec![(10, CoreEvent::GpuDone(2))], "priority order, not FIFO");
+    }
+
+    #[test]
+    fn kind_parses_and_names_roundtrip() {
+        for kind in GpuPolicyKind::ALL {
+            assert_eq!(GpuPolicyKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(GpuPolicyKind::parse("gcaps"), Some(GpuPolicyKind::PreemptivePriority));
+        assert_eq!(GpuPolicyKind::parse("nope"), None);
+    }
+}

@@ -1,16 +1,15 @@
-//! The discrete-event driver: periodic job releases walking their
-//! segment chains across the shared platform core ([`crate::sched`]) —
-//! preemptive CPU, non-preemptive bus, federated GPU — in virtual
+//! The discrete-event simulator: a statistics adapter over the shared
+//! generic driver ([`crate::sched::driver`]) — periodic job releases
+//! walking their segment chains across the platform core (preemptive
+//! CPU, non-preemptive bus, policy-dispatched GPU) in virtual
 //! nanosecond ticks.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
 use crate::analysis::{Allocation, SmModel};
-use crate::model::TaskSet;
+use crate::model::{CpuTopology, TaskSet};
+use crate::sched::driver;
 use crate::sched::{
-    ms_to_ticks, ticks_to_ms, Chain, CoreEvent, PlatformCore, Segment, TaskFifo, Tick,
-    TraceEntry, WalkJob,
+    ms_to_ticks, ticks_to_ms, Chain, DriverConfig, DriverTask, GpuPolicyKind, Segment,
+    TraceEntry,
 };
 use crate::util::rng::Pcg;
 use crate::util::stats::Summary;
@@ -23,11 +22,17 @@ pub struct SimConfig {
     pub exec: ExecModel,
     pub sm_model: SmModel,
     pub seed: u64,
-    /// Simulated horizon in milliseconds.  Jobs released before the
-    /// horizon are run to completion.
-    pub horizon_ms: f64,
+    /// Simulated horizon in milliseconds; `None` = auto (20 × max
+    /// period).  An explicit non-positive horizon is a caller bug and
+    /// asserts instead of being silently reinterpreted.
+    pub horizon_ms: Option<f64>,
     /// Stop at the first deadline miss (fast accept/reject probing).
     pub stop_on_first_miss: bool,
+    /// GPU dispatch policy.  Under [`GpuPolicyKind::PreemptivePriority`]
+    /// a running kernel claims the whole device, so pass the full device
+    /// SM count as every task's allocation (as
+    /// `analysis::schedule_preemptive` grants it).
+    pub gpu_policy: GpuPolicyKind,
 }
 
 impl SimConfig {
@@ -37,8 +42,9 @@ impl SimConfig {
             exec: ExecModel::Wcet,
             sm_model: SmModel::Virtual,
             seed,
-            horizon_ms: 0.0, // auto: 20 × max period
+            horizon_ms: None, // auto: 20 × max period
             stop_on_first_miss: true,
+            gpu_policy: GpuPolicyKind::Federated,
         }
     }
 
@@ -48,8 +54,9 @@ impl SimConfig {
             exec: ExecModel::Bell,
             sm_model: SmModel::Virtual,
             seed,
-            horizon_ms: 0.0,
+            horizon_ms: None,
             stop_on_first_miss: false,
+            gpu_policy: GpuPolicyKind::Federated,
         }
     }
 }
@@ -75,32 +82,17 @@ pub struct SimResult {
     pub schedulable: bool,
 }
 
-// ---------------------------------------------------------------------------
-// Event plumbing (driver-owned; stations live in `sched`)
-// ---------------------------------------------------------------------------
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum EvKind {
-    Release { task: usize },
-    JobStart { job: usize },
-    Core(CoreEvent),
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-struct Ev {
-    t: Tick,
-    seq: u64,
-    kind: EvKind,
-}
-
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.t, self.seq).cmp(&(other.t, other.seq))
-    }
-}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
+/// Resolve a config horizon against a task set's max period.  An
+/// explicit horizon must be positive (a literal `0.0` is a caller bug,
+/// no longer silently reinterpreted as "auto"); the auto horizon of an
+/// empty task set is 0 — no releases, trivially schedulable.
+pub(crate) fn resolve_horizon_ms(horizon_ms: Option<f64>, max_period: f64) -> f64 {
+    match horizon_ms {
+        Some(h) => {
+            assert!(h > 0.0 && h.is_finite(), "non-positive simulation horizon {h}");
+            h
+        }
+        None => 20.0 * max_period,
     }
 }
 
@@ -135,107 +127,39 @@ fn simulate_impl(
         assert!(t.gpu.is_empty() || gn >= 1, "GPU task with zero SMs");
     }
 
-    let horizon_ms = if cfg.horizon_ms > 0.0 {
-        cfg.horizon_ms
-    } else {
-        20.0 * ts.tasks.iter().map(|t| t.period).fold(0.0, f64::max)
-    };
+    let max_period = ts.tasks.iter().map(|t| t.period).fold(0.0, f64::max);
+    let horizon_ms = resolve_horizon_ms(cfg.horizon_ms, max_period);
     let horizon = ms_to_ticks(horizon_ms);
     let mut rng = Pcg::new(cfg.seed);
 
     let n = ts.len();
-    let mut jobs: Vec<WalkJob> = Vec::new();
-    let mut core = if trace { PlatformCore::with_trace() } else { PlatformCore::new() };
-    let mut fifo = TaskFifo::new(n);
-
-    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
-    let mut seq: u64 = 0;
-    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, t: Tick, kind: EvKind| {
-        *seq += 1;
-        heap.push(Reverse(Ev { t, seq: *seq, kind }));
+    let tasks: Vec<DriverTask> = ts
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| DriverTask {
+            period: ms_to_ticks(t.period),
+            deadline: ms_to_ticks(t.deadline),
+            priority: i,
+        })
+        .collect();
+    let dcfg = DriverConfig {
+        cpu: CpuTopology::PerDevice,
+        gpu_policy: vec![cfg.gpu_policy],
+        horizon,
+        stop_on_first_miss: cfg.stop_on_first_miss,
+        trace,
     };
-
-    // Initial releases.
-    for task in 0..n {
-        push(&mut heap, &mut seq, 0, EvKind::Release { task });
-    }
-
-    let mut total_misses = 0usize;
-    let mut events = 0usize;
-    let mut stop = false;
-    let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
-
-    // Handle a finished job: misses, stop flag, task-FIFO successor.
-    macro_rules! finish_job {
-        ($now:expr, $job:expr) => {{
-            let j = $job;
-            if $now > jobs[j].deadline {
-                total_misses += 1;
-                if cfg.stop_on_first_miss {
-                    stop = true;
-                }
+    // Draw all phase durations per released job, in chain order.
+    let mut out = driver::run(&[tasks], &dcfg, |_, task| {
+        let t = &ts.tasks[task];
+        Chain::from_task(t, |seg| match seg {
+            Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
+            Segment::Gpu(g) => {
+                ms_to_ticks(cfg.exec.draw_gpu(&mut rng, g, alloc[task].max(1), cfg.sm_model))
             }
-            let task = jobs[j].task;
-            if let Some(next) = fifo.on_job_done(task) {
-                push(&mut heap, &mut seq, $now, EvKind::JobStart { job: next });
-            }
-        }};
-    }
-
-    while let Some(Reverse(ev)) = heap.pop() {
-        if stop {
-            break;
-        }
-        events += 1;
-        let now = ev.t;
-        match ev.kind {
-            EvKind::Release { task } => {
-                if now >= horizon {
-                    continue;
-                }
-                let t = &ts.tasks[task];
-                // Draw all phase durations for this job (chain order).
-                let chain = Chain::from_task(t, |seg| match seg {
-                    Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
-                    Segment::Gpu(g) => ms_to_ticks(cfg.exec.draw_gpu(
-                        &mut rng,
-                        g,
-                        alloc[task].max(1),
-                        cfg.sm_model,
-                    )),
-                });
-                let job_id = jobs.len();
-                jobs.push(WalkJob::new(task, task, now, now + ms_to_ticks(t.deadline), chain));
-                // Job-level precedence within the task.
-                if let Some(start) = fifo.on_release(task, job_id) {
-                    push(&mut heap, &mut seq, now, EvKind::JobStart { job: start });
-                }
-                push(
-                    &mut heap,
-                    &mut seq,
-                    now + ms_to_ticks(t.period),
-                    EvKind::Release { task },
-                );
-            }
-            EvKind::JobStart { job } => {
-                if core.start_phase(&mut jobs, job, now, &mut timers) {
-                    finish_job!(now, job);
-                }
-            }
-            EvKind::Core(cev) => {
-                let station = cev.station();
-                if let Some(j) = core.on_event(&mut jobs, cev, now) {
-                    if core.start_phase(&mut jobs, j, now, &mut timers) {
-                        finish_job!(now, j);
-                    }
-                    core.redispatch(station, &mut jobs, now, &mut timers);
-                }
-            }
-        }
-        for (t, cev) in timers.drain(..) {
-            push(&mut heap, &mut seq, t, EvKind::Core(cev));
-        }
-    }
+        })
+    });
 
     // Collect statistics.
     let mut per_task: Vec<TaskStats> = (0..n)
@@ -249,7 +173,7 @@ fn simulate_impl(
         .collect();
     let mut responses: Vec<Vec<f64>> = vec![Vec::new(); n];
     let mut misses_check = 0usize;
-    for job in &jobs {
+    for job in &out.jobs {
         let s = &mut per_task[job.task];
         s.released += 1;
         match job.done {
@@ -266,14 +190,18 @@ fn simulate_impl(
             None => {
                 // Unfinished at horizon: a miss if its deadline passed and
                 // the run wasn't cut short by stop_on_first_miss.
-                if !stop && ms_to_ticks(horizon_ms) > job.deadline {
+                if !out.stopped && horizon > job.deadline {
                     s.misses += 1;
                     misses_check += 1;
                 }
             }
         }
     }
-    let total = if cfg.stop_on_first_miss { total_misses.max(misses_check) } else { misses_check };
+    let total = if cfg.stop_on_first_miss {
+        out.total_misses.max(misses_check)
+    } else {
+        misses_check
+    };
     for (task, rs) in responses.iter().enumerate() {
         per_task[task].response = Summary::of(rs);
     }
@@ -281,10 +209,10 @@ fn simulate_impl(
         SimResult {
             per_task,
             total_misses: total,
-            events_processed: events,
+            events_processed: out.events_processed,
             schedulable: total == 0,
         },
-        core.take_trace(),
+        out.traces.swap_remove(0),
     )
 }
 
@@ -295,7 +223,7 @@ mod tests {
     use crate::model::{Bounds, TaskSet};
 
     fn wcet_cfg() -> SimConfig {
-        SimConfig { horizon_ms: 500.0, ..SimConfig::acceptance(7) }
+        SimConfig { horizon_ms: Some(500.0), ..SimConfig::acceptance(7) }
     }
 
     #[test]
@@ -395,7 +323,8 @@ mod tests {
         t.period = 8.0;
         t.deadline = 8.0;
         let ts = TaskSet::with_priority_order(vec![t]);
-        let fast = simulate(&ts, &vec![0], &SimConfig { horizon_ms: 10_000.0, ..wcet_cfg() });
+        let fast =
+            simulate(&ts, &vec![0], &SimConfig { horizon_ms: Some(10_000.0), ..wcet_cfg() });
         assert!(!fast.schedulable);
         // Far fewer events than a full 10 s run would need.
         assert!(fast.events_processed < 100, "{}", fast.events_processed);
@@ -404,7 +333,7 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let ts = TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]);
-        let cfg = SimConfig { horizon_ms: 300.0, ..SimConfig::measurement(42) };
+        let cfg = SimConfig { horizon_ms: Some(300.0), ..SimConfig::measurement(42) };
         let a = simulate(&ts, &vec![1, 1], &cfg);
         let b = simulate(&ts, &vec![1, 1], &cfg);
         assert_eq!(a.per_task[0].max_response_ms, b.per_task[0].max_response_ms);
@@ -414,8 +343,8 @@ mod tests {
     #[test]
     fn bell_mode_bounded_by_wcet_mode() {
         let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
-        let wcfg = SimConfig { horizon_ms: 300.0, ..SimConfig::acceptance(9) };
-        let bcfg = SimConfig { horizon_ms: 300.0, ..SimConfig::measurement(9) };
+        let wcfg = SimConfig { horizon_ms: Some(300.0), ..SimConfig::acceptance(9) };
+        let bcfg = SimConfig { horizon_ms: Some(300.0), ..SimConfig::measurement(9) };
         let w = simulate(&ts, &vec![1], &wcfg);
         let b = simulate(&ts, &vec![1], &bcfg);
         assert!(b.per_task[0].max_response_ms <= w.per_task[0].max_response_ms + 1e-9);
@@ -431,5 +360,29 @@ mod tests {
         assert!(!trace.is_empty());
         // 5 phase completions + 1 job completion per released job.
         assert_eq!(trace.len(), plain.per_task[0].completed * 6);
+    }
+
+    #[test]
+    fn preemptive_policy_serialises_gpu_hogs() {
+        // Two tasks whose GPU segments overlap under federation: under
+        // the preemptive-priority policy the device serialises them, so
+        // the low-priority task's response grows by the high-priority
+        // kernel's length.
+        let ts = TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]);
+        let fed = simulate(&ts, &vec![1, 1], &wcet_cfg());
+        let pre = simulate(
+            &ts,
+            &vec![1, 1],
+            &SimConfig { gpu_policy: GpuPolicyKind::PreemptivePriority, ..wcet_cfg() },
+        );
+        assert!(
+            pre.per_task[1].max_response_ms > fed.per_task[1].max_response_ms + 1e-9,
+            "GPU contention must show: federated {} vs preemptive {}",
+            fed.per_task[1].max_response_ms,
+            pre.per_task[1].max_response_ms
+        );
+        // The high-priority task never waits behind the low one at release
+        // instants (synchronous release, priority dispatch).
+        assert!((pre.per_task[0].max_response_ms - fed.per_task[0].max_response_ms).abs() < 1e-6);
     }
 }

@@ -7,7 +7,6 @@
 //! Lemma 5.3 blocking term is unsound, and the simulator can expose it.
 
 use rtgpu::analysis::rtgpu::{evaluate, schedule, RtgpuOpts, Search};
-use rtgpu::analysis::SmModel;
 use rtgpu::gen::{generate_taskset, GenConfig};
 use rtgpu::model::{Bounds, GpuSegment, KernelClass, MemoryModel, RtTask, TaskSet};
 use rtgpu::sim::{simulate, ExecModel, SimConfig};
@@ -27,10 +26,8 @@ fn check_sound(cfg: &GenConfig, util: f64, seed: u64, sets: usize) {
         for exec in [ExecModel::Wcet, ExecModel::Bell] {
             let sim_cfg = SimConfig {
                 exec,
-                sm_model: SmModel::Virtual,
                 seed: seed ^ (i as u64),
-                horizon_ms: 0.0,
-                stop_on_first_miss: true,
+                ..SimConfig::acceptance(0)
             };
             let r = simulate(&ts, &alloc, &sim_cfg);
             assert!(
@@ -141,7 +138,11 @@ fn dropping_mem_blocking_is_unsound() {
     );
 
     // …but the platform disagrees: lo's 20 ms copy is non-preemptive.
-    let r = simulate(&ts, &alloc, &SimConfig { horizon_ms: 1000.0, ..SimConfig::acceptance(1) });
+    let r = simulate(
+        &ts,
+        &alloc,
+        &SimConfig { horizon_ms: Some(1000.0), ..SimConfig::acceptance(1) },
+    );
     assert!(
         !r.schedulable,
         "simulator should expose the blocking miss (hi max response {})",
@@ -170,13 +171,7 @@ fn analysis_bounds_dominate_simulated_responses() {
         let r = simulate(
             &ts,
             &alloc,
-            &SimConfig {
-                exec: ExecModel::Wcet,
-                sm_model: SmModel::Virtual,
-                seed: i,
-                horizon_ms: 0.0,
-                stop_on_first_miss: false,
-            },
+            &SimConfig { seed: i, stop_on_first_miss: false, ..SimConfig::acceptance(0) },
         );
         for (k, stats) in r.per_task.iter().enumerate() {
             if let Some(bound) = verdict.responses[k] {

@@ -67,10 +67,10 @@ fn prop_single_device_cluster_replays_flat_simulator() {
         let horizon_ms = 2.5 * ts.tasks.iter().map(|t| t.period).fold(0.0, f64::max);
         let cfg = SimConfig {
             exec,
-            sm_model: SmModel::Virtual,
             seed: g.rng.next_u64(),
-            horizon_ms,
+            horizon_ms: Some(horizon_ms),
             stop_on_first_miss: false,
+            ..SimConfig::acceptance(0)
         };
         let (flat, flat_trace) = simulate_traced(&ts, &alloc, &cfg);
         let wl = ClusterWorkload::new(
@@ -117,11 +117,9 @@ fn assert_sim_serve_parity(n_devices: usize, cpu: CpuTopology, seed: u64) {
             .map(|t| t.period)
             .fold(0.0, f64::max);
     let cfg = SimConfig {
-        exec: ExecModel::Wcet,
-        sm_model: SmModel::Virtual,
-        seed: 1,
-        horizon_ms,
+        horizon_ms: Some(horizon_ms),
         stop_on_first_miss: false,
+        ..SimConfig::acceptance(1)
     };
     let (_, sim_traces) = simulate_cluster_traced(&wl, &cfg);
 

@@ -3,13 +3,13 @@
 //! properties the §6 evaluation narrative rests on, checked end to end.
 
 use rtgpu::analysis::rtgpu::{schedule, RtgpuOpts, Search};
-use rtgpu::analysis::{analyze, Approach, SmModel};
+use rtgpu::analysis::{analyze, Approach};
 use rtgpu::gen::{generate_batch, generate_taskset, GenConfig};
 use rtgpu::harness::sweep::{run_sweep, SweepSpec};
 use rtgpu::harness::throughput::throughput_gain;
 use rtgpu::harness::validate::{average_bounds, run_validation, TimeModel};
 use rtgpu::model::{MemoryModel, Platform};
-use rtgpu::sim::{simulate, ExecModel, SimConfig};
+use rtgpu::sim::{simulate, SimConfig};
 use rtgpu::util::prop;
 use rtgpu::util::rng::Pcg;
 
@@ -200,13 +200,7 @@ fn prop_grid_and_greedy_agree_with_simulator() {
                 let r = simulate(
                     &ts,
                     &alloc,
-                    &SimConfig {
-                        exec: ExecModel::Wcet,
-                        sm_model: SmModel::Virtual,
-                        seed: 1,
-                        horizon_ms: 0.0,
-                        stop_on_first_miss: true,
-                    },
+                    &SimConfig::acceptance(1),
                 );
                 if !r.schedulable {
                     return Err(format!("{search:?} accepted but platform missed"));

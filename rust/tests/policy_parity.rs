@@ -1,0 +1,187 @@
+//! The preemptive-priority GPU policy, pinned on both axes (DESIGN.md §9):
+//!
+//! (a) **soundness** — a set admitted by `analysis::schedule_preemptive`
+//!     never misses a deadline in a worst-case run of the shared driver
+//!     under that policy (flat and G=1-cluster);
+//! (b) **parity** — the simulator and the virtual serving driver remain
+//!     trace-identical under the new policy (the refactor's guarantee is
+//!     per-policy, not federated-only), and a one-device preemptive
+//!     cluster still replays the flat preemptive simulator.
+
+use rtgpu::analysis::gpu::gpu_response;
+use rtgpu::analysis::{schedule_preemptive, RtgpuOpts, SmModel};
+use rtgpu::cluster::{simulate_cluster_traced, ClusterWorkload, DeviceWorkload};
+use rtgpu::coordinator::{serve_virtual_policy, VirtualTask};
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::model::{CpuTopology, TaskSet};
+use rtgpu::sched::{ms_to_ticks, Chain, GpuPolicyKind, Segment, TraceEntry};
+use rtgpu::sim::{simulate, simulate_traced, SimConfig};
+use rtgpu::util::prop;
+use rtgpu::util::rng::Pcg;
+
+fn first_divergence(a: &[TraceEntry], b: &[TraceEntry]) -> String {
+    let i = a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count();
+    format!(
+        "lengths {}/{}; first divergence at {}: sim={:?} serve={:?}",
+        a.len(),
+        b.len(),
+        i,
+        a.get(i),
+        b.get(i)
+    )
+}
+
+/// The worst-case chain under the whole-device claim — GPU durations at
+/// `gn_total`, exactly what the simulator draws under `ExecModel::Wcet`
+/// with a full-width allocation.
+fn wcet_chain_full_width(ts: &TaskSet, gn_total: usize, task: usize) -> Chain {
+    Chain::from_task(&ts.tasks[task], |seg| match seg {
+        Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(b.hi),
+        Segment::Gpu(g) => ms_to_ticks(gpu_response(g, gn_total, SmModel::Virtual).1),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// (a) admitted ⇒ no deadline miss under the policy's own analysis bound
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_preemptive_admitted_never_misses() {
+    prop::check("preemptive_admission_sound", 515, 25, |g| {
+        let util = g.float(0.3, 2.0);
+        let gn_total = g.int(1, 6).max(1);
+        let n_tasks = g.int(1, 6).max(1);
+        let mut rng = Pcg::new(g.rng.next_u64());
+        let ts = generate_taskset(&mut rng, &GenConfig::default().with_tasks(n_tasks), util);
+        let v = schedule_preemptive(&ts, gn_total, &RtgpuOpts::default());
+        if !v.schedulable {
+            return Ok(()); // rejected sets promise nothing
+        }
+        let alloc = v.allocation.ok_or("accepted set without allocation")?;
+        if alloc.iter().any(|&a| a != gn_total) {
+            return Err("preemptive grants must be whole-device".into());
+        }
+        // Worst-case adversarial run over the default 20×max-period
+        // horizon, under the policy itself.
+        let cfg = SimConfig {
+            gpu_policy: GpuPolicyKind::PreemptivePriority,
+            ..SimConfig::acceptance(g.rng.next_u64())
+        };
+        let r = simulate(&ts, &alloc, &cfg);
+        if !r.schedulable {
+            return Err(format!(
+                "admitted (gn={gn_total}, {} tasks) but the driver missed {} deadlines",
+                ts.len(),
+                r.total_misses
+            ));
+        }
+        // And the bounds dominate the observed worst case.
+        for (stats, bound) in r.per_task.iter().zip(&v.responses) {
+            let b = bound.ok_or("accepted set without a bound")?;
+            if stats.max_response_ms > b + 1e-6 {
+                return Err(format!(
+                    "observed {} ms above the bound {b} ms",
+                    stats.max_response_ms
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (b) cross-driver parity under the preemptive policy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_preemptive_sim_and_serve_drivers_agree() {
+    prop::check("preemptive_driver_parity", 516, 12, |g| {
+        let util = g.float(0.3, 1.2);
+        let gn_total = g.int(1, 4).max(1);
+        let mut rng = Pcg::new(g.rng.next_u64());
+        let ts = generate_taskset(&mut rng, &GenConfig::default(), util);
+        let alloc: Vec<usize> =
+            ts.tasks.iter().map(|t| if t.gpu.is_empty() { 0 } else { gn_total }).collect();
+        let horizon_ms = 2.5 * ts.tasks.iter().map(|t| t.period).fold(0.0, f64::max);
+        let cfg = SimConfig {
+            horizon_ms: Some(horizon_ms),
+            stop_on_first_miss: false,
+            gpu_policy: GpuPolicyKind::PreemptivePriority,
+            ..SimConfig::acceptance(1)
+        };
+        let (_, sim_trace) = simulate_traced(&ts, &alloc, &cfg);
+        if sim_trace.is_empty() {
+            return Err("empty trace — the property is vacuous".into());
+        }
+        let vtasks: Vec<VirtualTask> = ts
+            .tasks
+            .iter()
+            .map(|t| VirtualTask {
+                period: ms_to_ticks(t.period),
+                deadline: ms_to_ticks(t.deadline),
+            })
+            .collect();
+        let serve_trace = serve_virtual_policy(
+            &vtasks,
+            ms_to_ticks(horizon_ms),
+            GpuPolicyKind::PreemptivePriority,
+            |task| wcet_chain_full_width(&ts, gn_total, task),
+        );
+        if sim_trace != serve_trace {
+            return Err(first_divergence(&sim_trace, &serve_trace));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn g1_preemptive_cluster_replays_flat_simulator() {
+    let mut rng = Pcg::new(77);
+    let ts = generate_taskset(&mut rng, &GenConfig::default(), 0.9);
+    let gn_total = 3usize;
+    let alloc: Vec<usize> =
+        ts.tasks.iter().map(|t| if t.gpu.is_empty() { 0 } else { gn_total }).collect();
+    let cfg = SimConfig {
+        horizon_ms: Some(200.0),
+        stop_on_first_miss: false,
+        gpu_policy: GpuPolicyKind::PreemptivePriority,
+        ..SimConfig::acceptance(5)
+    };
+    let (flat, flat_trace) = simulate_traced(&ts, &alloc, &cfg);
+    let wl = ClusterWorkload::new(
+        CpuTopology::PerDevice,
+        vec![DeviceWorkload { ts: ts.clone(), alloc }],
+    )
+    .with_gpu_policies(vec![GpuPolicyKind::PreemptivePriority]);
+    let (fleet, fleet_traces) = simulate_cluster_traced(&wl, &cfg);
+    assert!(!flat_trace.is_empty(), "vacuous parity run");
+    assert_eq!(
+        flat_trace,
+        fleet_traces[0],
+        "{}",
+        first_divergence(&flat_trace, &fleet_traces[0])
+    );
+    assert_eq!(flat.events_processed, fleet.events_processed);
+}
+
+#[test]
+fn preemptive_policy_changes_the_schedule_federated_would_produce() {
+    // Sanity that the policy axis is real: same set, same allocation
+    // width, different traces — the preemptive device serialises kernels
+    // the federated device overlaps.
+    let ts = TaskSet::with_priority_order(vec![
+        rtgpu::model::testing::simple_task(0),
+        rtgpu::model::testing::simple_task(1),
+    ]);
+    let alloc = vec![2, 2];
+    let mk = |policy| SimConfig {
+        horizon_ms: Some(130.0),
+        stop_on_first_miss: false,
+        gpu_policy: policy,
+        ..SimConfig::acceptance(1)
+    };
+    let (_, fed) = simulate_traced(&ts, &alloc, &mk(GpuPolicyKind::Federated));
+    let (_, pre) = simulate_traced(&ts, &alloc, &mk(GpuPolicyKind::PreemptivePriority));
+    assert!(!fed.is_empty() && !pre.is_empty());
+    assert_ne!(fed, pre, "policies must produce observably different schedules");
+}

@@ -10,7 +10,7 @@ use rtgpu::coordinator::{serve_virtual, VirtualTask};
 use rtgpu::gen::{generate_taskset, GenConfig};
 use rtgpu::model::{MemoryModel, TaskSet};
 use rtgpu::sched::{ms_to_ticks, Chain, Segment, TraceEntry, TraceEvent};
-use rtgpu::sim::{simulate_traced, ExecModel, SimConfig};
+use rtgpu::sim::{simulate_traced, SimConfig};
 use rtgpu::util::prop;
 use rtgpu::util::rng::Pcg;
 
@@ -33,11 +33,9 @@ fn both_traces(
     horizon_ms: f64,
 ) -> (Vec<TraceEntry>, Vec<TraceEntry>) {
     let cfg = SimConfig {
-        exec: ExecModel::Wcet,
-        sm_model: SmModel::Virtual,
-        seed: 1,
-        horizon_ms,
+        horizon_ms: Some(horizon_ms),
         stop_on_first_miss: false,
+        ..SimConfig::acceptance(1)
     };
     let (_, sim_trace) = simulate_traced(ts, alloc, &cfg);
 
