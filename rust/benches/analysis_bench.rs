@@ -72,6 +72,27 @@ fn main() {
         println!("  {name} accepts {ok}/50");
     }
 
+    // --- SharedCache::retain_keys (the warm removal path's cleanup) ----
+    // Build a cache with hundreds of live contexts (one per (task, gn)
+    // the evaluations visit) and time the retain over all-live keys —
+    // the old Vec::contains scan made this O(entries × live).
+    {
+        use rtgpu::analysis::rtgpu::Evaluator;
+        use rtgpu::analysis::SharedCache;
+        let big = generate_taskset(&mut Pcg::new(7), &GenConfig::default().with_tasks(24), 2.0);
+        let shared = SharedCache::new();
+        let eval = Evaluator::with_shared(&big, 8, &opts, &shared);
+        for gn in 1..=8 {
+            black_box(eval.bounds(&vec![gn; big.len()]));
+        }
+        let live: Vec<u64> = (0..big.len() as u64).collect();
+        let n_ctx = shared.len();
+        let r = bench("shared_cache_retain_keys_all_live", || {
+            shared.retain_keys(black_box(&live));
+        });
+        println!("\n{}  [{n_ctx} live contexts]", r.row());
+    }
+
     // --- Incremental admission: cold full grid vs warm add_app --------
     // An 8-app schedulable set; the warm path admits the 8th app into a
     // state that already holds the other 7 (cached contexts + cached

@@ -62,9 +62,17 @@ fn main() {
         ..SimConfig::acceptance(1)
     };
 
+    // Sporadic arrivals (DESIGN.md §10): same set driven at the densest
+    // sporadic curve with 20 % release jitter — the arrival-process
+    // bookkeeping must not dent simulator throughput.
+    let sporadic = SimConfig {
+        arrival: rtgpu::sim::ArrivalOverride::Sporadic { jitter_frac: 0.2 },
+        ..mk(ExecModel::Bell, None)
+    };
     for (name, cfg) in [
         ("sim_wcet_20periods", mk(ExecModel::Wcet, None)),
         ("sim_bell_20periods", mk(ExecModel::Bell, None)),
+        ("sim_bell_sporadic_j02_20periods", sporadic),
         ("sim_bell_horizon_10s", mk(ExecModel::Bell, Some(10_000.0))),
     ] {
         let mut events = 0usize;

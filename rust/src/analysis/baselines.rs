@@ -50,7 +50,7 @@ fn selfsusp_cpu_view(task: &RtTask, susp: &[(f64, f64)]) -> SuspView {
     let sum_cl_hi: f64 = exec_hi.iter().sum();
     let sum_s_lo: f64 = inner.iter().sum();
     let wrap = task.period - sum_cl_hi - sum_s_lo;
-    SuspView::new(exec_hi, inner, first_wrap, wrap)
+    SuspView::new(exec_hi, inner, first_wrap, wrap).with_jitter(task.release_jitter())
 }
 
 /// Self-suspension analysis for a given allocation (Lemmas 2.2 / 2.3 with
@@ -119,8 +119,14 @@ pub fn selfsusp_evaluate(ts: &TaskSet, alloc: &Allocation) -> Vec<TaskBound> {
             // Lemma 2.3 Eq. (1): R̂1 = Σ(Ŝ + B) + Σ ĈR — the segmented
             // bound of the published baseline ([47] keeps the segmented
             // structure; the tighter task-level R2 shortcut is part of the
-            // machinery the RTGPU analysis builds on).
-            let response = if cpu_ok { Some(sum_s_hi + crs.iter().sum::<f64>()) } else { None };
+            // machinery the RTGPU analysis builds on).  The task's own
+            // release jitter delays the whole window (deadlines are
+            // arrival-relative), so it is added on top.
+            let response = if cpu_ok {
+                Some(sum_s_hi + crs.iter().sum::<f64>() + task.release_jitter())
+            } else {
+                None
+            };
             let schedulable = response.is_some_and(|r| r <= task.deadline + 1e-9);
             TaskBound { response, schedulable }
         })
@@ -158,7 +164,7 @@ pub fn stgm_evaluate(ts: &TaskSet, alloc: &Allocation) -> Vec<TaskBound> {
         .map(|(t, &w)| {
             let first_wrap = t.period - t.deadline;
             let wrap = t.period - w;
-            SuspView::new(vec![w], vec![], first_wrap, wrap)
+            SuspView::new(vec![w], vec![], first_wrap, wrap).with_jitter(t.release_jitter())
         })
         .collect();
 
@@ -170,7 +176,8 @@ pub fn stgm_evaluate(ts: &TaskSet, alloc: &Allocation) -> Vec<TaskBound> {
             }
             let response = fixpoint::solve(wcet[k], task.deadline, |x| {
                 wcet[k] + (0..k).map(|i| views[i].max_workload(x)).sum::<f64>()
-            });
+            })
+            .map(|r| r + task.release_jitter());
             let schedulable = response.is_some_and(|r| r <= task.deadline + 1e-9);
             TaskBound { response, schedulable }
         })

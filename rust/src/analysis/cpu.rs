@@ -28,7 +28,11 @@ pub fn cpu_view(task: &RtTask, gr_lo: &[f64]) -> SuspView {
     let sum_ml_lo: f64 = task.mem.iter().map(|b| b.lo).sum();
     let sum_gr_lo: f64 = gr_lo.iter().sum();
     let wrap = task.period - sum_cl_hi - sum_ml_lo - sum_gr_lo;
-    SuspView::new(exec_hi, inner, first_wrap, wrap)
+    // The wrap gaps are arrival-relative and survive release jitter
+    // unchanged (a job still completes by arrival + D, and the next
+    // arrival is still ≥ T away); jitter enters as the workload-window
+    // extension instead (DESIGN.md §10).
+    SuspView::new(exec_hi, inner, first_wrap, wrap).with_jitter(task.release_jitter())
 }
 
 /// Worst-case response times `ĈR_k^j` of every CPU segment of task `k`

@@ -68,9 +68,12 @@ pub fn min_feasible_gn(task: &RtTask, gn_max: usize, model: SmModel) -> Option<u
     }
     let fixed: f64 = task.cpu.iter().map(|b| b.hi).sum::<f64>()
         + task.mem.iter().map(|b| b.hi).sum::<f64>();
+    // Release jitter eats into the arrival-relative deadline budget
+    // (DESIGN.md §10), so the isolated-demand check shrinks with it.
+    let budget = task.deadline - task.release_jitter();
     for gn in 1..=gn_max {
         let gr: f64 = task.gpu.iter().map(|g| gpu_response(g, gn, model).1).sum();
-        if fixed + gr <= task.deadline {
+        if fixed + gr <= budget {
             return Some(gn);
         }
     }

@@ -18,6 +18,7 @@ use super::workload::SuspView;
 pub fn mem_view(task: &RtTask, gr_lo: &[f64]) -> SuspView {
     let m = task.m();
     assert_eq!(gr_lo.len(), task.gpu.len());
+    let jitter = task.release_jitter();
     let exec_hi: Vec<f64> = task.mem.iter().map(|b| b.hi).collect();
     if exec_hi.is_empty() {
         return SuspView::new(vec![], vec![], 0.0, 0.0);
@@ -44,7 +45,7 @@ pub fn mem_view(task: &RtTask, gr_lo: &[f64]) -> SuspView {
             let first_wrap = t_minus_d + cl_lo_last + cl_lo_first;
             let sum_gr_lo: f64 = gr_lo.iter().sum();
             let wrap = task.period - sum_ml_hi - sum_cl_lo_inner - sum_gr_lo;
-            SuspView::new(exec_hi, inner, first_wrap, wrap)
+            SuspView::new(exec_hi, inner, first_wrap, wrap).with_jitter(jitter)
         }
         MemoryModel::OneCopy => {
             // Chain: … ML^j G^j CL^{j+1} ML^{j+1} …
@@ -57,7 +58,7 @@ pub fn mem_view(task: &RtTask, gr_lo: &[f64]) -> SuspView {
             // CL^1..CL^{m−2}.
             let sum_gr_lo_span: f64 = gr_lo[..m.saturating_sub(2)].iter().sum();
             let wrap = task.period - sum_ml_hi - sum_cl_lo_inner - sum_gr_lo_span;
-            SuspView::new(exec_hi, inner, first_wrap, wrap)
+            SuspView::new(exec_hi, inner, first_wrap, wrap).with_jitter(jitter)
         }
     }
 }

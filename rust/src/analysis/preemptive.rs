@@ -48,6 +48,8 @@ struct Demand {
     n_gpu: usize,
     period: f64,
     deadline: f64,
+    /// Worst-case release jitter `J` (DESIGN.md §10).
+    jitter: f64,
 }
 
 fn demand(task: &crate::model::RtTask, gn_total: usize, opts: &RtgpuOpts) -> Demand {
@@ -67,6 +69,7 @@ fn demand(task: &crate::model::RtTask, gn_total: usize, opts: &RtgpuOpts) -> Dem
         n_gpu: task.gpu.len(),
         period: task.period,
         deadline: task.deadline,
+        jitter: task.release_jitter(),
     }
 }
 
@@ -96,7 +99,18 @@ pub fn schedule_preemptive(ts: &TaskSet, gn_total: usize, opts: &RtgpuOpts) -> S
         let gpu_block = d[k + 1..].iter().map(|x| x.max_gpu_seg).fold(0.0, f64::max);
         let base =
             d[k].total + d[k].n_bus as f64 * bus_block + d[k].n_gpu as f64 * gpu_block;
-        let Some(r) = fixpoint::solve(base, d[k].deadline, |x| {
+        // Release jitter: the fixed point bounds release→completion, the
+        // deadline is arrival-relative, so the release window shrinks to
+        // D − J and the reported bound regains J.  The carry-in term
+        // `⌈(x + D_i)/T_i⌉` counts interfering jobs by *arrival* (a job
+        // executing in the window arrived within D_i before it — it met
+        // its own jitter-inclusive bound), so no extra `J_i` inflation
+        // is needed: arrivals stay ≥ T_i apart under jitter.
+        let horizon = d[k].deadline - d[k].jitter;
+        if horizon < base {
+            return rejected();
+        }
+        let Some(r) = fixpoint::solve(base, horizon, |x| {
             let interference: f64 = d[..k]
                 .iter()
                 .map(|i| ((x + i.deadline) / i.period).ceil().max(0.0) * i.total)
@@ -105,7 +119,7 @@ pub fn schedule_preemptive(ts: &TaskSet, gn_total: usize, opts: &RtgpuOpts) -> S
         }) else {
             return rejected();
         };
-        responses.push(Some(r));
+        responses.push(Some(r + d[k].jitter));
     }
     ScheduleResult {
         schedulable: true,
@@ -181,6 +195,23 @@ mod tests {
                 assert!(v >= own - 1e-9, "bound below the task's own CPU demand");
             }
         }
+    }
+
+    #[test]
+    fn release_jitter_shifts_the_preemptive_bound() {
+        // Singleton: no interference, no blocking — the jittered bound
+        // is the demand plus exactly J, and a jitter past the deadline
+        // slack flips the verdict.
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let base = schedule_preemptive(&ts, 2, &RtgpuOpts::default()).responses[0].unwrap();
+        let jit = TaskSet::with_priority_order(vec![simple_task(0).with_sporadic_jitter(0.1)]);
+        let r = schedule_preemptive(&jit, 2, &RtgpuOpts::default());
+        assert!(r.schedulable);
+        assert!((r.responses[0].unwrap() - base - 6.0).abs() < 1e-9, "J = 0.1·60");
+        // simple_task demand at gn=2 is 10.32 against D=50: a jitter of
+        // 0.8·60 = 48 leaves a 2 ms window — infeasible.
+        let fat = TaskSet::with_priority_order(vec![simple_task(0).with_sporadic_jitter(0.8)]);
+        assert!(!schedule_preemptive(&fat, 2, &RtgpuOpts::default()).schedulable);
     }
 
     #[test]

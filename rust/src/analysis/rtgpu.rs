@@ -58,7 +58,8 @@ type SharedMap = std::collections::HashMap<(u64, usize, SmModel), std::rc::Rc<Ca
 ///
 /// **Contract:** a context is identified by `(RtTask::id, gn, SmModel)`.
 /// Callers sharing one cache across evaluators must keep `RtTask::id`
-/// unique per *task definition* (same id ⇒ same segments), as
+/// unique per *task definition* (same id ⇒ same segments **and arrival
+/// model** — the cached views embed the task's release jitter), as
 /// `AdmissionState` does with its stable keys; reusing a cache for
 /// unrelated task sets whose ids collide returns stale contexts.
 #[derive(Default)]
@@ -107,6 +108,9 @@ impl SharedCache {
 
     /// Drop contexts whose task key is no longer live (app removal).
     pub fn retain_keys(&self, live: &[u64]) {
+        // A hashed lookup: `Vec::contains` made this O(entries × live),
+        // which the warm removal path pays on every membership change.
+        let live: std::collections::HashSet<u64> = live.iter().copied().collect();
         self.map.borrow_mut().retain(|&(key, _, _), _| live.contains(&key));
     }
 
@@ -216,6 +220,11 @@ impl<'a> Evaluator<'a> {
         if !task.gpu.is_empty() && alloc[k] == 0 {
             return TaskBound { response: None, schedulable: false };
         }
+        // The task's own release jitter: the fixed points bound the
+        // release→completion window, the deadline is arrival-relative,
+        // so `J_k` is added on top (DESIGN.md §10).  Interfering tasks'
+        // jitter is already inside the views' workload windows.
+        let jitter = task.release_jitter();
         // R3 first: it is one fixed point (vs one per memory segment for
         // R1/R2) and empirically decides acceptance; in the fast path an
         // R3 pass settles the task (min of sound bounds is sound).
@@ -226,8 +235,8 @@ impl<'a> Evaluator<'a> {
         };
         if fast {
             if let Some(r) = r3 {
-                if r <= task.deadline + 1e-9 {
-                    return TaskBound { response: Some(r), schedulable: true };
+                if r + jitter <= task.deadline + 1e-9 {
+                    return TaskBound { response: Some(r + jitter), schedulable: true };
                 }
             }
         }
@@ -238,7 +247,7 @@ impl<'a> Evaluator<'a> {
             let cr = cpu_response_times(ts, k, cpu_views);
             end_to_end(ts, k, &gr_hi[k], &mr, cr.as_deref(), cpu_views, self.opts.bounds)
         });
-        let response = [r12, r3].into_iter().flatten().reduce(f64::min);
+        let response = [r12, r3].into_iter().flatten().reduce(f64::min).map(|r| r + jitter);
         let schedulable = response.is_some_and(|r| r <= task.deadline + 1e-9);
         TaskBound { response, schedulable }
     }
@@ -536,6 +545,30 @@ mod tests {
         let r = schedule_with(&eval, &[6, 6], 10, Search::Grid);
         assert!(!r.schedulable);
         assert!(r.allocation.is_none());
+    }
+
+    #[test]
+    fn release_jitter_inflates_bounds_and_only_hurts() {
+        // A singleton task has no interference, so the jittered bound is
+        // exactly the periodic bound plus J (the own-jitter term); with
+        // interference the jittered bound can only grow further.
+        let base = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let jit = TaskSet::with_priority_order(vec![simple_task(0).with_sporadic_jitter(0.1)]);
+        let opts = RtgpuOpts::default();
+        let rb = evaluate(&base, &vec![2], &opts)[0].response.unwrap();
+        let rj = evaluate(&jit, &vec![2], &opts)[0].response.unwrap();
+        assert!((rj - rb - 6.0).abs() < 1e-9, "J = 0.1·60: {rb} vs {rj}");
+
+        let two = TaskSet::with_priority_order(vec![
+            simple_task(0).with_sporadic_jitter(0.2),
+            simple_task(1).with_sporadic_jitter(0.2),
+        ]);
+        let per = two_task_set();
+        for k in 0..2 {
+            let rj = evaluate(&two, &vec![2, 3], &opts)[k].response.unwrap();
+            let rp = evaluate(&per, &vec![2, 3], &opts)[k].response.unwrap();
+            assert!(rj >= rp - 1e-9, "task {k}: jitter shrank the bound {rp} → {rj}");
+        }
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! minimum inter-arrival gaps, with the paper's three gap cases:
 //! within-job gaps, the first job→job wrap (`T − D`-based), and the
 //! steady-state wrap.
+//!
+//! **Release jitter** (DESIGN.md §10) folds in as a window extension:
+//! the jittered stream's executions in any window of length `t` are a
+//! subset of the jitter-free (arrival-aligned) stream's executions in a
+//! window of `t + J` — each release lags its arrival by at most `J`, so
+//! releases inside `[s, s+t)` have arrivals inside `(s − J, s + t)` and
+//! the gap walk over arrival-relative spacings covers them.  This is
+//! the workload-function generalisation of the classic
+//! `⌈(t + J_i)/T_i⌉` ceiling substitution.
 
 /// One task's projection onto a resource.
 #[derive(Debug, Clone)]
@@ -32,6 +41,9 @@ pub struct SuspView {
     pub first_wrap_gap: f64,
     /// Minimum gap for every subsequent job boundary.
     pub wrap_gap: f64,
+    /// Worst-case release jitter `J` of the owning task; every workload
+    /// query budgets `t + J` (see the module docs).
+    pub jitter: f64,
 }
 
 impl SuspView {
@@ -58,7 +70,15 @@ impl SuspView {
             inner_gaps: inner_gaps.into_iter().map(clamp).collect(),
             first_wrap_gap: clamp(first_wrap_gap),
             wrap_gap: clamp(wrap_gap),
+            jitter: 0.0,
         }
+    }
+
+    /// Attach the owning task's release jitter (0 by default).
+    pub fn with_jitter(mut self, jitter: f64) -> SuspView {
+        assert!(jitter.is_finite() && jitter >= 0.0, "bad jitter {jitter}");
+        self.jitter = jitter;
+        self
     }
 
     /// Number of execution segments `M`.
@@ -87,6 +107,9 @@ impl SuspView {
         if m == 0 || t <= 0.0 {
             return 0.0;
         }
+        // Jitter inflation: a window of t over the jittered stream is
+        // covered by a window of t + J over the arrival-aligned stream.
+        let t = t + self.jitter;
         debug_assert!(h < m, "start segment out of range");
         // Walk segments from h, accumulating full executions while
         //   Σ (L̂ + S) ≤ t,
@@ -216,6 +239,38 @@ mod tests {
         for i in 0..100 {
             let t = i as f64 * 0.37;
             assert!(v.max_workload(t) <= t + 1e-12);
+        }
+    }
+
+    #[test]
+    fn jitter_extends_the_workload_window() {
+        let v = view();
+        let j = view().with_jitter(3.0);
+        // W_jittered(t) = W(t + J): at t = 4 the extra 3 ms reaches the
+        // second execution (t_eff = 7 ⇒ both full segments).
+        assert_eq!(j.workload(0, 4.0), v.workload(0, 7.0));
+        assert_eq!(j.max_workload(4.0), 4.0);
+        // Zero jitter is the identity.
+        let z = view().with_jitter(0.0);
+        for i in 0..40 {
+            let t = i as f64 * 0.5;
+            assert_eq!(z.max_workload(t), v.max_workload(t));
+        }
+        // A zero-length window holds no work, jitter or not.
+        assert_eq!(j.workload(0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn jitter_is_monotone_in_workload() {
+        let v = view();
+        for i in 0..60 {
+            let t = i as f64 * 0.4;
+            let mut prev = v.max_workload(t);
+            for &j in &[0.5, 1.0, 2.5, 5.0] {
+                let w = view().with_jitter(j).max_workload(t);
+                assert!(w + 1e-12 >= prev, "jitter {j} shrank workload at t={t}");
+                prev = w;
+            }
         }
     }
 

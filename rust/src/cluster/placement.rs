@@ -31,7 +31,7 @@ use crate::analysis::rtgpu::evaluate;
 use crate::analysis::{gpu_utilization, RtgpuOpts};
 use crate::coordinator::{AdmissionState, VirtualTask};
 use crate::model::{ClusterPlatform, CpuTopology, RtTask, TaskSet};
-use crate::sched::{ms_to_ticks, DeviceId, GpuPolicyKind};
+use crate::sched::{ms_to_ticks, ArrivalSpec, DeviceId, GpuPolicyKind};
 
 use super::sim::{ClusterWorkload, DeviceWorkload};
 
@@ -204,7 +204,9 @@ impl ClusterState {
             (0..self.devices.len()).filter(|&d| self.online[d]).collect();
         if policy == PlacementPolicy::WorstFit {
             let utils = self.gpu_utils();
-            devs.sort_by(|&a, &b| utils[a].partial_cmp(&utils[b]).unwrap().then(a.cmp(&b)));
+            // total_cmp: a degenerate app (zero period ⇒ NaN
+            // utilization) must not panic device ordering.
+            devs.sort_by(|&a, &b| utils[a].total_cmp(&utils[b]).then(a.cmp(&b)));
         }
         devs
     }
@@ -228,7 +230,7 @@ impl ClusterState {
         if entries.is_empty() {
             return true;
         }
-        entries.sort_by(|a, b| a.0.deadline.partial_cmp(&b.0.deadline).unwrap());
+        entries.sort_by(|a, b| a.0.deadline.total_cmp(&b.0.deadline));
         let alloc: Vec<usize> = entries.iter().map(|e| e.1).collect();
         let ts = TaskSet::with_priority_order(entries.into_iter().map(|e| e.0).collect());
         if self.gpu_policy[0] == GpuPolicyKind::PreemptivePriority {
@@ -273,11 +275,11 @@ impl ClusterState {
     /// the rest of the batch still serves.
     pub fn place_all(&mut self, tasks: &[RtTask], policy: PlacementPolicy) -> PlacementReport {
         let mut order: Vec<usize> = (0..tasks.len()).collect();
+        // total_cmp (NaN-safe): a degenerate candidate sorts
+        // deterministically and is then rejected by admission with a
+        // real verdict instead of panicking the whole batch here.
         order.sort_by(|&a, &b| {
-            gpu_utilization(&tasks[b])
-                .partial_cmp(&gpu_utilization(&tasks[a]))
-                .unwrap()
-                .then(a.cmp(&b))
+            gpu_utilization(&tasks[b]).total_cmp(&gpu_utilization(&tasks[a])).then(a.cmp(&b))
         });
         let mut placed = Vec::new();
         let mut rejected = Vec::new();
@@ -365,6 +367,7 @@ impl ClusterState {
                 vtasks.push(VirtualTask {
                     period: ms_to_ticks(t.period),
                     deadline: ms_to_ticks(t.deadline),
+                    arrival: ArrivalSpec::from_model(&t.arrival),
                 });
             }
         }
@@ -496,6 +499,31 @@ mod tests {
             for (t, &gn) in d.ts.tasks.iter().zip(&d.alloc) {
                 assert!(t.gpu.is_empty() || gn >= 1, "GPU app placed without SMs");
             }
+        }
+    }
+
+    #[test]
+    fn degenerate_nan_utilization_candidate_cannot_panic_placement() {
+        // A zero-period, zero-work construction has 0/0 = NaN GPU
+        // utilization.  Before the total_cmp fix, the placement-order
+        // sort hit `partial_cmp().unwrap()` and took the whole batch
+        // down; now the degenerate sorts deterministically, admission
+        // rejects it with a verdict, and the healthy apps still place.
+        let mut degenerate = simple_task(2);
+        degenerate.cpu = vec![crate::model::Bounds::exact(1.0)];
+        degenerate.mem.clear();
+        degenerate.gpu.clear();
+        degenerate.period = 0.0;
+        degenerate.deadline = 0.0;
+        assert!(crate::analysis::gpu_utilization(&degenerate).is_nan());
+
+        let tasks = vec![simple_task(0), degenerate, simple_task(1)];
+        for policy in PlacementPolicy::ALL {
+            let mut state = ClusterState::new(small_platform(2), RtgpuOpts::default());
+            let report = state.place_all(&tasks, policy);
+            assert_eq!(report.rejected, vec![1], "{}", policy.name());
+            assert_eq!(report.placed.len(), 2, "{}", policy.name());
+            assert_eq!(state.len(), 2);
         }
     }
 

@@ -18,8 +18,8 @@ use crate::analysis::Allocation;
 use crate::model::{CpuTopology, TaskSet};
 use crate::sched::driver;
 use crate::sched::{
-    merge_priority_levels, ms_to_ticks, ticks_to_ms, Chain, DriverConfig, DriverTask,
-    GpuPolicyKind, Segment, Tick, TraceEntry,
+    merge_priority_levels, ms_to_ticks, ticks_to_ms, ArrivalSpec, Chain, DriverConfig,
+    DriverTask, GpuPolicyKind, Segment, Tick, TraceEntry,
 };
 use crate::sim::engine::resolve_horizon_ms;
 use crate::sim::{SimConfig, TaskStats};
@@ -154,6 +154,7 @@ fn simulate_cluster_impl(
                     period: ms_to_ticks(t.period),
                     deadline: ms_to_ticks(t.deadline),
                     priority: levels[dev][k],
+                    arrival: ArrivalSpec::from_model(&cfg.arrival.resolve(t)),
                 })
                 .collect()
         })
@@ -164,6 +165,7 @@ fn simulate_cluster_impl(
         horizon,
         stop_on_first_miss: cfg.stop_on_first_miss,
         trace,
+        arrival_seed: cfg.seed,
     };
     let out = driver::run(&tasks, &dcfg, |dev, task| {
         let d = &wl.devices[dev];
@@ -175,9 +177,8 @@ fn simulate_cluster_impl(
         })
     });
 
-    // Collect per-device statistics (same rules as the single-device
-    // simulator: unfinished jobs count as misses only when the run was
-    // not cut short and their deadline fell inside the horizon).
+    // Collect per-device statistics; deadline accounting is the
+    // driver's, shared with the single-device simulator.
     let mut per_device: Vec<Vec<TaskStats>> = wl
         .devices
         .iter()
@@ -195,35 +196,21 @@ fn simulate_cluster_impl(
         .collect();
     let mut responses: Vec<Vec<Vec<f64>>> =
         wl.devices.iter().map(|d| vec![Vec::new(); d.ts.len()]).collect();
-    let mut misses_check = 0usize;
     for (j, job) in out.jobs.iter().enumerate() {
         let dev = out.job_dev[j];
         let s = &mut per_device[dev][job.task];
         s.released += 1;
-        match job.done {
-            Some(done) => {
-                s.completed += 1;
-                let resp = ticks_to_ms(done - job.release);
-                responses[dev][job.task].push(resp);
-                s.max_response_ms = s.max_response_ms.max(resp);
-                if done > job.deadline {
-                    s.misses += 1;
-                    misses_check += 1;
-                }
-            }
-            None => {
-                if !out.stopped && horizon > job.deadline {
-                    s.misses += 1;
-                    misses_check += 1;
-                }
-            }
+        if let Some(done) = job.done {
+            s.completed += 1;
+            let resp = ticks_to_ms(done - job.arrival);
+            responses[dev][job.task].push(resp);
+            s.max_response_ms = s.max_response_ms.max(resp);
+        }
+        if out.job_missed(j) {
+            s.misses += 1;
         }
     }
-    let total = if cfg.stop_on_first_miss {
-        out.total_misses.max(misses_check)
-    } else {
-        misses_check
-    };
+    let total = out.misses_at_horizon;
     for (dev, per_task) in responses.iter().enumerate() {
         for (task, rs) in per_task.iter().enumerate() {
             per_device[dev][task].response = Summary::of(rs);

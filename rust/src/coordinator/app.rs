@@ -2,7 +2,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::model::{Bounds, GpuSegment, KernelClass, MemoryModel, RtTask};
+use crate::model::{ArrivalModel, Bounds, GpuSegment, KernelClass, MemoryModel, RtTask};
 use crate::runtime::Engine;
 
 /// GPU-side profile of an application's kernel.
@@ -77,7 +77,7 @@ impl AppSpec {
             samples.push(out.elapsed.as_secs_f64() * 1e3);
         }
         let mut sorted = samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let lo = sorted[0];
         // Guard the upper bound with a safety margin over the observed
         // max — profiling 10 000×, as the paper does, would tighten this.
@@ -104,6 +104,9 @@ impl AppSpec {
             memory_model: MemoryModel::TwoCopy,
             deadline: self.deadline_ms,
             period: self.period_ms,
+            // Served applications release on their period timer today;
+            // admit them against jittered bounds by widening here.
+            arrival: ArrivalModel::Periodic,
         }
     }
 }

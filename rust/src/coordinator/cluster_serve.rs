@@ -98,15 +98,20 @@ impl ClusterServe {
     }
 
     /// Deterministic virtual-time counterpart of the fleet serving path:
-    /// periodic releases of app `a` (at `0, T_a, 2T_a, …` strictly before
-    /// `horizon`) are routed to the owning device's stations and run to
-    /// completion through one shared-core chain-walker per device.
-    /// Returns one platform trace per device core, directly comparable to
+    /// releases of app `a` follow its arrival process (periodic at
+    /// `0, T_a, 2T_a, …`, sporadic with release jitter, or a replayed
+    /// trace — strictly before `horizon`), are routed to the owning
+    /// device's stations and run to completion through one shared-core
+    /// chain-walker per device.  `arrival_seed` drives the sporadic
+    /// jitter streams (pass the fleet simulator's `SimConfig::seed` for
+    /// jittered-trace parity).  Returns one platform trace per device
+    /// core, directly comparable to
     /// [`crate::cluster::simulate_cluster_traced`]'s.
     pub fn serve_virtual(
         &self,
         tasks: &[VirtualTask],
         horizon: Tick,
+        arrival_seed: u64,
         mut chain_for: impl FnMut(usize) -> Chain,
     ) -> Vec<Vec<TraceEntry>> {
         assert_eq!(tasks.len(), self.route.len(), "one VirtualTask per routed app");
@@ -144,6 +149,7 @@ impl ClusterServe {
                         period: tasks[app].period,
                         deadline: tasks[app].deadline,
                         priority: levels[dev][k],
+                        arrival: tasks[app].arrival.clone(),
                     })
                     .collect()
             })
@@ -154,6 +160,7 @@ impl ClusterServe {
             horizon,
             stop_on_first_miss: false,
             trace: true,
+            arrival_seed,
         };
         driver::run(&dtasks, &cfg, |dev, task| chain_for(self.local[dev][task])).traces
     }
@@ -180,10 +187,10 @@ mod tests {
         // five-phase walk, finishing at the same instant.
         let r = ClusterServe::new(CpuTopology::PerDevice, vec![0, 1], 2);
         let tasks = [
-            VirtualTask { period: 1000, deadline: 1000 },
-            VirtualTask { period: 1000, deadline: 1000 },
+            VirtualTask::periodic(1000, 1000),
+            VirtualTask::periodic(1000, 1000),
         ];
-        let traces = r.serve_virtual(&tasks, 1, |_| Chain::five_phase(10, 20, 30, 40, 50));
+        let traces = r.serve_virtual(&tasks, 1, 0, |_| Chain::five_phase(10, 20, 30, 40, 50));
         assert_eq!(traces.len(), 2);
         for trace in &traces {
             let events: Vec<TraceEvent> = trace.iter().map(|e| e.event).collect();
@@ -206,10 +213,10 @@ mod tests {
     fn shared_cpu_funnels_cpu_phases_to_core_zero() {
         let r = ClusterServe::new(CpuTopology::Shared, vec![0, 1], 2);
         let tasks = [
-            VirtualTask { period: 1000, deadline: 1000 },
-            VirtualTask { period: 1000, deadline: 1000 },
+            VirtualTask::periodic(1000, 1000),
+            VirtualTask::periodic(1000, 1000),
         ];
-        let traces = r.serve_virtual(&tasks, 1, |_| Chain::five_phase(10, 20, 30, 40, 50));
+        let traces = r.serve_virtual(&tasks, 1, 0, |_| Chain::five_phase(10, 20, 30, 40, 50));
         // Device 1's CPU phases were recorded by core 0; its own core
         // only saw bus/GPU phases and the job completion.
         let cpu_on_core0 = traces[0]

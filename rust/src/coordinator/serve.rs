@@ -34,8 +34,8 @@ use anyhow::Result;
 use crate::runtime::Engine;
 use crate::sched::driver;
 use crate::sched::{
-    ms_to_ticks, ticks_to_ms, Chain, DriverConfig, DriverTask, GpuPolicyKind, Phase, Prio,
-    ReadyQueue, Station, Tick, TraceEntry,
+    ms_to_ticks, ticks_to_ms, ArrivalSpec, Chain, DriverConfig, DriverTask, GpuPolicyKind,
+    Phase, Prio, ReadyQueue, Station, Tick, TraceEntry,
 };
 
 use super::admission::AdmissionReport;
@@ -357,40 +357,61 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
 // Deterministic virtual driver (parity with the simulator)
 // ---------------------------------------------------------------------------
 
-/// A periodic task as the virtual serving driver sees it.
-#[derive(Debug, Clone, Copy)]
+/// A task as the virtual serving driver sees it: period/deadline in
+/// ticks plus its arrival process (periodic by default — see
+/// [`VirtualTask::periodic`]).
+#[derive(Debug, Clone)]
 pub struct VirtualTask {
     pub period: Tick,
     pub deadline: Tick,
+    pub arrival: ArrivalSpec,
 }
 
-/// Deterministic single-threaded counterpart of [`serve`]: periodic
-/// releases (task `i` at `0, T_i, 2T_i, …` strictly before `horizon`,
-/// index = priority) drive chains from `chain_for` through the shared
-/// generic driver ([`crate::sched::driver`]) in virtual time, running
-/// every released job to completion.  Returns the platform trace,
-/// directly comparable to [`crate::sim::simulate_traced`]'s.
+impl VirtualTask {
+    /// The classic strictly periodic virtual task.
+    pub fn periodic(period: Tick, deadline: Tick) -> VirtualTask {
+        VirtualTask { period, deadline, arrival: ArrivalSpec::Periodic }
+    }
+}
+
+/// Deterministic single-threaded counterpart of [`serve`]: releases
+/// from each task's arrival process (periodic task `i` at `0, T_i,
+/// 2T_i, …` strictly before `horizon`; index = priority) drive chains
+/// from `chain_for` through the shared generic driver
+/// ([`crate::sched::driver`]) in virtual time, running every released
+/// job to completion.  Returns the platform trace, directly comparable
+/// to [`crate::sim::simulate_traced`]'s.  Sporadic jitter draws use
+/// arrival seed 0 — pass a seed via [`serve_virtual_policy`] to line up
+/// with a seeded simulator run.
 pub fn serve_virtual(
     tasks: &[VirtualTask],
     horizon: Tick,
     chain_for: impl FnMut(usize) -> Chain,
 ) -> Vec<TraceEntry> {
-    serve_virtual_policy(tasks, horizon, GpuPolicyKind::Federated, chain_for)
+    serve_virtual_policy(tasks, horizon, GpuPolicyKind::Federated, 0, chain_for)
 }
 
 /// [`serve_virtual`] under an explicit GPU dispatch policy (the chains
 /// from `chain_for` must have been built for that policy — whole-device
-/// GPU durations under [`GpuPolicyKind::PreemptivePriority`]).
+/// GPU durations under [`GpuPolicyKind::PreemptivePriority`]) and an
+/// explicit arrival seed (must match the simulator's `SimConfig::seed`
+/// for jittered-trace parity).
 pub fn serve_virtual_policy(
     tasks: &[VirtualTask],
     horizon: Tick,
     policy: GpuPolicyKind,
+    arrival_seed: u64,
     mut chain_for: impl FnMut(usize) -> Chain,
 ) -> Vec<TraceEntry> {
     let dtasks: Vec<DriverTask> = tasks
         .iter()
         .enumerate()
-        .map(|(i, t)| DriverTask { period: t.period, deadline: t.deadline, priority: i })
+        .map(|(i, t)| DriverTask {
+            period: t.period,
+            deadline: t.deadline,
+            priority: i,
+            arrival: t.arrival.clone(),
+        })
         .collect();
     let cfg = DriverConfig {
         cpu: crate::model::CpuTopology::PerDevice,
@@ -398,6 +419,7 @@ pub fn serve_virtual_policy(
         horizon,
         stop_on_first_miss: false,
         trace: true,
+        arrival_seed,
     };
     let mut out = driver::run(&[dtasks], &cfg, |_, task| chain_for(task));
     out.traces.swap_remove(0)
@@ -410,7 +432,7 @@ mod tests {
 
     #[test]
     fn virtual_driver_walks_five_phases_in_order() {
-        let tasks = [VirtualTask { period: 1000, deadline: 1000 }];
+        let tasks = [VirtualTask::periodic(1000, 1000)];
         let trace =
             serve_virtual(&tasks, 1, |_| Chain::five_phase(10, 20, 30, 40, 50));
         let events: Vec<TraceEvent> = trace.iter().map(|e| e.event).collect();
@@ -432,7 +454,7 @@ mod tests {
     fn virtual_driver_serialises_same_task_jobs() {
         // Period shorter than the chain: second job must wait for the
         // first (job-level precedence), not overlap it.
-        let tasks = [VirtualTask { period: 50, deadline: 400 }];
+        let tasks = [VirtualTask::periodic(50, 400)];
         let trace = serve_virtual(&tasks, 100, |_| Chain::five_phase(20, 20, 20, 20, 20));
         let done: Vec<Tick> = trace
             .iter()

@@ -13,7 +13,7 @@
 //! physical SM), so task-set utilizations above 1 are meaningful when the
 //! platform has multiple SMs.
 
-use crate::model::{Bounds, GpuSegment, KernelClass, MemoryModel, RtTask, TaskSet};
+use crate::model::{ArrivalModel, Bounds, GpuSegment, KernelClass, MemoryModel, RtTask, TaskSet};
 use crate::util::rng::{uunifast, Pcg};
 
 /// Table 1 parameters plus the knobs the evaluation sweeps.
@@ -40,6 +40,11 @@ pub struct GenConfig {
     pub memory_model: MemoryModel,
     /// Kernel classes to draw GPU segments from (determines α).
     pub classes: Vec<KernelClass>,
+    /// Release-jitter fraction for sporadic sets: `None` generates the
+    /// paper's strictly periodic tasks; `Some(f)` gives every task a
+    /// sporadic arrival model with `min_separation = T` and release
+    /// jitter `f·T` (DESIGN.md §10).
+    pub arrival_jitter_frac: Option<f64>,
 }
 
 impl Default for GenConfig {
@@ -54,6 +59,7 @@ impl Default for GenConfig {
             bcet_ratio: (0.7, 1.0),
             memory_model: MemoryModel::TwoCopy,
             classes: KernelClass::ALL.to_vec(),
+            arrival_jitter_frac: None,
         }
     }
 }
@@ -80,6 +86,15 @@ impl GenConfig {
 
     pub fn with_subtasks(mut self, m: usize) -> Self {
         self.n_subtasks = m;
+        self
+    }
+
+    /// Synthesize sporadic sets: every task arrives at least `T` apart
+    /// and releases with up to `frac·T` jitter (`frac = 0` pins the
+    /// periodic critical-instant pattern through a sporadic spec).
+    pub fn with_sporadic(mut self, frac: f64) -> Self {
+        assert!((0.0..=1.0).contains(&frac), "jitter fraction {frac} outside [0, 1]");
+        self.arrival_jitter_frac = Some(frac);
         self
     }
 }
@@ -126,6 +141,10 @@ pub fn generate_taskset(rng: &mut Pcg, cfg: &GenConfig, total_util: f64) -> Task
             + mem.iter().map(|b| b.hi).sum::<f64>()
             + gpu.iter().map(|g| g.work.hi).sum::<f64>();
         let deadline = demand / share;
+        let arrival = match cfg.arrival_jitter_frac {
+            None => ArrivalModel::Periodic,
+            Some(f) => ArrivalModel::Sporadic { min_separation: deadline, jitter: f * deadline },
+        };
         tasks.push(RtTask {
             id,
             cpu,
@@ -134,6 +153,7 @@ pub fn generate_taskset(rng: &mut Pcg, cfg: &GenConfig, total_util: f64) -> Task
             memory_model: cfg.memory_model,
             deadline,
             period: deadline,
+            arrival,
         });
     }
     // 4. deadline-monotonic priorities.
@@ -242,6 +262,22 @@ mod tests {
         assert_eq!(ts.len(), 3);
         assert_eq!(ts.tasks[0].m(), 7);
         assert_eq!(ts.tasks[0].gpu_count(), 6);
+    }
+
+    #[test]
+    fn sporadic_sets_carry_the_arrival_spec() {
+        let mut rng = Pcg::new(17);
+        let cfg = GenConfig::default().with_sporadic(0.2);
+        let ts = generate_taskset(&mut rng, &cfg, 2.0);
+        assert_eq!(ts.validate(), Ok(()));
+        for t in &ts.tasks {
+            assert_eq!(t.arrival.name(), "sporadic");
+            assert_eq!(t.min_separation(), t.period);
+            assert!((t.release_jitter() - 0.2 * t.period).abs() < 1e-9);
+        }
+        // Default sets stay strictly periodic.
+        let ts = generate_taskset(&mut rng, &GenConfig::default(), 2.0);
+        assert!(ts.tasks.iter().all(|t| t.release_jitter() == 0.0));
     }
 
     #[test]

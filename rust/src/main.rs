@@ -26,17 +26,20 @@ use rtgpu::harness::throughput::throughput_gain;
 use rtgpu::harness::validate::{run_validation, TimeModel};
 use rtgpu::model::{ClusterPlatform, KernelClass, Platform};
 use rtgpu::runtime::{artifact_dir, Engine};
-use rtgpu::sim::SimConfig;
+use rtgpu::sim::{ArrivalOverride, SimConfig};
 use rtgpu::util::cli::{exit_usage, Args, CliError};
 use rtgpu::util::rng::Pcg;
 
 const USAGE: &str = "usage: rtgpu <serve|admit|cluster|sweep|validate|throughput> [--flags]\n\
   serve      [--seconds S] [--sms GN] [--full-artifacts]   serve real kernels\n\
   admit      [--util U] [--tasks N] [--subtasks M] [--sms GN]\n\
-             [--gpu-policy federated|preemptive] [--seed S] analyze a random set\n\
+             [--gpu-policy federated|preemptive]\n\
+             [--arrival periodic|sporadic[:FRAC]|task]\n\
+             [--seed S]                                    analyze a random set\n\
   cluster    [--devices G] [--sms GN] [--util U] [--tasks N]\n\
              [--subtasks M] [--policy ffd|worst-fit]\n\
              [--gpu-policy federated|preemptive]\n\
+             [--arrival periodic|sporadic[:FRAC]|task]\n\
              [--shared-cpu] [--seed S]                     place + run a fleet\n\
   sweep      [--figure 8|9|10|11] [--sets K] [--seed S]    acceptance curves\n\
   validate   [--model wcet|avg] [--sets K] [--seed S]\n\
@@ -117,11 +120,23 @@ fn cmd_admit(args: &Args) -> Result<()> {
     let gn = args.usize_or("sms", 10)?;
     let gpu_policy = GpuPolicyKind::parse(args.str_or("gpu-policy", "federated"))
         .ok_or_else(|| CliError("--gpu-policy expects federated or preemptive".into()))?;
+    let arrival = ArrivalOverride::parse(args.str_or("arrival", "task"))
+        .ok_or_else(|| CliError("--arrival expects periodic, sporadic[:FRAC] or task".into()))?;
     let seed = args.u64_or("seed", 42)?;
     args.finish()?;
 
-    let ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
-    println!("task set: {} tasks, total utilization {:.3}", ts.len(), ts.total_utilization());
+    let mut ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
+    // Rewriting the tasks (not just the executors) keeps the analysis
+    // and any later run on the same arrival process.
+    arrival.apply(&mut ts);
+    let jitters: Vec<f64> = ts.tasks.iter().map(|t| t.release_jitter()).collect();
+    println!(
+        "task set: {} tasks, total utilization {:.3}, {} arrivals (max jitter {:.2} ms)",
+        ts.len(),
+        ts.total_utilization(),
+        ts.tasks[0].arrival.name(),
+        jitters.iter().fold(0.0f64, |a, &b| a.max(b)),
+    );
     for ap in Approach::ALL {
         let v = analyze(&ts, gn, ap, Search::Grid);
         println!(
@@ -154,6 +169,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         .ok_or_else(|| CliError("--policy expects ffd or worst-fit".into()))?;
     let gpu_policy = GpuPolicyKind::parse(args.str_or("gpu-policy", "federated"))
         .ok_or_else(|| CliError("--gpu-policy expects federated or preemptive".into()))?;
+    let arrival = ArrivalOverride::parse(args.str_or("arrival", "task"))
+        .ok_or_else(|| CliError("--arrival expects periodic, sporadic[:FRAC] or task".into()))?;
     let shared = args.flag("shared-cpu");
     let seed = args.u64_or("seed", 42)?;
     args.finish()?;
@@ -162,15 +179,18 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if shared {
         platform = platform.with_shared_cpu();
     }
-    let ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
+    let mut ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
+    arrival.apply(&mut ts);
     println!(
-        "fleet: {} × {}-SM devices ({} CPU, {} GPU policy); {} apps at total utilization {:.3}",
+        "fleet: {} × {}-SM devices ({} CPU, {} GPU policy); {} apps at total utilization {:.3}, \
+         {} arrivals",
         devices,
         gn,
         platform.cpu.name(),
         gpu_policy.name(),
         ts.len(),
-        ts.total_utilization()
+        ts.total_utilization(),
+        ts.tasks[0].arrival.name(),
     );
 
     let mut state = ClusterState::new(platform, RtgpuOpts::default())

@@ -135,6 +135,52 @@ impl MemoryModel {
     }
 }
 
+/// How a task's jobs arrive (DESIGN.md §10).
+///
+/// The paper (§3) models strictly periodic releases; event-driven
+/// pipelines are sporadic in practice, so the arrival process is its own
+/// axis, threaded from the model through the analysis and every
+/// executor:
+///
+/// * [`ArrivalModel::Periodic`] — job `k` arrives and releases at
+///   `k·T` (the classic synchronous critical-instant pattern).
+/// * [`ArrivalModel::Sporadic`] — arrivals are at least
+///   `min_separation` apart (the executors drive the densest legal
+///   curve: arrivals exactly `min_separation` apart) and each job's
+///   *release* lags its arrival by a bounded jitter in `[0, jitter]`.
+///   Deadlines stay relative to the **arrival**, so jitter eats into
+///   the budget; the analysis charges the standard jitter-inflated
+///   interference (`⌈(t + J_i)/T_i⌉`-style, via the workload-window
+///   extension in [`crate::analysis::workload::SuspView`]).
+/// * [`ArrivalModel::Trace`] — replayed arrival offsets (ms, from the
+///   start of the run), released with zero jitter; gaps must respect
+///   the analysis period `T` so the periodic bounds stay sound.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalModel {
+    Periodic,
+    Sporadic { min_separation: Time, jitter: Time },
+    Trace(Vec<Time>),
+}
+
+impl ArrivalModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalModel::Periodic => "periodic",
+            ArrivalModel::Sporadic { .. } => "sporadic",
+            ArrivalModel::Trace(_) => "trace",
+        }
+    }
+
+    /// Worst-case release jitter `J` (0 for periodic and replayed
+    /// arrivals, which release at their arrival instant).
+    pub fn jitter(&self) -> Time {
+        match self {
+            ArrivalModel::Sporadic { jitter, .. } => *jitter,
+            ArrivalModel::Periodic | ArrivalModel::Trace(_) => 0.0,
+        }
+    }
+}
+
 /// A sporadic RT-GPU task (Eq. 4): `m` CPU segments, `m−1` GPU segments
 /// and `copies·(m−1)` memory segments, with constrained deadline `D ≤ T`.
 #[derive(Debug, Clone)]
@@ -150,10 +196,13 @@ pub struct RtTask {
     /// GPU segments `G^j`, `j ∈ [0, m−1)`.
     pub gpu: Vec<GpuSegment>,
     pub memory_model: MemoryModel,
-    /// Relative deadline `D ≤ T`.
+    /// Relative deadline `D ≤ T`, measured from the job's **arrival**.
     pub deadline: Time,
-    /// Period / minimum inter-arrival time `T`.
+    /// Period / minimum inter-arrival time `T` — the analysis period.
+    /// Sporadic and trace arrivals may space out further, never closer.
     pub period: Time,
+    /// The arrival process generating this task's jobs.
+    pub arrival: ArrivalModel,
 }
 
 impl RtTask {
@@ -170,6 +219,31 @@ impl RtTask {
     /// Number of memory-copy segments.
     pub fn mem_count(&self) -> usize {
         self.mem.len()
+    }
+
+    /// Worst-case release jitter `J` of this task's arrival process.
+    pub fn release_jitter(&self) -> Time {
+        self.arrival.jitter()
+    }
+
+    /// Minimum inter-**arrival** separation the arrival process
+    /// guarantees (≥ the analysis period `T`, enforced by
+    /// [`Self::validate`]).
+    pub fn min_separation(&self) -> Time {
+        match &self.arrival {
+            ArrivalModel::Sporadic { min_separation, .. } => *min_separation,
+            ArrivalModel::Periodic | ArrivalModel::Trace(_) => self.period,
+        }
+    }
+
+    /// Replace the arrival model with a sporadic process at this task's
+    /// own period as the minimum separation and `frac·T` release jitter
+    /// (`frac = 0` degenerates to the periodic critical-instant curve).
+    pub fn with_sporadic_jitter(mut self, frac: f64) -> RtTask {
+        assert!((0.0..=1.0).contains(&frac), "jitter fraction {frac} outside [0, 1]");
+        self.arrival =
+            ArrivalModel::Sporadic { min_separation: self.period, jitter: frac * self.period };
+        self
     }
 
     /// Validate structural invariants; returns a description of the first
@@ -204,6 +278,45 @@ impl RtTask {
         for g in &self.gpu {
             if g.alpha < 1.0 {
                 return Err(format!("task {}: alpha {} < 1", self.id, g.alpha));
+            }
+        }
+        match &self.arrival {
+            ArrivalModel::Periodic => {}
+            ArrivalModel::Sporadic { min_separation, jitter } => {
+                // The analysis period must lower-bound the true
+                // separation, and jitter ≤ separation keeps the release
+                // sequence monotone (the driver relies on it).
+                if !(min_separation.is_finite() && *min_separation >= self.period - 1e-9) {
+                    return Err(format!(
+                        "task {}: sporadic min_separation {} below the analysis period {}",
+                        self.id, min_separation, self.period
+                    ));
+                }
+                if !(jitter.is_finite() && (0.0..=*min_separation).contains(jitter)) {
+                    return Err(format!(
+                        "task {}: need 0 ≤ jitter ≤ min_separation, got J={} S={}",
+                        self.id, jitter, min_separation
+                    ));
+                }
+            }
+            ArrivalModel::Trace(offsets) => {
+                let mut prev: Option<Time> = None;
+                for &a in offsets {
+                    if !(a.is_finite() && a >= 0.0) {
+                        return Err(format!("task {}: bad trace arrival {a}", self.id));
+                    }
+                    if let Some(p) = prev {
+                        if a - p < self.period - 1e-9 {
+                            return Err(format!(
+                                "task {}: trace gap {} below the analysis period {}",
+                                self.id,
+                                a - p,
+                                self.period
+                            ));
+                        }
+                    }
+                    prev = Some(a);
+                }
             }
         }
         Ok(())
@@ -333,12 +446,10 @@ impl TaskSet {
     /// Build a task set, sorting by deadline-monotonic priority (Table 1's
     /// "D monotonic" assignment; ties broken by id for determinism).
     pub fn new_deadline_monotonic(mut tasks: Vec<RtTask>) -> TaskSet {
-        tasks.sort_by(|a, b| {
-            a.deadline
-                .partial_cmp(&b.deadline)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        // total_cmp: a degenerate deadline (NaN from a zero-period
+        // construction) must not panic the sort — validation rejects it
+        // later with a real message.
+        tasks.sort_by(|a, b| a.deadline.total_cmp(&b.deadline).then(a.id.cmp(&b.id)));
         TaskSet { tasks }
     }
 
@@ -399,6 +510,7 @@ pub mod testing {
             memory_model: MemoryModel::TwoCopy,
             deadline: 50.0,
             period: 60.0,
+            arrival: ArrivalModel::Periodic,
         }
     }
 
@@ -412,6 +524,7 @@ pub mod testing {
             memory_model: MemoryModel::TwoCopy,
             deadline,
             period: deadline,
+            arrival: ArrivalModel::Periodic,
         }
     }
 }
@@ -495,6 +608,54 @@ mod tests {
         assert_eq!(shared.cpu, CpuTopology::Shared);
         assert_eq!(shared.gn_total(), 40, "topology does not change SM counts");
         assert!(std::panic::catch_unwind(|| ClusterPlatform::homogeneous(0, 1)).is_err());
+    }
+
+    #[test]
+    fn arrival_models_validate() {
+        let t = simple_task(0).with_sporadic_jitter(0.25);
+        assert_eq!(t.validate(), Ok(()));
+        assert_eq!(t.arrival.name(), "sporadic");
+        assert!((t.release_jitter() - 15.0).abs() < 1e-12, "J = 0.25·60");
+        assert_eq!(t.min_separation(), 60.0);
+
+        // Separation below the analysis period is unsound.
+        let mut t = simple_task(0);
+        t.arrival = ArrivalModel::Sporadic { min_separation: 30.0, jitter: 0.0 };
+        assert!(t.validate().unwrap_err().contains("min_separation"));
+
+        // Jitter above the separation breaks release monotonicity.
+        let mut t = simple_task(0);
+        t.arrival = ArrivalModel::Sporadic { min_separation: 60.0, jitter: 61.0 };
+        assert!(t.validate().unwrap_err().contains("jitter"));
+
+        // Trace gaps must respect the period.
+        let mut t = simple_task(0);
+        t.arrival = ArrivalModel::Trace(vec![0.0, 60.0, 200.0]);
+        assert_eq!(t.validate(), Ok(()));
+        assert_eq!(t.release_jitter(), 0.0);
+        t.arrival = ArrivalModel::Trace(vec![0.0, 10.0]);
+        assert!(t.validate().unwrap_err().contains("trace gap"));
+    }
+
+    #[test]
+    fn zero_jitter_sporadic_matches_periodic_parameters() {
+        // The degenerate point of the arrival axis (the bit-identical
+        // trace pin in tests/arrival_parity.rs rests on it).
+        let t = simple_task(0).with_sporadic_jitter(0.0);
+        assert_eq!(t.validate(), Ok(()));
+        assert_eq!(t.release_jitter(), 0.0);
+        assert_eq!(t.min_separation(), t.period);
+    }
+
+    #[test]
+    fn deadline_monotonic_sort_survives_nan_deadlines() {
+        // A zero-period degenerate (caught later by validate) must not
+        // panic the priority sort.
+        let mut bad = simple_task(0);
+        bad.deadline = f64::NAN;
+        let good = simple_task(1);
+        let ts = TaskSet::new_deadline_monotonic(vec![bad, good]);
+        assert_eq!(ts.tasks[0].id, 1, "NaN sorts after every real deadline");
     }
 
     #[test]

@@ -7,12 +7,20 @@
 //! [`run`] owns the whole mechanism once:
 //!
 //! * the [`EventQueue`] and the `(tick, sequence)` total order;
-//! * periodic release generation (device-major seeding, task `k` at
-//!   `0, T_k, 2T_k, …` strictly before the horizon);
+//! * release generation from each task's **arrival process**
+//!   ([`ArrivalSpec`], DESIGN.md §10): periodic (device-major seeding,
+//!   task `k` at `0, T_k, 2T_k, …` strictly before the horizon),
+//!   sporadic (the densest legal curve — arrivals `min_separation`
+//!   apart — with a per-job release jitter drawn in `[0, jitter]` from
+//!   a per-task forked RNG, so jitter draws never perturb the chain
+//!   oracle's stream), and replayed arrival traces;
 //! * the chain-oracle call discipline (one call per release, in pop
 //!   order — stochastic oracles rely on this for RNG reproducibility);
-//! * horizon and stop-on-first-miss handling, deadline bookkeeping, and
-//!   the [`TaskFifo`] job-level precedence;
+//! * horizon and stop-on-first-miss handling, the **single** deadline
+//!   accounting every adapter shares ([`DriverOutcome::job_missed`] /
+//!   [`DriverOutcome::misses_at_horizon`] — jobs still in flight past
+//!   their deadline when the horizon ends included), and the
+//!   [`TaskFifo`] job-level precedence;
 //! * station routing across devices ([`route_station`]) and the trace
 //!   sink per device core.
 //!
@@ -21,20 +29,59 @@
 //! Policy behaviour (who claims the GPU) is delegated to the per-device
 //! [`GpuPolicyKind`] stations inside each [`PlatformCore`].
 
-use crate::model::CpuTopology;
+use crate::model::{ArrivalModel, CpuTopology};
+use crate::util::rng::Pcg;
 
 use super::equeue::EventQueue;
 use super::platform::{CoreEvent, JobId, PlatformCore, TaskFifo, TraceEntry, WalkJob};
 use super::policy::GpuPolicyKind;
-use super::{route_station, Chain, DeviceId, Tick};
+use super::{ms_to_ticks, route_station, Chain, DeviceId, Tick};
 
-/// One periodic task as the driver sees it (times in ticks; `priority`
-/// is the global level — lower is served first).
-#[derive(Debug, Clone, Copy)]
+/// A task's arrival process as the driver executes it (times in ticks).
+/// The model-layer counterpart is [`ArrivalModel`] (milliseconds);
+/// [`ArrivalSpec::from_model`] converts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArrivalSpec {
+    /// Arrivals at `0, T, 2T, …`; release = arrival.
+    Periodic,
+    /// Arrivals exactly `min_separation` apart — the densest curve a
+    /// sporadic task may legally drive — each release lagging its
+    /// arrival by an independent uniform draw in `[0, jitter]`.
+    /// `jitter = 0` with `min_separation = period` replays the periodic
+    /// schedule bit for bit (no RNG is consumed).
+    Sporadic { min_separation: Tick, jitter: Tick },
+    /// Replayed absolute arrival ticks (non-decreasing); releases at the
+    /// arrival instant, stream ends when the trace is exhausted.
+    Trace(Vec<Tick>),
+}
+
+impl ArrivalSpec {
+    /// Convert a model-layer arrival process to driver ticks.
+    pub fn from_model(arrival: &ArrivalModel) -> ArrivalSpec {
+        match arrival {
+            ArrivalModel::Periodic => ArrivalSpec::Periodic,
+            ArrivalModel::Sporadic { min_separation, jitter } => ArrivalSpec::Sporadic {
+                min_separation: ms_to_ticks(*min_separation),
+                jitter: ms_to_ticks(*jitter),
+            },
+            ArrivalModel::Trace(offsets) => {
+                ArrivalSpec::Trace(offsets.iter().map(|&a| ms_to_ticks(a)).collect())
+            }
+        }
+    }
+}
+
+/// One task as the driver sees it (times in ticks; `priority` is the
+/// global level — lower is served first).
+#[derive(Debug, Clone)]
 pub struct DriverTask {
+    /// Analysis period `T` (the periodic release step; sporadic and
+    /// trace arrivals space by their own spec, never closer than this).
     pub period: Tick,
+    /// Relative deadline, anchored at each job's **arrival**.
     pub deadline: Tick,
     pub priority: usize,
+    pub arrival: ArrivalSpec,
 }
 
 /// Driver parameters shared by every adapter.
@@ -50,6 +97,11 @@ pub struct DriverConfig {
     pub stop_on_first_miss: bool,
     /// Record per-core [`TraceEntry`]s.
     pub trace: bool,
+    /// Seed for the per-task jitter streams of sporadic arrivals.  Each
+    /// `(device, task)` forks its own [`Pcg`], so draws are independent
+    /// of pop order and of the adapters' chain-oracle RNG — two runs
+    /// with the same seed replay the same arrival pattern.
+    pub arrival_seed: u64,
 }
 
 /// Everything a run produced; adapters project what they need.
@@ -59,9 +111,19 @@ pub struct DriverOutcome {
     pub jobs: Vec<WalkJob>,
     /// Owning device per job, parallel to `jobs`.
     pub job_dev: Vec<DeviceId>,
-    /// Deadline misses observed online (completions only; unfinished
-    /// jobs are the adapter's accounting).
+    /// Deadline misses observed online, at job completion instants.
+    /// Jobs unfinished at the horizon are *not* in here — use
+    /// [`Self::misses_at_horizon`], the accounting adapters report.
     pub total_misses: usize,
+    /// The one shared miss count: completions past their deadline plus
+    /// jobs still in flight at the horizon whose deadline had already
+    /// passed (unless the run was cut short by `stop_on_first_miss`,
+    /// when in-flight jobs prove nothing).  Previously every adapter
+    /// re-derived this rule by hand.
+    pub misses_at_horizon: usize,
+    /// The release-suppression horizon the run used (the
+    /// [`Self::job_missed`] cutoff for unfinished jobs).
+    pub horizon: Tick,
     pub events_processed: usize,
     /// The run was cut short by `stop_on_first_miss`.
     pub stopped: bool,
@@ -71,11 +133,92 @@ pub struct DriverOutcome {
     pub traces: Vec<Vec<TraceEntry>>,
 }
 
+impl DriverOutcome {
+    /// Did job `j` miss its deadline?  Completed jobs compare their
+    /// completion tick; unfinished jobs count as missed only when the
+    /// run reached the horizon (not `stop_on_first_miss`-cut) and the
+    /// deadline fell inside it.
+    pub fn job_missed(&self, j: JobId) -> bool {
+        match self.jobs[j].done {
+            Some(done) => done > self.jobs[j].deadline,
+            None => !self.stopped && self.horizon > self.jobs[j].deadline,
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 enum Ev {
-    Release { dev: DeviceId, task: usize },
+    Release { dev: DeviceId, task: usize, arrival: Tick },
     Start { job: JobId },
     Core { core: DeviceId, ev: CoreEvent },
+}
+
+/// Per-task arrival generator state: the jitter RNG (sporadic only) and
+/// the replay cursor (trace only).
+struct ArrivalState {
+    rng: Option<Pcg>,
+    trace_pos: usize,
+}
+
+impl ArrivalState {
+    fn new(dev: DeviceId, task: usize, spec: &ArrivalSpec, seed: u64) -> ArrivalState {
+        let rng = match spec {
+            ArrivalSpec::Sporadic { jitter, .. } if *jitter > 0 => {
+                // A private stream per (device, task): draws cannot
+                // perturb the chain oracle or other tasks' jitter.  The
+                // constant keeps even (0, 0)'s stream off the adapters'
+                // chain-RNG seed.
+                let tag = (((dev as u64) << 32) | task as u64).wrapping_mul(0x9e3779b97f4a7c15);
+                Some(Pcg::new(seed ^ tag ^ 0x5851f42d4c957f2d))
+            }
+            _ => None,
+        };
+        ArrivalState { rng, trace_pos: 0 }
+    }
+
+    fn draw_jitter(&mut self, jitter: Tick) -> Tick {
+        if jitter == 0 {
+            return 0;
+        }
+        self.rng.as_mut().expect("jittered task has an RNG").below(jitter + 1)
+    }
+
+    /// First `(arrival, release)` of the stream, if any.
+    fn first(&mut self, spec: &ArrivalSpec) -> Option<(Tick, Tick)> {
+        match spec {
+            ArrivalSpec::Periodic => Some((0, 0)),
+            ArrivalSpec::Sporadic { jitter, .. } => {
+                let j = self.draw_jitter(*jitter);
+                Some((0, j))
+            }
+            ArrivalSpec::Trace(offsets) => {
+                let a = *offsets.first()?;
+                self.trace_pos = 1;
+                Some((a, a))
+            }
+        }
+    }
+
+    /// The `(arrival, release)` following an arrival at `arrival`, if
+    /// the stream continues.
+    fn next(&mut self, spec: &ArrivalSpec, period: Tick, arrival: Tick) -> Option<(Tick, Tick)> {
+        match spec {
+            ArrivalSpec::Periodic => {
+                let a = arrival + period;
+                Some((a, a))
+            }
+            ArrivalSpec::Sporadic { min_separation, jitter } => {
+                let a = arrival + min_separation;
+                let j = self.draw_jitter(*jitter);
+                Some((a, a + j))
+            }
+            ArrivalSpec::Trace(offsets) => {
+                let a = *offsets.get(self.trace_pos)?;
+                self.trace_pos += 1;
+                Some((a, a))
+            }
+        }
+    }
 }
 
 /// Drive `devices` (per-device task lists in local priority order) to
@@ -90,10 +233,41 @@ pub fn run(
     let n_dev = devices.len();
     assert!(n_dev >= 1, "driver needs at least one device");
     assert_eq!(cfg.gpu_policy.len(), n_dev, "one GPU policy per device");
+    for tasks in devices {
+        for dt in tasks {
+            match &dt.arrival {
+                ArrivalSpec::Periodic => {}
+                ArrivalSpec::Sporadic { min_separation, jitter } => {
+                    assert!(*min_separation > 0, "sporadic task with zero separation");
+                    // Monotone releases: the next release (arrival +
+                    // min_separation + j') can never precede this one
+                    // (arrival + j) when j ≤ jitter ≤ min_separation.
+                    assert!(jitter <= min_separation, "release jitter above the separation");
+                }
+                ArrivalSpec::Trace(offsets) => {
+                    assert!(
+                        offsets.windows(2).all(|w| w[0] <= w[1]),
+                        "arrival trace must be non-decreasing"
+                    );
+                }
+            }
+        }
+    }
 
     let mut cores: Vec<PlatformCore> =
         cfg.gpu_policy.iter().map(|&p| PlatformCore::with_policy(p, cfg.trace)).collect();
     let mut fifos: Vec<TaskFifo> = devices.iter().map(|d| TaskFifo::new(d.len())).collect();
+    let mut arrivals: Vec<Vec<ArrivalState>> = devices
+        .iter()
+        .enumerate()
+        .map(|(dev, tasks)| {
+            tasks
+                .iter()
+                .enumerate()
+                .map(|(task, dt)| ArrivalState::new(dev, task, &dt.arrival, cfg.arrival_seed))
+                .collect()
+        })
+        .collect();
     let mut jobs: Vec<WalkJob> = Vec::new();
     let mut job_dev: Vec<DeviceId> = Vec::new();
 
@@ -101,8 +275,10 @@ pub fn run(
     // Initial releases, device-major — the seeding order every executor
     // shared before the extraction, so same-instant pops keep agreeing.
     for (dev, tasks) in devices.iter().enumerate() {
-        for task in 0..tasks.len() {
-            q.push(0, Ev::Release { dev, task });
+        for (task, dt) in tasks.iter().enumerate() {
+            if let Some((arrival, release)) = arrivals[dev][task].first(&dt.arrival) {
+                q.push(release, Ev::Release { dev, task, arrival });
+            }
         }
     }
 
@@ -147,19 +323,23 @@ pub fn run(
         }
         events += 1;
         match ev {
-            Ev::Release { dev, task } => {
+            Ev::Release { dev, task, arrival } => {
                 if now >= cfg.horizon {
                     continue;
                 }
                 let dt = &devices[dev][task];
                 let chain = chain_for(dev, task);
                 let job_id = jobs.len();
-                jobs.push(WalkJob::new(task, dt.priority, now, now + dt.deadline, chain));
+                let deadline = arrival + dt.deadline;
+                jobs.push(WalkJob::new(task, dt.priority, arrival, now, deadline, chain));
                 job_dev.push(dev);
                 if let Some(start) = fifos[dev].on_release(task, job_id) {
                     q.push(now, Ev::Start { job: start });
                 }
-                q.push(now + dt.period, Ev::Release { dev, task });
+                let next = arrivals[dev][task].next(&dt.arrival, dt.period, arrival);
+                if let Some((a2, r2)) = next {
+                    q.push(r2, Ev::Release { dev, task, arrival: a2 });
+                }
             }
             Ev::Start { job } => {
                 start_next!(now, job);
@@ -178,14 +358,18 @@ pub fn run(
     }
 
     let traces = cores.iter_mut().map(PlatformCore::take_trace).collect();
-    DriverOutcome {
+    let mut out = DriverOutcome {
         jobs,
         job_dev,
         total_misses,
+        misses_at_horizon: 0,
+        horizon: cfg.horizon,
         events_processed: events,
         stopped: stop,
         traces,
-    }
+    };
+    out.misses_at_horizon = (0..out.jobs.len()).filter(|&j| out.job_missed(j)).count();
+    out
 }
 
 #[cfg(test)]
@@ -200,18 +384,24 @@ mod tests {
             horizon,
             stop_on_first_miss: false,
             trace: true,
+            arrival_seed: 0,
         }
+    }
+
+    fn periodic(period: Tick, deadline: Tick, priority: usize) -> DriverTask {
+        DriverTask { period, deadline, priority, arrival: ArrivalSpec::Periodic }
     }
 
     #[test]
     fn single_task_walks_its_chain() {
-        let tasks = vec![vec![DriverTask { period: 1000, deadline: 1000, priority: 0 }]];
+        let tasks = vec![vec![periodic(1000, 1000, 0)]];
         let out = run(&tasks, &cfg(vec![GpuPolicyKind::Federated], 1), |_, _| {
             Chain::five_phase(10, 20, 30, 40, 50)
         });
         assert_eq!(out.jobs.len(), 1);
         assert_eq!(out.jobs[0].done, Some(150));
         assert_eq!(out.total_misses, 0);
+        assert_eq!(out.misses_at_horizon, 0);
         let events: Vec<TraceEvent> = out.traces[0].iter().map(|e| e.event).collect();
         assert_eq!(
             events,
@@ -228,22 +418,45 @@ mod tests {
 
     #[test]
     fn stop_on_first_miss_cuts_the_run() {
-        let tasks = vec![vec![DriverTask { period: 10, deadline: 8, priority: 0 }]];
+        let tasks = vec![vec![periodic(10, 8, 0)]];
         let mut c = cfg(vec![GpuPolicyKind::Federated], 10_000);
         c.stop_on_first_miss = true;
         let out = run(&tasks, &c, |_, _| Chain::new(vec![(Phase::Cpu(0), 9)]));
         assert!(out.stopped);
         assert_eq!(out.total_misses, 1);
+        assert_eq!(out.misses_at_horizon, 1, "completion misses still count when cut short");
         assert!(out.events_processed < 20, "{}", out.events_processed);
     }
 
     #[test]
+    fn in_flight_job_past_deadline_counts_at_horizon() {
+        // One job, chain far longer than both its deadline and the
+        // horizon: it never completes, yet the deadline passed inside
+        // the horizon — the driver's own accounting must flag it (this
+        // rule used to live, duplicated, in every adapter).
+        let tasks = vec![vec![periodic(10_000, 50, 0)]];
+        let out = run(&tasks, &cfg(vec![GpuPolicyKind::Federated], 100), |_, _| {
+            Chain::new(vec![(Phase::Cpu(0), 10_000)])
+        });
+        assert_eq!(out.jobs.len(), 1);
+        assert_eq!(out.jobs[0].done, None, "job must still be in flight");
+        assert_eq!(out.total_misses, 0, "no completion was observed");
+        assert!(out.job_missed(0));
+        assert_eq!(out.misses_at_horizon, 1);
+
+        // Same shape, but the deadline lands beyond the horizon: the
+        // truncated run proves nothing about it.
+        let tasks = vec![vec![periodic(10_000, 500, 0)]];
+        let out = run(&tasks, &cfg(vec![GpuPolicyKind::Federated], 100), |_, _| {
+            Chain::new(vec![(Phase::Cpu(0), 10_000)])
+        });
+        assert!(!out.job_missed(0));
+        assert_eq!(out.misses_at_horizon, 0);
+    }
+
+    #[test]
     fn federated_gpu_phases_overlap_but_preemptive_serialise() {
-        let tasks = |n: usize| {
-            vec![(0..n)
-                .map(|i| DriverTask { period: 1000, deadline: 1000, priority: i })
-                .collect::<Vec<_>>()]
-        };
+        let tasks = |n: usize| vec![(0..n).map(|i| periodic(1000, 1000, i)).collect::<Vec<_>>()];
         let chain = |_: DeviceId, _: usize| Chain::new(vec![(Phase::Gpu(0), 10)]);
         let fed = run(&tasks(2), &cfg(vec![GpuPolicyKind::Federated], 1), chain);
         assert_eq!(fed.jobs.iter().map(|j| j.done.unwrap()).collect::<Vec<_>>(), vec![10, 10]);
@@ -253,15 +466,14 @@ mod tests {
 
     #[test]
     fn shared_cpu_funnels_to_core_zero() {
-        let tasks: Vec<Vec<DriverTask>> = (0..2)
-            .map(|_| vec![DriverTask { period: 1000, deadline: 1000, priority: 0 }])
-            .collect();
+        let tasks: Vec<Vec<DriverTask>> = (0..2).map(|_| vec![periodic(1000, 1000, 0)]).collect();
         let c = DriverConfig {
             cpu: CpuTopology::Shared,
             gpu_policy: vec![GpuPolicyKind::Federated; 2],
             horizon: 1,
             stop_on_first_miss: false,
             trace: true,
+            arrival_seed: 0,
         };
         let out = run(&tasks, &c, |_, _| Chain::new(vec![(Phase::Cpu(0), 10)]));
         // Both CPU phases run (serialised) on core 0; each job's
@@ -281,11 +493,99 @@ mod tests {
 
     #[test]
     fn same_task_jobs_serialise_via_fifo() {
-        let tasks = vec![vec![DriverTask { period: 50, deadline: 400, priority: 0 }]];
+        let tasks = vec![vec![periodic(50, 400, 0)]];
         let out = run(&tasks, &cfg(vec![GpuPolicyKind::Federated], 100), |_, _| {
             Chain::five_phase(20, 20, 20, 20, 20)
         });
         let done: Vec<Tick> = out.jobs.iter().map(|j| j.done.unwrap()).collect();
         assert_eq!(done, vec![100, 200]);
+    }
+
+    // -- arrival processes --------------------------------------------------
+
+    #[test]
+    fn zero_jitter_sporadic_is_bit_identical_to_periodic() {
+        // The tentpole pin: Sporadic{J: 0, S: T} must replay the
+        // periodic schedule exactly — releases, traces, event counts.
+        let chain = |_: DeviceId, _: usize| Chain::five_phase(10, 20, 30, 40, 50);
+        let per = vec![vec![periodic(100, 90, 0), periodic(250, 200, 1)]];
+        let spo: Vec<Vec<DriverTask>> = vec![per[0]
+            .iter()
+            .map(|t| DriverTask {
+                arrival: ArrivalSpec::Sporadic { min_separation: t.period, jitter: 0 },
+                ..t.clone()
+            })
+            .collect()];
+        let a = run(&per, &cfg(vec![GpuPolicyKind::Federated], 1000), chain);
+        let b = run(&spo, &cfg(vec![GpuPolicyKind::Federated], 1000), chain);
+        assert_eq!(a.traces, b.traces);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(
+                (x.arrival, x.release, x.deadline, x.done),
+                (y.arrival, y.release, y.deadline, y.done)
+            );
+        }
+    }
+
+    #[test]
+    fn jittered_releases_lag_arrivals_within_bound() {
+        let jitter = 40u64;
+        let tasks = vec![vec![DriverTask {
+            period: 100,
+            deadline: 100,
+            priority: 0,
+            arrival: ArrivalSpec::Sporadic { min_separation: 100, jitter },
+        }]];
+        let c = DriverConfig { arrival_seed: 7, ..cfg(vec![GpuPolicyKind::Federated], 1000) };
+        let out = run(&tasks, &c, |_, _| Chain::new(vec![(Phase::Cpu(0), 1)]));
+        assert!(out.jobs.len() >= 9, "{} jobs", out.jobs.len());
+        let mut lags = Vec::new();
+        for (k, j) in out.jobs.iter().enumerate() {
+            assert_eq!(j.arrival, 100 * k as u64, "densest-curve arrivals");
+            assert!(j.release >= j.arrival && j.release <= j.arrival + jitter);
+            assert_eq!(j.deadline, j.arrival + 100, "deadline anchors at the arrival");
+            lags.push(j.release - j.arrival);
+        }
+        assert!(lags.iter().any(|&l| l > 0), "jitter must actually move releases: {lags:?}");
+        // Same seed → same pattern; different seed → different pattern.
+        let again = run(&tasks, &c, |_, _| Chain::new(vec![(Phase::Cpu(0), 1)]));
+        let lags2: Vec<Tick> =
+            again.jobs.iter().map(|j| j.release - j.arrival).collect();
+        assert_eq!(lags, lags2, "arrival draws must replay from the seed");
+        let c9 = DriverConfig { arrival_seed: 9, ..c };
+        let other = run(&tasks, &c9, |_, _| Chain::new(vec![(Phase::Cpu(0), 1)]));
+        let lags3: Vec<Tick> = other.jobs.iter().map(|j| j.release - j.arrival).collect();
+        assert_ne!(lags, lags3, "distinct seeds should move the pattern");
+    }
+
+    #[test]
+    fn trace_arrivals_replay_exactly_then_stop() {
+        let tasks = vec![vec![DriverTask {
+            period: 10,
+            deadline: 30,
+            priority: 0,
+            arrival: ArrivalSpec::Trace(vec![5, 40, 41, 2000]),
+        }]];
+        let out = run(&tasks, &cfg(vec![GpuPolicyKind::Federated], 1000), |_, _| {
+            Chain::new(vec![(Phase::Cpu(0), 1)])
+        });
+        // The 2000-tick arrival is past the horizon; the rest replay.
+        let arrivals: Vec<Tick> = out.jobs.iter().map(|j| j.arrival).collect();
+        assert_eq!(arrivals, vec![5, 40, 41]);
+        assert_eq!(out.jobs[2].deadline, 71);
+        // An empty trace releases nothing at all.
+        let idle = vec![vec![DriverTask {
+            period: 10,
+            deadline: 30,
+            priority: 0,
+            arrival: ArrivalSpec::Trace(vec![]),
+        }]];
+        let out = run(&idle, &cfg(vec![GpuPolicyKind::Federated], 1000), |_, _| {
+            Chain::new(vec![(Phase::Cpu(0), 1)])
+        });
+        assert!(out.jobs.is_empty());
+        assert_eq!(out.events_processed, 0);
     }
 }

@@ -18,8 +18,12 @@
 //! also races for `BENCH_driver.json`).
 //!
 //! Invariants:
-//! * pushes never go to the past: `t` ≥ the tick of the last popped
-//!   event (a DES schedules completions and releases at `now + d ≥ now`);
+//! * a well-formed DES never pushes into the past (completions and
+//!   releases land at `now + d ≥ now`).  A buggy caller that does is
+//!   contained rather than trusted: the push is clamped to the cursor
+//!   slot, where the exact `(tick, seq)` sort still pops it first —
+//!   before the guard, a release build would wrap the slot mask and
+//!   silently file the event in a *future* slot, corrupting pop order;
 //! * wheel events all have slot ∈ `[base_slot, base_slot + SLOTS)`; far
 //!   events all have slot ≥ `base_slot + SLOTS` (maintained by draining
 //!   the far heap each time the cursor advances a slot).
@@ -111,8 +115,12 @@ impl<E> EventQueue<E> {
     pub fn push(&mut self, t: Tick, ev: E) {
         self.seq += 1;
         self.len += 1;
-        let slot = t >> SLOT_SHIFT;
-        debug_assert!(slot >= self.base_slot, "event pushed into the past");
+        // Release-mode-safe past guard: clamp a behind-the-cursor push
+        // to the cursor slot instead of letting `slot & MASK` wrap into
+        // a future slot.  The slot's exact `(tick, seq)` sort then pops
+        // the stale event immediately — the global total order over the
+        // remaining events is preserved.
+        let slot = (t >> SLOT_SHIFT).max(self.base_slot);
         if slot < self.base_slot + SLOTS as u64 {
             let s = &mut self.slots[(slot & MASK) as usize];
             if slot == self.base_slot && s.sorted && !s.events.is_empty() {
@@ -296,6 +304,43 @@ mod tests {
             }
             assert_eq!(wheel.len(), heap.len());
         }
+    }
+
+    #[test]
+    fn past_push_clamps_to_cursor_instead_of_wrapping() {
+        // Regression for the release-mode hole: advance the cursor many
+        // windows forward, then push behind it.  The old code computed
+        // `slot & MASK` on the raw past slot, which aliased a *future*
+        // ring position — the stale event would pop after events far
+        // later in virtual time.  The clamp files it in the cursor slot,
+        // so it pops immediately and order stays total.
+        let mut q = EventQueue::new();
+        let far = (SLOTS as u64) << (SLOT_SHIFT + 2);
+        q.push(far, "anchor");
+        assert_eq!(q.pop(), Some((far, "anchor"))); // cursor is now at `far`
+        q.push(far + 10, "later");
+        q.push(0, "stale"); // into the past, several whole windows back
+        q.push(far + 5, "sooner");
+        assert_eq!(q.pop(), Some((0, "stale")), "past event must pop first");
+        assert_eq!(q.pop(), Some((far + 5, "sooner")));
+        assert_eq!(q.pop(), Some((far + 10, "later")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty(), "len bookkeeping survived the clamp");
+    }
+
+    #[test]
+    fn past_push_into_sorted_cursor_slot_keeps_order() {
+        // The positioned-insert fast path (cursor slot already sorted)
+        // must accept a clamped past event too.
+        let mut q = EventQueue::new();
+        let base = (SLOTS as u64) << (SLOT_SHIFT + 1);
+        q.push(base, 0u32);
+        assert_eq!(q.pop(), Some((base, 0)));
+        q.push(base + 1, 1); // lands sorted in the cursor slot
+        q.push(7, 2); // past push, clamped into the same sorted slot
+        assert_eq!(q.pop(), Some((7, 2)));
+        assert_eq!(q.pop(), Some((base + 1, 1)));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

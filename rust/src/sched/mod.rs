@@ -20,7 +20,9 @@
 //!   claim, DESIGN.md §9).
 //! * [`driver`] — the one generic virtual-time event loop every
 //!   simulator / virtual serving path adapts ([`driver::run`]), over the
-//!   indexed two-level [`EventQueue`] in [`equeue`].
+//!   indexed two-level [`EventQueue`] in [`equeue`].  Releases come from
+//!   each task's arrival process ([`ArrivalSpec`]: periodic, sporadic
+//!   with bounded release jitter, or a replayed trace — DESIGN.md §10).
 //!
 //! Drivers supply the notion of time: the shared [`driver`] replays the
 //! core under virtual nanosecond ticks for every executor,
@@ -36,7 +38,7 @@ pub mod policy;
 pub mod queue;
 
 pub use chain::{Chain, Phase, Segment, Station};
-pub use driver::{DriverConfig, DriverOutcome, DriverTask};
+pub use driver::{ArrivalSpec, DriverConfig, DriverOutcome, DriverTask};
 pub use equeue::{EventQueue, HeapQueue};
 pub use platform::{
     CoreEvent, JobId, NonPreemptiveBus, PlatformCore, PreemptiveCpu, TaskFifo, TraceEntry,

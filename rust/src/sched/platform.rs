@@ -33,6 +33,10 @@ pub struct WalkJob {
     /// Task index in priority order (0 = highest priority).
     pub task: usize,
     pub prio: Prio,
+    /// When the job *arrived* (the deadline anchor); equals `release`
+    /// unless the arrival process has release jitter (DESIGN.md §10).
+    pub arrival: Tick,
+    /// When the job became ready to execute.
     pub release: Tick,
     pub deadline: Tick,
     pub chain: Chain,
@@ -44,10 +48,19 @@ pub struct WalkJob {
 }
 
 impl WalkJob {
-    pub fn new(task: usize, priority: usize, release: Tick, deadline: Tick, chain: Chain) -> Self {
+    pub fn new(
+        task: usize,
+        priority: usize,
+        arrival: Tick,
+        release: Tick,
+        deadline: Tick,
+        chain: Chain,
+    ) -> Self {
+        debug_assert!(arrival <= release, "a job cannot release before it arrives");
         WalkJob {
             task,
             prio: (priority, release),
+            arrival,
             release,
             deadline,
             chain,
@@ -395,7 +408,7 @@ mod tests {
 
     fn cpu_job(task: usize, prio: usize, release: Tick, d: Tick) -> WalkJob {
         let chain = Chain::new(vec![(Phase::Cpu(0), d)]);
-        WalkJob::new(task, prio, release, release + 1_000_000, chain)
+        WalkJob::new(task, prio, release, release, release + 1_000_000, chain)
     }
 
     #[test]
@@ -417,7 +430,8 @@ mod tests {
         // lo's 10-tick copy starts at 0 and holds the bus; hi's 2-tick
         // copy arrives at 1 but must wait until 10.
         let mk = |task, prio, release, d| {
-            WalkJob::new(task, prio, release, 1_000_000, Chain::new(vec![(Phase::H2d(0), d)]))
+            let chain = Chain::new(vec![(Phase::H2d(0), d)]);
+            WalkJob::new(task, prio, release, release, 1_000_000, chain)
         };
         let done = run(vec![mk(1, 1, 0, 10), mk(0, 0, 1, 2)]);
         assert_eq!(done, vec![10, 12]);
@@ -426,7 +440,7 @@ mod tests {
     #[test]
     fn gpu_phases_never_queue() {
         let mk = |task, d| {
-            WalkJob::new(task, task, 0, 1_000_000, Chain::new(vec![(Phase::Gpu(0), d)]))
+            WalkJob::new(task, task, 0, 0, 1_000_000, Chain::new(vec![(Phase::Gpu(0), d)]))
         };
         let done = run(vec![mk(0, 10), mk(1, 10)]);
         // Both overlap on their dedicated SMs.
@@ -436,7 +450,7 @@ mod tests {
     #[test]
     fn full_chain_walks_all_stations() {
         let chain = Chain::five_phase(1, 2, 3, 4, 5);
-        let done = run(vec![WalkJob::new(0, 0, 0, 1_000_000, chain)]);
+        let done = run(vec![WalkJob::new(0, 0, 0, 0, 1_000_000, chain)]);
         assert_eq!(done, vec![15]);
     }
 
@@ -517,7 +531,7 @@ mod tests {
     #[test]
     fn trace_records_phase_and_job_completions() {
         let mut jobs =
-            vec![WalkJob::new(0, 0, 0, 1_000_000, Chain::new(vec![(Phase::Gpu(0), 4)]))];
+            vec![WalkJob::new(0, 0, 0, 0, 1_000_000, Chain::new(vec![(Phase::Gpu(0), 4)]))];
         let mut core = PlatformCore::with_trace();
         let mut timers = Vec::new();
         core.start_phase(&mut jobs, 0, 0, &mut timers);

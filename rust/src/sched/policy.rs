@@ -176,7 +176,8 @@ mod tests {
     use crate::sched::{Chain, Phase};
 
     fn gpu_job(task: usize, prio: usize, release: Tick, d: Tick) -> WalkJob {
-        WalkJob::new(task, prio, release, release + 1_000_000, Chain::new(vec![(Phase::Gpu(0), d)]))
+        let chain = Chain::new(vec![(Phase::Gpu(0), d)]);
+        WalkJob::new(task, prio, release, release, release + 1_000_000, chain)
     }
 
     #[test]

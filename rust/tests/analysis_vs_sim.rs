@@ -8,7 +8,7 @@
 
 use rtgpu::analysis::rtgpu::{evaluate, schedule, RtgpuOpts, Search};
 use rtgpu::gen::{generate_taskset, GenConfig};
-use rtgpu::model::{Bounds, GpuSegment, KernelClass, MemoryModel, RtTask, TaskSet};
+use rtgpu::model::{ArrivalModel, Bounds, GpuSegment, KernelClass, MemoryModel, RtTask, TaskSet};
 use rtgpu::sim::{simulate, ExecModel, SimConfig};
 use rtgpu::util::rng::Pcg;
 
@@ -111,6 +111,7 @@ fn dropping_mem_blocking_is_unsound() {
         memory_model: MemoryModel::TwoCopy,
         deadline: 6.0,
         period: 50.0,
+        arrival: ArrivalModel::Periodic,
     };
     let lo = RtTask {
         id: 1,
@@ -124,6 +125,7 @@ fn dropping_mem_blocking_is_unsound() {
         memory_model: MemoryModel::TwoCopy,
         deadline: 200.0,
         period: 200.0,
+        arrival: ArrivalModel::Periodic,
     };
     let ts = TaskSet::with_priority_order(vec![hi, lo]);
     let alloc = vec![1, 1];

@@ -130,16 +130,16 @@ fn assert_sim_serve_parity(n_devices: usize, cpu: CpuTopology, seed: u64) {
     for (dev, d) in wl.devices.iter().enumerate() {
         for k in 0..d.ts.len() {
             route.push(dev);
-            vtasks.push(VirtualTask {
-                period: ms_to_ticks(d.ts.tasks[k].period),
-                deadline: ms_to_ticks(d.ts.tasks[k].deadline),
-            });
+            vtasks.push(VirtualTask::periodic(
+                ms_to_ticks(d.ts.tasks[k].period),
+                ms_to_ticks(d.ts.tasks[k].deadline),
+            ));
             chains.push(wcet_chain(&d.ts, &d.alloc, k));
         }
     }
     let router = ClusterServe::new(cpu, route, n_devices);
     let serve_traces =
-        router.serve_virtual(&vtasks, ms_to_ticks(horizon_ms), |app| chains[app].clone());
+        router.serve_virtual(&vtasks, ms_to_ticks(horizon_ms), 0, |app| chains[app].clone());
 
     assert_eq!(sim_traces.len(), serve_traces.len());
     let mut total = 0usize;

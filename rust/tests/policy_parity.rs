@@ -116,15 +116,13 @@ fn prop_preemptive_sim_and_serve_drivers_agree() {
         let vtasks: Vec<VirtualTask> = ts
             .tasks
             .iter()
-            .map(|t| VirtualTask {
-                period: ms_to_ticks(t.period),
-                deadline: ms_to_ticks(t.deadline),
-            })
+            .map(|t| VirtualTask::periodic(ms_to_ticks(t.period), ms_to_ticks(t.deadline)))
             .collect();
         let serve_trace = serve_virtual_policy(
             &vtasks,
             ms_to_ticks(horizon_ms),
             GpuPolicyKind::PreemptivePriority,
+            cfg.seed,
             |task| wcet_chain_full_width(&ts, gn_total, task),
         );
         if sim_trace != serve_trace {

@@ -42,10 +42,7 @@ fn both_traces(
     let vtasks: Vec<VirtualTask> = ts
         .tasks
         .iter()
-        .map(|t| VirtualTask {
-            period: ms_to_ticks(t.period),
-            deadline: ms_to_ticks(t.deadline),
-        })
+        .map(|t| VirtualTask::periodic(ms_to_ticks(t.period), ms_to_ticks(t.deadline)))
         .collect();
     let serve_trace =
         serve_virtual(&vtasks, ms_to_ticks(horizon_ms), |task| wcet_chain(ts, alloc, task));
