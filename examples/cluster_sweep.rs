@@ -1,10 +1,13 @@
 //! Fleet acceptance-ratio sweep: how many random application sets place
-//! fully onto `G ∈ {1, 2, 4, 8}` devices, per placement policy — the
-//! cluster layer's analogue of the paper's Figs. 8–11 acceptance curves
-//! (DESIGN.md §8), plus a per-device utilization-balance comparison.
+//! fully onto `G ∈ {1, 2, 4, 8}` devices, per placement policy (the two
+//! exhaustive scans plus sampled power-of-two-choices) — the cluster
+//! layer's analogue of the paper's Figs. 8–11 acceptance curves
+//! (DESIGN.md §8, §11), plus a per-device utilization-balance
+//! comparison.  `--parallel T` turns on concurrent candidate admission
+//! (same placements, bit-identical — DESIGN.md §11).
 //!
 //! ```bash
-//! cargo run --release --example cluster_sweep -- --sets 20 --devices 1,2,4,8
+//! cargo run --release --example cluster_sweep -- --sets 20 --devices 1,2,4,8 --parallel 4
 //! ```
 
 use anyhow::Result;
@@ -24,7 +27,17 @@ fn main() -> Result<()> {
     let device_counts = args.list_or("devices", &[1, 2, 4, 8])?;
     let seed = args.u64_or("seed", 42)?;
     let shared = args.flag("shared-cpu");
+    let parallel = args.usize_or("parallel", 1)?;
     args.finish()?;
+
+    // The exhaustive policies plus the sampled one: p2c probes 2 seeded
+    // devices per app, so its curve shows the acceptance cost of O(k)
+    // placement (bounded by tests/placement_parity.rs).
+    let policies = [
+        PlacementPolicy::FirstFitDecreasing,
+        PlacementPolicy::WorstFit,
+        PlacementPolicy::P2C,
+    ];
 
     let cfg = GenConfig::default().with_tasks(tasks);
     let platform = |g: usize| {
@@ -39,7 +52,7 @@ fn main() -> Result<()> {
 
     for &g in &device_counts {
         let mut series = Vec::new();
-        for policy in PlacementPolicy::ALL {
+        for policy in policies {
             let mut ys = Vec::with_capacity(utils.len());
             for &util in &utils {
                 // Same seed per point: every (G, policy) cell sees the
@@ -48,14 +61,14 @@ fn main() -> Result<()> {
                 let accepted = (0..sets)
                     .filter(|_| {
                         let ts = generate_taskset(&mut rng, &cfg, util);
-                        let mut state =
-                            ClusterState::new(platform(g), RtgpuOpts::default());
+                        let mut state = ClusterState::new(platform(g), RtgpuOpts::default())
+                            .with_parallel(parallel);
                         state.place_all(&ts.tasks, policy).all_placed()
                     })
                     .count();
                 ys.push(accepted as f64 / sets as f64);
             }
-            series.push(Series { name: policy.name().into(), ys });
+            series.push(Series { name: policy.label(), ys });
         }
         let label = format!("cluster_accept_g{g}_gn{gn}");
         println!("--- {label} (acceptance over {sets} sets, {} apps)", tasks);
@@ -63,21 +76,22 @@ fn main() -> Result<()> {
         write_csv(&results_dir().join(format!("{label}.csv")), "util", &utils, &series)?;
     }
 
-    // Balance snapshot: at a mid utilization, how evenly do the two
+    // Balance snapshot: at a mid utilization, how evenly do the
     // policies spread GPU load across the largest fleet?
     if let Some(&g) = device_counts.iter().max() {
         if g > 1 {
             let ts = generate_taskset(&mut Pcg::new(seed), &cfg, 1.5);
             println!("--- balance at util 1.5 on {g} devices");
-            for policy in PlacementPolicy::ALL {
-                let mut state = ClusterState::new(platform(g), RtgpuOpts::default());
+            for policy in policies {
+                let mut state = ClusterState::new(platform(g), RtgpuOpts::default())
+                    .with_parallel(parallel);
                 let report = state.place_all(&ts.tasks, policy);
                 let utils = state.gpu_utils();
                 let spread = utils.iter().fold(0.0_f64, |a, &b| a.max(b))
                     - utils.iter().fold(f64::INFINITY, |a, &b| a.min(b));
                 println!(
                     "{:<10} placed {}/{}: per-device GPU util {:?}, spread {:.3}",
-                    policy.name(),
+                    policy.label(),
                     report.placed.len(),
                     ts.len(),
                     utils.iter().map(|u| (u * 1000.0).round() / 1000.0).collect::<Vec<_>>(),

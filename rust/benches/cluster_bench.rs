@@ -1,15 +1,24 @@
-//! Cluster-layer benchmarks (DESIGN.md §6/§8): placement time per
+//! Cluster-layer benchmarks (DESIGN.md §6/§8/§11): placement time per
 //! policy, warm vs cold re-admission on a device drain (the fleet
-//! recovery path), and per-device GPU-utilization balance — emitted to
+//! recovery path), per-device GPU-utilization balance, and the
+//! fleet-scale placement race (serial-scan reference vs utilization
+//! index vs power-of-two-choices vs parallel probing) — emitted to
 //! `BENCH_cluster.json`.
+//!
+//! `--smoke` shrinks the scaling race to 100 devices × 1k apps for the
+//! CI wall-clock budget; the default full run places 10·G apps on
+//! G ∈ {64, 256, 1024} devices.  `--scan-all` also runs the quadratic
+//! serial-scan reference at G = 1024 (minutes; skipped by default, and
+//! the skip is printed so the JSON is never silently incomplete).
 
 use std::collections::BTreeMap;
 
 use rtgpu::analysis::RtgpuOpts;
 use rtgpu::cluster::{ClusterState, PlacementPolicy};
 use rtgpu::gen::{generate_taskset, GenConfig};
-use rtgpu::model::{ClusterPlatform, RtTask};
-use rtgpu::util::bench::{bench, black_box, header};
+use rtgpu::model::testing::simple_task;
+use rtgpu::model::{Bounds, ClusterPlatform, GpuSegment, KernelClass, RtTask};
+use rtgpu::util::bench::{bench, bench_n, black_box, header};
 use rtgpu::util::json::Json;
 use rtgpu::util::rng::Pcg;
 use rtgpu::util::stats::Summary;
@@ -20,6 +29,24 @@ const APPS: usize = 8;
 
 fn fresh_state(devices: usize) -> ClusterState {
     ClusterState::new(ClusterPlatform::homogeneous(devices, GN), RtgpuOpts::default())
+}
+
+/// A light application for the fleet-scale race: ≈0.035 utilization, one
+/// 1-SM-class kernel, id-dependent GPU weight and deadline so placement
+/// order and device sorts do real comparisons instead of all-ties.
+fn fleet_app(id: usize) -> RtTask {
+    let mut t = simple_task(id);
+    t.cpu = vec![Bounds::new(0.4, 0.5), Bounds::new(0.4, 0.5)];
+    t.mem = vec![Bounds::new(0.2, 0.25), Bounds::new(0.2, 0.25)];
+    let gw = 1.5 + (id % 13) as f64 * 0.04;
+    t.gpu = vec![GpuSegment::new(
+        Bounds::new(gw * 0.8, gw),
+        Bounds::new(0.0, 0.9),
+        KernelClass::Compute,
+    )];
+    t.deadline = 80.0 + (id % 7) as f64;
+    t.period = 100.0;
+    t
 }
 
 fn main() {
@@ -119,7 +146,7 @@ fn main() {
         let mut s = fresh_state(DEVICES);
         s.place_all(&tasks, policy);
         let utils = s.gpu_utils();
-        let sum = Summary::of(&utils).expect("non-empty fleet");
+        let sum = Summary::of(utils).expect("non-empty fleet");
         let spread = sum.max - sum.min;
         println!(
             "balance {}: per-device GPU util {:?} → spread {:.3}, sd {:.3}",
@@ -132,6 +159,97 @@ fn main() {
         obj.insert(format!("balance_{tag}_spread"), Json::Num((spread * 1e6).round() / 1e6));
         obj.insert(format!("balance_{tag}_sd"), Json::Num((sum.sd * 1e6).round() / 1e6));
     }
+
+    // --- fleet-scale placement race (DESIGN.md §11) ---------------------
+    // Synthetic light apps (≈0.035 utilization each, distinct-ish GPU
+    // weights so the sorts do real work), 10 apps per device on 12-SM
+    // devices — enough headroom that admission itself stays cheap and
+    // the race isolates candidate selection: the quadratic serial-scan
+    // reference vs the maintained utilization index vs sampled p2c vs
+    // index + parallel probing (same placements, bit-identical).
+    println!();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scan_all = std::env::args().any(|a| a == "--scan-all");
+    let sizes: &[usize] = if smoke { &[100] } else { &[64, 256, 1024] };
+    obj.insert("scale_mode".into(), Json::Str(if smoke { "smoke" } else { "full" }.into()));
+    let wf = PlacementPolicy::WorstFit;
+    for &g in sizes {
+        let n_apps = 10 * g;
+        let apps: Vec<RtTask> = (0..n_apps).map(fleet_app).collect();
+        let plat = ClusterPlatform::homogeneous(g, 12);
+        let mk = || ClusterState::new(plat, RtgpuOpts::default());
+        let iters = if n_apps >= 10_000 { 1 } else { 2 };
+
+        // The scan reference costs O(G·A²) total — minutes at G = 1024.
+        let run_scan = scan_all || g <= 256;
+        let scan_mean = if run_scan {
+            let r = bench_n(&format!("scale_g{g}_{n_apps}apps_scan_serial"), 0, 1, || {
+                let mut s = mk();
+                black_box(s.place_all_scan(&apps, wf).placed.len());
+            });
+            println!("{}", r.row());
+            obj.insert(format!("scale_g{g}_scan_serial_s"), Json::Num(r.summary.mean));
+            Some(r.summary.mean)
+        } else {
+            println!(
+                "scale_g{g}: serial-scan reference SKIPPED (quadratic; pass --scan-all to run) \
+                 — speedups below use the largest scanned fleet"
+            );
+            None
+        };
+        let indexed = bench_n(&format!("scale_g{g}_{n_apps}apps_indexed"), 0, iters, || {
+            let mut s = mk();
+            black_box(s.place_all(&apps, wf).placed.len());
+        });
+        println!("{}", indexed.row());
+        obj.insert(format!("scale_g{g}_indexed_s"), Json::Num(indexed.summary.mean));
+        let p2c = bench_n(&format!("scale_g{g}_{n_apps}apps_p2c2"), 0, iters, || {
+            let mut s = mk();
+            black_box(s.place_all(&apps, PlacementPolicy::P2C).placed.len());
+        });
+        println!("{}", p2c.row());
+        obj.insert(format!("scale_g{g}_p2c2_s"), Json::Num(p2c.summary.mean));
+        let par = bench_n(&format!("scale_g{g}_{n_apps}apps_indexed_parallel"), 0, iters, || {
+            let mut s = mk().with_parallel(0);
+            black_box(s.place_all(&apps, wf).placed.len());
+        });
+        println!("{}", par.row());
+        obj.insert(format!("scale_g{g}_indexed_parallel_s"), Json::Num(par.summary.mean));
+
+        // Acceptance bookkeeping: how many of the 10·G apps actually
+        // placed (identical across scan/indexed/parallel by parity;
+        // p2c may place fewer — that is its trade).
+        let mut s = mk();
+        let placed = s.place_all(&apps, wf).placed.len();
+        let mut sp = mk();
+        let placed_p2c = sp.place_all(&apps, PlacementPolicy::P2C).placed.len();
+        obj.insert(format!("scale_g{g}_apps"), Json::Num(n_apps as f64));
+        obj.insert(format!("scale_g{g}_placed"), Json::Num(placed as f64));
+        obj.insert(format!("scale_g{g}_p2c2_placed"), Json::Num(placed_p2c as f64));
+        if let Some(scan) = scan_mean {
+            let su_idx = scan / indexed.summary.mean.max(1e-12);
+            let su_par = scan / par.summary.mean.max(1e-12);
+            let su_p2c = scan / p2c.summary.mean.max(1e-12);
+            obj.insert(
+                format!("scale_g{g}_indexed_speedup_vs_scan"),
+                Json::Num((su_idx * 100.0).round() / 100.0),
+            );
+            obj.insert(
+                format!("scale_g{g}_parallel_speedup_vs_scan"),
+                Json::Num((su_par * 100.0).round() / 100.0),
+            );
+            obj.insert(
+                format!("scale_g{g}_p2c2_speedup_vs_scan"),
+                Json::Num((su_p2c * 100.0).round() / 100.0),
+            );
+            println!(
+                "scale_g{g}: indexed {su_idx:.1}×, indexed+parallel {su_par:.1}×, \
+                 p2c:2 {su_p2c:.1}× vs serial scan ({placed}/{n_apps} placed, \
+                 p2c {placed_p2c}/{n_apps})"
+            );
+        }
+    }
+    obj.insert("status".into(), Json::Str("measured".into()));
 
     let json = Json::Obj(obj);
     std::fs::write("BENCH_cluster.json", format!("{json}\n")).expect("write BENCH_cluster.json");

@@ -44,7 +44,7 @@ pub struct TaskBound {
     pub schedulable: bool,
 }
 
-type SharedMap = std::collections::HashMap<(u64, usize, SmModel), std::rc::Rc<CachedTask>>;
+type SharedMap = std::collections::HashMap<(u64, usize, SmModel), std::sync::Arc<CachedTask>>;
 
 /// Cross-evaluation cache of per-`(task key, gn, sm model)` contexts.
 ///
@@ -62,6 +62,12 @@ type SharedMap = std::collections::HashMap<(u64, usize, SmModel), std::rc::Rc<Ca
 /// model** — the cached views embed the task's release jitter), as
 /// `AdmissionState` does with its stable keys; reusing a cache for
 /// unrelated task sets whose ids collide returns stale contexts.
+///
+/// Contexts are held behind `Arc` (not `Rc`): cached entries are
+/// immutable once inserted, and the fleet-placement layer clones whole
+/// admission states onto worker threads to probe candidate devices
+/// concurrently — the clones share the context storage and each carries
+/// its own `RefCell`'d map, so no cross-thread mutation exists.
 #[derive(Default)]
 pub struct SharedCache {
     map: std::cell::RefCell<SharedMap>,
@@ -69,13 +75,26 @@ pub struct SharedCache {
     misses: std::cell::Cell<usize>,
 }
 
+impl Clone for SharedCache {
+    /// Cheap structural clone: the map is copied, the immutable contexts
+    /// are shared (`Arc`).  Hit/miss counters carry over so a cloned
+    /// state's `hit_rate` stays meaningful.
+    fn clone(&self) -> SharedCache {
+        SharedCache {
+            map: std::cell::RefCell::new(self.map.borrow().clone()),
+            hits: self.hits.clone(),
+            misses: self.misses.clone(),
+        }
+    }
+}
+
 impl SharedCache {
     pub fn new() -> SharedCache {
         SharedCache::default()
     }
 
-    fn get(&self, key: u64, gn: usize, model: SmModel) -> Option<std::rc::Rc<CachedTask>> {
-        let hit = self.map.borrow().get(&(key, gn, model)).map(std::rc::Rc::clone);
+    fn get(&self, key: u64, gn: usize, model: SmModel) -> Option<std::sync::Arc<CachedTask>> {
+        let hit = self.map.borrow().get(&(key, gn, model)).map(std::sync::Arc::clone);
         match &hit {
             Some(_) => self.hits.set(self.hits.get() + 1),
             None => self.misses.set(self.misses.get() + 1),
@@ -83,7 +102,7 @@ impl SharedCache {
         hit
     }
 
-    fn insert(&self, key: u64, gn: usize, model: SmModel, entry: std::rc::Rc<CachedTask>) {
+    fn insert(&self, key: u64, gn: usize, model: SmModel, entry: std::sync::Arc<CachedTask>) {
         self.map.borrow_mut().insert((key, gn, model), entry);
     }
 
@@ -133,7 +152,7 @@ impl SharedCache {
     }
 }
 
-type LocalCache = Vec<Vec<Option<std::rc::Rc<CachedTask>>>>;
+type LocalCache = Vec<Vec<Option<std::sync::Arc<CachedTask>>>>;
 
 /// Reusable evaluation context for one task set: caches the per-`(task,
 /// gn)` Lemma 5.1 bounds and Lemma 5.2/5.4 views, which depend only on a
@@ -176,16 +195,16 @@ impl<'a> Evaluator<'a> {
         Evaluator { shared: Some(shared), ..Evaluator::new(ts, gn_max, opts) }
     }
 
-    fn cached(&self, k: usize, gn: usize) -> std::rc::Rc<CachedTask> {
+    fn cached(&self, k: usize, gn: usize) -> std::sync::Arc<CachedTask> {
         let mut cache = self.cache.borrow_mut();
         let slot = &mut cache[k][gn];
         if let Some(c) = slot {
-            return std::rc::Rc::clone(c);
+            return std::sync::Arc::clone(c);
         }
         let task = &self.ts.tasks[k];
         if let Some(shared) = self.shared {
             if let Some(entry) = shared.get(task.id as u64, gn, self.opts.sm_model) {
-                *slot = Some(std::rc::Rc::clone(&entry));
+                *slot = Some(std::sync::Arc::clone(&entry));
                 return entry;
             }
         }
@@ -194,15 +213,15 @@ impl<'a> Evaluator<'a> {
         } else {
             task_gpu_responses(task, gn.max(1), self.opts.sm_model)
         };
-        let entry = std::rc::Rc::new(CachedTask {
+        let entry = std::sync::Arc::new(CachedTask {
             gr_hi,
             mem_view: mem_view(task, &gr_lo),
             cpu_view: cpu_view(task, &gr_lo),
         });
         if let Some(shared) = self.shared {
-            shared.insert(task.id as u64, gn, self.opts.sm_model, std::rc::Rc::clone(&entry));
+            shared.insert(task.id as u64, gn, self.opts.sm_model, std::sync::Arc::clone(&entry));
         }
-        *slot = Some(std::rc::Rc::clone(&entry));
+        *slot = Some(std::sync::Arc::clone(&entry));
         entry
     }
 
@@ -258,7 +277,7 @@ impl<'a> Evaluator<'a> {
         &self,
         alloc: &Allocation,
     ) -> (Vec<Vec<f64>>, Vec<SuspView>, Vec<SuspView>) {
-        let entries: Vec<std::rc::Rc<CachedTask>> =
+        let entries: Vec<std::sync::Arc<CachedTask>> =
             alloc.iter().enumerate().map(|(k, &gn)| self.cached(k, gn)).collect();
         (
             entries.iter().map(|c| c.gr_hi.clone()).collect(),

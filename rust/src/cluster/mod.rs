@@ -9,9 +9,13 @@
 //! under one virtual clock.
 //!
 //! * [`placement`] — [`ClusterState`]: first-fit-decreasing /
-//!   worst-fit placement by GPU utilization, every candidate validated
-//!   by the device's incremental [`crate::coordinator::AdmissionState`]
-//!   (warm analysis caches survive re-placements and drains).
+//!   worst-fit / power-of-two-choices placement by GPU utilization,
+//!   every candidate validated by the device's incremental
+//!   [`crate::coordinator::AdmissionState`] (warm analysis caches
+//!   survive re-placements and drains).  Candidate order comes from an
+//!   incrementally maintained utilization index, and candidates can be
+//!   probed on parallel worker threads with bit-identical results
+//!   (DESIGN.md §11).
 //! * [`sim`] — [`ClusterWorkload`] + [`simulate_cluster`]: one
 //!   [`crate::sched::PlatformCore`] per device under a single virtual
 //!   clock; a one-device cluster replays `sim::engine` trace for trace.

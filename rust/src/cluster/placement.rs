@@ -2,7 +2,7 @@
 //! [`ClusterPlatform`], every candidate validated by the existing
 //! per-device admission control.
 //!
-//! Two policies ship (DESIGN.md §8):
+//! Three policies ship (DESIGN.md §8, §11):
 //!
 //! * **First-fit-decreasing** — apps sorted by decreasing GPU
 //!   utilization, each placed on the first device whose Algorithm-2
@@ -10,6 +10,37 @@
 //! * **Worst-fit** (decreasing) — same order, but devices are tried
 //!   most-headroom-first (lowest current GPU utilization), spreading
 //!   load and CPU/bus interference across the fleet.
+//! * **Power-of-two-choices** ([`PlacementPolicy::PowerOfTwo`]) — probe
+//!   `k` seeded-sampled devices, least-loaded first, instead of
+//!   scanning the fleet: O(k) candidates per placement at any fleet
+//!   size, at the cost of occasionally missing a device that would have
+//!   admitted (`tests/placement_parity.rs` bounds the loss).
+//!
+//! **Fleet-scale candidate selection** (DESIGN.md §11): devices live in
+//! an incrementally maintained utilization index — an ordered set keyed
+//! by the IEEE-754 total order of each device's placed GPU utilization —
+//! so worst-fit takes its candidate order straight from the index
+//! (O(log G) maintenance per membership change) instead of re-sorting
+//! the fleet per placement, and first-fit iterates an ordered online-id
+//! set.  Per-device sums are recomputed from the device's own app list
+//! on every change, in the same accumulation order as a fresh scan, so
+//! the index order is bit-identical to the old sort-every-call path.
+//! That old path survives as [`ClusterState::place_all_scan`] /
+//! [`ClusterState::try_place_scan`] — the reference raced in
+//! `benches/cluster_bench.rs` and pinned in `tests/placement_parity.rs`.
+//!
+//! **Parallel candidate evaluation**: with
+//! [`ClusterState::with_parallel`], independent candidates' admission
+//! checks run concurrently — each probe clones the candidate's
+//! [`AdmissionState`] onto a scoped worker thread (cheap: analysis
+//! contexts are shared `Arc`s) and the reduce commits the **first**
+//! admitting candidate in candidate-index order, so the chosen device
+//! is bit-identical to the serial scan.  Probing is speculative (a
+//! batch may evaluate devices the serial loop would never reach), and
+//! the shared-CPU topology stays serial — its merged evaluation is a
+//! whole-cluster check.  The per-placement RNG of the sampled policy is
+//! forked off [`ClusterState::with_placement_seed`] and never touches
+//! the drivers' chain-oracle streams, so placement stays replayable.
 //!
 //! Soundness composes from the single-device analysis: under
 //! [`CpuTopology::PerDevice`] every resource a task touches (CPU, bus,
@@ -26,12 +57,15 @@
 //! device re-admits its apps onto survivors on the warm paths
 //! (`benches/cluster_bench.rs` measures the gap to a cold rebuild).
 
+use std::collections::BTreeSet;
+
 use crate::analysis::preemptive::schedule_preemptive;
 use crate::analysis::rtgpu::evaluate;
 use crate::analysis::{gpu_utilization, RtgpuOpts};
 use crate::coordinator::{AdmissionState, VirtualTask};
 use crate::model::{ClusterPlatform, CpuTopology, RtTask, TaskSet};
 use crate::sched::{ms_to_ticks, ArrivalSpec, DeviceId, GpuPolicyKind};
+use crate::util::rng::Pcg;
 
 use super::sim::{ClusterWorkload, DeviceWorkload};
 
@@ -43,27 +77,62 @@ pub enum PlacementPolicy {
     /// Apps in decreasing GPU utilization, devices tried in increasing
     /// current GPU utilization (spread / most headroom first).
     WorstFit,
+    /// Probe `k ≥ 1` distinct seeded-sampled online devices, tried
+    /// least-loaded first (worst-fit restricted to the sample) — the
+    /// power-of-d-choices load balancer.  O(k) candidates per placement
+    /// regardless of fleet size; may reject an app an exhaustive policy
+    /// would have placed when the sample misses every willing device.
+    PowerOfTwo { k: usize },
 }
 
 impl PlacementPolicy {
+    /// The exhaustive (full-scan) policies — what acceptance sweeps and
+    /// the degenerate-input tests iterate.  The sampled policy is
+    /// opt-in: it trades acceptance for O(k) probing.
     pub const ALL: [PlacementPolicy; 2] =
         [PlacementPolicy::FirstFitDecreasing, PlacementPolicy::WorstFit];
+
+    /// Power-of-two-choices with the classical `k = 2`.
+    pub const P2C: PlacementPolicy = PlacementPolicy::PowerOfTwo { k: 2 };
 
     pub fn name(&self) -> &'static str {
         match self {
             PlacementPolicy::FirstFitDecreasing => "ffd",
             PlacementPolicy::WorstFit => "worst-fit",
+            PlacementPolicy::PowerOfTwo { .. } => "p2c",
         }
     }
 
-    /// Parse a CLI spelling.
-    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+    /// Display label carrying the sample width (`p2c:2`); equals
+    /// [`Self::name`] for the exhaustive policies.
+    pub fn label(&self) -> String {
+        match self {
+            PlacementPolicy::PowerOfTwo { k } => format!("p2c:{k}"),
+            other => other.name().to_string(),
+        }
+    }
+
+    /// Parse a CLI spelling.  The error names the accepted forms (the
+    /// `util::cli` convention: bad flags print usage, not a backtrace).
+    pub fn parse(s: &str) -> Result<PlacementPolicy, String> {
+        let bad = || {
+            format!(
+                "unknown placement policy {s:?}; expected ffd, worst-fit or p2c[:K] with K ≥ 1"
+            )
+        };
         match s {
             "ffd" | "first-fit" | "first-fit-decreasing" => {
-                Some(PlacementPolicy::FirstFitDecreasing)
+                Ok(PlacementPolicy::FirstFitDecreasing)
             }
-            "worst" | "worst-fit" | "spread" => Some(PlacementPolicy::WorstFit),
-            _ => None,
+            "worst" | "worst-fit" | "spread" => Ok(PlacementPolicy::WorstFit),
+            "p2c" | "power-of-two" => Ok(PlacementPolicy::P2C),
+            _ => match s.strip_prefix("p2c:").or_else(|| s.strip_prefix("power-of-two:")) {
+                Some(k) => match k.parse::<usize>() {
+                    Ok(k) if k >= 1 => Ok(PlacementPolicy::PowerOfTwo { k }),
+                    _ => Err(bad()),
+                },
+                None => Err(bad()),
+            },
         }
     }
 }
@@ -96,6 +165,31 @@ pub struct DrainOutcome {
     pub rejected: usize,
 }
 
+/// A device's GPU-utilization sum as an ordered integer key: the
+/// IEEE-754 total-order bijection into `u64`, so `UtilKey` compares
+/// exactly like `f64::total_cmp` (NaN-safe, like the scan's sort) and
+/// can key a [`BTreeSet`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct UtilKey(u64);
+
+fn util_key(u: f64) -> UtilKey {
+    let b = u.to_bits();
+    // Negative floats: flip all bits (reverses their order, puts them
+    // below positives).  Non-negative: flip only the sign bit (shifts
+    // them above).  This is the standard total-order key construction.
+    UtilKey(if b >> 63 == 1 { !b } else { b ^ (1 << 63) })
+}
+
+/// Result of one concurrent admission probe: candidate device, its
+/// speculatively advanced state, the newcomer's device-local key, and
+/// whether the device admitted.
+type Probe = (DeviceId, AdmissionState, u64, bool);
+
+/// Fixed default seed for the placement sampler — placement must be
+/// reproducible out of the box, and this stream is independent of every
+/// driver/chain-oracle RNG (those fork off `DriverConfig` seeds).
+const DEFAULT_PLACEMENT_SEED: u64 = 0x9e2c_51ab_7a2c_5eed;
+
 /// Long-lived fleet scheduling state: one [`AdmissionState`] per device
 /// (its analysis cache stays warm across membership changes) plus the
 /// app → device routing table the serving layer consumes.
@@ -111,20 +205,51 @@ pub struct ClusterState {
     /// placement order.  The task clone is kept for drains/migrations.
     apps: Vec<(u64, DeviceId, u64, RtTask)>,
     next_key: u64,
+    /// Per-device `(cluster key, gpu_utilization)` in placement order —
+    /// the summands of `util_sum`, kept so a membership change can
+    /// recompute its device's sum in O(apps-on-device).
+    dev_utils: Vec<Vec<(u64, f64)>>,
+    /// Cached per-device GPU-utilization sums (`gpu_utils` is now O(1)
+    /// per device; bit-identical to a fresh scan by construction).
+    util_sum: Vec<f64>,
+    /// Online devices ordered by `(utilization, id)` — worst-fit's
+    /// candidate order, maintained incrementally.
+    util_index: BTreeSet<(UtilKey, DeviceId)>,
+    /// Online device ids in ascending order — first-fit's candidate
+    /// order.
+    online_ids: BTreeSet<DeviceId>,
+    /// Per-device merged-evaluation contributions (the device snapshot
+    /// as `(task, alloc)` entries), invalidated only when that device's
+    /// membership changes — the shared-CPU `merged_ok` no longer
+    /// re-snapshots untouched devices.
+    merged_cache: Vec<Option<Vec<(RtTask, usize)>>>,
+    /// Reused candidate buffer (placement hot path allocates nothing).
+    cand_buf: Vec<DeviceId>,
+    /// Concurrent admission probes per batch; 1 = serial.
+    parallel: usize,
+    /// Base stream for the sampled policy; forked per placement.
+    place_rng: Pcg,
 }
 
 impl ClusterState {
     pub fn new(platform: ClusterPlatform, opts: RtgpuOpts) -> ClusterState {
+        let g = platform.devices;
         ClusterState {
             platform,
             opts,
-            devices: (0..platform.devices)
-                .map(|_| AdmissionState::new(platform.device, opts))
-                .collect(),
-            gpu_policy: vec![GpuPolicyKind::Federated; platform.devices],
-            online: vec![true; platform.devices],
+            devices: (0..g).map(|_| AdmissionState::new(platform.device, opts)).collect(),
+            gpu_policy: vec![GpuPolicyKind::Federated; g],
+            online: vec![true; g],
             apps: Vec::new(),
             next_key: 0,
+            dev_utils: vec![Vec::new(); g],
+            util_sum: vec![0.0; g],
+            util_index: (0..g).map(|d| (util_key(0.0), d)).collect(),
+            online_ids: (0..g).collect(),
+            merged_cache: vec![None; g],
+            cand_buf: Vec::new(),
+            parallel: 1,
+            place_rng: Pcg::new(DEFAULT_PLACEMENT_SEED),
         }
     }
 
@@ -144,7 +269,34 @@ impl ClusterState {
         for (state, &p) in self.devices.iter_mut().zip(&policies) {
             *state = AdmissionState::with_gpu_policy(self.platform.device, self.opts, p);
         }
+        for slot in &mut self.merged_cache {
+            *slot = None;
+        }
         self.gpu_policy = policies;
+        self
+    }
+
+    /// Probe up to `threads` candidate devices concurrently per
+    /// placement (scoped worker threads, one admission-state clone
+    /// each); `0` means auto (the machine's available parallelism),
+    /// `1` (the default) keeps the serial loop.  The committed device
+    /// is bit-identical to the serial order in every mode — the reduce
+    /// is candidate-index-ordered (`tests/placement_parity.rs`).
+    pub fn with_parallel(mut self, threads: usize) -> ClusterState {
+        self.parallel = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        self
+    }
+
+    /// Seed the sampled-placement stream ([`PlacementPolicy::PowerOfTwo`]).
+    /// The stream is forked per placement, so equal seeds + equal call
+    /// sequences replay the exact placement; it is independent of every
+    /// driver/chain-oracle RNG.
+    pub fn with_placement_seed(mut self, seed: u64) -> ClusterState {
+        self.place_rng = Pcg::new(seed);
         self
     }
 
@@ -176,9 +328,9 @@ impl ClusterState {
         self.apps.is_empty()
     }
 
-    /// Apps currently placed on `dev`.
+    /// Apps currently placed on `dev` (O(1): maintained per device).
     pub fn device_len(&self, dev: DeviceId) -> usize {
-        self.apps.iter().filter(|a| a.1 == dev).count()
+        self.dev_utils[dev].len()
     }
 
     /// The device owning a placed app (the serving router's lookup).
@@ -187,28 +339,118 @@ impl ClusterState {
     }
 
     /// Summed GPU utilization of the apps placed on `dev` — the
-    /// bin-packing axis.
+    /// bin-packing axis.  O(1): the sum is maintained per membership
+    /// change (recomputed from the device's app list in placement
+    /// order, so it is bit-identical to a fresh scan).
     pub fn device_gpu_util(&self, dev: DeviceId) -> f64 {
-        self.apps.iter().filter(|a| a.1 == dev).map(|a| gpu_utilization(&a.3)).sum()
+        self.util_sum[dev]
     }
 
     /// Per-device GPU utilizations (balance metric for the bench).
-    pub fn gpu_utils(&self) -> Vec<f64> {
-        (0..self.n_devices()).map(|d| self.device_gpu_util(d)).collect()
+    /// Borrows the maintained sums — no allocation on the hot path.
+    pub fn gpu_utils(&self) -> &[f64] {
+        &self.util_sum
     }
 
-    /// Devices to try for a new app, in policy order (offline devices —
-    /// drained / failed — are skipped).
-    fn candidate_devices(&self, policy: PlacementPolicy) -> Vec<DeviceId> {
-        let mut devs: Vec<DeviceId> =
-            (0..self.devices.len()).filter(|&d| self.online[d]).collect();
-        if policy == PlacementPolicy::WorstFit {
-            let utils = self.gpu_utils();
-            // total_cmp: a degenerate app (zero period ⇒ NaN
-            // utilization) must not panic device ordering.
-            devs.sort_by(|&a, &b| utils[a].total_cmp(&utils[b]).then(a.cmp(&b)));
+    /// The old full-scan recomputation of [`Self::gpu_utils`] — kept as
+    /// the O(G·A) reference the scan placement path orders by, and what
+    /// the equivalence tests compare the maintained sums against.
+    fn gpu_utils_scan(&self) -> Vec<f64> {
+        (0..self.n_devices())
+            .map(|d| self.apps.iter().filter(|a| a.1 == d).map(|a| gpu_utilization(&a.3)).sum())
+            .collect()
+    }
+
+    /// Recompute one device's utilization sum and refresh its index
+    /// entry.  Deliberately a from-scratch fold over the device's app
+    /// list (placement order), not an incremental add/subtract: float
+    /// rounding would otherwise drift the maintained sum away from a
+    /// fresh scan and fork the worst-fit order from the reference.
+    fn refresh_device_util(&mut self, dev: DeviceId) {
+        let old = util_key(self.util_sum[dev]);
+        let sum: f64 = self.dev_utils[dev].iter().map(|&(_, u)| u).sum();
+        self.util_sum[dev] = sum;
+        if self.online[dev] {
+            self.util_index.remove(&(old, dev));
+            self.util_index.insert((util_key(sum), dev));
         }
-        devs
+    }
+
+    fn set_offline(&mut self, dev: DeviceId) {
+        if self.online[dev] {
+            self.util_index.remove(&(util_key(self.util_sum[dev]), dev));
+            self.online_ids.remove(&dev);
+            self.online[dev] = false;
+        }
+    }
+
+    /// Sample up to `k` distinct online devices into `buf` using a
+    /// stream forked off the placement RNG.  Rejection sampling over
+    /// device ids (duplicates and offline devices are re-drawn) — cheap
+    /// while most of the fleet is online; a mostly-offline fleet tops
+    /// up deterministically from the utilization index.
+    fn sample_p2c(&mut self, k: usize, buf: &mut Vec<DeviceId>) {
+        let mut rng = self.place_rng.fork(self.next_key);
+        if self.online_ids.len() <= k {
+            buf.extend(self.online_ids.iter().copied());
+            return;
+        }
+        let g = self.devices.len() as u64;
+        let mut attempts = 0usize;
+        while buf.len() < k && attempts < 64 * k {
+            attempts += 1;
+            let d = rng.below(g) as usize;
+            if self.online[d] && !buf.contains(&d) {
+                buf.push(d);
+            }
+        }
+        for &(_, d) in &self.util_index {
+            if buf.len() >= k {
+                break;
+            }
+            if !buf.contains(&d) {
+                buf.push(d);
+            }
+        }
+    }
+
+    /// Fill `buf` with the devices to try for a new app, in policy
+    /// order (offline devices — drained / failed — are skipped).
+    /// `scan = false` reads the maintained index; `scan = true` is the
+    /// pre-index reference: enumerate + sort per call.  Both orders are
+    /// bit-identical (`tests/placement_parity.rs`).
+    fn fill_candidates(&mut self, policy: PlacementPolicy, scan: bool, buf: &mut Vec<DeviceId>) {
+        buf.clear();
+        match policy {
+            PlacementPolicy::FirstFitDecreasing => {
+                if scan {
+                    buf.extend((0..self.devices.len()).filter(|&d| self.online[d]));
+                } else {
+                    buf.extend(self.online_ids.iter().copied());
+                }
+            }
+            PlacementPolicy::WorstFit => {
+                if scan {
+                    buf.extend((0..self.devices.len()).filter(|&d| self.online[d]));
+                    let utils = self.gpu_utils_scan();
+                    // total_cmp: a degenerate app (zero period ⇒ NaN
+                    // utilization) must not panic device ordering.
+                    buf.sort_by(|&a, &b| utils[a].total_cmp(&utils[b]).then(a.cmp(&b)));
+                } else {
+                    buf.extend(self.util_index.iter().map(|&(_, d)| d));
+                }
+            }
+            PlacementPolicy::PowerOfTwo { k } => {
+                self.sample_p2c(k.max(1), buf);
+                if scan {
+                    let utils = self.gpu_utils_scan();
+                    buf.sort_by(|&a, &b| utils[a].total_cmp(&utils[b]).then(a.cmp(&b)));
+                } else {
+                    let utils = &self.util_sum;
+                    buf.sort_by(|&a, &b| utils[a].total_cmp(&utils[b]).then(a.cmp(&b)));
+                }
+            }
+        }
     }
 
     /// Merged whole-cluster evaluation for the shared-CPU topology: all
@@ -221,12 +463,19 @@ impl ClusterState {
     /// is the preemptive holistic bound, which additionally over-counts
     /// GPU interference (it pretends one device serves every kernel) —
     /// conservative on every axis, hence still sound.
-    fn merged_ok(&self) -> bool {
-        let mut entries: Vec<(RtTask, usize)> = Vec::new();
-        for state in &self.devices {
-            let (ts, alloc) = state.snapshot();
-            entries.extend(ts.tasks.into_iter().zip(alloc));
+    ///
+    /// Per-device contributions are cached and invalidated only when
+    /// that device's membership changes, so a candidate check
+    /// re-snapshots one device, not the fleet.
+    fn merged_ok(&mut self) -> bool {
+        for (dev, slot) in self.merged_cache.iter_mut().enumerate() {
+            if slot.is_none() {
+                let (ts, alloc) = self.devices[dev].snapshot();
+                *slot = Some(ts.tasks.into_iter().zip(alloc).collect());
+            }
         }
+        let mut entries: Vec<(RtTask, usize)> =
+            self.merged_cache.iter().flatten().flatten().cloned().collect();
         if entries.is_empty() {
             return true;
         }
@@ -238,6 +487,102 @@ impl ClusterState {
                 .schedulable;
         }
         evaluate(&ts, &alloc, &self.opts).iter().all(|b| b.schedulable)
+    }
+
+    /// Record a successful admission on `dev` in the fleet state
+    /// (routing table, utilization sum + index, merged-contribution
+    /// invalidation) and hand out the cluster key.
+    fn commit(&mut self, dev: DeviceId, local_key: u64, task: &RtTask) -> (u64, DeviceId) {
+        let key = self.next_key;
+        self.next_key += 1;
+        self.apps.push((key, dev, local_key, task.clone()));
+        self.dev_utils[dev].push((key, gpu_utilization(task)));
+        self.refresh_device_util(dev);
+        self.merged_cache[dev] = None;
+        (key, dev)
+    }
+
+    /// The serial candidate loop: speculative per-device admission, the
+    /// merged check under a shared CPU, rollback on rejection.
+    fn place_serial(&mut self, task: &RtTask, cands: &[DeviceId]) -> Option<(u64, DeviceId)> {
+        for &dev in cands {
+            let (local_key, decision) = self.devices[dev].add_app(task.clone());
+            if !decision.schedulable {
+                continue; // add_app already rolled itself back
+            }
+            if self.platform.cpu == CpuTopology::Shared {
+                self.merged_cache[dev] = None;
+                if !self.merged_ok() {
+                    self.devices[dev].remove_app(local_key);
+                    self.merged_cache[dev] = None;
+                    continue;
+                }
+            }
+            return Some(self.commit(dev, local_key, task));
+        }
+        None
+    }
+
+    /// Concurrent candidate evaluation (per-device CPU topology only):
+    /// probe a batch of candidates on scoped worker threads — each gets
+    /// a clone of its device's admission state — then commit the first
+    /// admitting candidate in candidate order by installing its clone.
+    /// A rejected serial probe is a byte-exact no-op on its device, so
+    /// skipping the losers' probes entirely leaves the fleet in the
+    /// same state the serial loop produces (modulo cache hit/miss
+    /// counters), and the index-ordered reduce picks the same winner.
+    fn place_parallel(&mut self, task: &RtTask, cands: &[DeviceId]) -> Option<(u64, DeviceId)> {
+        let width = self.parallel;
+        for batch in cands.chunks(width) {
+            let probes: Vec<(DeviceId, AdmissionState)> =
+                batch.iter().map(|&d| (d, self.devices[d].clone())).collect();
+            let results: Vec<Probe> = std::thread::scope(|scope| {
+                let handles: Vec<_> = probes
+                    .into_iter()
+                    .map(|(dev, mut st)| {
+                        scope.spawn(move || {
+                            let (key, decision) = st.add_app(task.clone());
+                            (dev, st, key, decision.schedulable)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("admission probe thread panicked"))
+                    .collect()
+            });
+            for (dev, st, local_key, ok) in results {
+                if ok {
+                    self.devices[dev] = st;
+                    return Some(self.commit(dev, local_key, task));
+                }
+            }
+        }
+        None
+    }
+
+    fn try_place_impl(
+        &mut self,
+        task: &RtTask,
+        policy: PlacementPolicy,
+        scan: bool,
+    ) -> Option<(u64, DeviceId)> {
+        // Take the reusable buffer out of `self` so the candidate slice
+        // and the fleet state borrow independently; put it back (with
+        // its capacity) when done.
+        let mut cands = std::mem::take(&mut self.cand_buf);
+        self.fill_candidates(policy, scan, &mut cands);
+        let parallel = !scan
+            && self.parallel > 1
+            && cands.len() > 1
+            && self.platform.cpu == CpuTopology::PerDevice;
+        let result = if parallel {
+            self.place_parallel(task, &cands)
+        } else {
+            self.place_serial(task, &cands)
+        };
+        self.cand_buf = cands;
+        result
     }
 
     /// Place one app: try candidate devices in policy order, each
@@ -253,27 +598,29 @@ impl ClusterState {
         task: &RtTask,
         policy: PlacementPolicy,
     ) -> Option<(u64, DeviceId)> {
-        for dev in self.candidate_devices(policy) {
-            let (local_key, decision) = self.devices[dev].add_app(task.clone());
-            if !decision.schedulable {
-                continue; // add_app already rolled itself back
-            }
-            if self.platform.cpu == CpuTopology::Shared && !self.merged_ok() {
-                self.devices[dev].remove_app(local_key);
-                continue;
-            }
-            let key = self.next_key;
-            self.next_key += 1;
-            self.apps.push((key, dev, local_key, task.clone()));
-            return Some((key, dev));
-        }
-        None
+        self.try_place_impl(task, policy, false)
     }
 
-    /// Place a batch, largest GPU utilization first (the "decreasing" in
-    /// both policies).  Apps no device admits are reported, not placed —
-    /// the rest of the batch still serves.
-    pub fn place_all(&mut self, tasks: &[RtTask], policy: PlacementPolicy) -> PlacementReport {
+    /// The pre-index reference: identical semantics to
+    /// [`Self::try_place`], but candidate order is recomputed by a full
+    /// scan + sort per call and evaluation is serial.  Raced against the
+    /// indexed path in `benches/cluster_bench.rs` and pinned equal in
+    /// `tests/placement_parity.rs`.
+    #[doc(hidden)]
+    pub fn try_place_scan(
+        &mut self,
+        task: &RtTask,
+        policy: PlacementPolicy,
+    ) -> Option<(u64, DeviceId)> {
+        self.try_place_impl(task, policy, true)
+    }
+
+    fn place_all_impl(
+        &mut self,
+        tasks: &[RtTask],
+        policy: PlacementPolicy,
+        scan: bool,
+    ) -> PlacementReport {
         let mut order: Vec<usize> = (0..tasks.len()).collect();
         // total_cmp (NaN-safe): a degenerate candidate sorts
         // deterministically and is then rejected by admission with a
@@ -284,7 +631,7 @@ impl ClusterState {
         let mut placed = Vec::new();
         let mut rejected = Vec::new();
         for idx in order {
-            match self.try_place(&tasks[idx], policy) {
+            match self.try_place_impl(&tasks[idx], policy, scan) {
                 Some((key, dev)) => placed.push((idx, key, dev)),
                 None => rejected.push(idx),
             }
@@ -293,34 +640,55 @@ impl ClusterState {
         PlacementReport { policy, placed, rejected }
     }
 
+    /// Place a batch, largest GPU utilization first (the "decreasing" in
+    /// all policies).  Apps no device admits are reported, not placed —
+    /// the rest of the batch still serves.
+    pub fn place_all(&mut self, tasks: &[RtTask], policy: PlacementPolicy) -> PlacementReport {
+        self.place_all_impl(tasks, policy, false)
+    }
+
+    /// Batch variant of [`Self::try_place_scan`] (the reference path).
+    #[doc(hidden)]
+    pub fn place_all_scan(
+        &mut self,
+        tasks: &[RtTask],
+        policy: PlacementPolicy,
+    ) -> PlacementReport {
+        self.place_all_impl(tasks, policy, true)
+    }
+
     /// Deregister a placed app (its device re-decides for the rest).
     pub fn remove(&mut self, key: u64) -> bool {
         match self.apps.iter().position(|a| a.0 == key) {
             Some(pos) => {
                 let (_, dev, local_key, _) = self.apps.remove(pos);
                 self.devices[dev].remove_app(local_key);
+                if let Some(i) = self.dev_utils[dev].iter().position(|&(k, _)| k == key) {
+                    self.dev_utils[dev].remove(i);
+                }
+                self.refresh_device_util(dev);
+                self.merged_cache[dev] = None;
                 true
             }
             None => false,
         }
     }
 
-    /// Device failure / maintenance drain: the device's admission state
-    /// is lost wholesale, the device goes offline, and its apps are
-    /// re-placed onto the surviving (warm) devices.  Re-admit warmth is
-    /// what `BENCH_cluster.json` measures against a cold rebuild.
-    pub fn drain_device(&mut self, dev: DeviceId, policy: PlacementPolicy) -> DrainOutcome {
+    fn drain_impl(&mut self, dev: DeviceId, policy: PlacementPolicy, scan: bool) -> DrainOutcome {
         assert!(dev < self.devices.len());
         self.devices[dev] =
             AdmissionState::with_gpu_policy(self.platform.device, self.opts, self.gpu_policy[dev]);
-        self.online[dev] = false;
+        self.set_offline(dev);
+        self.dev_utils[dev].clear();
+        self.util_sum[dev] = 0.0;
+        self.merged_cache[dev] = None;
         let (gone, keep): (Vec<_>, Vec<_>) =
             std::mem::take(&mut self.apps).into_iter().partition(|a| a.1 == dev);
         self.apps = keep;
         let mut replaced = Vec::new();
         let mut rejected = 0usize;
         for (_, _, _, task) in &gone {
-            match self.try_place(task, policy) {
+            match self.try_place_impl(task, policy, scan) {
                 Some(pair) => replaced.push(pair),
                 None => rejected += 1,
             }
@@ -328,10 +696,32 @@ impl ClusterState {
         DrainOutcome { displaced: gone.len(), replaced, rejected }
     }
 
+    /// Device failure / maintenance drain: the device's admission state
+    /// is lost wholesale, the device goes offline, and its apps are
+    /// re-placed onto the surviving (warm) devices.  Re-admit warmth is
+    /// what `BENCH_cluster.json` measures against a cold rebuild.
+    pub fn drain_device(&mut self, dev: DeviceId, policy: PlacementPolicy) -> DrainOutcome {
+        self.drain_impl(dev, policy, false)
+    }
+
+    /// Reference-path drain (see [`Self::try_place_scan`]).
+    #[doc(hidden)]
+    pub fn drain_device_scan(
+        &mut self,
+        dev: DeviceId,
+        policy: PlacementPolicy,
+    ) -> DrainOutcome {
+        self.drain_impl(dev, policy, true)
+    }
+
     /// Bring a drained device back online (empty; apps placed later may
-    /// land on it again).
+    /// land on it again).  Idempotent.
     pub fn restore_device(&mut self, dev: DeviceId) {
-        self.online[dev] = true;
+        if !self.online[dev] {
+            self.online[dev] = true;
+            self.online_ids.insert(dev);
+            self.util_index.insert((util_key(self.util_sum[dev]), dev));
+        }
     }
 
     /// The fully configured serving router for this placement: the
@@ -618,5 +1008,141 @@ mod tests {
         assert!(state.remove(key));
         assert_eq!(state.device_of(key), None);
         assert!(!state.remove(key));
+    }
+
+    #[test]
+    fn util_key_orders_exactly_like_total_cmp() {
+        let samples = [
+            f64::NEG_INFINITY,
+            -1.5,
+            -0.0,
+            0.0,
+            1e-308,
+            0.3,
+            0.300_000_000_000_000_04,
+            1.0,
+            1e9,
+            f64::INFINITY,
+            f64::NAN,
+            -f64::NAN,
+        ];
+        for &a in &samples {
+            for &b in &samples {
+                assert_eq!(util_key(a).cmp(&util_key(b)), a.total_cmp(&b), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_accepts_spellings_and_reports_valid_set() {
+        assert_eq!(PlacementPolicy::parse("ffd"), Ok(PlacementPolicy::FirstFitDecreasing));
+        assert_eq!(
+            PlacementPolicy::parse("first-fit-decreasing"),
+            Ok(PlacementPolicy::FirstFitDecreasing)
+        );
+        assert_eq!(PlacementPolicy::parse("spread"), Ok(PlacementPolicy::WorstFit));
+        assert_eq!(PlacementPolicy::parse("p2c"), Ok(PlacementPolicy::P2C));
+        assert_eq!(PlacementPolicy::parse("p2c:5"), Ok(PlacementPolicy::PowerOfTwo { k: 5 }));
+        assert_eq!(
+            PlacementPolicy::parse("power-of-two:3"),
+            Ok(PlacementPolicy::PowerOfTwo { k: 3 })
+        );
+        for bad in ["bogus", "p2c:0", "p2c:x", ""] {
+            let err = PlacementPolicy::parse(bad).unwrap_err();
+            for expected in ["ffd", "worst-fit", "p2c[:K]"] {
+                assert!(err.contains(expected), "error must list the valid set: {err}");
+            }
+        }
+        assert_eq!(PlacementPolicy::PowerOfTwo { k: 5 }.label(), "p2c:5");
+        assert_eq!(PlacementPolicy::WorstFit.label(), "worst-fit");
+        assert_eq!(PlacementPolicy::P2C.name(), "p2c");
+    }
+
+    /// The maintained index must agree with the full-scan reference —
+    /// candidate order per policy and per-device sums bit-for-bit.
+    fn assert_index_matches_scan(state: &mut ClusterState) {
+        let (mut indexed, mut scanned) = (Vec::new(), Vec::new());
+        for policy in PlacementPolicy::ALL {
+            state.fill_candidates(policy, false, &mut indexed);
+            state.fill_candidates(policy, true, &mut scanned);
+            assert_eq!(indexed, scanned, "{} candidate order diverged", policy.name());
+        }
+        let scan = state.gpu_utils_scan();
+        for (d, (m, s)) in state.gpu_utils().iter().zip(&scan).enumerate() {
+            assert_eq!(m.to_bits(), s.to_bits(), "device {d} sum drifted from scan");
+        }
+    }
+
+    #[test]
+    fn indexed_candidates_match_scan_order_through_churn() {
+        let mut state = ClusterState::new(small_platform(4), RtgpuOpts::default());
+        let mut keys = Vec::new();
+        for i in 0..6 {
+            if let Some((key, _)) = state.try_place(&simple_task(i), PlacementPolicy::WorstFit) {
+                keys.push(key);
+            }
+            assert_index_matches_scan(&mut state);
+        }
+        assert!(state.remove(keys[0]));
+        assert_index_matches_scan(&mut state);
+        state.drain_device(1, PlacementPolicy::WorstFit);
+        assert_index_matches_scan(&mut state);
+        state.restore_device(1);
+        state.restore_device(1); // idempotent: no duplicate index entry
+        assert_index_matches_scan(&mut state);
+    }
+
+    #[test]
+    fn p2c_fixed_seed_replays_and_places_on_open_fleet() {
+        let tasks: Vec<_> = (0..4).map(simple_task).collect();
+        let run = |seed| {
+            let mut s = ClusterState::new(small_platform(4), RtgpuOpts::default())
+                .with_placement_seed(seed);
+            let r = s.place_all(&tasks, PlacementPolicy::P2C);
+            (r.placed.iter().map(|&(i, _, d)| (i, d)).collect::<Vec<_>>(), r.rejected.len())
+        };
+        let (a, rejected) = run(7);
+        let (b, _) = run(7);
+        assert_eq!(a, b, "same seed must replay the same placement");
+        assert_eq!(rejected, 0, "every device has headroom — any probed sample admits");
+        let _ = run(8); // a different stream must also complete cleanly
+    }
+
+    #[test]
+    fn p2c_covers_whole_fleet_when_k_exceeds_devices() {
+        let tasks: Vec<_> = (0..3).map(simple_task).collect();
+        let devs = |r: &PlacementReport| {
+            r.placed.iter().map(|&(i, _, d)| (i, d)).collect::<Vec<_>>()
+        };
+        let mut wf = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        let mut p2c = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        let rw = wf.place_all(&tasks, PlacementPolicy::WorstFit);
+        let rp = p2c.place_all(&tasks, PlacementPolicy::PowerOfTwo { k: 4 });
+        assert_eq!(devs(&rw), devs(&rp), "k ≥ G degenerates to worst-fit");
+    }
+
+    #[test]
+    fn parallel_probing_matches_serial_device_choice() {
+        let tasks: Vec<_> = (0..6).map(simple_task).collect();
+        let devs = |r: &PlacementReport| {
+            r.placed.iter().map(|&(i, _, d)| (i, d)).collect::<Vec<_>>()
+        };
+        for policy in PlacementPolicy::ALL {
+            let mut serial = ClusterState::new(small_platform(4), RtgpuOpts::default());
+            let mut par =
+                ClusterState::new(small_platform(4), RtgpuOpts::default()).with_parallel(4);
+            let rs = serial.place_all(&tasks, policy);
+            let rp = par.place_all(&tasks, policy);
+            assert_eq!(devs(&rs), devs(&rp), "{} devices diverged", policy.name());
+            assert_eq!(rs.rejected, rp.rejected, "{}", policy.name());
+            for d in 0..4 {
+                assert_eq!(
+                    serial.device_gpu_util(d).to_bits(),
+                    par.device_gpu_util(d).to_bits(),
+                    "{} device {d} utilization diverged",
+                    policy.name()
+                );
+            }
+        }
     }
 }

@@ -223,6 +223,13 @@ pub struct AdmissionDecision {
 /// tries to extend the currently accepted allocation (keep → greedy →
 /// floored grid) before falling back to a full rerun.  A rejected
 /// `add_app` rolls back: the previously admitted set keeps running.
+///
+/// `Clone` is cheap-ish (the analysis contexts are shared `Arc`s; only
+/// the bookkeeping maps are copied) and the clone is independent: the
+/// cluster placement layer clones per-device states onto worker threads
+/// to probe candidate devices concurrently, then installs the winning
+/// clone (see `cluster::placement`).
+#[derive(Clone)]
 pub struct AdmissionState {
     platform: Platform,
     opts: RtgpuOpts,

@@ -37,9 +37,10 @@ const USAGE: &str = "usage: rtgpu <serve|admit|cluster|sweep|validate|throughput
              [--arrival periodic|sporadic[:FRAC]|task]\n\
              [--seed S]                                    analyze a random set\n\
   cluster    [--devices G] [--sms GN] [--util U] [--tasks N]\n\
-             [--subtasks M] [--policy ffd|worst-fit]\n\
+             [--subtasks M] [--placement ffd|worst-fit|p2c[:K]]\n\
              [--gpu-policy federated|preemptive]\n\
              [--arrival periodic|sporadic[:FRAC]|task]\n\
+             [--parallel T] [--place-seed S]\n\
              [--shared-cpu] [--seed S]                     place + run a fleet\n\
   sweep      [--figure 8|9|10|11] [--sets K] [--seed S]    acceptance curves\n\
   validate   [--model wcet|avg] [--sets K] [--seed S]\n\
@@ -165,8 +166,17 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let cfg = GenConfig::default()
         .with_tasks(args.usize_or("tasks", 8)?)
         .with_subtasks(args.usize_or("subtasks", 5)?);
-    let policy = PlacementPolicy::parse(args.str_or("policy", "worst-fit"))
-        .ok_or_else(|| CliError("--policy expects ffd or worst-fit".into()))?;
+    // `--placement` is the documented spelling; `--policy` stays as the
+    // pre-p2c alias.  The parse error itself names the valid set.
+    let placement_arg =
+        args.get("placement").or_else(|| args.get("policy")).unwrap_or("worst-fit").to_string();
+    let policy = PlacementPolicy::parse(&placement_arg)
+        .map_err(|e| CliError(format!("--placement: {e}")))?;
+    let parallel = args.usize_or("parallel", 1)?;
+    let place_seed = match args.get("place-seed") {
+        None => None,
+        Some(_) => Some(args.u64_or("place-seed", 0)?),
+    };
     let gpu_policy = GpuPolicyKind::parse(args.str_or("gpu-policy", "federated"))
         .ok_or_else(|| CliError("--gpu-policy expects federated or preemptive".into()))?;
     let arrival = ArrivalOverride::parse(args.str_or("arrival", "task"))
@@ -194,20 +204,24 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     );
 
     let mut state = ClusterState::new(platform, RtgpuOpts::default())
-        .with_gpu_policies(vec![gpu_policy; devices]);
+        .with_gpu_policies(vec![gpu_policy; devices])
+        .with_parallel(parallel);
+    if let Some(seed) = place_seed {
+        state = state.with_placement_seed(seed);
+    }
     let report = state.place_all(&ts.tasks, policy);
     print!("{}", state.table());
     if !report.all_placed() {
         println!(
             "placement ({}) rejected {} of {} apps: {:?}",
-            policy.name(),
+            policy.label(),
             report.rejected.len(),
             ts.len(),
             report.rejected
         );
         anyhow::bail!("fleet admission rejected the application set");
     }
-    println!("placement ({}) admitted all {} apps", policy.name(), ts.len());
+    println!("placement ({}) admitted all {} apps", policy.label(), ts.len());
 
     let sim = simulate_cluster(&state.workload(), &SimConfig::acceptance(seed));
     println!(

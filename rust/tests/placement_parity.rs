@@ -1,0 +1,146 @@
+//! Fleet-scale placement parity (DESIGN.md §11): the utilization index
+//! and parallel candidate evaluation are pure accelerations — on random
+//! fleets they must pick the *same device sequence* as the old serial
+//! full scan, bit for bit; seeded power-of-two-choices must replay
+//! exactly and, on fleets with headroom, must not give up more than
+//! about half of the full scan's acceptances.
+
+use rtgpu::analysis::RtgpuOpts;
+use rtgpu::cluster::{ClusterState, PlacementPolicy, PlacementReport};
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::model::{ClusterPlatform, RtTask};
+use rtgpu::util::prop;
+use rtgpu::util::rng::Pcg;
+
+fn state(g: usize, gn: usize) -> ClusterState {
+    ClusterState::new(ClusterPlatform::homogeneous(g, gn), RtgpuOpts::default())
+}
+
+/// `(input index, device)` choices — the placement decision sequence.
+fn choices(r: &PlacementReport) -> Vec<(usize, usize)> {
+    r.placed.iter().map(|&(i, _, d)| (i, d)).collect()
+}
+
+fn assert_same_fleet(a: &ClusterState, b: &ClusterState, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: app count diverged");
+    for d in 0..a.n_devices() {
+        assert_eq!(a.device_len(d), b.device_len(d), "{what}: device {d} population");
+        assert_eq!(
+            a.device_gpu_util(d).to_bits(),
+            b.device_gpu_util(d).to_bits(),
+            "{what}: device {d} utilization bits"
+        );
+    }
+}
+
+/// Indexed serial, indexed parallel, and the old full-scan reference
+/// must make identical decisions on random fleets — placements,
+/// rejections, and the exact per-device utilization bits.
+#[test]
+fn indexed_and_parallel_match_serial_scan_on_random_fleets() {
+    for &g in &[1usize, 4, 16] {
+        prop::check(&format!("placement_parity_g{g}"), 0xC10C + g as u64, 8, |tg| {
+            let n_tasks = tg.int(1, 2 * g + 4);
+            let util = tg.float(0.3, 0.8) * g as f64;
+            let seed = tg.rng.next_u64();
+            let cfg = GenConfig::default().with_tasks(n_tasks);
+            let tasks = generate_taskset(&mut Pcg::new(seed), &cfg, util).tasks;
+            for policy in PlacementPolicy::ALL {
+                let mut scan = state(g, 10);
+                let mut indexed = state(g, 10);
+                let mut parallel = state(g, 10).with_parallel(4);
+                let r_scan = scan.place_all_scan(&tasks, policy);
+                let r_idx = indexed.place_all(&tasks, policy);
+                let r_par = parallel.place_all(&tasks, policy);
+                if choices(&r_scan) != choices(&r_idx) || r_scan.rejected != r_idx.rejected {
+                    return Err(format!(
+                        "indexed diverged from scan ({}, seed {seed}): {:?} vs {:?}",
+                        policy.name(),
+                        choices(&r_idx),
+                        choices(&r_scan)
+                    ));
+                }
+                if choices(&r_scan) != choices(&r_par) || r_scan.rejected != r_par.rejected {
+                    return Err(format!(
+                        "parallel diverged from scan ({}, seed {seed}): {:?} vs {:?}",
+                        policy.name(),
+                        choices(&r_par),
+                        choices(&r_scan)
+                    ));
+                }
+                assert_same_fleet(&scan, &indexed, policy.name());
+                assert_same_fleet(&scan, &parallel, policy.name());
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Parity must survive churn: a drain mid-stream re-places the same
+/// displaced apps onto the same survivors on both paths.
+#[test]
+fn drain_parity_indexed_vs_scan() {
+    let cfg = GenConfig::default().with_tasks(8);
+    for seed in [11u64, 23, 47] {
+        let tasks = generate_taskset(&mut Pcg::new(seed), &cfg, 2.0).tasks;
+        let policy = PlacementPolicy::WorstFit;
+        let mut a = state(4, 10);
+        let mut b = state(4, 10).with_parallel(4);
+        a.place_all_scan(&tasks, policy);
+        b.place_all(&tasks, policy);
+        assert_same_fleet(&a, &b, "pre-drain");
+        let oa = a.drain_device_scan(1, policy);
+        let ob = b.drain_device(1, policy);
+        assert_eq!(oa.displaced, ob.displaced, "seed {seed}");
+        assert_eq!(oa.rejected, ob.rejected, "seed {seed}");
+        let devs = |o: &rtgpu::cluster::DrainOutcome| {
+            o.replaced.iter().map(|&(_, d)| d).collect::<Vec<_>>()
+        };
+        assert_eq!(devs(&oa), devs(&ob), "seed {seed}: drain re-placement diverged");
+        assert_same_fleet(&a, &b, "post-drain");
+        a.restore_device(1);
+        b.restore_device(1);
+        let extra = generate_taskset(&mut Pcg::new(seed + 1), &cfg, 0.5).tasks;
+        let ra = a.place_all_scan(&extra, policy);
+        let rb = b.place_all(&extra, policy);
+        assert_eq!(choices(&ra), choices(&rb), "seed {seed}: post-restore placement diverged");
+    }
+}
+
+/// A light app for the p2c acceptance bound: low utilization, one small
+/// kernel — any device with a free SM admits it, so a balanced fleet
+/// has headroom everywhere and the sample rarely misses.
+fn light_app(id: usize) -> RtTask {
+    let mut t = rtgpu::model::testing::simple_task(id);
+    t.cpu = vec![rtgpu::model::Bounds::new(0.4, 0.5), rtgpu::model::Bounds::new(0.4, 0.5)];
+    t.mem = vec![rtgpu::model::Bounds::new(0.2, 0.25), rtgpu::model::Bounds::new(0.2, 0.25)];
+    t.deadline = 80.0 + (id % 7) as f64;
+    t.period = 100.0;
+    t
+}
+
+/// Seeded p2c replays exactly, and on balanced fleets its acceptance
+/// stays within a factor of ~2 of the exhaustive scan (the classical
+/// power-of-d-choices guarantee, checked in aggregate over seeds).
+#[test]
+fn p2c_is_deterministic_and_keeps_half_the_scan_acceptance() {
+    let mut p2c_total = 0usize;
+    let mut scan_total = 0usize;
+    for seed in 0u64..6 {
+        let tasks: Vec<RtTask> = (0..24).map(|i| light_app(i + seed as usize)).collect();
+        let run_p2c = || {
+            let mut s = state(8, 10).with_placement_seed(seed);
+            choices(&s.place_all(&tasks, PlacementPolicy::P2C))
+        };
+        let (a, b) = (run_p2c(), run_p2c());
+        assert_eq!(a, b, "seed {seed}: p2c must replay bit-for-bit");
+        p2c_total += a.len();
+        let mut s = state(8, 10);
+        scan_total += s.place_all_scan(&tasks, PlacementPolicy::WorstFit).placed.len();
+    }
+    assert!(scan_total > 0, "scan placed nothing — fixture drifted");
+    assert!(
+        2 * p2c_total >= scan_total,
+        "p2c placed {p2c_total} vs scan {scan_total}: sampled acceptance collapsed"
+    );
+}
