@@ -86,6 +86,38 @@ fn main() {
         obj.insert(format!("{name}_events_per_s"), Json::Num(evps.round()));
     }
 
+    // --- telemetry overhead: no-op sink vs recording sink ---------------
+    // Same workload, same seed; the only delta is the sink threading
+    // through the driver (DESIGN.md §12).  Reported, not asserted.
+    {
+        use rtgpu::sim::simulate_telemetry;
+        use rtgpu::telemetry::Recorder;
+        let cfg = mk(ExecModel::Bell, None);
+        let mut events = 0usize;
+        let noop = bench_n("sim_bell_noop_sink_20periods", 2, 20, || {
+            let out = simulate(&ts, &alloc, &cfg);
+            events = out.events_processed;
+            black_box(out.total_misses);
+        });
+        let recording = bench_n("sim_bell_recording_sink_20periods", 2, 20, || {
+            let mut rec = Recorder::new();
+            let out = simulate_telemetry(&ts, &alloc, &cfg, &mut rec);
+            black_box(out.total_misses + rec.total_completed() as usize);
+        });
+        let noop_evps = events as f64 / noop.summary.mean;
+        let rec_evps = events as f64 / recording.summary.mean;
+        println!("{}  [{:.2} Mev/s]", noop.row(), noop_evps / 1e6);
+        println!("{}  [{:.2} Mev/s]", recording.row(), rec_evps / 1e6);
+        let overhead = recording.summary.mean / noop.summary.mean - 1.0;
+        println!("telemetry recording overhead: {:+.1} % per event", overhead * 100.0);
+        obj.insert("telemetry_noop_events_per_s".into(), Json::Num(noop_evps.round()));
+        obj.insert("telemetry_recording_events_per_s".into(), Json::Num(rec_evps.round()));
+        obj.insert(
+            "telemetry_recording_overhead_ratio".into(),
+            Json::Num(((1.0 + overhead) * 1000.0).round() / 1000.0),
+        );
+    }
+
     // --- driver event queue: heap baseline vs indexed two-level ---------
     // Identical synthetic schedules (same seed, same successor pattern);
     // the checksum pins the pop sequences to each other before timing.

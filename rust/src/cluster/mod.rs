@@ -36,5 +36,6 @@ pub mod sim;
 
 pub use placement::{ClusterState, DrainOutcome, PlacementPolicy, PlacementReport};
 pub use sim::{
-    simulate_cluster, simulate_cluster_traced, ClusterSimResult, ClusterWorkload, DeviceWorkload,
+    simulate_cluster, simulate_cluster_telemetry, simulate_cluster_traced, ClusterSimResult,
+    ClusterWorkload, DeviceWorkload,
 };

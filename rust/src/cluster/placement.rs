@@ -704,6 +704,34 @@ impl ClusterState {
         self.drain_impl(dev, policy, false)
     }
 
+    /// Measurement-driven drain (DESIGN.md §12): `pressure(dev)` is an
+    /// observed per-device degradation metric — typically
+    /// [`crate::telemetry::Recorder::device_miss_rate`] or a drift-event
+    /// count — and every online device at or above `threshold` is
+    /// drained, its apps re-placed onto the healthy survivors.  All
+    /// degraded devices go offline *before* the first re-placement, so a
+    /// displaced app never lands on a device about to be drained.
+    /// Devices drain worst-pressure-first (ties by id); returns the
+    /// per-device [`DrainOutcome`]s in drain order.
+    pub fn drain_degraded(
+        &mut self,
+        pressure: impl Fn(DeviceId) -> f64,
+        threshold: f64,
+        policy: PlacementPolicy,
+    ) -> Vec<(DeviceId, DrainOutcome)> {
+        assert!(threshold > 0.0, "a zero threshold would drain the whole (healthy) fleet");
+        let mut degraded: Vec<(f64, DeviceId)> = (0..self.devices.len())
+            .filter(|&d| self.online[d])
+            .map(|d| (pressure(d), d))
+            .filter(|&(p, _)| p >= threshold)
+            .collect();
+        degraded.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        for &(_, dev) in &degraded {
+            self.set_offline(dev);
+        }
+        degraded.into_iter().map(|(_, dev)| (dev, self.drain_device(dev, policy))).collect()
+    }
+
     /// Reference-path drain (see [`Self::try_place_scan`]).
     #[doc(hidden)]
     pub fn drain_device_scan(
@@ -876,6 +904,33 @@ mod tests {
         state.restore_device(0);
         let (_, dev) = state.try_place(&simple_task(8), PlacementPolicy::WorstFit).unwrap();
         assert_eq!(dev, 0, "restored (empty) device has the most headroom");
+    }
+
+    #[test]
+    fn drain_degraded_flees_pressured_devices_only() {
+        let mut state = ClusterState::new(small_platform(2), RtgpuOpts::default());
+        let report = state
+            .place_all(&(0..2).map(simple_task).collect::<Vec<_>>(), PlacementPolicy::WorstFit);
+        assert!(report.all_placed());
+        // No pressure anywhere: nothing drains.
+        assert!(state.drain_degraded(|_| 0.0, 0.25, PlacementPolicy::WorstFit).is_empty());
+        assert_eq!(state.len(), 2);
+        // Device 0 misses a quarter of its deadlines; device 1 is clean.
+        let out = state.drain_degraded(
+            |d| if d == 0 { 0.25 } else { 0.0 },
+            0.25,
+            PlacementPolicy::WorstFit,
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 0);
+        assert_eq!(out[0].1.displaced, 1);
+        assert_eq!(out[0].1.rejected, 0);
+        assert_eq!(out[0].1.replaced[0].1, 1, "the healthy device absorbs the app");
+        assert_eq!(state.device_len(0), 0);
+        assert_eq!(state.device_len(1), 2);
+        // The drained device is offline until explicitly restored.
+        let (_, dev) = state.try_place(&simple_task(9), PlacementPolicy::WorstFit).unwrap();
+        assert_eq!(dev, 1);
     }
 
     #[test]

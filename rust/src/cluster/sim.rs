@@ -23,6 +23,7 @@ use crate::sched::{
 };
 use crate::sim::engine::resolve_horizon_ms;
 use crate::sim::{SimConfig, TaskStats};
+use crate::telemetry::{NoopSink, TelemetrySink};
 use crate::util::rng::Pcg;
 use crate::util::stats::Summary;
 
@@ -102,7 +103,7 @@ impl ClusterSimResult {
 
 /// Simulate the fleet workload under one virtual clock.
 pub fn simulate_cluster(wl: &ClusterWorkload, cfg: &SimConfig) -> ClusterSimResult {
-    simulate_cluster_impl(wl, cfg, false).0
+    simulate_cluster_impl(wl, cfg, false, &mut NoopSink).0
 }
 
 /// Like [`simulate_cluster`], but also returns one platform trace per
@@ -112,13 +113,25 @@ pub fn simulate_cluster_traced(
     wl: &ClusterWorkload,
     cfg: &SimConfig,
 ) -> (ClusterSimResult, Vec<Vec<TraceEntry>>) {
-    simulate_cluster_impl(wl, cfg, true)
+    simulate_cluster_impl(wl, cfg, true, &mut NoopSink)
+}
+
+/// [`simulate_cluster`] reporting phase durations / job latencies per
+/// device through `sink` (device ids are fleet device indices).  The
+/// sink only observes — statistics and traces are unchanged.
+pub fn simulate_cluster_telemetry(
+    wl: &ClusterWorkload,
+    cfg: &SimConfig,
+    sink: &mut dyn TelemetrySink,
+) -> ClusterSimResult {
+    simulate_cluster_impl(wl, cfg, false, sink).0
 }
 
 fn simulate_cluster_impl(
     wl: &ClusterWorkload,
     cfg: &SimConfig,
     trace: bool,
+    sink: &mut dyn TelemetrySink,
 ) -> (ClusterSimResult, Vec<Vec<TraceEntry>>) {
     let n_dev = wl.devices.len();
     assert!(n_dev >= 1, "empty cluster");
@@ -167,15 +180,20 @@ fn simulate_cluster_impl(
         trace,
         arrival_seed: cfg.seed,
     };
-    let out = driver::run(&tasks, &dcfg, |dev, task| {
-        let d = &wl.devices[dev];
-        Chain::from_task(&d.ts.tasks[task], |seg| match seg {
-            Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
-            Segment::Gpu(g) => {
-                ms_to_ticks(cfg.exec.draw_gpu(&mut rng, g, d.alloc[task].max(1), cfg.sm_model))
-            }
-        })
-    });
+    let out = driver::run_with_sink(
+        &tasks,
+        &dcfg,
+        |dev, task| {
+            let d = &wl.devices[dev];
+            Chain::from_task(&d.ts.tasks[task], |seg| match seg {
+                Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
+                Segment::Gpu(g) => {
+                    ms_to_ticks(cfg.exec.draw_gpu(&mut rng, g, d.alloc[task].max(1), cfg.sm_model))
+                }
+            })
+        },
+        sink,
+    );
 
     // Collect per-device statistics; deadline accounting is the
     // driver's, shared with the single-device simulator.

@@ -20,7 +20,7 @@ use crate::analysis::preemptive::schedule_preemptive;
 use crate::analysis::rtgpu::{
     schedule, schedule_with, Evaluator, RtgpuOpts, ScheduleResult, Search, SharedCache,
 };
-use crate::model::{Platform, RtTask, TaskSet};
+use crate::model::{Bounds, Platform, RtTask, TaskSet};
 use crate::runtime::Engine;
 use crate::sched::GpuPolicyKind;
 
@@ -333,6 +333,59 @@ impl AdmissionState {
         (key, decision)
     }
 
+    /// Measurement-driven re-admission (DESIGN.md §12): scale the
+    /// declared worst-case execution times of the named apps by the
+    /// observed drift ratio and re-decide admission for the whole set.
+    ///
+    /// Each `(key, factor)` entry multiplies that app's declared `hi`
+    /// bounds — CPU and memory segments directly, GPU segments via
+    /// `work.hi` and `overhead.hi` (so the modelled segment duration
+    /// scales by exactly `factor` at any allocation).  Unknown keys are
+    /// ignored; `factor` must be positive and finite (a `ratio` from a
+    /// [`crate::telemetry::DriftEvent`] qualifies).  Cached analysis
+    /// contexts for the mutated tasks are stale and purged; survivors
+    /// keep theirs, so the decision runs the warm keep → greedy → grid
+    /// escalation before any full rerun.  Unlike `add_app` there is no
+    /// rollback: the inflated model reflects measurements, so a
+    /// non-schedulable verdict stands (callers shed load or migrate —
+    /// see `cluster::placement`).
+    pub fn reinflate(&mut self, factors: &[(u64, f64)]) -> AdmissionDecision {
+        let mut mutated: Vec<u64> = Vec::new();
+        for &(key, factor) in factors {
+            assert!(
+                factor.is_finite() && factor > 0.0,
+                "drift inflation factor must be positive and finite, got {factor}"
+            );
+            if let Some((_, task)) = self.apps.iter_mut().find(|(k, _)| *k == key) {
+                fn inflate(b: &mut Bounds, factor: f64) {
+                    b.hi *= factor;
+                    b.lo = b.lo.min(b.hi);
+                }
+                for b in &mut task.cpu {
+                    inflate(b, factor);
+                }
+                for b in &mut task.mem {
+                    inflate(b, factor);
+                }
+                for g in &mut task.gpu {
+                    inflate(&mut g.work, factor);
+                    inflate(&mut g.overhead, factor);
+                }
+                mutated.push(key);
+            }
+        }
+        if !mutated.is_empty() {
+            // Per-(task, gn) contexts of the mutated tasks describe the
+            // old model; keep only the survivors' entries warm.
+            let keep: Vec<u64> =
+                self.live_keys().into_iter().filter(|k| !mutated.contains(k)).collect();
+            self.cache.retain_keys(&keep);
+        }
+        let decision = self.decide();
+        self.apply(&decision);
+        decision
+    }
+
     /// Deregister an app and re-decide admission for the remainder.
     pub fn remove_app(&mut self, key: u64) -> AdmissionDecision {
         self.apps.retain(|(k, _)| *k != key);
@@ -561,6 +614,30 @@ mod tests {
         let d = pre.remove_app(keys[0]);
         assert!(d.schedulable);
         assert_eq!(pre.len(), 2);
+    }
+
+    #[test]
+    fn reinflate_escalates_to_a_larger_grant() {
+        let mut state = AdmissionState::new(Platform::new(10), RtgpuOpts::default());
+        let mut t = simple_task(0);
+        t.period = 20.0;
+        t.deadline = 20.0;
+        let (k, d0) = state.add_app(t);
+        assert!(d0.schedulable);
+        let g0 = state.allocation_of(k).unwrap();
+        // Telemetry observed every segment at 1.6× its declared worst
+        // case: the 13.68 ms declared chain becomes ~21.9 ms at the old
+        // grant — over D, so the kept floors cannot pass and the warm
+        // escalation must grow the grant.
+        let d1 = state.reinflate(&[(k, 1.6)]);
+        assert!(d1.schedulable, "a 10-SM device absorbs the inflated model");
+        let g1 = state.allocation_of(k).unwrap();
+        assert!(g1 > g0, "inflated WCETs need more SMs: {g0} → {g1}");
+        assert!(d1.path.is_fast(), "reinflation stays on the warm path: {:?}", d1.path);
+        // Unknown keys are ignored; the decision is just re-checked.
+        let d2 = state.reinflate(&[(999, 2.0)]);
+        assert!(d2.schedulable);
+        assert_eq!(state.allocation_of(k), Some(g1));
     }
 
     #[test]

@@ -22,12 +22,17 @@
 //! single-device topology requires); the router's `device_of` is the
 //! dispatch decision those loops share.
 
+use std::collections::BTreeMap;
+
 use crate::model::CpuTopology;
 use crate::sched::driver;
 use crate::sched::{
     merge_priority_levels, Chain, DeviceId, DriverConfig, DriverTask, GpuPolicyKind, Tick,
     TraceEntry,
 };
+use crate::telemetry::snapshot::{drift_json, recorder_json, wrap};
+use crate::telemetry::{DriftEvent, NoopSink, Recorder, TelemetrySink};
+use crate::util::json::Json;
 
 use super::serve::VirtualTask;
 
@@ -112,7 +117,24 @@ impl ClusterServe {
         tasks: &[VirtualTask],
         horizon: Tick,
         arrival_seed: u64,
+        chain_for: impl FnMut(usize) -> Chain,
+    ) -> Vec<Vec<TraceEntry>> {
+        self.serve_virtual_telemetry(tasks, horizon, arrival_seed, chain_for, &mut NoopSink)
+    }
+
+    /// [`Self::serve_virtual`] reporting per-device phase durations and
+    /// job latencies through `sink` (device ids are fleet device
+    /// indices; task ids are **device-local** app indices — map back to
+    /// global app ids via [`Self::apps_on`]).  The sink only observes:
+    /// the returned traces are bit-identical to the un-instrumented run
+    /// (pinned by `tests/telemetry.rs`).
+    pub fn serve_virtual_telemetry(
+        &self,
+        tasks: &[VirtualTask],
+        horizon: Tick,
+        arrival_seed: u64,
         mut chain_for: impl FnMut(usize) -> Chain,
+        sink: &mut dyn TelemetrySink,
     ) -> Vec<Vec<TraceEntry>> {
         assert_eq!(tasks.len(), self.route.len(), "one VirtualTask per routed app");
         // Per-device app order is the priority order the admission
@@ -162,7 +184,20 @@ impl ClusterServe {
             trace: true,
             arrival_seed,
         };
-        driver::run(&dtasks, &cfg, |dev, task| chain_for(self.local[dev][task])).traces
+        driver::run_with_sink(&dtasks, &cfg, |dev, task| chain_for(self.local[dev][task]), sink)
+            .traces
+    }
+
+    /// Versioned metrics snapshot for a recorded fleet run: the
+    /// recorder's per-device telemetry plus any detected drift events,
+    /// under the DESIGN.md §12 schema
+    /// ([`crate::telemetry::snapshot::validate`] accepts it).
+    pub fn metrics_snapshot(&self, rec: &Recorder, drift: &[DriftEvent]) -> Json {
+        let mut fields = BTreeMap::new();
+        fields.insert("devices".into(), recorder_json(rec));
+        fields.insert("drift".into(), drift_json(drift));
+        fields.insert("n_apps".into(), Json::Num(self.n_apps() as f64));
+        wrap(fields)
     }
 }
 

@@ -1,8 +1,19 @@
 //! Serving metrics: per-task latency distributions, deadline misses,
-//! throughput.
+//! throughput, and the versioned JSON snapshot (DESIGN.md §12).
+//!
+//! Latency and GPU-time distributions are held in fixed-footprint
+//! log-scale histograms ([`LogHistogram`]) rather than unbounded sample
+//! buffers: a serving run can complete millions of requests without the
+//! metrics growing with it, and quantiles stay within one bucket's
+//! relative width of the exact order statistics (pinned by the property
+//! test in `tests/telemetry.rs`).
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::telemetry::snapshot::{hist_json, wrap};
+use crate::telemetry::LogHistogram;
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Per-application serving statistics.
@@ -11,27 +22,65 @@ pub struct AppStats {
     pub name: String,
     pub released: usize,
     pub completed: usize,
+    /// Completed jobs that finished after their deadline.
     pub misses: usize,
-    /// End-to-end latency samples (ms).
-    pub latencies_ms: Vec<f64>,
-    /// GPU-segment execution samples (ms) as measured at the PJRT call.
-    pub gpu_ms: Vec<f64>,
+    /// Jobs that blew their deadline without ever completing (stranded
+    /// in flight at drain time).  Invisible to `completed`/`misses`,
+    /// but every one of them is a deadline miss — [`AppStats::miss_rate`]
+    /// counts them in both numerator and denominator.
+    pub overdue: usize,
+    /// End-to-end latency distribution (ms).
+    pub latency: LogHistogram,
+    /// GPU-segment execution distribution (ms) as measured at the PJRT
+    /// call.
+    pub gpu: LogHistogram,
     pub deadline_ms: f64,
 }
 
 impl AppStats {
-    pub fn latency_summary(&self) -> Option<Summary> {
-        Summary::of(&self.latencies_ms)
+    pub fn new(name: impl Into<String>, deadline_ms: f64) -> AppStats {
+        AppStats {
+            name: name.into(),
+            released: 0,
+            completed: 0,
+            misses: 0,
+            overdue: 0,
+            latency: LogHistogram::new(),
+            gpu: LogHistogram::new(),
+            deadline_ms,
+        }
     }
 
-    /// Fraction of completed jobs that missed their deadline (0.0 when
-    /// nothing completed yet).
+    pub fn latency_summary(&self) -> Option<Summary> {
+        self.latency.summary()
+    }
+
+    /// Fraction of deadline-accountable jobs that missed: completions
+    /// past the deadline *plus* jobs that blew the deadline without
+    /// completing, over completions plus those overdue jobs.  0.0 when
+    /// nothing is accountable yet.
     pub fn miss_rate(&self) -> f64 {
-        if self.completed == 0 {
+        let denom = self.completed + self.overdue;
+        if denom == 0 {
             0.0
         } else {
-            self.misses as f64 / self.completed as f64
+            (self.misses + self.overdue) as f64 / denom as f64
         }
+    }
+
+    /// JSON snapshot entry for this app (schema: DESIGN.md §12).
+    pub fn json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        o.insert("released".into(), Json::Num(self.released as f64));
+        o.insert("completed".into(), Json::Num(self.completed as f64));
+        o.insert("misses".into(), Json::Num(self.misses as f64));
+        o.insert("overdue".into(), Json::Num(self.overdue as f64));
+        o.insert("miss_rate".into(), Json::Num(self.miss_rate()));
+        o.insert("deadline_ms".into(), Json::Num(self.deadline_ms));
+        o.insert("latency".into(), hist_json(&self.latency));
+        o.insert("gpu".into(), hist_json(&self.gpu));
+        Json::Obj(o)
     }
 }
 
@@ -48,7 +97,7 @@ impl ServeReport {
     }
 
     pub fn total_misses(&self) -> usize {
-        self.per_app.iter().map(|a| a.misses).sum()
+        self.per_app.iter().map(|a| a.misses + a.overdue).sum()
     }
 
     /// Requests per second across all applications.  A run that never
@@ -63,29 +112,42 @@ impl ServeReport {
         }
     }
 
+    /// Versioned metrics snapshot (`{"version": 1, "kind":
+    /// "rtgpu-metrics", "apps": [...]}`), validated by
+    /// [`crate::telemetry::snapshot::validate`].
+    pub fn snapshot(&self) -> Json {
+        let mut fields = BTreeMap::new();
+        fields.insert(
+            "apps".into(),
+            Json::Arr(self.per_app.iter().map(|a| a.json()).collect()),
+        );
+        fields.insert("wall_s".into(), Json::Num(self.wall.as_secs_f64()));
+        wrap(fields)
+    }
+
     /// Render the latency/deadline table the serving example prints.
     pub fn table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<14} {:>5} {:>5} {:>6} {:>7} {:>9} {:>9} {:>9} {:>9} {:>8}\n",
-            "app", "rel", "done", "miss", "miss%", "p50(ms)", "p95(ms)", "max(ms)", "D(ms)",
-            "gpu(ms)"
+            "{:<14} {:>5} {:>5} {:>6} {:>7} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8}\n",
+            "app", "rel", "done", "miss", "miss%", "p50(ms)", "p95(ms)", "p99(ms)", "max(ms)",
+            "D(ms)", "gpu(ms)"
         ));
         for a in &self.per_app {
             let s = a.latency_summary();
-            let gpu = Summary::of(&a.gpu_ms);
             out.push_str(&format!(
-                "{:<14} {:>5} {:>5} {:>6} {:>6.1}% {:>9} {:>9} {:>9} {:>9.2} {:>8}\n",
+                "{:<14} {:>5} {:>5} {:>6} {:>6.1}% {:>9} {:>9} {:>9} {:>9} {:>9.2} {:>8}\n",
                 a.name,
                 a.released,
                 a.completed,
-                a.misses,
+                a.misses + a.overdue,
                 a.miss_rate() * 100.0,
                 s.map_or("-".into(), |s| format!("{:.2}", s.p50)),
                 s.map_or("-".into(), |s| format!("{:.2}", s.p95)),
+                s.map_or("-".into(), |s| format!("{:.2}", s.p99)),
                 s.map_or("-".into(), |s| format!("{:.2}", s.max)),
                 a.deadline_ms,
-                gpu.map_or("-".into(), |g| format!("{:.2}", g.p50)),
+                a.gpu.p50().map_or("-".into(), |g| format!("{g:.2}")),
             ));
         }
         out.push_str(&format!(
@@ -102,32 +164,26 @@ impl ServeReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::telemetry::snapshot;
+
+    fn app(name: &str, released: usize, completed: usize, misses: usize) -> AppStats {
+        let mut a = AppStats::new(name, 10.0);
+        a.released = released;
+        a.completed = completed;
+        a.misses = misses;
+        a
+    }
 
     #[test]
     fn report_aggregates() {
-        let report = ServeReport {
-            per_app: vec![
-                AppStats {
-                    name: "a".into(),
-                    released: 10,
-                    completed: 9,
-                    misses: 1,
-                    latencies_ms: vec![1.0, 2.0, 3.0],
-                    gpu_ms: vec![0.5],
-                    deadline_ms: 10.0,
-                },
-                AppStats {
-                    name: "b".into(),
-                    released: 5,
-                    completed: 5,
-                    misses: 0,
-                    latencies_ms: vec![4.0],
-                    gpu_ms: vec![],
-                    deadline_ms: 20.0,
-                },
-            ],
-            wall: Duration::from_secs(2),
-        };
+        let mut a = app("a", 10, 9, 1);
+        for v in [1.0, 2.0, 3.0] {
+            a.latency.record(v);
+        }
+        a.gpu.record(0.5);
+        let mut b = app("b", 5, 5, 0);
+        b.latency.record(4.0);
+        let report = ServeReport { per_app: vec![a, b], wall: Duration::from_secs(2) };
         assert_eq!(report.total_completed(), 14);
         assert_eq!(report.total_misses(), 1);
         assert!((report.throughput() - 7.0).abs() < 1e-9);
@@ -137,26 +193,56 @@ mod tests {
         let table = report.table();
         assert!(table.contains("a") && table.contains("b"));
         assert!(table.contains("miss%"), "table lists the per-app miss rate");
+        assert!(table.contains("p99(ms)"), "table lists the p99 latency column");
+    }
+
+    #[test]
+    fn overdue_jobs_count_as_misses() {
+        // Regression: a job that blows its deadline but never completes
+        // used to be invisible — miss_rate divided misses by completed
+        // only.  Released 4, completed 2 (one late), 1 stranded past its
+        // deadline: 2 of 3 accountable jobs missed.
+        let mut a = app("a", 4, 2, 1);
+        a.overdue = 1;
+        assert!((a.miss_rate() - 2.0 / 3.0).abs() < 1e-12);
+
+        // Overdue-only app: nothing completed, but the misses are real.
+        let mut b = app("b", 2, 0, 0);
+        b.overdue = 2;
+        assert_eq!(b.miss_rate(), 1.0);
+
+        // Nothing accountable at all stays 0.0, not NaN.
+        assert_eq!(app("c", 1, 0, 0).miss_rate(), 0.0);
+
+        let report =
+            ServeReport { per_app: vec![a, b], wall: Duration::from_millis(10) };
+        assert_eq!(report.total_misses(), 2 + 2);
     }
 
     #[test]
     fn zero_wall_throughput_is_finite() {
         let empty = ServeReport { per_app: vec![], wall: Duration::ZERO };
         assert_eq!(empty.throughput(), 0.0);
-        let some = ServeReport {
-            per_app: vec![AppStats {
-                name: "a".into(),
-                released: 1,
-                completed: 1,
-                misses: 0,
-                latencies_ms: vec![1.0],
-                gpu_ms: vec![],
-                deadline_ms: 10.0,
-            }],
-            wall: Duration::ZERO,
-        };
+        let mut a = app("a", 1, 1, 0);
+        a.latency.record(1.0);
+        let some = ServeReport { per_app: vec![a], wall: Duration::ZERO };
         // completed > 0 over zero wall must not be inf either.
         assert_eq!(some.throughput(), 0.0);
         assert!(some.table().contains("req/s"));
+    }
+
+    #[test]
+    fn snapshot_validates_against_the_schema() {
+        let mut a = app("vision", 3, 3, 1);
+        for v in [1.0, 2.5, 9.0] {
+            a.latency.record(v);
+        }
+        a.gpu.record(0.25);
+        let report = ServeReport { per_app: vec![a], wall: Duration::from_secs(1) };
+        let snap = report.snapshot();
+        snapshot::validate(&snap).expect("serve snapshot matches the schema");
+        // Round-trips through the JSON writer/parser.
+        let reparsed = Json::parse(&snap.to_string()).unwrap();
+        snapshot::validate(&reparsed).unwrap();
     }
 }

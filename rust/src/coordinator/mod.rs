@@ -47,5 +47,8 @@ pub use admission::{
 };
 pub use app::{AppSpec, GpuProfile};
 pub use cluster_serve::ClusterServe;
-pub use metrics::ServeReport;
-pub use serve::{serve, serve_virtual, serve_virtual_policy, ServeConfig, VirtualTask};
+pub use metrics::{AppStats, ServeReport};
+pub use serve::{
+    serve, serve_telemetry, serve_virtual, serve_virtual_policy, serve_virtual_telemetry,
+    ServeConfig, VirtualTask,
+};

@@ -37,6 +37,7 @@ use crate::sched::{
     ms_to_ticks, ticks_to_ms, ArrivalSpec, Chain, DriverConfig, DriverTask, GpuPolicyKind,
     Phase, Prio, ReadyQueue, Station, Tick, TraceEntry,
 };
+use crate::telemetry::{NoopSink, Recorder, TelemetrySink};
 
 use super::admission::AdmissionReport;
 use super::metrics::{AppStats, ServeReport};
@@ -127,6 +128,21 @@ fn route(job: Job, chain: &Chain, cpu: &Sender<Msg>, bus: &Sender<Msg>, gpu: &Se
 /// kernels pinned to each task's virtual-SM range.  Returns per-app
 /// latency / miss statistics.
 pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Result<ServeReport> {
+    serve_telemetry(engine, report, cfg, None)
+}
+
+/// [`serve`] with wall-clock telemetry: when `recorder` is given, every
+/// completed chain phase reports its *measured* duration (spin / DMA
+/// sleep / PJRT elapsed) and every completed job its latency through
+/// the shared [`Recorder`], at the same chain boundaries the virtual
+/// drivers hook (device id 0, task id = app index).  Passing `None` is
+/// exactly [`serve`].
+pub fn serve_telemetry(
+    engine: &Engine,
+    report: &AdmissionReport,
+    cfg: &ServeConfig,
+    recorder: Option<&Mutex<Recorder>>,
+) -> Result<ServeReport> {
     assert!(report.schedulable, "serve() requires an admitted (schedulable) report");
     let n = report.admitted.len();
 
@@ -141,20 +157,11 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
         .collect::<Result<Vec<_>>>()?;
 
     let stats: Arc<Mutex<Vec<AppStats>>> = Arc::new(Mutex::new(
-        report
-            .admitted
-            .iter()
-            .map(|a| AppStats {
-                name: a.name.clone(),
-                released: 0,
-                completed: 0,
-                misses: 0,
-                latencies_ms: Vec::new(),
-                gpu_ms: Vec::new(),
-                deadline_ms: a.deadline_ms,
-            })
-            .collect(),
+        report.admitted.iter().map(|a| AppStats::new(a.name.clone(), a.deadline_ms)).collect(),
     ));
+    // Outstanding (released, not yet completed) job deadlines per app —
+    // whatever is left past its deadline at drain time is `overdue`.
+    let pending: Arc<Mutex<Vec<Vec<Instant>>>> = Arc::new(Mutex::new(vec![Vec::new(); n]));
 
     let released = Arc::new(AtomicUsize::new(0));
     let completed = Arc::new(AtomicUsize::new(0));
@@ -187,6 +194,7 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
             let cpu_tx = cpu_tx.clone();
             let released = Arc::clone(&released);
             let stats = Arc::clone(&stats);
+            let pending = Arc::clone(&pending);
             let admitted = &report.admitted;
             let cfg = cfg.clone();
             scope.spawn(move || {
@@ -213,6 +221,7 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
                     };
                     released.fetch_add(1, Ordering::SeqCst);
                     stats.lock().unwrap()[app].released += 1;
+                    pending.lock().unwrap()[app].push(job.deadline);
                     if cpu_tx.send(Msg::Work(job)).is_err() {
                         return;
                     }
@@ -228,6 +237,7 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
             let gpu_tx = gpu_tx.clone();
             let cpu_tx2 = cpu_tx.clone();
             let stats = Arc::clone(&stats);
+            let pending = Arc::clone(&pending);
             let completed = Arc::clone(&completed);
             scope.spawn(move || {
                 station(
@@ -235,7 +245,18 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
                     |job| {
                         let chain = &chains[job.app];
                         match chain.phase(job.next_phase) {
-                            Phase::Cpu(_) => spin_ms(ticks_to_ms(chain.duration(job.next_phase))),
+                            Phase::Cpu(_) => {
+                                let t = Instant::now();
+                                spin_ms(ticks_to_ms(chain.duration(job.next_phase)));
+                                if let Some(rec) = recorder {
+                                    rec.lock().unwrap().on_phase(
+                                        0,
+                                        job.app,
+                                        chain.phase(job.next_phase),
+                                        t.elapsed().as_secs_f64() * 1e3,
+                                    );
+                                }
+                            }
                             other => unreachable!("CPU station got {other:?}"),
                         }
                     },
@@ -246,13 +267,24 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
                             // Chain exhausted (the Post segment ran).
                             let now = Instant::now();
                             let latency = now.duration_since(job.release).as_secs_f64() * 1e3;
+                            let missed = now > job.deadline;
                             let mut s = stats.lock().unwrap();
                             let st = &mut s[job.app];
                             st.completed += 1;
-                            st.latencies_ms.push(latency);
-                            st.gpu_ms.push(job.gpu_ms);
-                            if now > job.deadline {
+                            st.latency.record(latency);
+                            st.gpu.record(job.gpu_ms);
+                            if missed {
                                 st.misses += 1;
+                            }
+                            drop(s);
+                            let mut p = pending.lock().unwrap();
+                            let dls = &mut p[job.app];
+                            if let Some(i) = dls.iter().position(|d| *d == job.deadline) {
+                                dls.swap_remove(i);
+                            }
+                            drop(p);
+                            if let Some(rec) = recorder {
+                                rec.lock().unwrap().on_job(0, job.app, latency, missed);
                             }
                             completed.fetch_add(1, Ordering::SeqCst);
                         } else {
@@ -280,7 +312,16 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
                             other => unreachable!("bus station got {other:?}"),
                         };
                         // DMA transfer: the bus is held, the CPU is not.
+                        let t = Instant::now();
                         std::thread::sleep(Duration::from_secs_f64(ms / 1e3));
+                        if let Some(rec) = recorder {
+                            rec.lock().unwrap().on_phase(
+                                0,
+                                job.app,
+                                chain.phase(job.next_phase),
+                                t.elapsed().as_secs_f64() * 1e3,
+                            );
+                        }
                     },
                     |mut job| {
                         job.next_phase += 1;
@@ -308,6 +349,14 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
                     {
                         Ok(out) => {
                             job.gpu_ms = out.elapsed.as_secs_f64() * 1e3;
+                            if let Some(rec) = recorder {
+                                rec.lock().unwrap().on_phase(
+                                    0,
+                                    job.app,
+                                    chains[job.app].phase(job.next_phase),
+                                    job.gpu_ms,
+                                );
+                            }
                             job.next_phase += 1;
                             // Chain-driven routing (D2h under TwoCopy,
                             // straight to Post under OneCopy).  `gpu_tx`
@@ -349,7 +398,15 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
     });
     result?;
 
-    let per_app = Arc::try_unwrap(stats).expect("threads joined").into_inner().unwrap();
+    let mut per_app = Arc::try_unwrap(stats).expect("threads joined").into_inner().unwrap();
+    // Anything still pending past its deadline missed without ever
+    // completing — without this the miss rate silently understates
+    // (the satellite regression pinned in metrics::tests).
+    let now = Instant::now();
+    let pending = Arc::try_unwrap(pending).expect("threads joined").into_inner().unwrap();
+    for (app, dls) in pending.into_iter().enumerate() {
+        per_app[app].overdue = dls.into_iter().filter(|&d| now > d).count();
+    }
     Ok(ServeReport { per_app, wall: t0.elapsed() })
 }
 
@@ -401,7 +458,22 @@ pub fn serve_virtual_policy(
     horizon: Tick,
     policy: GpuPolicyKind,
     arrival_seed: u64,
+    chain_for: impl FnMut(usize) -> Chain,
+) -> Vec<TraceEntry> {
+    serve_virtual_telemetry(tasks, horizon, policy, arrival_seed, chain_for, &mut NoopSink)
+}
+
+/// [`serve_virtual_policy`] reporting per-phase durations and per-job
+/// latencies through `sink` (device id 0).  The sink only observes — the
+/// returned trace is bit-identical to the un-instrumented run (pinned
+/// by `tests/telemetry.rs`).
+pub fn serve_virtual_telemetry(
+    tasks: &[VirtualTask],
+    horizon: Tick,
+    policy: GpuPolicyKind,
+    arrival_seed: u64,
     mut chain_for: impl FnMut(usize) -> Chain,
+    sink: &mut dyn TelemetrySink,
 ) -> Vec<TraceEntry> {
     let dtasks: Vec<DriverTask> = tasks
         .iter()
@@ -421,7 +493,7 @@ pub fn serve_virtual_policy(
         trace: true,
         arrival_seed,
     };
-    let mut out = driver::run(&[dtasks], &cfg, |_, task| chain_for(task));
+    let mut out = driver::run_with_sink(&[dtasks], &cfg, |_, task| chain_for(task), sink);
     out.traces.swap_remove(0)
 }
 

@@ -37,6 +37,11 @@
 //!   admission, and the fleet simulator (`ClusterSim`) running one
 //!   platform core per device under a single virtual clock (DESIGN.md
 //!   §8).
+//! * [`telemetry`] — runtime observability and the measurement-driven
+//!   feedback loop (DESIGN.md §12): fixed-footprint log-scale latency
+//!   histograms, the `TelemetrySink` hook the drivers report through,
+//!   WCET drift detection against the declared model, and versioned
+//!   JSON metrics snapshots.
 //! * [`harness`] — regeneration of every evaluation figure (Figs 4–14).
 //! * [`util`] — self-contained substrates (JSON, RNG, CLI, bench,
 //!   property-test helpers) — the offline build environment has no
@@ -51,4 +56,5 @@ pub mod model;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod util;

@@ -11,14 +11,15 @@
 //! The heavier experiment drivers also exist as runnable examples (see
 //! `examples/`); DESIGN.md §6 records the canonical ablation runs.
 
+use std::collections::{BTreeMap, HashMap};
 use std::time::Duration;
 
 use anyhow::Result;
 
 use rtgpu::analysis::{analyze, schedule_gpu_policy, Approach, RtgpuOpts, Search};
-use rtgpu::cluster::{simulate_cluster, ClusterState, PlacementPolicy};
+use rtgpu::cluster::{simulate_cluster, simulate_cluster_telemetry, ClusterState, PlacementPolicy};
 use rtgpu::sched::GpuPolicyKind;
-use rtgpu::coordinator::{admit, serve, AppSpec, ServeConfig};
+use rtgpu::coordinator::{admit, serve, AdmissionState, AppSpec, ServeConfig};
 use rtgpu::gen::{generate_taskset, GenConfig};
 use rtgpu::harness::chart::{results_dir, table, write_csv};
 use rtgpu::harness::sweep::{run_sweep, to_series, SweepSpec};
@@ -26,8 +27,11 @@ use rtgpu::harness::throughput::throughput_gain;
 use rtgpu::harness::validate::{run_validation, TimeModel};
 use rtgpu::model::{ClusterPlatform, KernelClass, Platform};
 use rtgpu::runtime::{artifact_dir, Engine};
-use rtgpu::sim::{ArrivalOverride, SimConfig};
+use rtgpu::sim::{simulate, simulate_telemetry, ArrivalOverride, ExecModel, SimConfig};
+use rtgpu::telemetry::snapshot::{drift_json, recorder_json, validate as validate_snapshot, wrap};
+use rtgpu::telemetry::{declared_class_bounds, DriftDetector, DriftKind, Recorder, TelemetryMode};
 use rtgpu::util::cli::{exit_usage, Args, CliError};
+use rtgpu::util::json::Json;
 use rtgpu::util::rng::Pcg;
 
 const USAGE: &str = "usage: rtgpu <serve|admit|cluster|sweep|validate|throughput> [--flags]\n\
@@ -35,12 +39,16 @@ const USAGE: &str = "usage: rtgpu <serve|admit|cluster|sweep|validate|throughput
   admit      [--util U] [--tasks N] [--subtasks M] [--sms GN]\n\
              [--gpu-policy federated|preemptive]\n\
              [--arrival periodic|sporadic[:FRAC]|task]\n\
+             [--telemetry off|record|feedback] [--drift F]\n\
+             [--metrics-out PATH]\n\
              [--seed S]                                    analyze a random set\n\
   cluster    [--devices G] [--sms GN] [--util U] [--tasks N]\n\
              [--subtasks M] [--placement ffd|worst-fit|p2c[:K]]\n\
              [--gpu-policy federated|preemptive]\n\
              [--arrival periodic|sporadic[:FRAC]|task]\n\
              [--parallel T] [--place-seed S]\n\
+             [--telemetry off|record|feedback]\n\
+             [--metrics-out PATH]\n\
              [--shared-cpu] [--seed S]                     place + run a fleet\n\
   sweep      [--figure 8|9|10|11] [--sets K] [--seed S]    acceptance curves\n\
   validate   [--model wcet|avg] [--sets K] [--seed S]\n\
@@ -123,8 +131,21 @@ fn cmd_admit(args: &Args) -> Result<()> {
         .ok_or_else(|| CliError("--gpu-policy expects federated or preemptive".into()))?;
     let arrival = ArrivalOverride::parse(args.str_or("arrival", "task"))
         .ok_or_else(|| CliError("--arrival expects periodic, sporadic[:FRAC] or task".into()))?;
+    let telemetry = TelemetryMode::parse(args.str_or("telemetry", "off"))
+        .map_err(|e| CliError(format!("--telemetry: {e}")))?;
+    let metrics_out = args.get("metrics-out").map(String::from);
+    let drift_factor = args.f64_or("drift", 1.0)?;
+    if !(drift_factor.is_finite() && drift_factor > 0.0) {
+        return Err(CliError("--drift expects a finite factor > 0".into()).into());
+    }
     let seed = args.u64_or("seed", 42)?;
     args.finish()?;
+    // Asking for a snapshot implies at least recording.
+    let telemetry = if telemetry == TelemetryMode::Off && metrics_out.is_some() {
+        TelemetryMode::Record
+    } else {
+        telemetry
+    };
 
     let mut ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
     // Rewriting the tasks (not just the executors) keeps the analysis
@@ -156,6 +177,109 @@ fn cmd_admit(args: &Args) -> Result<()> {
             v.allocation.as_deref().unwrap_or(&[])
         );
     }
+    if telemetry.records() {
+        admit_telemetry(&ts, gn, seed, telemetry, drift_factor, metrics_out.as_deref())?;
+    }
+    Ok(())
+}
+
+/// The measurement half of `rtgpu admit`: run the admitted allocation
+/// through the instrumented simulator (optionally with injected
+/// execution-time drift), detect WCET drift against the declared
+/// per-segment-class bounds, optionally close the loop via incremental
+/// re-admission with inflated WCETs, and write the validated snapshot.
+fn admit_telemetry(
+    ts: &rtgpu::model::TaskSet,
+    gn: usize,
+    seed: u64,
+    telemetry: TelemetryMode,
+    drift_factor: f64,
+    metrics_out: Option<&str>,
+) -> Result<()> {
+    let opts = RtgpuOpts::default();
+    let verdict = analyze(ts, gn, Approach::Rtgpu, Search::Grid);
+    let mut fields = BTreeMap::new();
+    let mut events = Vec::new();
+    if let Some(alloc) = verdict.allocation.clone() {
+        let sim_cfg = SimConfig {
+            exec: ExecModel::Drift { factor: drift_factor },
+            stop_on_first_miss: false,
+            ..SimConfig::acceptance(seed)
+        };
+        let mut rec = Recorder::new();
+        let r = simulate_telemetry(ts, &alloc, &sim_cfg, &mut rec);
+        events = DriftDetector::default().detect(&rec, |_, task| {
+            declared_class_bounds(&ts.tasks[task], alloc[task].max(1), opts.sm_model)
+        });
+        println!(
+            "telemetry ({}): drift x{:.2} -> {} jobs completed, {} missed, {} drift events",
+            telemetry.name(),
+            drift_factor,
+            rec.total_completed(),
+            r.total_misses,
+            events.len()
+        );
+        for e in &events {
+            println!(
+                "  drift: task {} {} {:?} declared {:.3} ms observed {:.3} ms (x{:.2})",
+                e.task,
+                e.class.name(),
+                e.kind,
+                e.declared_ms,
+                e.observed_ms,
+                e.ratio
+            );
+        }
+        if telemetry == TelemetryMode::Feedback {
+            // Worst observed overshoot per task drives re-admission.
+            let mut worst: HashMap<usize, f64> = HashMap::new();
+            for e in events.iter().filter(|e| e.kind == DriftKind::Overshoot) {
+                let w = worst.entry(e.task).or_insert(1.0);
+                *w = w.max(e.ratio);
+            }
+            if worst.is_empty() {
+                println!("feedback: no overshoot observed — declared WCETs hold");
+            } else {
+                let mut state = AdmissionState::new(Platform::new(gn), opts);
+                // Keys are handed out in insertion order: key i <-> tasks[i].
+                for t in &ts.tasks {
+                    state.add_app(t.clone());
+                }
+                let inflations: Vec<(u64, f64)> =
+                    worst.iter().map(|(&task, &f)| (task as u64, f)).collect();
+                let d = state.reinflate(&inflations);
+                println!(
+                    "feedback: re-admission with inflated WCETs -> schedulable={} via {}",
+                    d.schedulable,
+                    d.path.name()
+                );
+                if d.schedulable {
+                    let new_alloc: Vec<usize> = (0..ts.len())
+                        .map(|i| state.allocation_of(i as u64).unwrap_or(0))
+                        .collect();
+                    // Re-run the ORIGINAL task set (the inflated copies
+                    // live only inside the admission state) under the
+                    // same drift at the new allocation.
+                    let recovered = simulate(ts, &new_alloc, &sim_cfg);
+                    println!(
+                        "feedback: re-run at alloc {:?} -> {} misses",
+                        new_alloc, recovered.total_misses
+                    );
+                }
+            }
+        }
+        fields.insert("devices".into(), recorder_json(&rec));
+    } else {
+        println!("telemetry: set not schedulable under RTGPU — nothing to record");
+    }
+    fields.insert("drift".into(), drift_json(&events));
+    fields.insert("drift_factor".into(), Json::Num(drift_factor));
+    let snap = wrap(fields);
+    validate_snapshot(&snap).map_err(|e| anyhow::anyhow!("snapshot schema: {e}"))?;
+    if let Some(path) = metrics_out {
+        std::fs::write(path, format!("{snap}\n"))?;
+        println!("metrics snapshot written to {path}");
+    }
     Ok(())
 }
 
@@ -181,9 +305,17 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         .ok_or_else(|| CliError("--gpu-policy expects federated or preemptive".into()))?;
     let arrival = ArrivalOverride::parse(args.str_or("arrival", "task"))
         .ok_or_else(|| CliError("--arrival expects periodic, sporadic[:FRAC] or task".into()))?;
+    let telemetry = TelemetryMode::parse(args.str_or("telemetry", "off"))
+        .map_err(|e| CliError(format!("--telemetry: {e}")))?;
+    let metrics_out = args.get("metrics-out").map(String::from);
     let shared = args.flag("shared-cpu");
     let seed = args.u64_or("seed", 42)?;
     args.finish()?;
+    let telemetry = if telemetry == TelemetryMode::Off && metrics_out.is_some() {
+        TelemetryMode::Record
+    } else {
+        telemetry
+    };
 
     let mut platform = ClusterPlatform::homogeneous(devices, gn);
     if shared {
@@ -223,7 +355,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     println!("placement ({}) admitted all {} apps", policy.label(), ts.len());
 
-    let sim = simulate_cluster(&state.workload(), &SimConfig::acceptance(seed));
+    let wl = state.workload();
+    let mut rec = Recorder::new();
+    let sim = if telemetry.records() {
+        // Full-horizon stats (no early stop) feed the drift detector.
+        let cfg = SimConfig { stop_on_first_miss: false, ..SimConfig::acceptance(seed) };
+        simulate_cluster_telemetry(&wl, &cfg, &mut rec)
+    } else {
+        simulate_cluster(&wl, &SimConfig::acceptance(seed))
+    };
     println!(
         "fleet run: {} jobs completed, {} deadline misses ({} events) → {}",
         sim.total_completed(),
@@ -239,6 +379,42 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             max,
             state.device_gpu_util(d)
         );
+    }
+    if telemetry.records() {
+        let opts = RtgpuOpts::default();
+        let events = DriftDetector::default().detect(&rec, |dev, task| {
+            let d = &wl.devices[dev];
+            declared_class_bounds(&d.ts.tasks[task], d.alloc[task].max(1), opts.sm_model)
+        });
+        println!(
+            "telemetry ({}): {} jobs completed, {} missed, {} drift events",
+            telemetry.name(),
+            rec.total_completed(),
+            rec.total_missed(),
+            events.len()
+        );
+        if telemetry == TelemetryMode::Feedback {
+            // Miss pressure above 5% on a device evicts its apps to the
+            // rest of the fleet (fresh per-device admission decides).
+            let drained = state.drain_degraded(|d| rec.device_miss_rate(d), 0.05, policy);
+            if drained.is_empty() {
+                println!("feedback: no device above 5% miss pressure");
+            }
+            for (dev, out) in &drained {
+                println!(
+                    "feedback: drained device {dev} -> {} apps re-placed, {} rejected",
+                    out.replaced.len(),
+                    out.rejected
+                );
+            }
+        }
+        let (router, _) = state.serve_router();
+        let snap = router.metrics_snapshot(&rec, &events);
+        validate_snapshot(&snap).map_err(|e| anyhow::anyhow!("snapshot schema: {e}"))?;
+        if let Some(path) = &metrics_out {
+            std::fs::write(path, format!("{snap}\n"))?;
+            println!("metrics snapshot written to {path}");
+        }
     }
     Ok(())
 }

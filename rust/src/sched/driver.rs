@@ -30,12 +30,13 @@
 //! [`GpuPolicyKind`] stations inside each [`PlatformCore`].
 
 use crate::model::{ArrivalModel, CpuTopology};
+use crate::telemetry::{NoopSink, TelemetrySink};
 use crate::util::rng::Pcg;
 
 use super::equeue::EventQueue;
 use super::platform::{CoreEvent, JobId, PlatformCore, TaskFifo, TraceEntry, WalkJob};
 use super::policy::GpuPolicyKind;
-use super::{ms_to_ticks, route_station, Chain, DeviceId, Tick};
+use super::{ms_to_ticks, route_station, ticks_to_ms, Chain, DeviceId, Tick};
 
 /// A task's arrival process as the driver executes it (times in ticks).
 /// The model-layer counterpart is [`ArrivalModel`] (milliseconds);
@@ -228,7 +229,24 @@ impl ArrivalState {
 pub fn run(
     devices: &[Vec<DriverTask>],
     cfg: &DriverConfig,
+    chain_for: impl FnMut(DeviceId, usize) -> Chain,
+) -> DriverOutcome {
+    run_with_sink(devices, cfg, chain_for, &mut NoopSink)
+}
+
+/// [`run`] with a [`TelemetrySink`] observing completions: every phase
+/// completion reports its oracle-drawn service time and every job
+/// completion its arrival-anchored latency (both converted to
+/// milliseconds), tagged with the owning device and task.  Sink calls
+/// fire after the platform core has recorded its trace entry and touch
+/// no queue, RNG, or scheduler state — a recording sink observes the
+/// *identical* schedule the no-op sink produces (pinned by
+/// `tests/telemetry.rs`).
+pub fn run_with_sink(
+    devices: &[Vec<DriverTask>],
+    cfg: &DriverConfig,
     mut chain_for: impl FnMut(DeviceId, usize) -> Chain,
+    sink: &mut dyn TelemetrySink,
 ) -> DriverOutcome {
     let n_dev = devices.len();
     assert!(n_dev >= 1, "driver needs at least one device");
@@ -304,12 +322,14 @@ pub fn run(
                 q.push(t, Ev::Core { core, ev: cev });
             }
             if finished {
-                if $now > jobs[j].deadline {
+                let missed = $now > jobs[j].deadline;
+                if missed {
                     total_misses += 1;
                     if cfg.stop_on_first_miss {
                         stop = true;
                     }
                 }
+                sink.on_job(dev, jobs[j].task, ticks_to_ms($now - jobs[j].arrival), missed);
                 if let Some(next) = fifos[dev].on_job_done(jobs[j].task) {
                     q.push($now, Ev::Start { job: next });
                 }
@@ -347,6 +367,15 @@ pub fn run(
             Ev::Core { core, ev: cev } => {
                 let station = cev.station();
                 if let Some(j) = cores[core].on_event(&mut jobs, cev, now) {
+                    // `on_event` already advanced `next_phase`: the phase
+                    // that just completed is the one before it.
+                    let idx = jobs[j].next_phase - 1;
+                    sink.on_phase(
+                        job_dev[j],
+                        jobs[j].task,
+                        jobs[j].chain.phase(idx),
+                        ticks_to_ms(jobs[j].chain.duration(idx)),
+                    );
                     start_next!(now, j);
                     cores[core].redispatch(station, &mut jobs, now, &mut timers);
                     for (t, cev2) in timers.drain(..) {

@@ -11,6 +11,7 @@ use crate::sched::{
     ms_to_ticks, ticks_to_ms, ArrivalSpec, Chain, DriverConfig, DriverTask, GpuPolicyKind,
     Segment, TraceEntry,
 };
+use crate::telemetry::{NoopSink, TelemetrySink};
 use crate::util::rng::Pcg;
 use crate::util::stats::Summary;
 
@@ -185,7 +186,7 @@ pub(crate) fn resolve_horizon_ms(horizon_ms: Option<f64>, max_period: f64) -> f6
 /// execute in release order; deadlines and response times anchor at the
 /// **arrival**.
 pub fn simulate(ts: &TaskSet, alloc: &Allocation, cfg: &SimConfig) -> SimResult {
-    simulate_impl(ts, alloc, cfg, false).0
+    simulate_impl(ts, alloc, cfg, false, &mut NoopSink).0
 }
 
 /// Like [`simulate`], but also returns the platform trace (one entry per
@@ -195,7 +196,20 @@ pub fn simulate_traced(
     alloc: &Allocation,
     cfg: &SimConfig,
 ) -> (SimResult, Vec<TraceEntry>) {
-    simulate_impl(ts, alloc, cfg, true)
+    simulate_impl(ts, alloc, cfg, true, &mut NoopSink)
+}
+
+/// Like [`simulate`], but reporting every phase/job completion to a
+/// [`TelemetrySink`] (the drawn segment times and arrival-anchored
+/// latencies, in ms).  The schedule is identical to [`simulate`]'s —
+/// the sink only observes (DESIGN.md §12).
+pub fn simulate_telemetry(
+    ts: &TaskSet,
+    alloc: &Allocation,
+    cfg: &SimConfig,
+    sink: &mut dyn TelemetrySink,
+) -> SimResult {
+    simulate_impl(ts, alloc, cfg, false, sink).0
 }
 
 fn simulate_impl(
@@ -203,6 +217,7 @@ fn simulate_impl(
     alloc: &Allocation,
     cfg: &SimConfig,
     trace: bool,
+    sink: &mut dyn TelemetrySink,
 ) -> (SimResult, Vec<TraceEntry>) {
     assert_eq!(alloc.len(), ts.len());
     ts.validate().expect("invalid task set");
@@ -236,15 +251,20 @@ fn simulate_impl(
         arrival_seed: cfg.seed,
     };
     // Draw all phase durations per released job, in chain order.
-    let mut out = driver::run(&[tasks], &dcfg, |_, task| {
-        let t = &ts.tasks[task];
-        Chain::from_task(t, |seg| match seg {
-            Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
-            Segment::Gpu(g) => {
-                ms_to_ticks(cfg.exec.draw_gpu(&mut rng, g, alloc[task].max(1), cfg.sm_model))
-            }
-        })
-    });
+    let mut out = driver::run_with_sink(
+        &[tasks],
+        &dcfg,
+        |_, task| {
+            let t = &ts.tasks[task];
+            Chain::from_task(t, |seg| match seg {
+                Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(cfg.exec.draw(&mut rng, *b)),
+                Segment::Gpu(g) => {
+                    ms_to_ticks(cfg.exec.draw_gpu(&mut rng, g, alloc[task].max(1), cfg.sm_model))
+                }
+            })
+        },
+        sink,
+    );
 
     // Collect statistics.
     let mut per_task: Vec<TaskStats> = (0..n)

@@ -10,7 +10,7 @@ use crate::model::{Bounds, GpuSegment};
 use crate::util::rng::Pcg;
 
 /// How segment durations are drawn.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ExecModel {
     /// Every segment takes its worst-case length (maximum adversarial
     /// pressure the analysis must tolerate).
@@ -20,6 +20,14 @@ pub enum ExecModel {
     /// Truncated-normal draw inside the profiled bounds — the "real
     /// system" behaviour of Figs. 12/13.
     Bell,
+    /// Every segment takes `factor ×` its declared worst case — the
+    /// declared model is *wrong* by that factor.  The telemetry
+    /// feedback-loop injection model (DESIGN.md §12): with
+    /// `factor > 1` observed segment times overshoot the declared
+    /// `Bounds`, which the drift detector must catch and
+    /// `AdmissionState::reinflate` must absorb.  `factor = 1` replays
+    /// [`ExecModel::Wcet`] exactly.
+    Drift { factor: f64 },
 }
 
 impl ExecModel {
@@ -29,6 +37,7 @@ impl ExecModel {
             ExecModel::Wcet => b.hi,
             ExecModel::Bcet => b.lo,
             ExecModel::Bell => rng.bounded_bell(b.lo, b.hi),
+            ExecModel::Drift { factor } => b.hi * factor,
         }
     }
 
@@ -50,6 +59,9 @@ impl ExecModel {
                 rng.bounded_bell(0.0, seg.overhead.hi),
                 rng.bounded_bell(1.0, seg.alpha),
             ),
+            // Inflate work *and* launch overhead so the whole segment
+            // scales by `factor` under the duration model.
+            ExecModel::Drift { factor } => (seg.work.hi * factor, seg.overhead.hi * factor, seg.alpha),
         };
         duration(gw, gl, alpha, gn_i, sm_model)
     }
@@ -85,6 +97,25 @@ mod tests {
             let d = ExecModel::Bell.draw_gpu(&mut rng, &s, 3, SmModel::Virtual);
             assert!(d >= a_lo - 1e-9 && d <= a_hi + 1e-9, "{d} outside [{a_lo}, {a_hi}]");
         }
+    }
+
+    #[test]
+    fn drift_scales_every_segment_by_the_factor() {
+        let mut rng = Pcg::new(4);
+        let s = seg();
+        let b = Bounds::new(2.0, 7.0);
+        let f = 1.6;
+        let base = ExecModel::Wcet.draw(&mut rng, b);
+        let drift = ExecModel::Drift { factor: f }.draw(&mut rng, b);
+        assert!((drift - base * f).abs() < 1e-12);
+        let gbase = ExecModel::Wcet.draw_gpu(&mut rng, &s, 3, SmModel::Virtual);
+        let gdrift = ExecModel::Drift { factor: f }.draw_gpu(&mut rng, &s, 3, SmModel::Virtual);
+        assert!(
+            (gdrift - gbase * f).abs() < 1e-12,
+            "GPU drift must scale the whole segment: {gdrift} vs {gbase}×{f}"
+        );
+        // factor = 1 replays WCET bit for bit.
+        assert_eq!(ExecModel::Drift { factor: 1.0 }.draw(&mut rng, b), 7.0);
     }
 
     #[test]

@@ -21,7 +21,10 @@
 pub mod engine;
 pub mod exec;
 
-pub use engine::{simulate, simulate_traced, ArrivalOverride, SimConfig, SimResult, TaskStats};
+pub use engine::{
+    simulate, simulate_telemetry, simulate_traced, ArrivalOverride, SimConfig, SimResult,
+    TaskStats,
+};
 pub use exec::ExecModel;
 
 // Time is owned by the shared platform core; re-exported here for

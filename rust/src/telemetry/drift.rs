@@ -1,0 +1,195 @@
+//! WCET drift detection: observed segment times vs the declared model
+//! (DESIGN.md §12).
+//!
+//! RTGPU's schedulability guarantees hold only while the declared
+//! per-segment `Bounds` actually bound reality.  The detector compares
+//! each task's recorded per-class maxima ([`super::Recorder`]) against
+//! the class bounds implied by the task model at its current SM
+//! allocation, and emits a typed [`DriftEvent`] when a class
+//! *overshoots* its declared worst case (the guarantees are void —
+//! feed the observed ratio back into admission via
+//! [`crate::coordinator::AdmissionState::reinflate`]) or *undershoots*
+//! it by more than a configurable margin (the declaration is badly
+//! pessimistic — reclaimable capacity).
+
+use crate::analysis::gpu::duration;
+use crate::analysis::SmModel;
+use crate::model::RtTask;
+use crate::sched::{ms_to_ticks, ticks_to_ms, Chain, DeviceId, Segment};
+
+use super::sink::{Recorder, SegClass};
+
+/// Which way an observation diverged from the declared bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriftKind {
+    /// Observed max exceeds the declared worst case: guarantees void.
+    Overshoot,
+    /// Observed max is below `margin × declared`: bound is pessimistic.
+    Undershoot,
+}
+
+/// One detected divergence of a task's segment class on a device.
+#[derive(Debug, Clone)]
+pub struct DriftEvent {
+    pub dev: DeviceId,
+    pub task: usize,
+    pub class: SegClass,
+    pub kind: DriftKind,
+    /// The model's worst case for this class (ms) at the allocation the
+    /// bounds were computed for.
+    pub declared_ms: f64,
+    /// The observed maximum (ms).
+    pub observed_ms: f64,
+    /// `observed / declared` — the inflation factor `reinflate` applies
+    /// on overshoot.
+    pub ratio: f64,
+}
+
+/// Drift-detection policy: how far under the bound counts as waste, and
+/// how many samples a class needs before its maximum is trusted.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    /// Undershoot fires when `observed_max < undershoot_margin ×
+    /// declared` (default 0.5: less than half the budget ever used).
+    pub undershoot_margin: f64,
+    /// Minimum per-class sample count before any verdict (default 8).
+    pub min_samples: u64,
+}
+
+impl Default for DriftDetector {
+    fn default() -> Self {
+        DriftDetector { undershoot_margin: 0.5, min_samples: 8 }
+    }
+}
+
+impl DriftDetector {
+    pub fn new() -> DriftDetector {
+        DriftDetector::default()
+    }
+
+    /// Scan a recorder against declared per-class bounds.
+    /// `declared(dev, task)` supplies the five class bounds (ms) for the
+    /// task's local index on that device — see
+    /// [`declared_class_bounds`] for the model-derived default.
+    pub fn detect(
+        &self,
+        rec: &Recorder,
+        mut declared: impl FnMut(DeviceId, usize) -> [f64; 5],
+    ) -> Vec<DriftEvent> {
+        let mut events = Vec::new();
+        for (dev, tasks) in rec.devices().iter().enumerate() {
+            for (task, tt) in tasks.iter().enumerate() {
+                if tt.completed == 0 && tt.segments.iter().all(|a| a.count == 0) {
+                    continue; // never-touched slot from recorder growth
+                }
+                let bounds = declared(dev, task);
+                for class in SegClass::ALL {
+                    let acc = &tt.segments[class.index()];
+                    let declared_ms = bounds[class.index()];
+                    if acc.count < self.min_samples || declared_ms <= 0.0 {
+                        continue;
+                    }
+                    let observed_ms = acc.max_ms;
+                    let ratio = observed_ms / declared_ms;
+                    let kind = if observed_ms > declared_ms * (1.0 + 1e-9) {
+                        DriftKind::Overshoot
+                    } else if observed_ms < declared_ms * self.undershoot_margin {
+                        DriftKind::Undershoot
+                    } else {
+                        continue;
+                    };
+                    events.push(DriftEvent {
+                        dev,
+                        task,
+                        class,
+                        kind,
+                        declared_ms,
+                        observed_ms,
+                        ratio,
+                    });
+                }
+            }
+        }
+        events
+    }
+}
+
+/// The declared worst case per segment class (ms) for `task` granted
+/// `gn` SMs: the maximum single-phase bound in each class of the
+/// worst-case chain, quantized through the same tick conversion the
+/// driver reports through — so an executor running exactly at the
+/// declared WCET observes `observed == declared` bit for bit and
+/// triggers nothing.
+pub fn declared_class_bounds(task: &RtTask, gn: usize, sm_model: SmModel) -> [f64; 5] {
+    let chain = Chain::from_task(task, |seg| match seg {
+        Segment::Cpu(b) | Segment::Mem(b) => ms_to_ticks(b.hi),
+        Segment::Gpu(g) => {
+            ms_to_ticks(duration(g.work.hi, g.overhead.hi, g.alpha, gn.max(1), sm_model))
+        }
+    });
+    let mut out = [0.0f64; 5];
+    for i in 0..chain.len() {
+        let k = SegClass::of(chain.phase(i)).index();
+        out[k] = out[k].max(ticks_to_ms(chain.duration(i)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::simple_task;
+    use crate::sched::Phase;
+    use crate::telemetry::TelemetrySink;
+
+    #[test]
+    fn declared_bounds_match_the_wcet_chain() {
+        // simple_task: CL 2+2, ML 1+1, GPU (8·1.8−0.96)/2+0.96 = 7.68 at
+        // gn = 1 (the engine's pinned numbers).
+        let t = simple_task(0);
+        let b = declared_class_bounds(&t, 1, SmModel::Virtual);
+        assert!((b[SegClass::Pre.index()] - 2.0).abs() < 1e-9);
+        assert!((b[SegClass::H2d.index()] - 1.0).abs() < 1e-9);
+        assert!((b[SegClass::Gpu.index()] - 7.68).abs() < 1e-9);
+        assert!((b[SegClass::D2h.index()] - 1.0).abs() < 1e-9);
+        assert!((b[SegClass::Post.index()] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overshoot_and_undershoot_fire_with_margins() {
+        let t = simple_task(0);
+        let bounds = declared_class_bounds(&t, 1, SmModel::Virtual);
+        let det = DriftDetector { undershoot_margin: 0.5, min_samples: 4 };
+        let mut rec = Recorder::new();
+        for _ in 0..4 {
+            rec.on_phase(0, 0, Phase::Cpu(0), 2.0); // exactly declared: quiet
+            rec.on_phase(0, 0, Phase::Gpu(0), 7.68 * 1.5); // overshoot ×1.5
+            rec.on_phase(0, 0, Phase::H2d(0), 0.2); // undershoot (< 0.5)
+            rec.on_phase(0, 0, Phase::D2h(0), 0.9); // within margin: quiet
+        }
+        rec.on_phase(0, 0, Phase::Cpu(1), 100.0); // 1 sample < min: quiet
+        let events = det.detect(&rec, |_, _| bounds);
+        assert_eq!(events.len(), 2, "{events:?}");
+        let over = events.iter().find(|e| e.kind == DriftKind::Overshoot).unwrap();
+        assert_eq!(over.class, SegClass::Gpu);
+        assert!((over.ratio - 1.5).abs() < 1e-9);
+        let under = events.iter().find(|e| e.kind == DriftKind::Undershoot).unwrap();
+        assert_eq!(under.class, SegClass::H2d);
+    }
+
+    #[test]
+    fn exact_wcet_observations_are_quiet() {
+        // An executor pinned at WCET must not trigger drift: observed
+        // equals declared through the same tick quantization.
+        let t = simple_task(0);
+        let bounds = declared_class_bounds(&t, 2, SmModel::Virtual);
+        let det = DriftDetector { undershoot_margin: 0.9, min_samples: 1 };
+        let mut rec = Recorder::new();
+        rec.on_phase(0, 0, Phase::Cpu(0), bounds[0]);
+        rec.on_phase(0, 0, Phase::H2d(0), bounds[1]);
+        rec.on_phase(0, 0, Phase::Gpu(0), bounds[2]);
+        rec.on_phase(0, 0, Phase::D2h(0), bounds[3]);
+        rec.on_phase(0, 0, Phase::Cpu(1), bounds[4]);
+        assert!(det.detect(&rec, |_, _| bounds).is_empty());
+    }
+}

@@ -1,0 +1,345 @@
+//! Fixed-footprint log-scale histograms for latency/segment-time
+//! tracking (DESIGN.md §12).
+//!
+//! The serving metrics used to keep every sample in a `Vec<f64>` —
+//! unbounded memory on a long-running server.  A [`LogHistogram`] stores
+//! a constant 130 buckets (16 per decade over 8 decades, `[1 µs, 100 s)`
+//! in milliseconds, plus underflow/overflow) and exact min/max/sum
+//! aggregates, so p50/p95/p99/max come out within one bucket's relative
+//! width (×1.16) of the exact quantiles at O(1) memory and O(1) record
+//! cost.
+//!
+//! Quantiles follow the same convention as
+//! [`crate::util::stats::percentile_sorted`] — rank position
+//! `q·(n−1)` with linear interpolation between the neighbouring ranks —
+//! so the histogram estimate can be property-tested directly against
+//! [`Summary`]'s exact answer (`tests/telemetry.rs`).
+
+use crate::util::stats::Summary;
+
+/// Buckets per decade: relative bucket width `10^(1/16) ≈ 1.155`.
+const BUCKETS_PER_DECADE: usize = 16;
+/// Decades covered starting at [`LO_MS`]: `[1e-3, 1e5)` ms.
+const DECADES: usize = 8;
+const N_BUCKETS: usize = BUCKETS_PER_DECADE * DECADES;
+/// Lower edge of bucket 0, in milliseconds (1 µs).
+const LO_MS: f64 = 1e-3;
+
+/// A log-scale histogram over non-negative millisecond samples.
+///
+/// NaN and negative samples are counted in `dropped` and otherwise
+/// ignored; `+inf` lands in the overflow bucket (it cannot be binned)
+/// and poisons `mean`/`sd` but leaves counts and sub-overflow quantiles
+/// usable — the "inf guard" the metrics path relies on.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    buckets: [u64; N_BUCKETS],
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+    dropped: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: [0; N_BUCKETS],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+            dropped: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The guaranteed relative accuracy of [`Self::quantile`] against the
+    /// exact sample quantile, for samples inside the binned range: the
+    /// estimate `h` and the exact value `e` satisfy `h/e ∈ [1/w, w]`
+    /// with `w` this bucket-width ratio.
+    pub fn relative_width() -> f64 {
+        10f64.powf(1.0 / BUCKETS_PER_DECADE as f64)
+    }
+
+    /// Record one sample (milliseconds).
+    pub fn record(&mut self, ms: f64) {
+        if ms.is_nan() || ms < 0.0 {
+            self.dropped += 1;
+            return;
+        }
+        self.count += 1;
+        self.sum += ms;
+        self.sum_sq += ms * ms;
+        self.min = self.min.min(ms);
+        self.max = self.max.max(ms);
+        if ms < LO_MS {
+            self.underflow += 1;
+        } else {
+            let idx = ((ms / LO_MS).log10() * BUCKETS_PER_DECADE as f64).floor();
+            if idx >= N_BUCKETS as f64 {
+                self.overflow += 1; // incl. +inf, which has no finite bucket
+            } else {
+                self.buckets[(idx as usize).min(N_BUCKETS - 1)] += 1;
+            }
+        }
+    }
+
+    /// Fold another histogram into this one (used to aggregate per-task
+    /// telemetry across devices).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.count += other.count;
+        self.dropped += other.dropped;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Samples rejected as NaN/negative.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min_ms(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    pub fn max_ms(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    pub fn mean_ms(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.sum / self.count as f64)
+        }
+    }
+
+    /// The value the `k`-th smallest recorded sample (0-indexed) is
+    /// represented by: its bucket's geometric midpoint, clamped to the
+    /// exact observed `[min, max]`.
+    fn value_at_rank(&self, k: u64) -> f64 {
+        debug_assert!(k < self.count);
+        let mut seen = self.underflow;
+        if k < seen {
+            // Sub-range samples all collapse onto the exact minimum.
+            return self.min;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if k < seen {
+                let lo = LO_MS * 10f64.powf(i as f64 / BUCKETS_PER_DECADE as f64);
+                let hi = LO_MS * 10f64.powf((i + 1) as f64 / BUCKETS_PER_DECADE as f64);
+                return (lo * hi).sqrt().clamp(self.min, self.max);
+            }
+        }
+        // Overflow samples collapse onto the exact maximum.
+        self.max
+    }
+
+    /// Approximate quantile (`q ∈ [0, 1]`), `None` on an empty
+    /// histogram.  Same rank convention as `percentile_sorted`: position
+    /// `q·(n−1)`, linearly interpolated between the two bracketing
+    /// ranks' representative values.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        assert!((0.0..=1.0).contains(&q), "quantile {q} outside [0, 1]");
+        if self.count == 0 {
+            return None;
+        }
+        if self.count == 1 {
+            return Some(self.min); // single sample is exact
+        }
+        let pos = q * (self.count - 1) as f64;
+        let lo = pos.floor() as u64;
+        let frac = pos - lo as f64;
+        let a = self.value_at_rank(lo);
+        if frac == 0.0 {
+            return Some(a);
+        }
+        let b = self.value_at_rank(lo + 1);
+        Some(a * (1.0 - frac) + b * frac)
+    }
+
+    pub fn p50(&self) -> Option<f64> {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> Option<f64> {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> Option<f64> {
+        self.quantile(0.99)
+    }
+
+    /// A [`Summary`]-shaped view: `n`/`mean`/`sd`/`min`/`max` are exact
+    /// (modulo the one-pass variance), quantiles are bucketed estimates.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.count == 0 {
+            return None;
+        }
+        let n = self.count as f64;
+        let mean = self.sum / n;
+        let var = (self.sum_sq / n - mean * mean).max(0.0);
+        Some(Summary {
+            n: self.count as usize,
+            mean,
+            sd: var.sqrt(),
+            min: self.min,
+            p50: self.quantile(0.50).expect("non-empty"),
+            p95: self.quantile(0.95).expect("non-empty"),
+            p99: self.quantile(0.99).expect("non-empty"),
+            max: self.max,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_has_no_quantiles() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.summary(), None);
+        assert_eq!(h.min_ms(), None);
+        assert_eq!(h.max_ms(), None);
+    }
+
+    #[test]
+    fn single_sample_is_exact_everywhere() {
+        let mut h = LogHistogram::new();
+        h.record(3.7);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Some(3.7));
+        }
+        let s = h.summary().unwrap();
+        assert_eq!((s.n, s.min, s.max, s.mean), (1, 3.7, 3.7, 3.7));
+        assert_eq!(s.sd, 0.0);
+    }
+
+    #[test]
+    fn constant_samples_collapse_to_the_value() {
+        let mut h = LogHistogram::new();
+        for _ in 0..100 {
+            h.record(12.5);
+        }
+        // All in one bucket, clamped to [min, max] = [12.5, 12.5].
+        assert_eq!(h.quantile(0.5), Some(12.5));
+        assert_eq!(h.quantile(0.99), Some(12.5));
+        assert_eq!(h.summary().unwrap().sd, 0.0);
+    }
+
+    #[test]
+    fn quantiles_track_exact_within_bucket_width() {
+        let mut h = LogHistogram::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.37).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let w = LogHistogram::relative_width();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let exact = crate::util::stats::percentile_sorted(&sorted, q);
+            let est = h.quantile(q).unwrap();
+            let ratio = est / exact;
+            assert!(
+                ratio >= 1.0 / w - 1e-9 && ratio <= w + 1e-9,
+                "q={q}: est {est} vs exact {exact} (ratio {ratio})"
+            );
+        }
+    }
+
+    #[test]
+    fn nan_and_negative_are_dropped_not_counted() {
+        let mut h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(-1.0);
+        h.record(2.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.dropped(), 2);
+        assert_eq!(h.quantile(0.5), Some(2.0));
+    }
+
+    #[test]
+    fn infinity_lands_in_overflow_without_breaking_low_quantiles() {
+        let mut h = LogHistogram::new();
+        for _ in 0..99 {
+            h.record(1.0);
+        }
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max_ms(), Some(f64::INFINITY));
+        // p50 stays in the finite mass; p100 reports the inf max.
+        let p50 = h.quantile(0.5).unwrap();
+        assert!(p50.is_finite() && (p50 - 1.0).abs() < 0.2, "{p50}");
+        assert_eq!(h.quantile(1.0), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn sub_microsecond_samples_report_the_exact_min() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(0.0005);
+        h.record(5.0);
+        assert_eq!(h.quantile(0.0), Some(0.0));
+        assert_eq!(h.min_ms(), Some(0.0));
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn merge_is_sum_of_parts() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut whole = LogHistogram::new();
+        for i in 0..50 {
+            let v = 1.0 + i as f64;
+            a.record(v);
+            whole.record(v);
+        }
+        for i in 0..30 {
+            let v = 100.0 + i as f64;
+            b.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min_ms(), whole.min_ms());
+        assert_eq!(a.max_ms(), whole.max_ms());
+        assert_eq!(a.quantile(0.5), whole.quantile(0.5));
+        assert_eq!(a.quantile(0.99), whole.quantile(0.99));
+    }
+}

@@ -1,0 +1,97 @@
+//! Runtime telemetry and measurement-driven feedback (DESIGN.md §12).
+//!
+//! Production systems cannot trust static WCETs.  This module is the
+//! observability substrate that closes the loop the paper leaves open:
+//!
+//! * [`hist`] — fixed-footprint log-scale latency histograms
+//!   (p50/p95/p99/max without storing samples);
+//! * [`sink`] — the [`TelemetrySink`] hook the shared driver and the
+//!   wall-clock serving path report through, plus the standard
+//!   [`Recorder`];
+//! * [`drift`] — observed-vs-declared segment-time comparison emitting
+//!   typed [`DriftEvent`]s;
+//! * [`snapshot`] — the versioned JSON metrics snapshot every exporter
+//!   and the `--metrics-out` CLI flag share.
+//!
+//! The feedback consumers live where the state lives:
+//! [`crate::coordinator::AdmissionState::reinflate`] re-admits with
+//! drift-inflated WCETs through the warm cache escalation path, and
+//! [`crate::cluster::ClusterState::drain_degraded`] re-places apps off
+//! devices whose observed miss pressure crosses a threshold.
+
+pub mod drift;
+pub mod hist;
+pub mod sink;
+pub mod snapshot;
+
+pub use drift::{declared_class_bounds, DriftDetector, DriftEvent, DriftKind};
+pub use hist::LogHistogram;
+pub use sink::{Accum, NoopSink, Recorder, SegClass, TaskTelemetry, TelemetrySink};
+
+/// How much of the telemetry stack a run enables — the CLI axis
+/// (`--telemetry off|record|feedback`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TelemetryMode {
+    /// No sink: the zero-overhead pre-telemetry behaviour.
+    Off,
+    /// Record histograms/accumulators and export snapshots; no feedback.
+    Record,
+    /// Record, detect drift, and feed it back into admission/placement.
+    Feedback,
+}
+
+impl TelemetryMode {
+    /// Parse a CLI spelling; the error names the valid set.
+    pub fn parse(s: &str) -> Result<TelemetryMode, String> {
+        match s {
+            "off" => Ok(TelemetryMode::Off),
+            "record" => Ok(TelemetryMode::Record),
+            "feedback" => Ok(TelemetryMode::Feedback),
+            _ => Err(format!("unknown telemetry mode {s:?}; expected off, record or feedback")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TelemetryMode::Off => "off",
+            TelemetryMode::Record => "record",
+            TelemetryMode::Feedback => "feedback",
+        }
+    }
+
+    /// Does this mode record anything at all?
+    pub fn records(self) -> bool {
+        self != TelemetryMode::Off
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn telemetry_mode_parses_the_valid_set() {
+        assert_eq!(TelemetryMode::parse("off"), Ok(TelemetryMode::Off));
+        assert_eq!(TelemetryMode::parse("record"), Ok(TelemetryMode::Record));
+        assert_eq!(TelemetryMode::parse("feedback"), Ok(TelemetryMode::Feedback));
+        for (mode, name) in [
+            (TelemetryMode::Off, "off"),
+            (TelemetryMode::Record, "record"),
+            (TelemetryMode::Feedback, "feedback"),
+        ] {
+            assert_eq!(TelemetryMode::parse(mode.name()), Ok(mode));
+            assert_eq!(mode.name(), name);
+        }
+        assert!(!TelemetryMode::Off.records());
+        assert!(TelemetryMode::Feedback.records());
+    }
+
+    #[test]
+    fn telemetry_mode_parse_error_names_the_valid_set() {
+        let err = TelemetryMode::parse("on").unwrap_err();
+        assert!(err.contains("\"on\""), "{err}");
+        for valid in ["off", "record", "feedback"] {
+            assert!(err.contains(valid), "error must name {valid}: {err}");
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! The measurement hook every executor reports through (DESIGN.md §12).
+//!
+//! [`TelemetrySink`] is the contract between the drivers and the
+//! observability layer: the virtual-time driver
+//! ([`crate::sched::driver::run_with_sink`]) reports each completed
+//! phase's oracle-drawn duration and each job's arrival-anchored
+//! latency in (converted) milliseconds; the wall-clock serving path
+//! reports real measured durations at the same chain boundaries.  Sink
+//! calls happen strictly *after* the platform core has recorded its
+//! trace entry and touch no scheduler state, queue, or RNG — so a
+//! recording sink cannot perturb a schedule, and [`NoopSink`] keeps
+//! traces bit-identical to the pre-telemetry driver (pinned by
+//! `tests/telemetry.rs`).
+
+use crate::sched::{DeviceId, Phase};
+
+use super::hist::LogHistogram;
+
+/// The five segment classes of an RTGPU chain (`CL⁰ ML⁰ G ML¹ CL¹`),
+/// the granularity at which observed times are accumulated and drift is
+/// detected.  Multi-kernel chains fold onto the same five classes:
+/// every `Cpu(j>0)` phase is post-processing, every H2d/D2h copy its
+/// own class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegClass {
+    Pre = 0,
+    H2d = 1,
+    Gpu = 2,
+    D2h = 3,
+    Post = 4,
+}
+
+impl SegClass {
+    pub const ALL: [SegClass; 5] =
+        [SegClass::Pre, SegClass::H2d, SegClass::Gpu, SegClass::D2h, SegClass::Post];
+
+    /// Which class a concrete chain phase belongs to.
+    pub fn of(phase: Phase) -> SegClass {
+        match phase {
+            Phase::Cpu(0) => SegClass::Pre,
+            Phase::Cpu(_) => SegClass::Post,
+            Phase::H2d(_) => SegClass::H2d,
+            Phase::Gpu(_) => SegClass::Gpu,
+            Phase::D2h(_) => SegClass::D2h,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SegClass::Pre => "pre",
+            SegClass::H2d => "h2d",
+            SegClass::Gpu => "gpu",
+            SegClass::D2h => "d2h",
+            SegClass::Post => "post",
+        }
+    }
+}
+
+/// Observer for driver-level completions.  Both hooks default to no-ops
+/// so sinks implement only what they need; implementations must not
+/// assume any call ordering beyond "phases of a job precede its job
+/// completion".
+pub trait TelemetrySink {
+    /// A phase of `task` on `dev` completed after `observed_ms` of
+    /// service time (virtual drivers: the oracle-drawn duration;
+    /// wall-clock: the measured duration).
+    fn on_phase(&mut self, _dev: DeviceId, _task: usize, _phase: Phase, _observed_ms: f64) {}
+
+    /// A job of `task` on `dev` completed with arrival-anchored
+    /// end-to-end `latency_ms`, `missed` iff past its deadline.
+    fn on_job(&mut self, _dev: DeviceId, _task: usize, _latency_ms: f64, _missed: bool) {}
+}
+
+/// The do-nothing sink [`crate::sched::driver::run`] threads through —
+/// the zero-overhead default every pre-telemetry call site resolves to.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopSink;
+
+impl TelemetrySink for NoopSink {}
+
+/// Constant-size running aggregate of one segment class's observed
+/// times.
+#[derive(Debug, Clone, Copy)]
+pub struct Accum {
+    pub count: u64,
+    pub sum_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl Default for Accum {
+    fn default() -> Self {
+        Accum { count: 0, sum_ms: 0.0, min_ms: f64::INFINITY, max_ms: f64::NEG_INFINITY }
+    }
+}
+
+impl Accum {
+    pub fn record(&mut self, ms: f64) {
+        if ms.is_nan() {
+            return;
+        }
+        self.count += 1;
+        self.sum_ms += ms;
+        self.min_ms = self.min_ms.min(ms);
+        self.max_ms = self.max_ms.max(ms);
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+}
+
+/// Everything recorded about one task on one device.
+#[derive(Debug, Clone, Default)]
+pub struct TaskTelemetry {
+    /// End-to-end latency distribution (ms), O(1) memory.
+    pub latency: LogHistogram,
+    /// Observed service time per segment class, indexed by
+    /// [`SegClass::index`].
+    pub segments: [Accum; 5],
+    pub completed: u64,
+    pub missed: u64,
+}
+
+impl TaskTelemetry {
+    pub fn new() -> TaskTelemetry {
+        TaskTelemetry::default()
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.missed as f64 / self.completed as f64
+        }
+    }
+}
+
+/// The standard recording sink: per-device, per-task
+/// [`TaskTelemetry`], grown on demand so one recorder serves any
+/// device/task shape.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    devices: Vec<Vec<TaskTelemetry>>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    fn slot(&mut self, dev: DeviceId, task: usize) -> &mut TaskTelemetry {
+        if self.devices.len() <= dev {
+            self.devices.resize_with(dev + 1, Vec::new);
+        }
+        let tasks = &mut self.devices[dev];
+        if tasks.len() <= task {
+            tasks.resize_with(task + 1, TaskTelemetry::new);
+        }
+        &mut tasks[task]
+    }
+
+    /// All recorded telemetry, `[device][task]`.
+    pub fn devices(&self) -> &[Vec<TaskTelemetry>] {
+        &self.devices
+    }
+
+    pub fn task(&self, dev: DeviceId, task: usize) -> Option<&TaskTelemetry> {
+        self.devices.get(dev)?.get(task)
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.devices.iter().flatten().map(|t| t.completed).sum()
+    }
+
+    pub fn total_missed(&self) -> u64 {
+        self.devices.iter().flatten().map(|t| t.missed).sum()
+    }
+
+    /// Observed miss pressure on one device: missed / completed over
+    /// every task it hosts (0.0 before anything completed).  This is
+    /// the signal [`crate::cluster::ClusterState::drain_degraded`]
+    /// thresholds on.
+    pub fn device_miss_rate(&self, dev: DeviceId) -> f64 {
+        let Some(tasks) = self.devices.get(dev) else {
+            return 0.0;
+        };
+        let completed: u64 = tasks.iter().map(|t| t.completed).sum();
+        let missed: u64 = tasks.iter().map(|t| t.missed).sum();
+        if completed == 0 {
+            0.0
+        } else {
+            missed as f64 / completed as f64
+        }
+    }
+}
+
+impl TelemetrySink for Recorder {
+    fn on_phase(&mut self, dev: DeviceId, task: usize, phase: Phase, observed_ms: f64) {
+        let class = SegClass::of(phase);
+        self.slot(dev, task).segments[class.index()].record(observed_ms);
+    }
+
+    fn on_job(&mut self, dev: DeviceId, task: usize, latency_ms: f64, missed: bool) {
+        let t = self.slot(dev, task);
+        t.latency.record(latency_ms);
+        t.completed += 1;
+        if missed {
+            t.missed += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seg_class_maps_the_five_phase_chain() {
+        assert_eq!(SegClass::of(Phase::Cpu(0)), SegClass::Pre);
+        assert_eq!(SegClass::of(Phase::H2d(0)), SegClass::H2d);
+        assert_eq!(SegClass::of(Phase::Gpu(0)), SegClass::Gpu);
+        assert_eq!(SegClass::of(Phase::D2h(1)), SegClass::D2h);
+        assert_eq!(SegClass::of(Phase::Cpu(1)), SegClass::Post);
+        assert_eq!(SegClass::of(Phase::Cpu(3)), SegClass::Post);
+        for (i, c) in SegClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+        }
+    }
+
+    #[test]
+    fn recorder_accumulates_per_device_per_task() {
+        let mut r = Recorder::new();
+        r.on_phase(1, 2, Phase::Gpu(0), 4.0);
+        r.on_phase(1, 2, Phase::Gpu(0), 6.0);
+        r.on_job(1, 2, 11.0, false);
+        r.on_job(1, 2, 25.0, true);
+        let t = r.task(1, 2).unwrap();
+        let gpu = &t.segments[SegClass::Gpu.index()];
+        assert_eq!(gpu.count, 2);
+        assert_eq!(gpu.max_ms, 6.0);
+        assert_eq!(gpu.mean_ms(), 5.0);
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.missed, 1);
+        assert_eq!(t.latency.count(), 2);
+        assert_eq!(r.device_miss_rate(1), 0.5);
+        assert_eq!(r.device_miss_rate(0), 0.0, "untouched device");
+        assert_eq!(r.device_miss_rate(7), 0.0, "unknown device");
+        assert!(r.task(0, 0).is_none() || r.task(0, 0).unwrap().completed == 0);
+    }
+}

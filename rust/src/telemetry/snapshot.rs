@@ -1,0 +1,259 @@
+//! Versioned JSON metrics snapshots (DESIGN.md §12).
+//!
+//! One schema serves every exporter — the wall-clock
+//! [`crate::coordinator::ServeReport`], the virtual-time recorders of
+//! `serve_virtual` / `ClusterServe`, and the `rtgpu … --metrics-out`
+//! CLI flag.  A snapshot is a JSON object with `version` (integer,
+//! currently 1) and `kind` (`"rtgpu-metrics"`) plus any of:
+//!
+//! * `"apps"` — per-application serving stats (name, released,
+//!   completed, misses, overdue, miss_rate, latency histogram summary);
+//! * `"devices"` — per-device per-task recorder telemetry (latency
+//!   histogram summary plus per-segment-class accumulators);
+//! * `"drift"` — detected [`DriftEvent`](super::DriftEvent)s;
+//! * free-form scalar fields (`wall_s`, `throughput_rps`, …).
+//!
+//! [`validate`] is the schema check both the CLI round-trip test and
+//! downstream consumers share.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::drift::DriftEvent;
+use super::hist::LogHistogram;
+use super::sink::{Recorder, SegClass, TaskTelemetry};
+
+/// Current snapshot schema version.
+pub const SNAPSHOT_VERSION: i64 = 1;
+/// The `kind` tag every snapshot carries.
+pub const SNAPSHOT_KIND: &str = "rtgpu-metrics";
+
+/// Stamp `version` + `kind` onto exporter-provided fields.
+pub fn wrap(mut fields: BTreeMap<String, Json>) -> Json {
+    fields.insert("version".into(), Json::Num(SNAPSHOT_VERSION as f64));
+    fields.insert("kind".into(), Json::Str(SNAPSHOT_KIND.into()));
+    Json::Obj(fields)
+}
+
+/// A histogram's JSON summary: count plus the quantile family (0.0 for
+/// an empty histogram, so consumers never see missing keys).
+pub fn hist_json(h: &LogHistogram) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("count".into(), Json::Num(h.count() as f64));
+    m.insert("dropped".into(), Json::Num(h.dropped() as f64));
+    m.insert("mean_ms".into(), Json::Num(h.mean_ms().unwrap_or(0.0)));
+    m.insert("p50_ms".into(), Json::Num(h.p50().unwrap_or(0.0)));
+    m.insert("p95_ms".into(), Json::Num(h.p95().unwrap_or(0.0)));
+    m.insert("p99_ms".into(), Json::Num(h.p99().unwrap_or(0.0)));
+    m.insert("min_ms".into(), Json::Num(h.min_ms().unwrap_or(0.0)));
+    m.insert("max_ms".into(), Json::Num(h.max_ms().unwrap_or(0.0)));
+    Json::Obj(m)
+}
+
+fn task_json(task: usize, tt: &TaskTelemetry) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("task".into(), Json::Num(task as f64));
+    m.insert("completed".into(), Json::Num(tt.completed as f64));
+    m.insert("missed".into(), Json::Num(tt.missed as f64));
+    m.insert("miss_rate".into(), Json::Num(tt.miss_rate()));
+    m.insert("latency".into(), hist_json(&tt.latency));
+    let mut segs = BTreeMap::new();
+    for class in SegClass::ALL {
+        let a = &tt.segments[class.index()];
+        if a.count == 0 {
+            continue;
+        }
+        let mut s = BTreeMap::new();
+        s.insert("count".into(), Json::Num(a.count as f64));
+        s.insert("mean_ms".into(), Json::Num(a.mean_ms()));
+        s.insert("min_ms".into(), Json::Num(a.min_ms));
+        s.insert("max_ms".into(), Json::Num(a.max_ms));
+        segs.insert(class.name().to_string(), Json::Obj(s));
+    }
+    m.insert("segments".into(), Json::Obj(segs));
+    Json::Obj(m)
+}
+
+/// A recorder's `"devices"` array.
+pub fn recorder_json(rec: &Recorder) -> Json {
+    let devices = rec
+        .devices()
+        .iter()
+        .enumerate()
+        .map(|(dev, tasks)| {
+            let mut m = BTreeMap::new();
+            m.insert("device".into(), Json::Num(dev as f64));
+            m.insert("miss_rate".into(), Json::Num(rec.device_miss_rate(dev)));
+            m.insert(
+                "tasks".into(),
+                Json::Arr(tasks.iter().enumerate().map(|(t, tt)| task_json(t, tt)).collect()),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    Json::Arr(devices)
+}
+
+/// The `"drift"` array for detected events.
+pub fn drift_json(events: &[DriftEvent]) -> Json {
+    Json::Arr(
+        events
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("device".into(), Json::Num(e.dev as f64));
+                m.insert("task".into(), Json::Num(e.task as f64));
+                m.insert("class".into(), Json::Str(e.class.name().into()));
+                m.insert(
+                    "kind".into(),
+                    Json::Str(
+                        match e.kind {
+                            super::drift::DriftKind::Overshoot => "overshoot",
+                            super::drift::DriftKind::Undershoot => "undershoot",
+                        }
+                        .into(),
+                    ),
+                );
+                m.insert("declared_ms".into(), Json::Num(e.declared_ms));
+                m.insert("observed_ms".into(), Json::Num(e.observed_ms));
+                m.insert("ratio".into(), Json::Num(e.ratio));
+                Json::Obj(m)
+            })
+            .collect(),
+    )
+}
+
+fn require_num(obj: &Json, key: &str, at: &str) -> Result<(), String> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .map(|_| ())
+        .ok_or_else(|| format!("{at}: missing numeric field {key:?}"))
+}
+
+fn validate_hist(obj: &Json, at: &str) -> Result<(), String> {
+    let h = obj.get("latency").ok_or_else(|| format!("{at}: missing \"latency\""))?;
+    for key in ["count", "p50_ms", "p95_ms", "p99_ms", "max_ms"] {
+        require_num(h, key, &format!("{at}.latency"))?;
+    }
+    Ok(())
+}
+
+/// Schema check for a metrics snapshot — the contract the CLI
+/// round-trip test (`tests/telemetry.rs`) and downstream consumers pin.
+pub fn validate(j: &Json) -> Result<(), String> {
+    let version = j
+        .get("version")
+        .and_then(Json::as_i64)
+        .ok_or_else(|| "missing numeric \"version\"".to_string())?;
+    if version != SNAPSHOT_VERSION {
+        return Err(format!("unsupported snapshot version {version} (expected {SNAPSHOT_VERSION})"));
+    }
+    if j.get("kind").and_then(Json::as_str) != Some(SNAPSHOT_KIND) {
+        return Err(format!("missing or wrong \"kind\" (expected {SNAPSHOT_KIND:?})"));
+    }
+    if let Some(apps) = j.get("apps") {
+        let arr = apps.as_array().ok_or_else(|| "\"apps\" must be an array".to_string())?;
+        for (i, a) in arr.iter().enumerate() {
+            let at = format!("apps[{i}]");
+            a.get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{at}: missing string \"name\""))?;
+            for key in ["released", "completed", "misses", "overdue", "miss_rate"] {
+                require_num(a, key, &at)?;
+            }
+            validate_hist(a, &at)?;
+        }
+    }
+    if let Some(devices) = j.get("devices") {
+        let arr = devices.as_array().ok_or_else(|| "\"devices\" must be an array".to_string())?;
+        for (i, d) in arr.iter().enumerate() {
+            let at = format!("devices[{i}]");
+            require_num(d, "device", &at)?;
+            require_num(d, "miss_rate", &at)?;
+            let tasks = d
+                .get("tasks")
+                .and_then(Json::as_array)
+                .ok_or_else(|| format!("{at}: missing \"tasks\" array"))?;
+            for (k, t) in tasks.iter().enumerate() {
+                let at = format!("{at}.tasks[{k}]");
+                for key in ["task", "completed", "missed", "miss_rate"] {
+                    require_num(t, key, &at)?;
+                }
+                validate_hist(t, &at)?;
+                t.get("segments")
+                    .and_then(|s| match s {
+                        Json::Obj(_) => Some(()),
+                        _ => None,
+                    })
+                    .ok_or_else(|| format!("{at}: missing \"segments\" object"))?;
+            }
+        }
+    }
+    if let Some(drift) = j.get("drift") {
+        let arr = drift.as_array().ok_or_else(|| "\"drift\" must be an array".to_string())?;
+        for (i, e) in arr.iter().enumerate() {
+            let at = format!("drift[{i}]");
+            for key in ["device", "task", "declared_ms", "observed_ms", "ratio"] {
+                require_num(e, key, &at)?;
+            }
+            for key in ["class", "kind"] {
+                e.get(key)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("{at}: missing string {key:?}"))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Phase;
+    use crate::telemetry::TelemetrySink;
+
+    fn sample_recorder() -> Recorder {
+        let mut rec = Recorder::new();
+        for i in 0..20 {
+            rec.on_phase(0, 0, Phase::Cpu(0), 1.0 + 0.01 * i as f64);
+            rec.on_phase(0, 0, Phase::Gpu(0), 5.0);
+            rec.on_job(0, 0, 10.0 + i as f64, i % 5 == 0);
+        }
+        rec
+    }
+
+    #[test]
+    fn recorder_snapshot_validates_and_round_trips() {
+        let rec = sample_recorder();
+        let mut fields = BTreeMap::new();
+        fields.insert("devices".into(), recorder_json(&rec));
+        let snap = wrap(fields);
+        validate(&snap).unwrap();
+        // Round-trip through the serializer and parser.
+        let reparsed = Json::parse(&snap.to_string()).unwrap();
+        validate(&reparsed).unwrap();
+        assert_eq!(reparsed, snap);
+        let dev0 = &reparsed.get("devices").unwrap().as_array().unwrap()[0];
+        let t0 = &dev0.get("tasks").unwrap().as_array().unwrap()[0];
+        assert_eq!(t0.get("completed").unwrap().as_usize(), Some(20));
+        assert!(t0.get("segments").unwrap().get("gpu").is_some());
+    }
+
+    #[test]
+    fn validate_rejects_bad_snapshots() {
+        let ok = wrap(BTreeMap::new());
+        validate(&ok).unwrap();
+        for bad in [
+            r#"{"kind":"rtgpu-metrics"}"#,
+            r#"{"version":2,"kind":"rtgpu-metrics"}"#,
+            r#"{"version":1,"kind":"other"}"#,
+            r#"{"version":1,"kind":"rtgpu-metrics","apps":{}}"#,
+            r#"{"version":1,"kind":"rtgpu-metrics","apps":[{"name":"a"}]}"#,
+            r#"{"version":1,"kind":"rtgpu-metrics","devices":[{"device":0}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(validate(&j).is_err(), "accepted {bad}");
+        }
+    }
+}

@@ -83,7 +83,7 @@ fn serving_completes_requests_and_reports_latency() {
 
     assert!(out.total_completed() >= 10, "only {} completed", out.total_completed());
     for app in &out.per_app {
-        assert_eq!(app.completed, app.latencies_ms.len());
+        assert_eq!(app.completed as u64, app.latency.count());
         assert!(app.released >= app.completed);
         let s = app.latency_summary().expect("has samples");
         assert!(s.min > 0.0);

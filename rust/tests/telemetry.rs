@@ -1,0 +1,218 @@
+//! Telemetry-layer guarantees (DESIGN.md §12):
+//!
+//! 1. the bucketed histogram's quantiles track the exact order
+//!    statistics within one bucket's relative width (property test);
+//! 2. a recording sink only *observes* — traces and results are
+//!    bit-identical to the un-instrumented drivers, single-device and
+//!    fleet, federated and preemptive, periodic and sporadic;
+//! 3. an exact-WCET run is drift-quiet while an inflated run raises
+//!    overshoot events at the injected ratio;
+//! 4. the CLI-shaped metrics snapshot round-trips through the schema
+//!    check.
+
+use std::collections::BTreeMap;
+
+use rtgpu::coordinator::{serve_virtual_policy, serve_virtual_telemetry, ClusterServe, VirtualTask};
+use rtgpu::gen::{generate_taskset, GenConfig};
+use rtgpu::model::{testing, CpuTopology, RtTask, TaskSet};
+use rtgpu::sched::{ArrivalSpec, Chain, GpuPolicyKind};
+use rtgpu::sim::{simulate, simulate_telemetry, ExecModel, SimConfig};
+use rtgpu::telemetry::snapshot::{drift_json, recorder_json, validate, wrap};
+use rtgpu::telemetry::{
+    declared_class_bounds, DriftDetector, DriftKind, LogHistogram, Recorder, SegClass,
+};
+use rtgpu::util::json::Json;
+use rtgpu::util::prop;
+use rtgpu::util::rng::Pcg;
+use rtgpu::util::stats::percentile_sorted;
+
+/// The `CL0 ML0 G0 ML1 CL1` two-subtask task the model layer's unit
+/// tests use, with a configurable deadline/period.
+fn two_subtask_task(id: usize, deadline: f64, period: f64) -> RtTask {
+    RtTask { deadline, period, ..testing::simple_task(id) }
+}
+
+#[test]
+fn bucketed_quantiles_track_exact_order_statistics() {
+    // The histogram promises h/e ∈ [1/w, w] for samples inside the
+    // binned range [1e-3, 1e4] ms; spread draws log-uniformly so every
+    // decade is exercised.
+    let w = LogHistogram::relative_width();
+    prop::check("hist_vs_exact_quantiles", 0x7E1E, 60, |g| {
+        let n = g.int(1, 300).max(1);
+        let mut h = LogHistogram::new();
+        let mut xs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = 10f64.powf(g.float(-3.0, 4.0));
+            h.record(x);
+            xs.push(x);
+        }
+        xs.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let exact = percentile_sorted(&xs, q);
+            let est = h.quantile(q).expect("non-empty");
+            let ratio = est / exact;
+            if !(ratio >= 1.0 / w - 1e-9 && ratio <= w + 1e-9) {
+                return Err(format!(
+                    "q={q} over n={n}: estimate {est} vs exact {exact} (ratio {ratio})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn recording_sink_keeps_sim_results_identical() {
+    // The instrumented entry point must be the plain simulator plus a
+    // pure observer — identical stats, identical event count.
+    let mut rng = Pcg::new(7);
+    let ts = generate_taskset(&mut rng, &GenConfig::default().with_sporadic(0.25), 0.8);
+    let alloc: Vec<usize> =
+        ts.tasks.iter().map(|t| if t.gpu.is_empty() { 0 } else { 2 }).collect();
+    let cfg = SimConfig {
+        horizon_ms: Some(300.0),
+        stop_on_first_miss: false,
+        ..SimConfig::acceptance(9)
+    };
+    let plain = simulate(&ts, &alloc, &cfg);
+    let mut rec = Recorder::new();
+    let wired = simulate_telemetry(&ts, &alloc, &cfg, &mut rec);
+    assert_eq!(plain.total_misses, wired.total_misses);
+    assert_eq!(plain.events_processed, wired.events_processed);
+    assert_eq!(plain.schedulable, wired.schedulable);
+    for (a, b) in plain.per_task.iter().zip(&wired.per_task) {
+        assert_eq!((a.released, a.completed, a.misses), (b.released, b.completed, b.misses));
+        assert_eq!(a.max_response_ms, b.max_response_ms);
+    }
+    // …and the recorder really recorded the run.
+    let completed: usize = plain.per_task.iter().map(|s| s.completed).sum();
+    assert!(completed > 0, "degenerate run");
+    assert_eq!(rec.total_completed(), completed as u64);
+    let misses: usize = plain.per_task.iter().map(|s| s.misses).sum();
+    assert_eq!(rec.total_missed(), misses as u64);
+}
+
+#[test]
+fn recording_sink_keeps_virtual_serve_traces_identical() {
+    let tasks = [
+        VirtualTask::periodic(100, 90),
+        VirtualTask { period: 150, deadline: 140, arrival: ArrivalSpec::Periodic },
+        VirtualTask {
+            period: 200,
+            deadline: 200,
+            arrival: ArrivalSpec::Sporadic { min_separation: 200, jitter: 30 },
+        },
+    ];
+    for policy in [GpuPolicyKind::Federated, GpuPolicyKind::PreemptivePriority] {
+        let chain = |i: usize| Chain::five_phase(5, 7, 11 + i as u64, 7, 5);
+        let plain = serve_virtual_policy(&tasks, 1000, policy, 42, chain);
+        let mut rec = Recorder::new();
+        let wired = serve_virtual_telemetry(&tasks, 1000, policy, 42, chain, &mut rec);
+        assert_eq!(plain, wired, "recording sink perturbed the {policy:?} trace");
+        assert!(rec.total_completed() > 0, "nothing recorded under {policy:?}");
+        // Virtual serving is single-device: everything on device 0.
+        assert_eq!(rec.devices().len(), 1);
+    }
+}
+
+#[test]
+fn recording_sink_keeps_fleet_traces_identical() {
+    let router = ClusterServe::new(CpuTopology::Shared, vec![0, 1, 0], 2);
+    let tasks = [
+        VirtualTask::periodic(100, 80),
+        VirtualTask::periodic(120, 110),
+        VirtualTask::periodic(160, 160),
+    ];
+    let chain = |i: usize| Chain::five_phase(4, 6, 10 + 2 * i as u64, 6, 4);
+    let plain = router.serve_virtual(&tasks, 800, 5, chain);
+    let mut rec = Recorder::new();
+    let wired = router.serve_virtual_telemetry(&tasks, 800, 5, chain, &mut rec);
+    assert_eq!(plain, wired, "recording sink perturbed the fleet traces");
+    // Both devices reported through the sink, keyed by fleet device id.
+    assert!(rec.task(0, 0).is_some_and(|t| t.completed > 0));
+    assert!(rec.task(1, 0).is_some_and(|t| t.completed > 0));
+}
+
+#[test]
+fn exact_wcet_run_is_drift_quiet() {
+    // declared_class_bounds goes through the same ms→tick quantization
+    // the driver reports, so replaying the declared WCETs raises no
+    // events — neither overshoot nor spurious undershoot.
+    let ts = TaskSet::new_deadline_monotonic(vec![two_subtask_task(0, 50.0, 60.0)]);
+    let alloc = vec![2usize];
+    let cfg = SimConfig { stop_on_first_miss: false, ..SimConfig::acceptance(3) };
+    let mut rec = Recorder::new();
+    simulate_telemetry(&ts, &alloc, &cfg, &mut rec);
+    let t = rec.task(0, 0).expect("task ran");
+    assert!(t.completed >= 8, "need min_samples jobs, got {}", t.completed);
+    let opts = rtgpu::analysis::RtgpuOpts::default();
+    let events = DriftDetector::default().detect(&rec, |_, task| {
+        declared_class_bounds(&ts.tasks[task], alloc[task], opts.sm_model)
+    });
+    assert!(events.is_empty(), "WCET replay must be drift-quiet: {events:?}");
+}
+
+#[test]
+fn injected_drift_raises_overshoot_at_the_injected_ratio() {
+    let ts = TaskSet::new_deadline_monotonic(vec![two_subtask_task(0, 50.0, 60.0)]);
+    let alloc = vec![2usize];
+    let cfg = SimConfig {
+        exec: ExecModel::Drift { factor: 2.0 },
+        stop_on_first_miss: false,
+        ..SimConfig::acceptance(3)
+    };
+    let mut rec = Recorder::new();
+    simulate_telemetry(&ts, &alloc, &cfg, &mut rec);
+    let opts = rtgpu::analysis::RtgpuOpts::default();
+    let events = DriftDetector::default().detect(&rec, |_, task| {
+        declared_class_bounds(&ts.tasks[task], alloc[task], opts.sm_model)
+    });
+    let overshoots: Vec<_> =
+        events.iter().filter(|e| e.kind == DriftKind::Overshoot).collect();
+    assert!(!overshoots.is_empty(), "×2 drift must overshoot: {events:?}");
+    // Every class drifted by exactly the factor (modulo tick rounding).
+    for e in &overshoots {
+        assert!(
+            (e.ratio - 2.0).abs() < 0.05,
+            "{:?} ratio {} should be ≈2.0",
+            e.class,
+            e.ratio
+        );
+        assert!(e.observed_ms > e.declared_ms);
+    }
+    // All five chain classes exceeded their declared bound.
+    assert_eq!(overshoots.len(), SegClass::ALL.len());
+}
+
+#[test]
+fn cli_shaped_snapshot_round_trips_through_the_schema() {
+    // The exact snapshot `rtgpu admit --metrics-out` writes: recorded
+    // devices + drift events + the injected factor, under wrap().
+    let ts = TaskSet::new_deadline_monotonic(vec![
+        two_subtask_task(0, 50.0, 60.0),
+        two_subtask_task(1, 80.0, 90.0),
+    ]);
+    let alloc = vec![2usize, 2];
+    let cfg = SimConfig {
+        exec: ExecModel::Drift { factor: 1.5 },
+        stop_on_first_miss: false,
+        ..SimConfig::acceptance(11)
+    };
+    let mut rec = Recorder::new();
+    simulate_telemetry(&ts, &alloc, &cfg, &mut rec);
+    let opts = rtgpu::analysis::RtgpuOpts::default();
+    let events = DriftDetector::default().detect(&rec, |_, task| {
+        declared_class_bounds(&ts.tasks[task], alloc[task], opts.sm_model)
+    });
+    assert!(!events.is_empty(), "×1.5 drift must be detected");
+
+    let mut fields = BTreeMap::new();
+    fields.insert("devices".into(), recorder_json(&rec));
+    fields.insert("drift".into(), drift_json(&events));
+    fields.insert("drift_factor".into(), Json::Num(1.5));
+    let snap = wrap(fields);
+    validate(&snap).expect("snapshot obeys the schema");
+    let reparsed = Json::parse(&snap.to_string()).expect("snapshot is parseable JSON");
+    validate(&reparsed).expect("round-tripped snapshot still validates");
+}
