@@ -1,8 +1,9 @@
-//! Acceptance-ratio sweep of the two GPU dispatch policies: federated
-//! virtual-SM partitioning (paper §5.2, Algorithm 2) vs the GCAPS-style
-//! preemptive-priority whole-device claim (DESIGN.md §9) — plus a
-//! soundness spot-check that every preemptive-admitted set survives a
-//! worst-case run of the shared driver under that policy.
+//! Acceptance-ratio sweep of the GPU dispatch policies: federated
+//! virtual-SM partitioning (paper §5.2, Algorithm 2) vs the whole-device
+//! claims — GCAPS-style preemptive-priority, EDF, and least-laxity
+//! (DESIGN.md §9, §13) — plus a soundness spot-check that every
+//! whole-device-admitted set survives a worst-case run of the shared
+//! driver under its policy.
 //!
 //! ```bash
 //! cargo run --release --example policy_compare -- --sets 20 --sms 4
@@ -42,7 +43,7 @@ fn main() -> Result<()> {
                 .filter(|_| {
                     let ts = generate_taskset(&mut rng, &cfg, util);
                     let v = schedule_gpu_policy(&ts, gn, policy, &opts, Search::Grid);
-                    if v.schedulable && policy == GpuPolicyKind::PreemptivePriority {
+                    if v.schedulable && policy.whole_device() {
                         // Admitted ⇒ no deadline miss under the policy's
                         // own worst-case execution (the property
                         // tests/policy_parity.rs checks at scale).
@@ -52,7 +53,8 @@ fn main() -> Result<()> {
                         let r = simulate(&ts, &alloc, &sim_cfg);
                         assert!(
                             r.schedulable,
-                            "preemptive bound unsound: {} misses",
+                            "{} bound unsound: {} misses",
+                            policy.name(),
                             r.total_misses
                         );
                         validated += 1;
@@ -67,7 +69,7 @@ fn main() -> Result<()> {
     let label = format!("policy_compare_gn{gn}");
     println!("--- {label} (acceptance over {sets} sets, {tasks} apps, {gn} SMs)");
     print!("{}", table(&utils, &series, "util"));
-    println!("{validated} preemptive-admitted sets validated miss-free in the driver");
+    println!("{validated} whole-device-admitted sets validated miss-free in the driver");
     write_csv(&results_dir().join(format!("{label}.csv")), "util", &utils, &series)?;
     println!("CSV written to {:?}", results_dir());
     Ok(())

@@ -160,4 +160,14 @@ fn main() {
     // on machine variance): warm must be ≥5× faster than cold.
     let bar = if speedup >= 5.0 { "PASS" } else { "BELOW BAR" };
     println!("acceptance bar (warm ≥5× cold): {bar}");
+
+    // --- reinflate: the drift-storm path ------------------------------
+    // Every live app named at once (factor 1.0 keeps the model fixed so
+    // iterations don't compound): survivor filtering is a HashSet lookup
+    // per live key — the old Vec::contains scan made a full-fleet storm
+    // O(live²) — followed by the cache purge and a warm re-decision.
+    let factors: Vec<(u64, f64)> = (0..state.len() as u64).map(|k| (k, 1.0)).collect();
+    println!("{}", bench("admission_reinflate_all_apps_storm", || {
+        black_box(state.reinflate(black_box(&factors)));
+    }).row());
 }

@@ -1,0 +1,279 @@
+//! Schedulability bound for the *dynamic* whole-device GPU policies —
+//! EDF and least-laxity (DESIGN.md §13).
+//!
+//! Under [`crate::sched::GpuPolicyKind::Edf`] and
+//! [`crate::sched::GpuPolicyKind::LeastLaxity`] the device is not
+//! partitioned: the most urgent ready kernel claims **all** `2·GN`
+//! virtual SMs, urgency is re-evaluated at every segment boundary, and a
+//! running segment is never cancelled.  Unlike the static-priority bound
+//! ([`super::preemptive::schedule_preemptive`]), no task is "above" or
+//! "below" another — which job wins a dispatch point depends on absolute
+//! deadlines (or laxities) at run time, so the analysis must charge
+//! *every* other task as potential interference:
+//!
+//! `R_k = C_k + B_k + Σ_{i≠k} ⌈(R_k + D_i)/T_i⌉ · C_i`
+//!
+//! where `C_i` is task `i`'s total worst-case demand across the three
+//! stations (GPU segments at the full device width, Lemma 5.1 with
+//! `gn = GN`) and `B_k` charges one maximal *other-task* segment per own
+//! segment on each non-preemptive station (any task's in-flight copy or
+//! kernel can block `k` once, whatever the urgency order says).  Every
+//! unit of time a job of `k` spends released-but-unfinished is its own
+//! execution, one of those blocking segments, or another task's job
+//! executing on some station; all three are counted regardless of the
+//! dispatch order, so one recurrence is sound for both urgency orders —
+//! it is the static bound with the interference sum widened from `i < k`
+//! to `i ≠ k`.  The price of run-time flexibility is exactly that wider
+//! sum: the dynamic bound never admits a set the static one rejects for
+//! the top-priority task, but it is *order-free* — admission does not
+//! depend on a priority assignment, matching policies whose dispatch
+//! ignores static priorities.  `prop_edf_admitted_never_misses` /
+//! `prop_least_laxity_admitted_never_misses` in `tests/policy_parity.rs`
+//! check `admitted ⇒ no deadline miss` against worst-case driver runs,
+//! under periodic and jittered sporadic arrivals.
+//!
+//! Release jitter and constrained deadlines are handled exactly as in
+//! the static bound: the fixed point runs in a window of `D − J` and the
+//! reported bound regains `J`; sets with `D > T` are rejected
+//! (conservative, not wrong — job-level FIFO keeps one job of each task
+//! in flight, which the carry-in term presumes).
+
+use crate::model::TaskSet;
+use crate::sched::GpuPolicyKind;
+
+use super::fixpoint;
+use super::gpu::gpu_response;
+use super::preemptive::schedule_preemptive;
+use super::rtgpu::{RtgpuOpts, ScheduleResult};
+
+/// One task's worst-case demand under the whole-device claim (the
+/// dynamic twin of the static bound's internal `Demand`).
+#[derive(Debug, Clone)]
+struct Demand {
+    total: f64,
+    max_bus_seg: f64,
+    max_gpu_seg: f64,
+    n_bus: usize,
+    n_gpu: usize,
+    period: f64,
+    deadline: f64,
+    jitter: f64,
+}
+
+fn demand(task: &crate::model::RtTask, gn_total: usize, opts: &RtgpuOpts) -> Demand {
+    let gpu_hi: Vec<f64> = task
+        .gpu
+        .iter()
+        .map(|g| gpu_response(g, gn_total.max(1), opts.sm_model).1)
+        .collect();
+    let cpu: f64 = task.cpu.iter().map(|b| b.hi).sum();
+    let bus: f64 = task.mem.iter().map(|b| b.hi).sum();
+    let gpu: f64 = gpu_hi.iter().sum();
+    Demand {
+        total: cpu + bus + gpu,
+        max_bus_seg: task.mem.iter().map(|b| b.hi).fold(0.0, f64::max),
+        max_gpu_seg: gpu_hi.iter().copied().fold(0.0, f64::max),
+        n_bus: task.mem.len(),
+        n_gpu: task.gpu.len(),
+        period: task.period,
+        deadline: task.deadline,
+        jitter: task.release_jitter(),
+    }
+}
+
+/// The order-free holistic recurrence shared by EDF and least-laxity.
+fn schedule_dynamic(ts: &TaskSet, gn_total: usize, opts: &RtgpuOpts) -> ScheduleResult {
+    let n = ts.len();
+    let rejected = || ScheduleResult {
+        schedulable: false,
+        allocation: None,
+        responses: vec![None; n],
+    };
+    if n == 0 {
+        return ScheduleResult { schedulable: true, allocation: Some(vec![]), responses: vec![] };
+    }
+    if ts.tasks.iter().any(|t| t.deadline > t.period + 1e-12) {
+        return rejected(); // the bound assumes constrained deadlines
+    }
+    let d: Vec<Demand> = ts.tasks.iter().map(|t| demand(t, gn_total, opts)).collect();
+
+    let mut responses: Vec<Option<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Any *other* task's segment can be in flight when k's becomes
+        // ready — dynamic order has no "lower priority only" refinement.
+        let others = |f: fn(&Demand) -> f64| {
+            d.iter().enumerate().filter(|&(i, _)| i != k).map(|(_, x)| f(x)).fold(0.0, f64::max)
+        };
+        let bus_block = others(|x| x.max_bus_seg);
+        let gpu_block = others(|x| x.max_gpu_seg);
+        let base = d[k].total + d[k].n_bus as f64 * bus_block + d[k].n_gpu as f64 * gpu_block;
+        // Jitter handling mirrors the static bound: the fixed point
+        // bounds release→completion inside a D − J window and the
+        // reported bound regains J; the carry-in term counts interfering
+        // jobs by arrival, which jitter cannot pack closer than T_i.
+        let horizon = d[k].deadline - d[k].jitter;
+        if horizon < base {
+            return rejected();
+        }
+        let Some(r) = fixpoint::solve(base, horizon, |x| {
+            let interference: f64 = d
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != k)
+                .map(|(_, i)| ((x + i.deadline) / i.period).ceil().max(0.0) * i.total)
+                .sum();
+            base + interference
+        }) else {
+            return rejected();
+        };
+        responses.push(Some(r + d[k].jitter));
+    }
+    ScheduleResult {
+        schedulable: true,
+        allocation: Some(vec![gn_total; n]),
+        responses,
+    }
+}
+
+/// Admit `ts` on a `gn_total`-SM device under the EDF GPU policy.  No
+/// allocation search happens — an admitted task's grant is the whole
+/// device (`allocation = gn_total` per task, which is also what the
+/// executors must draw GPU durations with).
+pub fn schedule_edf(ts: &TaskSet, gn_total: usize, opts: &RtgpuOpts) -> ScheduleResult {
+    schedule_dynamic(ts, gn_total, opts)
+}
+
+/// Admit `ts` under the least-laxity GPU policy.  The bound is the same
+/// order-free recurrence as [`schedule_edf`]: it never relies on *which*
+/// urgent job wins a dispatch point, only that some ready job runs —
+/// true for any work-conserving whole-device order.
+pub fn schedule_least_laxity(ts: &TaskSet, gn_total: usize, opts: &RtgpuOpts) -> ScheduleResult {
+    schedule_dynamic(ts, gn_total, opts)
+}
+
+/// The policy-specific whole-device bound, or `None` for
+/// [`GpuPolicyKind::Federated`] (whose admission is Algorithm 2's
+/// allocation search, not a closed-form bound).  The one dispatch both
+/// [`crate::coordinator::AdmissionState`] and the cluster's merged
+/// shared-CPU check route through, so a new policy kind extends exactly
+/// one match.
+pub fn schedule_policy_bound(
+    ts: &TaskSet,
+    gn_total: usize,
+    policy: GpuPolicyKind,
+    opts: &RtgpuOpts,
+) -> Option<ScheduleResult> {
+    match policy {
+        GpuPolicyKind::Federated => None,
+        GpuPolicyKind::PreemptivePriority => Some(schedule_preemptive(ts, gn_total, opts)),
+        GpuPolicyKind::Edf => Some(schedule_edf(ts, gn_total, opts)),
+        GpuPolicyKind::LeastLaxity => Some(schedule_least_laxity(ts, gn_total, opts)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::{cpu_only_task, simple_task};
+    use crate::model::Bounds;
+
+    #[test]
+    fn singleton_bound_matches_the_static_one() {
+        // With one task there is no "other" interference in either
+        // bound: dynamic and static agree exactly.
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let dy = schedule_edf(&ts, 2, &RtgpuOpts::default());
+        let st = schedule_preemptive(&ts, 2, &RtgpuOpts::default());
+        assert!(dy.schedulable && st.schedulable);
+        assert_eq!(dy.allocation, Some(vec![2]));
+        assert!((dy.responses[0].unwrap() - st.responses[0].unwrap()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_bound_is_symmetric_and_order_free() {
+        // The static bound gives task 0 a tighter response than task 1;
+        // the dynamic bound charges both tasks the same interference, so
+        // two identical tasks get identical bounds — and reversing the
+        // set order changes nothing.
+        let ts = TaskSet::with_priority_order(vec![simple_task(0), simple_task(1)]);
+        let r = schedule_edf(&ts, 4, &RtgpuOpts::default());
+        assert!(r.schedulable, "{:?}", r.responses);
+        let a = r.responses[0].unwrap();
+        let b = r.responses[1].unwrap();
+        assert!((a - b).abs() < 1e-12, "identical tasks, identical bounds: {a} vs {b}");
+        let st = schedule_preemptive(&ts, 4, &RtgpuOpts::default());
+        assert!(st.responses[0].unwrap() < a, "order-free bound pays for flexibility");
+    }
+
+    #[test]
+    fn dynamic_bound_dominates_the_static_one_per_task() {
+        // i ≠ k ⊇ i < k (interference) and "any other" ⊇ "lower
+        // priority" (blocking): the order-free bound can never be below
+        // the static-priority one for the same task.
+        let mut tasks: Vec<_> = (0..3).map(simple_task).collect();
+        for (i, t) in tasks.iter_mut().enumerate() {
+            t.period = 200.0 + 10.0 * i as f64;
+            t.deadline = 180.0;
+        }
+        let ts = TaskSet::with_priority_order(tasks);
+        let opts = RtgpuOpts::default();
+        let dy = schedule_edf(&ts, 4, &opts);
+        let st = schedule_preemptive(&ts, 4, &opts);
+        assert!(dy.schedulable && st.schedulable);
+        for (a, b) in dy.responses.iter().zip(&st.responses) {
+            assert!(a.unwrap() >= b.unwrap() - 1e-9, "dynamic below static");
+        }
+    }
+
+    #[test]
+    fn overload_and_unconstrained_deadlines_are_rejected() {
+        let mut hog = cpu_only_task(0, 9.0, 8.0);
+        hog.cpu = vec![Bounds::exact(9.0)];
+        let ts = TaskSet::with_priority_order(vec![hog]);
+        assert!(!schedule_edf(&ts, 10, &RtgpuOpts::default()).schedulable);
+
+        let mut t = simple_task(0);
+        t.deadline = 2.0 * t.period;
+        let ts = TaskSet::with_priority_order(vec![t]);
+        assert!(!schedule_least_laxity(&ts, 10, &RtgpuOpts::default()).schedulable);
+    }
+
+    #[test]
+    fn release_jitter_shifts_the_dynamic_bound() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let base = schedule_edf(&ts, 2, &RtgpuOpts::default()).responses[0].unwrap();
+        let jit = TaskSet::with_priority_order(vec![simple_task(0).with_sporadic_jitter(0.1)]);
+        let r = schedule_edf(&jit, 2, &RtgpuOpts::default());
+        assert!(r.schedulable);
+        assert!((r.responses[0].unwrap() - base - 6.0).abs() < 1e-9, "J = 0.1·60");
+    }
+
+    #[test]
+    fn edf_admits_more_gpu_tasks_than_sms() {
+        // The same structural win over federated partitioning the static
+        // whole-device policy has: three GPU tasks on a two-SM device.
+        let mut tasks: Vec<_> = (0..3).map(simple_task).collect();
+        for t in &mut tasks {
+            t.period = 100.0;
+            t.deadline = 60.0;
+        }
+        let ts = TaskSet::with_priority_order(tasks);
+        let opts = RtgpuOpts::default();
+        let fed = super::super::rtgpu::schedule(&ts, 2, &opts, super::super::Search::Grid);
+        assert!(!fed.schedulable, "federation cannot split 2 SMs three ways");
+        let edf = schedule_edf(&ts, 2, &opts);
+        assert!(edf.schedulable, "whole-device serialisation fits: {:?}", edf.responses);
+    }
+
+    #[test]
+    fn policy_bound_dispatch_covers_every_whole_device_kind() {
+        let ts = TaskSet::with_priority_order(vec![simple_task(0)]);
+        let opts = RtgpuOpts::default();
+        assert!(schedule_policy_bound(&ts, 2, GpuPolicyKind::Federated, &opts).is_none());
+        for kind in GpuPolicyKind::ALL.into_iter().filter(|k| k.whole_device()) {
+            let r = schedule_policy_bound(&ts, 2, kind, &opts).expect("bound exists");
+            assert!(r.schedulable, "{}", kind.name());
+            assert_eq!(r.allocation, Some(vec![2]), "whole-device grant ({})", kind.name());
+        }
+    }
+}

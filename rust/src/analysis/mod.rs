@@ -11,12 +11,15 @@
 //! | Lemmas 5.4/5.5 CPU        | [`cpu`]       |
 //! | Theorem 5.6 end-to-end    | [`e2e`]       |
 //! | Algorithm 2 grid search   | [`rtgpu`]     |
+//! | GCAPS whole-device bound  | [`preemptive`]|
+//! | EDF/least-laxity bound    | [`dynamic`]   |
 //!
 //! The [`Approach`] enum + [`analyze`] front-end is what the harness and
 //! the coordinator's admission control consume.
 
 pub mod baselines;
 pub mod cpu;
+pub mod dynamic;
 pub mod e2e;
 pub mod fixpoint;
 pub mod gpu;
@@ -25,6 +28,7 @@ pub mod preemptive;
 pub mod rtgpu;
 pub mod workload;
 
+pub use dynamic::{schedule_edf, schedule_least_laxity, schedule_policy_bound};
 pub use gpu::{Allocation, SmModel};
 pub use preemptive::schedule_preemptive;
 pub use rtgpu::{Evaluator, RtgpuOpts, ScheduleResult, Search, SharedCache};
@@ -90,9 +94,11 @@ pub fn analyze(
 }
 
 /// Run the RTGPU admission test for the chosen GPU dispatch policy:
-/// Algorithm 2's federated allocation search, or the preemptive-priority
-/// holistic bound (no allocation search — an admitted task is granted
-/// the whole device, [`preemptive::schedule_preemptive`]).
+/// Algorithm 2's federated allocation search, or the matching
+/// whole-device bound (no allocation search — an admitted task is
+/// granted the whole device; [`preemptive::schedule_preemptive`] for
+/// static priorities, [`dynamic::schedule_edf`] /
+/// [`dynamic::schedule_least_laxity`] for the urgency policies).
 pub fn schedule_gpu_policy(
     ts: &TaskSet,
     gn_total: usize,
@@ -100,9 +106,9 @@ pub fn schedule_gpu_policy(
     opts: &RtgpuOpts,
     search: Search,
 ) -> ScheduleResult {
-    match policy {
-        GpuPolicyKind::Federated => rtgpu::schedule(ts, gn_total, opts, search),
-        GpuPolicyKind::PreemptivePriority => preemptive::schedule_preemptive(ts, gn_total, opts),
+    match dynamic::schedule_policy_bound(ts, gn_total, policy, opts) {
+        Some(r) => r,
+        None => rtgpu::schedule(ts, gn_total, opts, search),
     }
 }
 

@@ -59,7 +59,7 @@
 
 use std::collections::BTreeSet;
 
-use crate::analysis::preemptive::schedule_preemptive;
+use crate::analysis::dynamic::schedule_policy_bound;
 use crate::analysis::rtgpu::evaluate;
 use crate::analysis::{gpu_utilization, RtgpuOpts};
 use crate::coordinator::{AdmissionState, VirtualTask};
@@ -458,10 +458,10 @@ impl ClusterState {
     /// matching `sched::merge_priority_levels`), each with its per-device
     /// allocation.  CPU interference is exact (one host CPU is reality);
     /// bus interference is over-counted (buses are per-device), so a pass
-    /// is sound.  Under the preemptive-priority policy (uniform across
-    /// the fleet — `with_gpu_policies` enforces it here) the merged check
-    /// is the preemptive holistic bound, which additionally over-counts
-    /// GPU interference (it pretends one device serves every kernel) —
+    /// is sound.  Under a whole-device policy (uniform across the fleet —
+    /// `with_gpu_policies` enforces it here) the merged check is that
+    /// policy's holistic bound, which additionally over-counts GPU
+    /// interference (it pretends one device serves every kernel) —
     /// conservative on every axis, hence still sound.
     ///
     /// Per-device contributions are cached and invalidated only when
@@ -482,9 +482,10 @@ impl ClusterState {
         entries.sort_by(|a, b| a.0.deadline.total_cmp(&b.0.deadline));
         let alloc: Vec<usize> = entries.iter().map(|e| e.1).collect();
         let ts = TaskSet::with_priority_order(entries.into_iter().map(|e| e.0).collect());
-        if self.gpu_policy[0] == GpuPolicyKind::PreemptivePriority {
-            return schedule_preemptive(&ts, self.platform.device.gn_physical, &self.opts)
-                .schedulable;
+        if let Some(r) =
+            schedule_policy_bound(&ts, self.platform.device.gn_physical, self.gpu_policy[0], &self.opts)
+        {
+            return r.schedulable;
         }
         evaluate(&ts, &alloc, &self.opts).iter().all(|b| b.schedulable)
     }

@@ -168,6 +168,7 @@ fn simulate_cluster_impl(
                     deadline: ms_to_ticks(t.deadline),
                     priority: levels[dev][k],
                     arrival: ArrivalSpec::from_model(&cfg.arrival.resolve(t)),
+                    on_miss: t.on_miss,
                 })
                 .collect()
         })
@@ -179,6 +180,7 @@ fn simulate_cluster_impl(
         stop_on_first_miss: cfg.stop_on_first_miss,
         trace,
         arrival_seed: cfg.seed,
+        overload: cfg.overload,
     };
     let out = driver::run_with_sink(
         &tasks,
@@ -200,12 +202,14 @@ fn simulate_cluster_impl(
     let mut per_device: Vec<Vec<TaskStats>> = wl
         .devices
         .iter()
-        .map(|d| {
+        .enumerate()
+        .map(|(dev, d)| {
             (0..d.ts.len())
-                .map(|_| TaskStats {
+                .map(|task| TaskStats {
                     released: 0,
                     completed: 0,
                     misses: 0,
+                    shed: out.shed[dev][task],
                     response: None,
                     max_response_ms: 0.0,
                 })

@@ -11,12 +11,12 @@
 //!   the accepted allocation are cached so most membership changes decide
 //!   on a cheap warm path instead of a full Algorithm-2 rerun.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use anyhow::Result;
 
+use crate::analysis::dynamic::schedule_policy_bound;
 use crate::analysis::gpu::min_allocations;
-use crate::analysis::preemptive::schedule_preemptive;
 use crate::analysis::rtgpu::{
     schedule, schedule_with, Evaluator, RtgpuOpts, ScheduleResult, Search, SharedCache,
 };
@@ -249,10 +249,11 @@ impl AdmissionState {
     }
 
     /// An admission state deciding under the given GPU dispatch policy.
-    /// Under [`GpuPolicyKind::PreemptivePriority`] every decision runs
-    /// the (cheap) holistic preemptive bound — there is no allocation
-    /// search and no warm/cold distinction; admitted apps are granted
-    /// the whole device.
+    /// Under any whole-device policy ([`GpuPolicyKind::whole_device`]:
+    /// preemptive-priority, EDF, least-laxity) every decision runs the
+    /// matching (cheap) holistic bound — there is no allocation search
+    /// and no warm/cold distinction; admitted apps are granted the
+    /// whole device.
     pub fn with_gpu_policy(
         platform: Platform,
         opts: RtgpuOpts,
@@ -350,7 +351,7 @@ impl AdmissionState {
     /// non-schedulable verdict stands (callers shed load or migrate —
     /// see `cluster::placement`).
     pub fn reinflate(&mut self, factors: &[(u64, f64)]) -> AdmissionDecision {
-        let mut mutated: Vec<u64> = Vec::new();
+        let mut mutated: HashSet<u64> = HashSet::new();
         for &(key, factor) in factors {
             assert!(
                 factor.is_finite() && factor > 0.0,
@@ -371,12 +372,14 @@ impl AdmissionState {
                     inflate(&mut g.work, factor);
                     inflate(&mut g.overhead, factor);
                 }
-                mutated.push(key);
+                mutated.insert(key);
             }
         }
         if !mutated.is_empty() {
             // Per-(task, gn) contexts of the mutated tasks describe the
-            // old model; keep only the survivors' entries warm.
+            // old model; keep only the survivors' entries warm.  The
+            // set lookup keeps this pass O(live + mutated) — a drift
+            // storm can name every app at once (`benches/analysis_bench`).
             let keep: Vec<u64> =
                 self.live_keys().into_iter().filter(|k| !mutated.contains(k)).collect();
             self.cache.retain_keys(&keep);
@@ -420,10 +423,10 @@ impl AdmissionState {
         let order: Vec<u64> = ts.tasks.iter().map(|t| t.id as u64).collect();
         let gn_total = self.platform.gn_physical;
 
-        if self.gpu_policy == GpuPolicyKind::PreemptivePriority {
-            // No allocation search to warm up: one holistic bound per
-            // decision, whole-device grants on acceptance.
-            let result = schedule_preemptive(&ts, gn_total, &self.opts);
+        if let Some(result) = schedule_policy_bound(&ts, gn_total, self.gpu_policy, &self.opts) {
+            // A whole-device policy: no allocation search to warm up —
+            // one holistic bound per decision, whole-device grants on
+            // acceptance.
             return AdmissionDecision {
                 schedulable: result.schedulable,
                 order,
@@ -614,6 +617,37 @@ mod tests {
         let d = pre.remove_app(keys[0]);
         assert!(d.schedulable);
         assert_eq!(pre.len(), 2);
+    }
+
+    #[test]
+    fn urgency_policies_decide_on_the_policy_bound() {
+        // EDF and least-laxity admit through their order-free dynamic
+        // bound: same fast path, same whole-device grants, no grid.
+        for kind in [GpuPolicyKind::Edf, GpuPolicyKind::LeastLaxity] {
+            let mut state =
+                AdmissionState::with_gpu_policy(Platform::new(2), RtgpuOpts::default(), kind);
+            assert_eq!(state.gpu_policy(), kind);
+            for i in 0..3 {
+                let mut t = simple_task(i);
+                t.period = 100.0;
+                t.deadline = 60.0;
+                let (k, d) = state.add_app(t);
+                assert!(d.schedulable, "{}: app {i} must fit", kind.name());
+                assert_eq!(d.path, AdmissionPath::PolicyBound);
+                assert_eq!(state.allocation_of(k), Some(2), "whole-device grant");
+                for r in &d.responses {
+                    assert!(r.unwrap() <= 60.0 + 1e-9);
+                }
+            }
+            let (_, rejected) = state.add_app({
+                let mut t = simple_task(9);
+                t.period = 5.0;
+                t.deadline = 5.0; // below the chain's fixed demand
+                t
+            });
+            assert!(!rejected.schedulable, "{}: infeasible app must bounce", kind.name());
+            assert_eq!(state.len(), 3, "rejected add rolls back");
+        }
     }
 
     #[test]

@@ -2,7 +2,9 @@
 
 use anyhow::{Context, Result};
 
-use crate::model::{ArrivalModel, Bounds, GpuSegment, KernelClass, MemoryModel, RtTask};
+use crate::model::{
+    ArrivalModel, Bounds, DeadlineMissAction, GpuSegment, KernelClass, MemoryModel, RtTask,
+};
 use crate::runtime::Engine;
 
 /// GPU-side profile of an application's kernel.
@@ -107,6 +109,7 @@ impl AppSpec {
             // Served applications release on their period timer today;
             // admit them against jittered bounds by widening here.
             arrival: ArrivalModel::Periodic,
+            on_miss: DeadlineMissAction::Log,
         }
     }
 }

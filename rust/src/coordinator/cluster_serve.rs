@@ -172,6 +172,7 @@ impl ClusterServe {
                         deadline: tasks[app].deadline,
                         priority: levels[dev][k],
                         arrival: tasks[app].arrival.clone(),
+                        on_miss: crate::model::DeadlineMissAction::Log,
                     })
                     .collect()
             })
@@ -183,6 +184,7 @@ impl ClusterServe {
             stop_on_first_miss: false,
             trace: true,
             arrival_seed,
+            overload: None,
         };
         driver::run_with_sink(&dtasks, &cfg, |dev, task| chain_for(self.local[dev][task]), sink)
             .traces

@@ -483,6 +483,7 @@ pub fn serve_virtual_telemetry(
             deadline: t.deadline,
             priority: i,
             arrival: t.arrival.clone(),
+            on_miss: crate::model::DeadlineMissAction::Log,
         })
         .collect();
     let cfg = DriverConfig {
@@ -492,6 +493,7 @@ pub fn serve_virtual_telemetry(
         stop_on_first_miss: false,
         trace: true,
         arrival_seed,
+        overload: None,
     };
     let mut out = driver::run_with_sink(&[dtasks], &cfg, |_, task| chain_for(task), sink);
     out.traces.swap_remove(0)

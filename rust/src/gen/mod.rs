@@ -13,7 +13,10 @@
 //! physical SM), so task-set utilizations above 1 are meaningful when the
 //! platform has multiple SMs.
 
-use crate::model::{ArrivalModel, Bounds, GpuSegment, KernelClass, MemoryModel, RtTask, TaskSet};
+use crate::model::{
+    ArrivalModel, Bounds, DeadlineMissAction, GpuSegment, KernelClass, MemoryModel, RtTask,
+    TaskSet,
+};
 use crate::util::rng::{uunifast, Pcg};
 
 /// Table 1 parameters plus the knobs the evaluation sweeps.
@@ -154,6 +157,7 @@ pub fn generate_taskset(rng: &mut Pcg, cfg: &GenConfig, total_util: f64) -> Task
             deadline,
             period: deadline,
             arrival,
+            on_miss: DeadlineMissAction::Log,
         });
     }
     // 4. deadline-monotonic priorities.

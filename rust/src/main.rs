@@ -37,14 +37,14 @@ use rtgpu::util::rng::Pcg;
 const USAGE: &str = "usage: rtgpu <serve|admit|cluster|sweep|validate|throughput> [--flags]\n\
   serve      [--seconds S] [--sms GN] [--full-artifacts]   serve real kernels\n\
   admit      [--util U] [--tasks N] [--subtasks M] [--sms GN]\n\
-             [--gpu-policy federated|preemptive]\n\
+             [--gpu-policy federated|preemptive|edf|ll]\n\
              [--arrival periodic|sporadic[:FRAC]|task]\n\
              [--telemetry off|record|feedback] [--drift F]\n\
              [--metrics-out PATH]\n\
              [--seed S]                                    analyze a random set\n\
   cluster    [--devices G] [--sms GN] [--util U] [--tasks N]\n\
              [--subtasks M] [--placement ffd|worst-fit|p2c[:K]]\n\
-             [--gpu-policy federated|preemptive]\n\
+             [--gpu-policy federated|preemptive|edf|ll]\n\
              [--arrival periodic|sporadic[:FRAC]|task]\n\
              [--parallel T] [--place-seed S]\n\
              [--telemetry off|record|feedback]\n\
@@ -128,7 +128,7 @@ fn cmd_admit(args: &Args) -> Result<()> {
         .with_subtasks(args.usize_or("subtasks", 5)?);
     let gn = args.usize_or("sms", 10)?;
     let gpu_policy = GpuPolicyKind::parse(args.str_or("gpu-policy", "federated"))
-        .ok_or_else(|| CliError("--gpu-policy expects federated or preemptive".into()))?;
+        .map_err(|e| CliError(format!("--gpu-policy: {e}")))?;
     let arrival = ArrivalOverride::parse(args.str_or("arrival", "task"))
         .ok_or_else(|| CliError("--arrival expects periodic, sporadic[:FRAC] or task".into()))?;
     let telemetry = TelemetryMode::parse(args.str_or("telemetry", "off"))
@@ -168,11 +168,11 @@ fn cmd_admit(args: &Args) -> Result<()> {
             v.allocation.as_deref().unwrap_or(&[])
         );
     }
-    if gpu_policy == GpuPolicyKind::PreemptivePriority {
+    if gpu_policy.whole_device() {
         let v = schedule_gpu_policy(&ts, gn, gpu_policy, &RtgpuOpts::default(), Search::Grid);
         println!(
             "{:<16} schedulable={} alloc={:?}",
-            "RTGPU-preemptive",
+            format!("RTGPU-{}", gpu_policy.name()),
             v.schedulable,
             v.allocation.as_deref().unwrap_or(&[])
         );
@@ -302,7 +302,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         Some(_) => Some(args.u64_or("place-seed", 0)?),
     };
     let gpu_policy = GpuPolicyKind::parse(args.str_or("gpu-policy", "federated"))
-        .ok_or_else(|| CliError("--gpu-policy expects federated or preemptive".into()))?;
+        .map_err(|e| CliError(format!("--gpu-policy: {e}")))?;
     let arrival = ArrivalOverride::parse(args.str_or("arrival", "task"))
         .ok_or_else(|| CliError("--arrival expects periodic, sporadic[:FRAC] or task".into()))?;
     let telemetry = TelemetryMode::parse(args.str_or("telemetry", "off"))

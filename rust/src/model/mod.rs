@@ -181,6 +181,36 @@ impl ArrivalModel {
     }
 }
 
+/// What the runtime does when a job of this task misses its deadline
+/// (DESIGN.md §13).  The admission analysis ignores this field — it is
+/// pure *overload* semantics, deciding how a device degrades once the
+/// analysed guarantees no longer hold (drifted execution times, tasks
+/// forced in past the test).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DeadlineMissAction {
+    /// Count the miss and carry on — the pre-existing behaviour.
+    #[default]
+    Log,
+    /// After this task's first miss, its subsequent releases run at the
+    /// device's top priority level (static-priority stations only; the
+    /// urgency policies already order by deadline).
+    Boost,
+    /// Best-effort class: while the owning device is in overload (shed)
+    /// mode, this task's releases are dropped outright so `Log`/`Boost`
+    /// tasks keep their guarantees.
+    Shed,
+}
+
+impl DeadlineMissAction {
+    pub fn name(self) -> &'static str {
+        match self {
+            DeadlineMissAction::Log => "log",
+            DeadlineMissAction::Boost => "boost",
+            DeadlineMissAction::Shed => "shed",
+        }
+    }
+}
+
 /// A sporadic RT-GPU task (Eq. 4): `m` CPU segments, `m−1` GPU segments
 /// and `copies·(m−1)` memory segments, with constrained deadline `D ≤ T`.
 #[derive(Debug, Clone)]
@@ -203,6 +233,8 @@ pub struct RtTask {
     pub period: Time,
     /// The arrival process generating this task's jobs.
     pub arrival: ArrivalModel,
+    /// Overload semantics: what the runtime does on a deadline miss.
+    pub on_miss: DeadlineMissAction,
 }
 
 impl RtTask {
@@ -234,6 +266,12 @@ impl RtTask {
             ArrivalModel::Sporadic { min_separation, .. } => *min_separation,
             ArrivalModel::Periodic | ArrivalModel::Trace(_) => self.period,
         }
+    }
+
+    /// Replace the deadline-miss action (builder style).
+    pub fn with_miss_action(mut self, action: DeadlineMissAction) -> RtTask {
+        self.on_miss = action;
+        self
     }
 
     /// Replace the arrival model with a sporadic process at this task's
@@ -511,6 +549,7 @@ pub mod testing {
             deadline: 50.0,
             period: 60.0,
             arrival: ArrivalModel::Periodic,
+            on_miss: DeadlineMissAction::Log,
         }
     }
 
@@ -525,6 +564,7 @@ pub mod testing {
             deadline,
             period: deadline,
             arrival: ArrivalModel::Periodic,
+            on_miss: DeadlineMissAction::Log,
         }
     }
 }

@@ -29,7 +29,9 @@
 //! Policy behaviour (who claims the GPU) is delegated to the per-device
 //! [`GpuPolicyKind`] stations inside each [`PlatformCore`].
 
-use crate::model::{ArrivalModel, CpuTopology};
+use std::collections::VecDeque;
+
+use crate::model::{ArrivalModel, CpuTopology, DeadlineMissAction};
 use crate::telemetry::{NoopSink, TelemetrySink};
 use crate::util::rng::Pcg;
 
@@ -83,6 +85,11 @@ pub struct DriverTask {
     pub deadline: Tick,
     pub priority: usize,
     pub arrival: ArrivalSpec,
+    /// Overload semantics at the driver's miss-detection points
+    /// (DESIGN.md §13): `Log` counts, `Boost` promotes the task's
+    /// *subsequent* releases to priority level 0 after its first miss,
+    /// `Shed` drops releases while the owning device is in shed mode.
+    pub on_miss: DeadlineMissAction,
 }
 
 /// Driver parameters shared by every adapter.
@@ -103,6 +110,34 @@ pub struct DriverConfig {
     /// of pop order and of the adapters' chain-oracle RNG — two runs
     /// with the same seed replay the same arrival pattern.
     pub arrival_seed: u64,
+    /// Device-level overload mode-change (DESIGN.md §13): when set, a
+    /// device whose recent miss pressure reaches the threshold enters
+    /// *shed mode* and drops `Shed`-class releases until the pressure
+    /// subsides.  `None` (the default everywhere) disables the monitor —
+    /// every pre-existing trace is bit-identical.
+    pub overload: Option<OverloadConfig>,
+}
+
+/// Miss-pressure window for the per-device overload monitor: a device is
+/// in shed mode at instant `t` iff at least `threshold` deadline misses
+/// were observed on it in `(t − window, t]`.  Purely a function of the
+/// recent miss history, so runs are deterministic and the mode exits by
+/// itself once shedding relieves the pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverloadConfig {
+    /// Sliding window length in ticks.
+    pub window: Tick,
+    /// Misses within the window that flip the device into shed mode.
+    pub threshold: usize,
+}
+
+impl OverloadConfig {
+    /// Build from a millisecond window (the model-layer unit).
+    pub fn from_ms(window_ms: f64, threshold: usize) -> OverloadConfig {
+        assert!(window_ms > 0.0 && window_ms.is_finite(), "bad overload window {window_ms}");
+        assert!(threshold >= 1, "overload threshold must be at least one miss");
+        OverloadConfig { window: ms_to_ticks(window_ms), threshold }
+    }
 }
 
 /// Everything a run produced; adapters project what they need.
@@ -132,6 +167,10 @@ pub struct DriverOutcome {
     /// off; under a shared CPU, every device's CPU completions land in
     /// core 0's trace).
     pub traces: Vec<Vec<TraceEntry>>,
+    /// Releases dropped in shed mode, per `[device][task]` (all zeros
+    /// unless [`DriverConfig::overload`] was set).  Shed releases never
+    /// appear in `jobs` and consume no chain-oracle call.
+    pub shed: Vec<Vec<usize>>,
 }
 
 impl DriverOutcome {
@@ -144,6 +183,11 @@ impl DriverOutcome {
             Some(done) => done > self.jobs[j].deadline,
             None => !self.stopped && self.horizon > self.jobs[j].deadline,
         }
+    }
+
+    /// Total releases dropped in shed mode across the fleet.
+    pub fn total_shed(&self) -> usize {
+        self.shed.iter().map(|d| d.iter().sum::<usize>()).sum()
     }
 }
 
@@ -305,6 +349,14 @@ pub fn run_with_sink(
     let mut stop = false;
     let mut timers: Vec<(Tick, CoreEvent)> = Vec::new();
 
+    // Overload state (DESIGN.md §13).  `boosted` marks tasks whose first
+    // miss already promoted their later releases; `miss_ticks` is the
+    // per-device sliding miss window (only fed when the monitor is on);
+    // `shed` counts releases dropped in shed mode.
+    let mut boosted: Vec<Vec<bool>> = devices.iter().map(|d| vec![false; d.len()]).collect();
+    let mut miss_ticks: Vec<VecDeque<Tick>> = devices.iter().map(|_| VecDeque::new()).collect();
+    let mut shed: Vec<Vec<usize>> = devices.iter().map(|d| vec![0; d.len()]).collect();
+
     // Enter job `j`'s next phase on the serving core (shared-CPU routing
     // funnels CPU phases to device 0) or finish it: deadline bookkeeping
     // plus the task-FIFO successor.
@@ -328,6 +380,16 @@ pub fn run_with_sink(
                     if cfg.stop_on_first_miss {
                         stop = true;
                     }
+                    // The centralized miss-detection point is where the
+                    // per-task overload semantics act: Boost promotes the
+                    // task's later releases, and any miss (whatever its
+                    // own action) feeds the device's pressure window.
+                    if devices[dev][jobs[j].task].on_miss == DeadlineMissAction::Boost {
+                        boosted[dev][jobs[j].task] = true;
+                    }
+                    if cfg.overload.is_some() {
+                        miss_ticks[dev].push_back($now);
+                    }
                 }
                 sink.on_job(dev, jobs[j].task, ticks_to_ms($now - jobs[j].arrival), missed);
                 if let Some(next) = fifos[dev].on_job_done(jobs[j].task) {
@@ -348,10 +410,38 @@ pub fn run_with_sink(
                     continue;
                 }
                 let dt = &devices[dev][task];
+                // Shed mode: while the device's recent miss pressure is
+                // at the threshold, `Shed`-class releases are dropped
+                // outright — no job, no chain-oracle call — so the
+                // guaranteed (`Log`/`Boost`) tasks see the load the
+                // admission test analysed.  The arrival stream continues,
+                // so the task resumes the moment pressure subsides.
+                if dt.on_miss == DeadlineMissAction::Shed {
+                    if let Some(ov) = cfg.overload {
+                        let window = &mut miss_ticks[dev];
+                        while window.front().is_some_and(|&t| t + ov.window <= now) {
+                            window.pop_front();
+                        }
+                        if window.len() >= ov.threshold {
+                            shed[dev][task] += 1;
+                            sink.on_shed(dev, task);
+                            if let Some((a2, r2)) =
+                                arrivals[dev][task].next(&dt.arrival, dt.period, arrival)
+                            {
+                                q.push(r2, Ev::Release { dev, task, arrival: a2 });
+                            }
+                            continue;
+                        }
+                    }
+                }
                 let chain = chain_for(dev, task);
                 let job_id = jobs.len();
                 let deadline = arrival + dt.deadline;
-                jobs.push(WalkJob::new(task, dt.priority, arrival, now, deadline, chain));
+                // A boosted task's releases jump to the top static
+                // priority level; release-tick tie-breaking (and, on the
+                // GPU stations, the enqueue-sequence FIFO) still applies.
+                let priority = if boosted[dev][task] { 0 } else { dt.priority };
+                jobs.push(WalkJob::new(task, priority, arrival, now, deadline, chain));
                 job_dev.push(dev);
                 if let Some(start) = fifos[dev].on_release(task, job_id) {
                     q.push(now, Ev::Start { job: start });
@@ -396,6 +486,7 @@ pub fn run_with_sink(
         events_processed: events,
         stopped: stop,
         traces,
+        shed,
     };
     out.misses_at_horizon = (0..out.jobs.len()).filter(|&j| out.job_missed(j)).count();
     out
@@ -414,11 +505,18 @@ mod tests {
             stop_on_first_miss: false,
             trace: true,
             arrival_seed: 0,
+            overload: None,
         }
     }
 
     fn periodic(period: Tick, deadline: Tick, priority: usize) -> DriverTask {
-        DriverTask { period, deadline, priority, arrival: ArrivalSpec::Periodic }
+        DriverTask {
+            period,
+            deadline,
+            priority,
+            arrival: ArrivalSpec::Periodic,
+            on_miss: DeadlineMissAction::Log,
+        }
     }
 
     #[test]
@@ -503,6 +601,7 @@ mod tests {
             stop_on_first_miss: false,
             trace: true,
             arrival_seed: 0,
+            overload: None,
         };
         let out = run(&tasks, &c, |_, _| Chain::new(vec![(Phase::Cpu(0), 10)]));
         // Both CPU phases run (serialised) on core 0; each job's
@@ -528,6 +627,96 @@ mod tests {
         });
         let done: Vec<Tick> = out.jobs.iter().map(|j| j.done.unwrap()).collect();
         assert_eq!(done, vec![100, 200]);
+    }
+
+    // -- overload semantics (DESIGN.md §13) ---------------------------------
+
+    #[test]
+    fn shed_tasks_drop_releases_only_while_pressure_lasts() {
+        // Task 0 (Log, one traced release) misses once at t = 20; task 1
+        // (Shed, T = 25) then sheds exactly while that miss sits in the
+        // 60-tick window, and resumes at t = 100 when it ages out.
+        let tasks = vec![vec![
+            DriverTask {
+                period: 1000,
+                deadline: 10,
+                priority: 0,
+                arrival: ArrivalSpec::Trace(vec![0]),
+                on_miss: DeadlineMissAction::Log,
+            },
+            DriverTask {
+                period: 25,
+                deadline: 100,
+                priority: 1,
+                arrival: ArrivalSpec::Periodic,
+                on_miss: DeadlineMissAction::Shed,
+            },
+        ]];
+        let chain = |_: DeviceId, task: usize| {
+            Chain::new(vec![(Phase::Cpu(0), if task == 0 { 20 } else { 1 })])
+        };
+        let mut calls = 0usize;
+        let mut c = cfg(vec![GpuPolicyKind::Federated], 110);
+        c.overload = Some(OverloadConfig { window: 60, threshold: 1 });
+        let out = run(&tasks, &c, |dev, task| {
+            calls += 1;
+            chain(dev, task)
+        });
+        assert_eq!(out.shed, vec![vec![0, 3]], "releases at 25, 50, 75 are dropped");
+        assert_eq!(out.total_shed(), 3);
+        assert_eq!(out.jobs.len(), 3, "task 0 once, task 1 at t = 0 and t = 100");
+        assert_eq!(calls, 3, "shed releases must not consume chain-oracle calls");
+        let t1_arrivals: Vec<Tick> =
+            out.jobs.iter().filter(|j| j.task == 1).map(|j| j.arrival).collect();
+        assert_eq!(t1_arrivals, vec![0, 100], "shed mode exits when the miss ages out");
+        assert_eq!(out.misses_at_horizon, 1, "only task 0's own miss");
+
+        // The monitor off (the default): nothing is ever shed.
+        let c = cfg(vec![GpuPolicyKind::Federated], 110);
+        let out = run(&tasks, &c, chain);
+        assert_eq!(out.total_shed(), 0);
+        assert_eq!(out.jobs.len(), 6, "all five task-1 releases run");
+    }
+
+    #[test]
+    fn boost_promotes_later_releases_after_a_miss() {
+        // Task 0 (Boost, prio 2, D = 15) loses the device to task 1
+        // (prio 1) and misses its first deadline at t = 21; its second
+        // release is then promoted to level 0 and wins, meeting D.
+        let mk = |on_miss| {
+            vec![vec![
+                DriverTask {
+                    period: 40,
+                    deadline: 15,
+                    priority: 2,
+                    arrival: ArrivalSpec::Periodic,
+                    on_miss,
+                },
+                DriverTask {
+                    period: 40,
+                    deadline: 40,
+                    priority: 1,
+                    arrival: ArrivalSpec::Periodic,
+                    on_miss: DeadlineMissAction::Log,
+                },
+            ]]
+        };
+        let chain =
+            |_: DeviceId, _: usize| Chain::new(vec![(Phase::Cpu(0), 1), (Phase::Gpu(0), 10)]);
+        let c = cfg(vec![GpuPolicyKind::PreemptivePriority], 80);
+        let boosted = run(&mk(DeadlineMissAction::Boost), &c, chain);
+        let logged = run(&mk(DeadlineMissAction::Log), &c, chain);
+        // First jobs are identical (the boost acts on *later* releases).
+        assert_eq!(boosted.jobs[0].done, logged.jobs[0].done);
+        assert!(boosted.job_missed(0), "the first job still misses");
+        // Second release: boosted wins the device and meets its deadline
+        // where the un-boosted run misses again.
+        let second = |o: &DriverOutcome| o.jobs.iter().position(|j| j.task == 0 && j.arrival == 40);
+        let (b2, l2) = (second(&boosted).unwrap(), second(&logged).unwrap());
+        assert!(!boosted.job_missed(b2), "boosted release must meet its deadline");
+        assert!(logged.job_missed(l2), "without boost the second release misses too");
+        assert_eq!(boosted.total_misses, 1);
+        assert_eq!(logged.total_misses, 2);
     }
 
     // -- arrival processes --------------------------------------------------
@@ -566,6 +755,7 @@ mod tests {
             deadline: 100,
             priority: 0,
             arrival: ArrivalSpec::Sporadic { min_separation: 100, jitter },
+            on_miss: DeadlineMissAction::Log,
         }]];
         let c = DriverConfig { arrival_seed: 7, ..cfg(vec![GpuPolicyKind::Federated], 1000) };
         let out = run(&tasks, &c, |_, _| Chain::new(vec![(Phase::Cpu(0), 1)]));
@@ -596,6 +786,7 @@ mod tests {
             deadline: 30,
             priority: 0,
             arrival: ArrivalSpec::Trace(vec![5, 40, 41, 2000]),
+            on_miss: DeadlineMissAction::Log,
         }]];
         let out = run(&tasks, &cfg(vec![GpuPolicyKind::Federated], 1000), |_, _| {
             Chain::new(vec![(Phase::Cpu(0), 1)])
@@ -610,6 +801,7 @@ mod tests {
             deadline: 30,
             priority: 0,
             arrival: ArrivalSpec::Trace(vec![]),
+            on_miss: DeadlineMissAction::Log,
         }]];
         let out = run(&idle, &cfg(vec![GpuPolicyKind::Federated], 1000), |_, _| {
             Chain::new(vec![(Phase::Cpu(0), 1)])

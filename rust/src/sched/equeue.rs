@@ -307,6 +307,54 @@ mod tests {
     }
 
     #[test]
+    fn prop_drain_interleaved_cursor_slot_inserts_match_heap_oracle() {
+        // The positioned-insert fast path (equeue.rs `push`, cursor slot
+        // already sorted): a pop sorts the cursor slot, and every push
+        // landing in that slot afterwards takes the `partition_point`
+        // insert instead of the append-and-resort path.  Randomised
+        // drains interleaved with same-tick / same-slot pushes keep the
+        // slot in that state almost continuously; every pop must still
+        // agree with the heap oracle's exact `(tick, seq)` order.
+        for seed in [11u64, 12, 13] {
+            let mut wheel: EventQueue<u64> = EventQueue::new();
+            let mut heap: HeapQueue<u64> = HeapQueue::new();
+            let mut rng = Pcg::new(seed);
+            let mut id = 0u64;
+            for _ in 0..32 {
+                let t = rng.below(1 << SLOT_SHIFT); // all in slot 0
+                wheel.push(t, id);
+                heap.push(t, id);
+                id += 1;
+            }
+            let mut now = 0u64;
+            for round in 0..5_000 {
+                let a = wheel.pop();
+                let b = heap.pop();
+                assert_eq!(a, b, "seed {seed}: divergence at round {round}");
+                let Some((t, _)) = a else { break };
+                now = t;
+                // 0–3 successors biased into the just-sorted cursor slot:
+                // exactly `now` (the zero-delay Start/Core pattern), a few
+                // ticks ahead (same slot), or occasionally the next slot
+                // so the cursor keeps advancing.
+                for _ in 0..rng.below(4) {
+                    let delta = match rng.below(4) {
+                        0 => 0,
+                        1 => rng.below(16),
+                        2 => rng.below(1 << (SLOT_SHIFT - 4)),
+                        _ => rng.below(1 << (SLOT_SHIFT + 1)),
+                    };
+                    wheel.push(now + delta, id);
+                    heap.push(now + delta, id);
+                    id += 1;
+                }
+                assert_eq!(wheel.len(), heap.len(), "seed {seed}: length drift");
+            }
+            assert_eq!(wheel.pop(), heap.pop(), "seed {seed}: tails must agree");
+        }
+    }
+
+    #[test]
     fn past_push_clamps_to_cursor_instead_of_wrapping() {
         // Regression for the release-mode hole: advance the cursor many
         // windows forward, then push behind it.  The old code computed

@@ -38,13 +38,13 @@ pub mod policy;
 pub mod queue;
 
 pub use chain::{Chain, Phase, Segment, Station};
-pub use driver::{ArrivalSpec, DriverConfig, DriverOutcome, DriverTask};
+pub use driver::{ArrivalSpec, DriverConfig, DriverOutcome, DriverTask, OverloadConfig};
 pub use equeue::{EventQueue, HeapQueue};
 pub use platform::{
     CoreEvent, JobId, NonPreemptiveBus, PlatformCore, PreemptiveCpu, TaskFifo, TraceEntry,
     TraceEvent, WalkJob,
 };
-pub use policy::{Federated, GpuPolicy, GpuPolicyKind, PreemptivePriority};
+pub use policy::{Edf, Federated, GpuPolicy, GpuPolicyKind, LeastLaxity, PreemptivePriority};
 pub use queue::ReadyQueue;
 
 /// Integer platform time: nanoseconds.

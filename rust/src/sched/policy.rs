@@ -1,4 +1,4 @@
-//! Pluggable GPU dispatch policies (DESIGN.md §9).
+//! Pluggable GPU dispatch policies (DESIGN.md §9, §13).
 //!
 //! The platform model fixes the CPU (preemptive fixed-priority) and the
 //! bus (non-preemptive priority-ordered); *how kernels claim the GPU* is
@@ -18,10 +18,13 @@
 //!   and treat any other completion as stale (the job id doubles as the
 //!   token, mirroring the CPU/bus token scheme in [`super::platform`]).
 //!
-//! Two policies ship: [`Federated`] (paper §5.2 — dedicated virtual SMs,
-//! kernels never queue) and [`PreemptivePriority`] (GCAPS-style — the
-//! highest-priority ready kernel claims the whole device; lower-priority
-//! kernels wait, and a multi-segment task yields between its segments).
+//! Four policies ship: [`Federated`] (paper §5.2 — dedicated virtual
+//! SMs, kernels never queue) and three whole-device queueing policies
+//! that differ only in their urgency order — [`PreemptivePriority`]
+//! (GCAPS-style static priority), [`Edf`] (earliest absolute deadline)
+//! and [`LeastLaxity`] (smallest `deadline − now − remaining work`).
+//! All three break urgency ties by enqueue sequence (FIFO), so dispatch
+//! order never depends on queue-removal history.
 
 use super::platform::{CoreEvent, JobId, WalkJob};
 use super::Tick;
@@ -73,37 +76,78 @@ impl GpuPolicy for Federated {
     fn redispatch(&mut self, _: &[WalkJob], _: Tick, _: &mut Vec<(Tick, CoreEvent)>) {}
 }
 
-/// GCAPS-style priority-based GPU scheduling: the highest-priority ready
-/// kernel claims **all** SMs of the device; lower-priority kernels wait,
-/// and preemption happens at segment boundaries (a running kernel is
-/// never cancelled — on its completion the pool re-decides by priority).
-///
-/// Segment durations must therefore be drawn at the *full device width*
-/// (the executors pass `gn_total` as every task's allocation under this
-/// policy; `analysis::schedule_preemptive` admits on the same basis).
-#[derive(Debug, Default)]
-pub struct PreemptivePriority {
-    ready: Vec<JobId>,
-    busy: Option<JobId>,
+/// How a whole-device queueing policy orders its ready kernels (lower
+/// key = more urgent).  Evaluated fresh at every dispatch point, so the
+/// dynamic orders track the driver's clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Urgency {
+    /// The job's static `(level, release)` priority.
+    StaticPrio,
+    /// Absolute deadline — earlier claims the device first.
+    Deadline,
+    /// `deadline − now − remaining work` across the job's unwalked
+    /// phases; a negative laxity means the job can no longer make its
+    /// deadline even running alone.
+    Laxity,
 }
 
-impl PreemptivePriority {
+impl Urgency {
+    fn key(self, jobs: &[WalkJob], j: JobId, now: Tick) -> (i128, u64) {
+        match self {
+            Urgency::StaticPrio => (jobs[j].prio.0 as i128, jobs[j].prio.1),
+            Urgency::Deadline => (jobs[j].deadline as i128, 0),
+            Urgency::Laxity => {
+                let remaining: Tick = (jobs[j].next_phase..jobs[j].chain.len())
+                    .map(|p| jobs[j].chain.duration(p))
+                    .sum();
+                (jobs[j].deadline as i128 - now as i128 - remaining as i128, 0)
+            }
+        }
+    }
+}
+
+/// The shared mechanism behind every whole-device policy: one kernel at
+/// a time holds **all** SMs, waiters queue, and on each dispatch point
+/// the most urgent waiter wins — ties broken by enqueue sequence
+/// (FIFO), never by queue-removal history.
+///
+/// Segment durations must therefore be drawn at the *full device width*
+/// (the executors pass `gn_total` as every task's allocation under
+/// these policies; the matching `analysis` bounds admit on the same
+/// basis).
+#[derive(Debug)]
+struct UrgencyQueue {
+    order: Urgency,
+    /// Ready kernels as `(job, enqueue sequence)`; the sequence is the
+    /// explicit FIFO tie-break, so `swap_remove` churn cannot perturb
+    /// dispatch order among equal-urgency waiters.
+    ready: Vec<(JobId, u64)>,
+    busy: Option<JobId>,
+    seq: u64,
+}
+
+impl UrgencyQueue {
+    fn new(order: Urgency) -> UrgencyQueue {
+        UrgencyQueue { order, ready: Vec::new(), busy: None, seq: 0 }
+    }
+
     fn dispatch(&mut self, jobs: &[WalkJob], now: Tick, timers: &mut Vec<(Tick, CoreEvent)>) {
         if self.busy.is_some() {
             return;
         }
-        let Some(best_pos) = (0..self.ready.len()).min_by_key(|&i| jobs[self.ready[i]].prio)
+        let Some(best_pos) = (0..self.ready.len())
+            .min_by_key(|&i| (self.order.key(jobs, self.ready[i].0, now), self.ready[i].1))
         else {
             return;
         };
-        let j = self.ready.swap_remove(best_pos);
+        let (j, _) = self.ready.swap_remove(best_pos);
         let d = jobs[j].chain.duration(jobs[j].next_phase);
         self.busy = Some(j);
         timers.push((now + d, CoreEvent::GpuDone(j)));
     }
 }
 
-impl GpuPolicy for PreemptivePriority {
+impl GpuPolicy for UrgencyQueue {
     fn enqueue(
         &mut self,
         jobs: &[WalkJob],
@@ -111,7 +155,8 @@ impl GpuPolicy for PreemptivePriority {
         now: Tick,
         timers: &mut Vec<(Tick, CoreEvent)>,
     ) {
-        self.ready.push(j);
+        self.ready.push((j, self.seq));
+        self.seq += 1;
         self.dispatch(jobs, now, timers);
     }
 
@@ -130,34 +175,133 @@ impl GpuPolicy for PreemptivePriority {
     }
 }
 
+/// GCAPS-style priority-based GPU scheduling: the highest-priority ready
+/// kernel claims **all** SMs of the device; lower-priority kernels wait,
+/// and preemption happens at segment boundaries (a running kernel is
+/// never cancelled — on its completion the pool re-decides by priority).
+/// Admission bound: [`crate::analysis::schedule_preemptive`].
+#[derive(Debug)]
+pub struct PreemptivePriority(UrgencyQueue);
+
+impl Default for PreemptivePriority {
+    fn default() -> Self {
+        PreemptivePriority(UrgencyQueue::new(Urgency::StaticPrio))
+    }
+}
+
+/// Earliest-deadline-first whole-device claim: at every segment
+/// boundary the ready kernel whose job's *absolute deadline* is nearest
+/// wins the device — a job's claim strengthens as its deadline nears,
+/// regardless of static priority.  Admission bound:
+/// [`crate::analysis::schedule_edf`].
+#[derive(Debug)]
+pub struct Edf(UrgencyQueue);
+
+impl Default for Edf {
+    fn default() -> Self {
+        Edf(UrgencyQueue::new(Urgency::Deadline))
+    }
+}
+
+/// Least-laxity whole-device claim: the ready kernel whose job has the
+/// smallest slack `deadline − now − remaining work` wins.  Laxity is
+/// re-evaluated at each dispatch point, so a job that has been waiting
+/// (laxity shrinking) overtakes one that has not.  Admission bound:
+/// [`crate::analysis::schedule_least_laxity`].
+#[derive(Debug)]
+pub struct LeastLaxity(UrgencyQueue);
+
+impl Default for LeastLaxity {
+    fn default() -> Self {
+        LeastLaxity(UrgencyQueue::new(Urgency::Laxity))
+    }
+}
+
+macro_rules! delegate_policy {
+    ($name:ident) => {
+        impl GpuPolicy for $name {
+            fn enqueue(
+                &mut self,
+                jobs: &[WalkJob],
+                j: JobId,
+                now: Tick,
+                timers: &mut Vec<(Tick, CoreEvent)>,
+            ) {
+                self.0.enqueue(jobs, j, now, timers)
+            }
+
+            fn complete(&mut self, j: JobId) -> Option<JobId> {
+                self.0.complete(j)
+            }
+
+            fn redispatch(
+                &mut self,
+                jobs: &[WalkJob],
+                now: Tick,
+                timers: &mut Vec<(Tick, CoreEvent)>,
+            ) {
+                self.0.redispatch(jobs, now, timers)
+            }
+        }
+    };
+}
+
+delegate_policy!(PreemptivePriority);
+delegate_policy!(Edf);
+delegate_policy!(LeastLaxity);
+
 /// Value-level policy selector — what configs, CLIs and placement carry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum GpuPolicyKind {
     /// Dedicated virtual SMs per task (paper §5.2, the default).
     Federated,
-    /// Whole-device claim by priority, preemption at segment boundaries.
+    /// Whole-device claim by static priority, preemption at segment
+    /// boundaries.
     PreemptivePriority,
+    /// Whole-device claim by earliest absolute deadline.
+    Edf,
+    /// Whole-device claim by least laxity.
+    LeastLaxity,
 }
 
 impl GpuPolicyKind {
-    pub const ALL: [GpuPolicyKind; 2] =
-        [GpuPolicyKind::Federated, GpuPolicyKind::PreemptivePriority];
+    pub const ALL: [GpuPolicyKind; 4] = [
+        GpuPolicyKind::Federated,
+        GpuPolicyKind::PreemptivePriority,
+        GpuPolicyKind::Edf,
+        GpuPolicyKind::LeastLaxity,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             GpuPolicyKind::Federated => "federated",
             GpuPolicyKind::PreemptivePriority => "preemptive",
+            GpuPolicyKind::Edf => "edf",
+            GpuPolicyKind::LeastLaxity => "ll",
         }
     }
 
+    /// Does an admitted task's kernel claim the whole device (so its
+    /// grant — and the width the executors draw GPU durations at — is
+    /// `gn_total` rather than a per-task partition)?
+    pub fn whole_device(self) -> bool {
+        !matches!(self, GpuPolicyKind::Federated)
+    }
+
     /// Parse a CLI spelling.
-    pub fn parse(s: &str) -> Option<GpuPolicyKind> {
+    pub fn parse(s: &str) -> Result<GpuPolicyKind, String> {
         match s {
-            "federated" | "fed" => Some(GpuPolicyKind::Federated),
+            "federated" | "fed" => Ok(GpuPolicyKind::Federated),
             "preemptive" | "preemptive-priority" | "gcaps" => {
-                Some(GpuPolicyKind::PreemptivePriority)
+                Ok(GpuPolicyKind::PreemptivePriority)
             }
-            _ => None,
+            "edf" | "earliest-deadline" => Ok(GpuPolicyKind::Edf),
+            "ll" | "least-laxity" | "lst" => Ok(GpuPolicyKind::LeastLaxity),
+            _ => Err(format!(
+                "unknown GPU policy '{s}' (expected federated|fed, \
+                 preemptive|preemptive-priority|gcaps, edf|earliest-deadline, \
+                 ll|least-laxity|lst)"
+            )),
         }
     }
 
@@ -166,6 +310,8 @@ impl GpuPolicyKind {
         match self {
             GpuPolicyKind::Federated => Box::new(Federated),
             GpuPolicyKind::PreemptivePriority => Box::<PreemptivePriority>::default(),
+            GpuPolicyKind::Edf => Box::<Edf>::default(),
+            GpuPolicyKind::LeastLaxity => Box::<LeastLaxity>::default(),
         }
     }
 }
@@ -178,6 +324,11 @@ mod tests {
     fn gpu_job(task: usize, prio: usize, release: Tick, d: Tick) -> WalkJob {
         let chain = Chain::new(vec![(Phase::Gpu(0), d)]);
         WalkJob::new(task, prio, release, release, release + 1_000_000, chain)
+    }
+
+    fn deadline_job(task: usize, release: Tick, d: Tick, deadline: Tick) -> WalkJob {
+        let chain = Chain::new(vec![(Phase::Gpu(0), d)]);
+        WalkJob::new(task, task, release, release, deadline, chain)
     }
 
     #[test]
@@ -231,11 +382,110 @@ mod tests {
     }
 
     #[test]
+    fn equal_priority_waiters_dispatch_in_enqueue_order() {
+        // The `swap_remove` regression: three equal-priority waiters
+        // queued behind a high-priority job, whose dispatch churns the
+        // queue (removing the front slot swaps the *last* waiter into
+        // it).  The old `Vec<JobId>` + `swap_remove` implementation then
+        // served the waiters C, A, B; the enqueue-sequence tie-break
+        // must keep arrival (FIFO) order A, B, C.
+        let jobs = vec![
+            gpu_job(0, 3, 0, 4), // holds the device first
+            gpu_job(1, 0, 0, 4), // high priority, queued at the front
+            gpu_job(2, 7, 0, 5), // waiter A
+            gpu_job(3, 7, 0, 5), // waiter B
+            gpu_job(4, 7, 0, 5), // waiter C
+        ];
+        let mut p = PreemptivePriority::default();
+        let mut timers = Vec::new();
+        p.enqueue(&jobs, 0, 0, &mut timers); // idle device: runs [0, 4)
+        p.enqueue(&jobs, 1, 0, &mut timers);
+        p.enqueue(&jobs, 2, 0, &mut timers);
+        p.enqueue(&jobs, 3, 0, &mut timers);
+        p.enqueue(&jobs, 4, 0, &mut timers);
+        timers.clear();
+        assert_eq!(p.complete(0), Some(0));
+        p.redispatch(&jobs, 4, &mut timers);
+        assert_eq!(timers, vec![(8, CoreEvent::GpuDone(1))], "priority first");
+        // The high-priority removal churned the queue; the equal-priority
+        // waiters must still come out in enqueue order.
+        for (done, next, t) in [(1, 2, 8u64), (2, 3, 13), (3, 4, 18)] {
+            timers.clear();
+            assert_eq!(p.complete(done), Some(done));
+            p.redispatch(&jobs, t, &mut timers);
+            assert_eq!(timers, vec![(t + 5, CoreEvent::GpuDone(next))], "FIFO among equals");
+        }
+    }
+
+    #[test]
+    fn edf_dispatches_earliest_deadline_not_priority() {
+        // Task 0 has top static priority but the *latest* deadline; EDF
+        // must run the nearest-deadline waiter first.
+        let jobs = vec![
+            deadline_job(0, 0, 5, 1000), // static prio 0, late deadline
+            deadline_job(1, 0, 5, 100),
+            deadline_job(2, 0, 5, 50), // most urgent
+        ];
+        let mut p = Edf::default();
+        let mut timers = Vec::new();
+        p.enqueue(&jobs, 0, 0, &mut timers); // idle device: runs
+        p.enqueue(&jobs, 1, 1, &mut timers);
+        p.enqueue(&jobs, 2, 2, &mut timers);
+        timers.clear();
+        assert_eq!(p.complete(0), Some(0));
+        p.redispatch(&jobs, 5, &mut timers);
+        assert_eq!(timers, vec![(10, CoreEvent::GpuDone(2))], "earliest deadline wins");
+        timers.clear();
+        assert_eq!(p.complete(2), Some(2));
+        p.redispatch(&jobs, 10, &mut timers);
+        assert_eq!(timers, vec![(15, CoreEvent::GpuDone(1))]);
+    }
+
+    #[test]
+    fn least_laxity_accounts_for_remaining_work() {
+        // Earlier deadline but lots of slack vs later deadline with no
+        // slack: at the redispatch instant t = 5, job 1's laxity is
+        // 100−5−10 = 85 while job 2's is 60−5−40 = 15 — least laxity
+        // must run job 2 first (plain EDF would pick job 2 here too,
+        // so also check against job 3 with deadline 90 and work 80:
+        // laxity 90−5−80 = 5, *less* urgent by deadline, more by slack).
+        let jobs = vec![
+            deadline_job(0, 0, 5, 1000), // holds the device [0, 5)
+            deadline_job(1, 0, 10, 100),
+            deadline_job(2, 0, 40, 60),
+            deadline_job(3, 0, 80, 90), // smallest laxity, latest-but-one deadline
+        ];
+        let mut p = LeastLaxity::default();
+        let mut timers = Vec::new();
+        p.enqueue(&jobs, 0, 0, &mut timers);
+        p.enqueue(&jobs, 1, 0, &mut timers);
+        p.enqueue(&jobs, 2, 0, &mut timers);
+        p.enqueue(&jobs, 3, 0, &mut timers);
+        timers.clear();
+        assert_eq!(p.complete(0), Some(0));
+        p.redispatch(&jobs, 5, &mut timers);
+        assert_eq!(timers, vec![(85, CoreEvent::GpuDone(3))], "least slack wins the device");
+    }
+
+    #[test]
     fn kind_parses_and_names_roundtrip() {
         for kind in GpuPolicyKind::ALL {
-            assert_eq!(GpuPolicyKind::parse(kind.name()), Some(kind));
+            assert_eq!(GpuPolicyKind::parse(kind.name()), Ok(kind));
         }
-        assert_eq!(GpuPolicyKind::parse("gcaps"), Some(GpuPolicyKind::PreemptivePriority));
-        assert_eq!(GpuPolicyKind::parse("nope"), None);
+        assert_eq!(GpuPolicyKind::parse("gcaps"), Ok(GpuPolicyKind::PreemptivePriority));
+        assert_eq!(GpuPolicyKind::parse("least-laxity"), Ok(GpuPolicyKind::LeastLaxity));
+        assert_eq!(GpuPolicyKind::parse("earliest-deadline"), Ok(GpuPolicyKind::Edf));
+        let err = GpuPolicyKind::parse("nope").unwrap_err();
+        for spelling in ["nope", "federated", "fed", "preemptive", "gcaps", "edf", "ll"] {
+            assert!(err.contains(spelling), "error must list '{spelling}': {err}");
+        }
+    }
+
+    #[test]
+    fn whole_device_partitions_the_kinds() {
+        assert!(!GpuPolicyKind::Federated.whole_device());
+        assert!(GpuPolicyKind::PreemptivePriority.whole_device());
+        assert!(GpuPolicyKind::Edf.whole_device());
+        assert!(GpuPolicyKind::LeastLaxity.whole_device());
     }
 }

@@ -9,7 +9,7 @@ use crate::model::{ArrivalModel, CpuTopology, RtTask, TaskSet};
 use crate::sched::driver;
 use crate::sched::{
     ms_to_ticks, ticks_to_ms, ArrivalSpec, Chain, DriverConfig, DriverTask, GpuPolicyKind,
-    Segment, TraceEntry,
+    OverloadConfig, Segment, TraceEntry,
 };
 use crate::telemetry::{NoopSink, TelemetrySink};
 use crate::util::rng::Pcg;
@@ -102,15 +102,20 @@ pub struct SimConfig {
     pub horizon_ms: Option<f64>,
     /// Stop at the first deadline miss (fast accept/reject probing).
     pub stop_on_first_miss: bool,
-    /// GPU dispatch policy.  Under [`GpuPolicyKind::PreemptivePriority`]
-    /// a running kernel claims the whole device, so pass the full device
-    /// SM count as every task's allocation (as
-    /// `analysis::schedule_preemptive` grants it).
+    /// GPU dispatch policy.  Under the whole-device policies
+    /// ([`GpuPolicyKind::PreemptivePriority`], [`GpuPolicyKind::Edf`],
+    /// [`GpuPolicyKind::LeastLaxity`]) a running kernel claims the whole
+    /// device, so pass the full device SM count as every task's
+    /// allocation (as the matching `analysis` bounds grant it).
     pub gpu_policy: GpuPolicyKind,
     /// The arrival process to drive (default: each task's own).  Jitter
     /// draws come from per-task streams forked off `seed`, independent
     /// of the execution-time draws.
     pub arrival: ArrivalOverride,
+    /// Device overload monitor (DESIGN.md §13): `None` (the default)
+    /// never sheds; `Some` drops `Shed`-class releases while recent miss
+    /// pressure is at the threshold.
+    pub overload: Option<OverloadConfig>,
 }
 
 impl SimConfig {
@@ -124,6 +129,7 @@ impl SimConfig {
             stop_on_first_miss: true,
             gpu_policy: GpuPolicyKind::Federated,
             arrival: ArrivalOverride::FromTask,
+            overload: None,
         }
     }
 
@@ -137,6 +143,7 @@ impl SimConfig {
             stop_on_first_miss: false,
             gpu_policy: GpuPolicyKind::Federated,
             arrival: ArrivalOverride::FromTask,
+            overload: None,
         }
     }
 }
@@ -147,6 +154,10 @@ pub struct TaskStats {
     pub released: usize,
     pub completed: usize,
     pub misses: usize,
+    /// Releases dropped in shed mode (zero unless the run had an
+    /// overload monitor and this task is `Shed`-class).  Shed releases
+    /// are not in `released`.
+    pub shed: usize,
     /// Response-time summary (ms) over completed jobs.
     pub response: Option<Summary>,
     pub max_response_ms: f64,
@@ -240,6 +251,7 @@ fn simulate_impl(
             deadline: ms_to_ticks(t.deadline),
             priority: i,
             arrival: ArrivalSpec::from_model(&cfg.arrival.resolve(t)),
+            on_miss: t.on_miss,
         })
         .collect();
     let dcfg = DriverConfig {
@@ -249,6 +261,7 @@ fn simulate_impl(
         stop_on_first_miss: cfg.stop_on_first_miss,
         trace,
         arrival_seed: cfg.seed,
+        overload: cfg.overload,
     };
     // Draw all phase durations per released job, in chain order.
     let mut out = driver::run_with_sink(
@@ -268,10 +281,11 @@ fn simulate_impl(
 
     // Collect statistics.
     let mut per_task: Vec<TaskStats> = (0..n)
-        .map(|_| TaskStats {
+        .map(|task| TaskStats {
             released: 0,
             completed: 0,
             misses: 0,
+            shed: out.shed[0][task],
             response: None,
             max_response_ms: 0.0,
         })
@@ -381,6 +395,7 @@ mod tests {
             deadline: d,
             period: 200.0,
             arrival: crate::model::ArrivalModel::Periodic,
+            on_miss: crate::model::DeadlineMissAction::Log,
         };
         let hi = mk(0, 1.0, 4.0, 200.0);
         let lo = mk(1, 0.1, 10.0, 200.0);
@@ -534,6 +549,38 @@ mod tests {
         assert_eq!(r.per_task[0].misses, 1);
         assert_eq!(r.total_misses, 1);
         assert!(!r.schedulable);
+    }
+
+    #[test]
+    fn shed_mode_drops_background_releases_and_reports_them() {
+        // A CPU hog that misses every deadline (Log) plus a Shed-class
+        // background task: with the monitor on, the background releases
+        // are dropped under pressure and surface in `TaskStats::shed`,
+        // never in `released`.
+        let mut hog = cpu_only_task(0, 9.0, 8.0);
+        hog.cpu = vec![Bounds::exact(9.0)];
+        hog.period = 10.0;
+        hog.deadline = 8.0;
+        let mut bg = cpu_only_task(1, 1.0, 50.0);
+        bg.cpu = vec![Bounds::exact(1.0)];
+        bg.period = 10.0;
+        bg.deadline = 50.0;
+        let bg = bg.with_miss_action(crate::model::DeadlineMissAction::Shed);
+        let ts = TaskSet::with_priority_order(vec![hog, bg]);
+        let cfg = SimConfig {
+            horizon_ms: Some(100.0),
+            stop_on_first_miss: false,
+            overload: Some(OverloadConfig::from_ms(50.0, 1)),
+            ..SimConfig::acceptance(3)
+        };
+        let r = simulate(&ts, &vec![0, 0], &cfg);
+        let shed = r.per_task[1].shed;
+        assert!(shed > 0, "sustained misses must shed background releases");
+        assert_eq!(r.per_task[1].released + shed, 10, "shed releases never enter `released`");
+        // The default monitor-off config never sheds.
+        let off = simulate(&ts, &vec![0, 0], &SimConfig { overload: None, ..cfg });
+        assert_eq!(off.per_task[1].shed, 0);
+        assert_eq!(off.per_task[1].released, 10);
     }
 
     #[test]

@@ -73,6 +73,12 @@ pub trait TelemetrySink {
     /// A job of `task` on `dev` completed with arrival-anchored
     /// end-to-end `latency_ms`, `missed` iff past its deadline.
     fn on_job(&mut self, _dev: DeviceId, _task: usize, _latency_ms: f64, _missed: bool) {}
+
+    /// A release of `task` on `dev` was dropped at its release point by
+    /// the overload shed protocol (DESIGN.md §13): the job never enters
+    /// the platform, so it is reported through neither `on_phase` nor
+    /// `on_job`.
+    fn on_shed(&mut self, _dev: DeviceId, _task: usize) {}
 }
 
 /// The do-nothing sink [`crate::sched::driver::run`] threads through —
@@ -128,6 +134,9 @@ pub struct TaskTelemetry {
     pub segments: [Accum; 5],
     pub completed: u64,
     pub missed: u64,
+    /// Releases dropped by the overload shed protocol — never counted
+    /// in `completed`.
+    pub shed: u64,
 }
 
 impl TaskTelemetry {
@@ -217,6 +226,10 @@ impl TelemetrySink for Recorder {
             t.missed += 1;
         }
     }
+
+    fn on_shed(&mut self, dev: DeviceId, task: usize) {
+        self.slot(dev, task).shed += 1;
+    }
 }
 
 #[cfg(test)]
@@ -243,6 +256,7 @@ mod tests {
         r.on_phase(1, 2, Phase::Gpu(0), 6.0);
         r.on_job(1, 2, 11.0, false);
         r.on_job(1, 2, 25.0, true);
+        r.on_shed(1, 2);
         let t = r.task(1, 2).unwrap();
         let gpu = &t.segments[SegClass::Gpu.index()];
         assert_eq!(gpu.count, 2);
@@ -250,6 +264,7 @@ mod tests {
         assert_eq!(gpu.mean_ms(), 5.0);
         assert_eq!(t.completed, 2);
         assert_eq!(t.missed, 1);
+        assert_eq!(t.shed, 1, "shed counted separately from completions");
         assert_eq!(t.latency.count(), 2);
         assert_eq!(r.device_miss_rate(1), 0.5);
         assert_eq!(r.device_miss_rate(0), 0.0, "untouched device");

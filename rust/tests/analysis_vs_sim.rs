@@ -8,7 +8,10 @@
 
 use rtgpu::analysis::rtgpu::{evaluate, schedule, RtgpuOpts, Search};
 use rtgpu::gen::{generate_taskset, GenConfig};
-use rtgpu::model::{ArrivalModel, Bounds, GpuSegment, KernelClass, MemoryModel, RtTask, TaskSet};
+use rtgpu::model::{
+    ArrivalModel, Bounds, DeadlineMissAction, GpuSegment, KernelClass, MemoryModel, RtTask,
+    TaskSet,
+};
 use rtgpu::sim::{simulate, ExecModel, SimConfig};
 use rtgpu::util::rng::Pcg;
 
@@ -112,6 +115,7 @@ fn dropping_mem_blocking_is_unsound() {
         deadline: 6.0,
         period: 50.0,
         arrival: ArrivalModel::Periodic,
+        on_miss: DeadlineMissAction::Log,
     };
     let lo = RtTask {
         id: 1,
@@ -126,6 +130,7 @@ fn dropping_mem_blocking_is_unsound() {
         deadline: 200.0,
         period: 200.0,
         arrival: ArrivalModel::Periodic,
+        on_miss: DeadlineMissAction::Log,
     };
     let ts = TaskSet::with_priority_order(vec![hi, lo]);
     let alloc = vec![1, 1];

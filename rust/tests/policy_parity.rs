@@ -1,15 +1,17 @@
-//! The preemptive-priority GPU policy, pinned on both axes (DESIGN.md §9):
+//! The whole-device GPU policies — preemptive-priority, EDF and
+//! least-laxity — pinned on both axes (DESIGN.md §9, §13):
 //!
-//! (a) **soundness** — a set admitted by `analysis::schedule_preemptive`
-//!     never misses a deadline in a worst-case run of the shared driver
-//!     under that policy (flat and G=1-cluster);
+//! (a) **soundness** — a set admitted by the policy's own analysis bound
+//!     (`schedule_preemptive` / `schedule_policy_bound`) never misses a
+//!     deadline in a worst-case run of the shared driver under that
+//!     policy (flat and G=1-cluster), periodic and sporadic alike;
 //! (b) **parity** — the simulator and the virtual serving driver remain
 //!     trace-identical under the new policy (the refactor's guarantee is
 //!     per-policy, not federated-only), and a one-device preemptive
 //!     cluster still replays the flat preemptive simulator.
 
 use rtgpu::analysis::gpu::gpu_response;
-use rtgpu::analysis::{schedule_preemptive, RtgpuOpts, SmModel};
+use rtgpu::analysis::{schedule_policy_bound, schedule_preemptive, RtgpuOpts, SmModel};
 use rtgpu::cluster::{simulate_cluster_traced, ClusterWorkload, DeviceWorkload};
 use rtgpu::coordinator::{serve_virtual_policy, VirtualTask};
 use rtgpu::gen::{generate_taskset, GenConfig};
@@ -87,6 +89,99 @@ fn prop_preemptive_admitted_never_misses() {
         }
         Ok(())
     });
+}
+
+/// `admitted ⇒ no deadline miss` for a whole-device policy under its own
+/// analysis bound, over worst-case driver runs — periodic sets and
+/// jittered sporadic sets alike (`sporadic_frac` of each task's period
+/// becomes release jitter on odd iterations).
+fn check_admitted_never_misses(policy: GpuPolicyKind, name: &'static str, seed: u64) {
+    prop::check(name, seed, 25, move |g| {
+        let util = g.float(0.3, 2.0);
+        let gn_total = g.int(1, 6).max(1);
+        let n_tasks = g.int(1, 6).max(1);
+        let sporadic = g.int(0, 2) == 1;
+        let mut cfg = GenConfig::default().with_tasks(n_tasks);
+        if sporadic {
+            cfg = cfg.with_sporadic(g.float(0.05, 0.3));
+        }
+        let mut rng = Pcg::new(g.rng.next_u64());
+        let ts = generate_taskset(&mut rng, &cfg, util);
+        let v = schedule_policy_bound(&ts, gn_total, policy, &RtgpuOpts::default())
+            .ok_or("whole-device policy must have a bound")?;
+        if !v.schedulable {
+            return Ok(()); // rejected sets promise nothing
+        }
+        let alloc = v.allocation.ok_or("accepted set without allocation")?;
+        if alloc.iter().any(|&a| a != gn_total) {
+            return Err(format!("{} grants must be whole-device", policy.name()));
+        }
+        let sim_cfg = SimConfig { gpu_policy: policy, ..SimConfig::acceptance(g.rng.next_u64()) };
+        let r = simulate(&ts, &alloc, &sim_cfg);
+        if !r.schedulable {
+            return Err(format!(
+                "admitted (gn={gn_total}, {} tasks, sporadic={sporadic}) but the {} driver \
+                 missed {} deadlines",
+                ts.len(),
+                policy.name(),
+                r.total_misses
+            ));
+        }
+        for (stats, bound) in r.per_task.iter().zip(&v.responses) {
+            let b = bound.ok_or("accepted set without a bound")?;
+            if stats.max_response_ms > b + 1e-6 {
+                return Err(format!(
+                    "observed {} ms above the {} bound {b} ms",
+                    stats.max_response_ms,
+                    policy.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edf_admitted_never_misses() {
+    check_admitted_never_misses(GpuPolicyKind::Edf, "edf_admission_sound", 517);
+}
+
+#[test]
+fn prop_least_laxity_admitted_never_misses() {
+    check_admitted_never_misses(GpuPolicyKind::LeastLaxity, "ll_admission_sound", 518);
+}
+
+#[test]
+fn urgency_policies_change_the_schedule_static_priority_would_produce() {
+    // The policy axis is real for the new kinds too.  A long kernel
+    // (priority 0) holds the device while two waiters queue whose static
+    // order (a before b) opposes their deadline order (b's absolute
+    // deadline is tighter): when the hog finishes, static priority
+    // dispatches a, EDF and least-laxity dispatch b.
+    let mut hog = rtgpu::model::testing::simple_task(0);
+    hog.period = 400.0;
+    hog.deadline = 400.0;
+    hog.gpu[0].work = rtgpu::model::Bounds::new(30.0, 60.0); // ~30 ms kernel
+    let mut a = rtgpu::model::testing::simple_task(1);
+    a.period = 400.0;
+    a.deadline = 150.0;
+    let mut b = rtgpu::model::testing::simple_task(2);
+    b.period = 400.0;
+    b.deadline = 50.0;
+    let ts = TaskSet::with_priority_order(vec![hog, a, b]);
+    let alloc = vec![2, 2, 2];
+    let mk = |policy| SimConfig {
+        horizon_ms: Some(100.0),
+        stop_on_first_miss: false,
+        gpu_policy: policy,
+        ..SimConfig::acceptance(1)
+    };
+    let (_, pre) = simulate_traced(&ts, &alloc, &mk(GpuPolicyKind::PreemptivePriority));
+    let (_, edf) = simulate_traced(&ts, &alloc, &mk(GpuPolicyKind::Edf));
+    let (_, ll) = simulate_traced(&ts, &alloc, &mk(GpuPolicyKind::LeastLaxity));
+    assert!(!pre.is_empty() && !edf.is_empty() && !ll.is_empty());
+    assert_ne!(pre, edf, "EDF must dispatch by absolute deadline, not static priority");
+    assert_ne!(pre, ll, "least-laxity must dispatch by laxity, not static priority");
 }
 
 // ---------------------------------------------------------------------------
