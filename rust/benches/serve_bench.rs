@@ -1,0 +1,214 @@
+//! Serving front-end benchmarks (DESIGN.md §14): the single-lock
+//! per-request router raced against the sharded, batched
+//! [`AdmissionFront`] on sustained arrival streams — shards ∈ {1, 2, 8}
+//! × devices ∈ {4, 64} — reporting sustained decisions/sec, admits, and
+//! p50/p95/p99 per-decision latency from the front's `LogHistogram`s,
+//! plus a submit-side contention family (producers × shards).  Emitted
+//! to `BENCH_serve.json`.
+//!
+//! Parity is asserted, not sampled: for every configuration the
+//! batched front must admit and reject exactly as many apps as the
+//! serial reference fed the same stream (the decision *sequence* is
+//! pinned by `tests/front_parity.rs`; here we keep the race honest).
+//!
+//! `--smoke` shrinks the stream to 5 apps per device for the CI
+//! wall-clock budget; the default run is 20 per device.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use rtgpu::analysis::RtgpuOpts;
+use rtgpu::cluster::{ClusterState, PlacementPolicy};
+use rtgpu::coordinator::AdmissionFront;
+use rtgpu::model::testing::simple_task;
+use rtgpu::model::{Bounds, ClusterPlatform, GpuSegment, KernelClass, RtTask};
+use rtgpu::telemetry::LogHistogram;
+use rtgpu::util::json::Json;
+
+const POLICY: PlacementPolicy = PlacementPolicy::WorstFit;
+
+fn fresh_state(devices: usize) -> ClusterState {
+    ClusterState::new(ClusterPlatform::homogeneous(devices, 12), RtgpuOpts::default())
+}
+
+/// A light application (≈0.035 utilization): the stream oversubscribes
+/// the fleet partway through, so the race covers both the admit-heavy
+/// head and the rejection-heavy tail where the batched candidate reuse
+/// pays.
+fn fleet_app(id: usize) -> RtTask {
+    let mut t = simple_task(id);
+    t.cpu = vec![Bounds::new(0.4, 0.5), Bounds::new(0.4, 0.5)];
+    t.mem = vec![Bounds::new(0.2, 0.25), Bounds::new(0.2, 0.25)];
+    let gw = 1.5 + (id % 13) as f64 * 0.04;
+    t.gpu = vec![GpuSegment::new(
+        Bounds::new(gw * 0.8, gw),
+        Bounds::new(0.0, 0.9),
+        KernelClass::Compute,
+    )];
+    t.deadline = 80.0 + (id % 7) as f64;
+    t.period = 100.0;
+    t
+}
+
+struct RunResult {
+    admitted: u64,
+    rejected: u64,
+    decisions_per_s: f64,
+    latency: LogHistogram,
+}
+
+/// The pre-§14 path: every request takes the router lock and decides
+/// alone — here without the lock (single thread), which only flatters
+/// the baseline.
+fn run_single_lock(apps: &[RtTask], devices: usize) -> RunResult {
+    let mut state = fresh_state(devices);
+    let mut latency = LogHistogram::new();
+    let (mut admitted, mut rejected) = (0u64, 0u64);
+    let t0 = Instant::now();
+    for t in apps {
+        let d0 = Instant::now();
+        let placed = state.try_place(t, POLICY).is_some();
+        latency.record(d0.elapsed().as_secs_f64() * 1e3);
+        if placed {
+            admitted += 1;
+        } else {
+            rejected += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    RunResult { admitted, rejected, decisions_per_s: apps.len() as f64 / wall, latency }
+}
+
+/// The sharded front under a sustained stream: one producer submits in
+/// order (keeping the decision sequence comparable to the serial
+/// reference) while this thread drains batches until everything is
+/// decided.
+fn run_front(apps: &[RtTask], devices: usize, shards: usize) -> RunResult {
+    let front = AdmissionFront::new(shards, POLICY, None);
+    let mut state = fresh_state(devices);
+    let total = apps.len();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let producer = &front;
+        scope.spawn(move || {
+            for t in apps {
+                producer.submit(t.clone(), 0);
+            }
+        });
+        let mut decided = 0usize;
+        while decided < total {
+            decided += front.drain(&mut state).len();
+            if decided < total {
+                std::hint::spin_loop();
+            }
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let m = front.metrics();
+    RunResult {
+        admitted: m.admitted,
+        rejected: m.rejected,
+        decisions_per_s: total as f64 / wall,
+        latency: m.merged(),
+    }
+}
+
+fn q(h: &LogHistogram, p: f64) -> f64 {
+    h.quantile(p).unwrap_or(0.0)
+}
+
+fn row(label: &str, r: &RunResult) {
+    println!(
+        "{label:<44} {:>10.0} dec/s  admit {:>5}  reject {:>5}  \
+         p50 {:>7.4} ms  p95 {:>7.4} ms  p99 {:>7.4} ms",
+        r.decisions_per_s,
+        r.admitted,
+        r.rejected,
+        q(&r.latency, 0.50),
+        q(&r.latency, 0.95),
+        q(&r.latency, 0.99),
+    );
+}
+
+fn insert(obj: &mut BTreeMap<String, Json>, prefix: &str, r: &RunResult) {
+    obj.insert(format!("{prefix}_decisions_per_s"), Json::Num(r.decisions_per_s.round()));
+    obj.insert(format!("{prefix}_admitted"), Json::Num(r.admitted as f64));
+    obj.insert(format!("{prefix}_rejected"), Json::Num(r.rejected as f64));
+    obj.insert(format!("{prefix}_p50_ms"), Json::Num(q(&r.latency, 0.50)));
+    obj.insert(format!("{prefix}_p95_ms"), Json::Num(q(&r.latency, 0.95)));
+    obj.insert(format!("{prefix}_p99_ms"), Json::Num(q(&r.latency, 0.99)));
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let per_device = if smoke { 5 } else { 20 };
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("scale_mode".into(), Json::Str(if smoke { "smoke" } else { "full" }.into()));
+    obj.insert("apps_per_device".into(), Json::Num(per_device as f64));
+    obj.insert("policy".into(), Json::Str(POLICY.name().into()));
+
+    // --- sustained decision race: single lock vs sharded front ----------
+    let mut parity_ok = true;
+    for &devices in &[4usize, 64] {
+        let apps: Vec<RtTask> = (0..per_device * devices).map(fleet_app).collect();
+        println!("--- {} apps on {} devices ({})", apps.len(), devices, POLICY.name());
+        let base = run_single_lock(&apps, devices);
+        row(&format!("g{devices}_single_lock"), &base);
+        insert(&mut obj, &format!("g{devices}_single_lock"), &base);
+        for &shards in &[1usize, 2, 8] {
+            let front = run_front(&apps, devices, shards);
+            row(&format!("g{devices}_front_shards{shards}"), &front);
+            insert(&mut obj, &format!("g{devices}_front_shards{shards}"), &front);
+            if (front.admitted, front.rejected) != (base.admitted, base.rejected) {
+                parity_ok = false;
+                println!(
+                    "PARITY VIOLATION g{devices} shards{shards}: \
+                     {}/{} vs serial {}/{}",
+                    front.admitted, front.rejected, base.admitted, base.rejected
+                );
+            }
+        }
+        println!();
+    }
+
+    // --- submit-side contention: producers × shards ---------------------
+    // Time only the intake (no drain): P producers pushing one chunk
+    // each shows the shard split removing the single-queue hot spot.
+    let apps: Vec<RtTask> = (0..8 * 1024).map(fleet_app).collect();
+    for &shards in &[1usize, 8] {
+        for &producers in &[1usize, 4, 8] {
+            let front = AdmissionFront::new(shards, POLICY, None);
+            let t0 = Instant::now();
+            std::thread::scope(|scope| {
+                for chunk in apps.chunks(apps.len().div_ceil(producers)) {
+                    let front = &front;
+                    scope.spawn(move || {
+                        for t in chunk {
+                            front.submit(t.clone(), 0);
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            let rate = apps.len() as f64 / wall;
+            println!(
+                "submit_contention shards{shards} producers{producers}: {rate:>12.0} submits/s"
+            );
+            obj.insert(
+                format!("submit_shards{shards}_producers{producers}_per_s"),
+                Json::Num(rate.round()),
+            );
+        }
+    }
+
+    obj.insert("status".into(), Json::Str("measured".into()));
+    obj.insert("parity".into(), Json::Str(if parity_ok { "ok" } else { "VIOLATED" }.into()));
+    let json = Json::Obj(obj);
+    std::fs::write("BENCH_serve.json", format!("{json}\n")).expect("write BENCH_serve.json");
+    println!("\nBENCH_serve.json written");
+    println!(
+        "acceptance bar (batched front admits/rejects exactly as the serial router): {}",
+        if parity_ok { "PASS" } else { "FAIL" }
+    );
+    assert!(parity_ok, "batched front diverged from the serial router");
+}

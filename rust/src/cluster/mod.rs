@@ -34,7 +34,7 @@
 pub mod placement;
 pub mod sim;
 
-pub use placement::{ClusterState, DrainOutcome, PlacementPolicy, PlacementReport};
+pub use placement::{ClusterState, DrainOutcome, PlacementPolicy, PlacementReport, SeqPlacement};
 pub use sim::{
     simulate_cluster, simulate_cluster_telemetry, simulate_cluster_traced, ClusterSimResult,
     ClusterWorkload, DeviceWorkload,

@@ -154,6 +154,16 @@ impl PlacementReport {
     }
 }
 
+/// One decision of [`ClusterState::place_sequence`].
+#[derive(Debug, Clone, Copy)]
+pub struct SeqPlacement {
+    /// `(cluster key, device)` on admit; `None` when no device admitted.
+    pub placed: Option<(u64, DeviceId)>,
+    /// Wall time the decision took — the admission front feeds this
+    /// into its per-shard decision-latency histograms (DESIGN.md §14).
+    pub decision_ns: u64,
+}
+
 /// Outcome of a device drain ([`ClusterState::drain_device`]).
 #[derive(Debug, Clone)]
 pub struct DrainOutcome {
@@ -616,6 +626,57 @@ impl ClusterState {
         self.try_place_impl(task, policy, true)
     }
 
+    /// One arrival-ordered batched placement pass — the placement half
+    /// of the admission front (DESIGN.md §14).  Unlike
+    /// [`Self::place_all`], which re-sorts its batch by decreasing GPU
+    /// utilization (bin-packing order), this decides strictly in input
+    /// (arrival) order: element `i` is bit-identical to a
+    /// [`Self::try_place`] call with `tasks[i]` — same candidate order,
+    /// same device choice, same rollback points
+    /// (`tests/front_parity.rs` pins it).
+    ///
+    /// The batch amortization: a rejection leaves fleet membership —
+    /// and with it the candidate order of the exhaustive policies —
+    /// exactly as it was, so the next arrival reuses the previous
+    /// candidate list instead of re-reading the index; a burst probing
+    /// a saturated fleet fills candidates once, not once per arrival.
+    /// The sampled policy is exempt: `sample_p2c` forks (and thereby
+    /// advances) `place_rng` on every draw, so skipping a draw would
+    /// diverge its stream from the serial loop's — it always re-draws.
+    /// Each decision's wall time is returned for the front's latency
+    /// histograms.
+    pub fn place_sequence(
+        &mut self,
+        tasks: &[RtTask],
+        policy: PlacementPolicy,
+    ) -> Vec<SeqPlacement> {
+        let mut cands = std::mem::take(&mut self.cand_buf);
+        let mut fresh = false;
+        let mut out = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            let t0 = std::time::Instant::now();
+            if !fresh {
+                self.fill_candidates(policy, false, &mut cands);
+            }
+            let parallel = self.parallel > 1
+                && cands.len() > 1
+                && self.platform.cpu == CpuTopology::PerDevice;
+            let placed = if parallel {
+                self.place_parallel(task, &cands)
+            } else {
+                self.place_serial(task, &cands)
+            };
+            // An accept changed a device's membership and utilization
+            // (and consumed a cluster key), so the candidate list is
+            // stale; a rejection is a membership no-op and keeps it —
+            // except under sampling, which must re-draw every time.
+            fresh = placed.is_none() && !matches!(policy, PlacementPolicy::PowerOfTwo { .. });
+            out.push(SeqPlacement { placed, decision_ns: t0.elapsed().as_nanos() as u64 });
+        }
+        self.cand_buf = cands;
+        out
+    }
+
     fn place_all_impl(
         &mut self,
         tasks: &[RtTask],
@@ -787,6 +848,9 @@ impl ClusterState {
                     period: ms_to_ticks(t.period),
                     deadline: ms_to_ticks(t.deadline),
                     arrival: ArrivalSpec::from_model(&t.arrival),
+                    // §13/§14 composition: a best-effort app serves as
+                    // Shed-class work unless its spec says otherwise.
+                    on_miss: t.effective_miss_action(),
                 });
             }
         }
@@ -1175,6 +1239,39 @@ mod tests {
         let rw = wf.place_all(&tasks, PlacementPolicy::WorstFit);
         let rp = p2c.place_all(&tasks, PlacementPolicy::PowerOfTwo { k: 4 });
         assert_eq!(devs(&rw), devs(&rp), "k ≥ G degenerates to worst-fit");
+    }
+
+    #[test]
+    fn place_sequence_matches_serial_try_place_loop() {
+        let tasks: Vec<_> = (0..10).map(simple_task).collect();
+        for policy in [
+            PlacementPolicy::FirstFitDecreasing,
+            PlacementPolicy::WorstFit,
+            PlacementPolicy::P2C,
+        ] {
+            let mut serial = ClusterState::new(small_platform(2), RtgpuOpts::default())
+                .with_placement_seed(11);
+            let mut batched = ClusterState::new(small_platform(2), RtgpuOpts::default())
+                .with_placement_seed(11);
+            let expect: Vec<_> = tasks.iter().map(|t| serial.try_place(t, policy)).collect();
+            let got: Vec<_> =
+                batched.place_sequence(&tasks, policy).iter().map(|p| p.placed).collect();
+            assert_eq!(expect, got, "{} decision sequence diverged", policy.name());
+            assert!(expect.iter().any(Option::is_some), "{}", policy.name());
+            assert!(
+                expect.iter().any(Option::is_none),
+                "{}: saturation must exercise the candidate-reuse path",
+                policy.name()
+            );
+            for d in 0..2 {
+                assert_eq!(
+                    serial.device_gpu_util(d).to_bits(),
+                    batched.device_gpu_util(d).to_bits(),
+                    "{} device {d} utilization diverged",
+                    policy.name()
+                );
+            }
+        }
     }
 
     #[test]

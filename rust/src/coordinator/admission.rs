@@ -334,6 +334,43 @@ impl AdmissionState {
         (key, decision)
     }
 
+    /// Register a batch of tasks in one amortized pass.  The decision
+    /// *sequence* is bit-identical to calling [`Self::add_app`] once per
+    /// task in order — each task decides against exactly the state the
+    /// previous accepts left behind, and each rejection rolls back to
+    /// exactly the post-last-accept state — but the rollback snapshot of
+    /// the shared cache is re-taken only after an accept instead of
+    /// before every call: a run of consecutive rejections (the common
+    /// case when a burst of arrivals probes an already-loaded device)
+    /// reuses one snapshot instead of re-walking the cache per arrival.
+    /// This is the per-device half of the batched admission front
+    /// (DESIGN.md §14); `tests` pin the serial parity.
+    pub fn add_batch(
+        &mut self,
+        tasks: impl IntoIterator<Item = RtTask>,
+    ) -> Vec<(u64, AdmissionDecision)> {
+        let mut cache_snapshot = self.cache.entry_keys();
+        let mut out = Vec::new();
+        for mut task in tasks {
+            let key = self.next_key;
+            self.next_key += 1;
+            task.id = key as usize;
+            self.apps.push((key, task));
+            let decision = self.decide();
+            if decision.schedulable {
+                self.apply(&decision);
+                // The accept added cache entries later rollbacks must
+                // preserve: refresh the snapshot.
+                cache_snapshot = self.cache.entry_keys();
+            } else {
+                self.apps.pop();
+                self.cache.retain_entries(&cache_snapshot);
+            }
+            out.push((key, decision));
+        }
+        out
+    }
+
     /// Measurement-driven re-admission (DESIGN.md §12): scale the
     /// declared worst-case execution times of the named apps by the
     /// observed drift ratio and re-decide admission for the whole set.
@@ -585,6 +622,56 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn add_batch_matches_serial_add_app() {
+        // The batch API's whole contract: same keys, same decisions,
+        // same rollback points, same final state as one-at-a-time adds —
+        // including runs of consecutive rejections sharing one snapshot.
+        let cfg = GenConfig::default();
+        let mut rng = Pcg::new(1234);
+        let mut saw_reject = false;
+        for round in 0..4 {
+            let ts = generate_taskset(&mut rng, &cfg, 2.5); // overloads a 10-SM device
+            let mut serial = AdmissionState::new(Platform::new(10), RtgpuOpts::default());
+            let mut batched = AdmissionState::new(Platform::new(10), RtgpuOpts::default());
+            let serial_out: Vec<(u64, AdmissionDecision)> =
+                ts.tasks.iter().map(|t| serial.add_app(t.clone())).collect();
+            let batch_out = batched.add_batch(ts.tasks.iter().cloned());
+            assert_eq!(serial_out.len(), batch_out.len());
+            for ((sk, sd), (bk, bd)) in serial_out.iter().zip(&batch_out) {
+                assert_eq!(sk, bk, "round {round}: key sequence");
+                assert_eq!(sd.schedulable, bd.schedulable, "round {round}: verdict");
+                assert_eq!(sd.order, bd.order, "round {round}: priority order");
+                assert_eq!(sd.allocation, bd.allocation, "round {round}: allocation");
+                assert_eq!(sd.path, bd.path, "round {round}: decision path");
+                assert_eq!(sd.responses, bd.responses, "round {round}: response bounds");
+                saw_reject |= !sd.schedulable;
+            }
+            assert_eq!(serial.len(), batched.len(), "round {round}: surviving set");
+            for (k, _) in &serial_out {
+                assert_eq!(
+                    serial.allocation_of(*k),
+                    batched.allocation_of(*k),
+                    "round {round}: grant for key {k}"
+                );
+            }
+            let (sts, salloc) = serial.snapshot();
+            let (bts, balloc) = batched.snapshot();
+            assert_eq!(salloc, balloc, "round {round}: allocation snapshot");
+            assert_eq!(
+                sts.tasks.iter().map(|t| t.id).collect::<Vec<_>>(),
+                bts.tasks.iter().map(|t| t.id).collect::<Vec<_>>(),
+                "round {round}: membership"
+            );
+            assert_eq!(
+                serial.cache().entry_keys(),
+                batched.cache().entry_keys(),
+                "round {round}: cache contents after rollbacks"
+            );
+        }
+        assert!(saw_reject, "overload scenario must exercise the rollback path");
     }
 
     #[test]

@@ -3,7 +3,8 @@
 use anyhow::{Context, Result};
 
 use crate::model::{
-    ArrivalModel, Bounds, DeadlineMissAction, GpuSegment, KernelClass, MemoryModel, RtTask,
+    ArrivalModel, Bounds, DeadlineMissAction, GpuSegment, KernelClass, MemoryModel, QosTier,
+    RtTask,
 };
 use crate::runtime::Engine;
 
@@ -110,6 +111,7 @@ impl AppSpec {
             // admit them against jittered bounds by widening here.
             arrival: ArrivalModel::Periodic,
             on_miss: DeadlineMissAction::Log,
+            qos: QosTier::Standard,
         }
     }
 }

@@ -172,7 +172,7 @@ impl ClusterServe {
                         deadline: tasks[app].deadline,
                         priority: levels[dev][k],
                         arrival: tasks[app].arrival.clone(),
-                        on_miss: crate::model::DeadlineMissAction::Log,
+                        on_miss: tasks[app].on_miss,
                     })
                     .collect()
             })

@@ -1,0 +1,532 @@
+//! Sharded, batched admission front end with QoS-tiered overload
+//! shedding (DESIGN.md §14).
+//!
+//! A single-lock router serializes every arriving request on one
+//! mutex: under a sustained arrival stream the lock — not the
+//! admission analysis — becomes the bottleneck.  [`AdmissionFront`]
+//! splits intake across `N` shards, each its own `Mutex<VecDeque>`
+//! keyed by an app-id hash, so producers only contend within a shard;
+//! the drain loop then touches each shard lock **once per batch**,
+//! restores global submit order from the per-arrival sequence number,
+//! and decides the whole batch through one
+//! [`ClusterState::place_sequence`] pass, whose decision *sequence* is
+//! bit-identical to the serial one-at-a-time path
+//! (`tests/front_parity.rs` pins it, mirroring the §11 parallel-probe
+//! precedent).
+//!
+//! Overload shedding happens before placement: a [`TokenBucket`]
+//! refilling in virtual ticks gates each arrival by its
+//! [`QosTier`] — best-effort work sheds first, guaranteed work is
+//! never shed while the bucket holds tokens.  Because the bucket is
+//! integer-deterministic in virtual time, the virtual-time driver
+//! doubles as the what-if oracle for a shedding configuration, and a
+//! shed app composes with the §13 overload protocol through
+//! [`crate::model::RtTask::effective_miss_action`].
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::{ClusterState, PlacementPolicy};
+use crate::model::{QosTier, RtTask};
+use crate::sched::{DeviceId, Tick};
+use crate::telemetry::snapshot::hist_json;
+use crate::telemetry::LogHistogram;
+use crate::util::json::Json;
+
+/// Token-bucket shedding parameters.  All quantities are integers and
+/// the clock is virtual ticks, so a shedding decision replays
+/// bit-identically in the virtual-time oracle.
+#[derive(Debug, Clone, Copy)]
+pub struct QosConfig {
+    /// Bucket capacity (burst tolerance, in admissions).
+    pub capacity: u64,
+    /// One token mints every `refill_period` virtual ticks.
+    pub refill_period: Tick,
+    /// Tokens only [`QosTier::Guaranteed`] arrivals may draw below.
+    pub reserve_guaranteed: u64,
+    /// Further tokens [`QosTier::BestEffort`] arrivals may not draw
+    /// into (stacked on top of `reserve_guaranteed`).
+    pub reserve_standard: u64,
+}
+
+impl Default for QosConfig {
+    /// 32-deep bucket refilling every virtual millisecond (a sustained
+    /// 1000 admits/sec), a quarter reserved for guaranteed work and a
+    /// quarter more off-limits to best-effort work.
+    fn default() -> QosConfig {
+        QosConfig {
+            capacity: 32,
+            refill_period: 1_000_000,
+            reserve_guaranteed: 8,
+            reserve_standard: 8,
+        }
+    }
+}
+
+/// Deterministic virtual-tick token bucket.  The shed order it
+/// enforces — best-effort first, then standard, guaranteed last, and
+/// never guaranteed while a token remains — comes from per-tier
+/// draw floors: a tier may only draw while `tokens > floor(tier)`,
+/// with guaranteed at floor 0 (pinned by
+/// `token_bucket_sheds_best_effort_first`).
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    cfg: QosConfig,
+    tokens: u64,
+    last_refill: Tick,
+}
+
+impl TokenBucket {
+    /// A full bucket whose refill clock starts at tick 0.
+    pub fn new(cfg: QosConfig) -> TokenBucket {
+        TokenBucket { tokens: cfg.capacity, last_refill: 0, cfg }
+    }
+
+    /// Mint every token earned by `now`; carries the remainder of a
+    /// partial period forward (no token is lost to rounding).
+    fn refill(&mut self, now: Tick) {
+        if now <= self.last_refill || self.cfg.refill_period == 0 {
+            return;
+        }
+        let minted = (now - self.last_refill) / self.cfg.refill_period;
+        self.tokens = self.tokens.saturating_add(minted).min(self.cfg.capacity);
+        self.last_refill += minted * self.cfg.refill_period;
+    }
+
+    /// Gate one arrival of `tier` at virtual time `now`: refill, then
+    /// draw one token if the tier's floor permits.  Returns `false`
+    /// (shed) otherwise.
+    pub fn try_admit(&mut self, now: Tick, tier: QosTier) -> bool {
+        self.refill(now);
+        let floor = match tier {
+            QosTier::Guaranteed => 0,
+            QosTier::Standard => self.cfg.reserve_guaranteed,
+            QosTier::BestEffort => self.cfg.reserve_guaranteed + self.cfg.reserve_standard,
+        };
+        if self.tokens > floor {
+            self.tokens -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available.
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+}
+
+/// How the CLI assigns QoS tiers to generated apps (`--qos`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosSpec {
+    /// No shedding: every arrival reaches placement.
+    Off,
+    /// Tiers round-robin by app id (guaranteed, standard, best-effort).
+    Mix,
+    /// Every app on one fixed tier.
+    Fixed(QosTier),
+}
+
+impl QosSpec {
+    /// Parse a CLI spelling; the error names every accepted spelling.
+    pub fn parse(s: &str) -> Result<QosSpec, String> {
+        match s {
+            "off" => Ok(QosSpec::Off),
+            "mix" => Ok(QosSpec::Mix),
+            _ => QosTier::parse(s).map(QosSpec::Fixed).map_err(|e| format!("{e}, or off / mix")),
+        }
+    }
+
+    /// The tier this spec assigns app `id` (`None` when shedding is
+    /// off).
+    pub fn tier_for(&self, id: usize) -> Option<QosTier> {
+        match self {
+            QosSpec::Off => None,
+            QosSpec::Mix => Some(QosTier::ALL[id % QosTier::ALL.len()]),
+            QosSpec::Fixed(t) => Some(*t),
+        }
+    }
+}
+
+/// Parse the `--shards` CLI flag: a positive shard count, or `off`
+/// (= 0) to keep the single-lock router path.
+pub fn parse_shards(s: &str) -> Result<usize, String> {
+    if s == "off" {
+        return Ok(0);
+    }
+    match s.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(format!("invalid shard count {s:?}; expected a positive integer or off")),
+    }
+}
+
+/// One queued request: the task, its submit-order sequence number, and
+/// its virtual arrival instant (drives the token-bucket refill).
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub seq: u64,
+    pub at: Tick,
+    pub task: RtTask,
+}
+
+/// What the front decided for one arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FrontOutcome {
+    /// Placed: the fleet key and owning device.
+    Admitted { key: u64, device: DeviceId },
+    /// Survived the QoS gate but no device admitted it.
+    Rejected,
+    /// Dropped by the token bucket before placement.
+    Shed,
+}
+
+/// One entry of a drain's decision log, in global submit order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrontDecision {
+    pub seq: u64,
+    pub tier: QosTier,
+    pub outcome: FrontOutcome,
+}
+
+/// Drain-side state, under one mutex so the front itself can be shared
+/// immutably (`Arc<AdmissionFront>`) between producer threads and the
+/// drain loop.
+#[derive(Debug)]
+struct DrainState {
+    bucket: Option<TokenBucket>,
+    /// Decision-latency histogram per *submitting* shard (ms).
+    per_shard: Vec<LogHistogram>,
+    /// Sheds by [`QosTier::index`].
+    shed: [u64; 3],
+    admitted: u64,
+    rejected: u64,
+}
+
+/// The sharded front: `submit` from any thread, `drain` from the
+/// owner of the [`ClusterState`].
+#[derive(Debug)]
+pub struct AdmissionFront {
+    shards: Vec<Mutex<VecDeque<Arrival>>>,
+    next_seq: AtomicU64,
+    policy: PlacementPolicy,
+    drain: Mutex<DrainState>,
+}
+
+/// SplitMix64 finalizer — the app-id → shard hash.  Consecutive app
+/// ids scatter across shards instead of marching through them.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+impl AdmissionFront {
+    /// A front with `shards` intake queues deciding under `policy`;
+    /// `qos: None` disables shedding (every arrival reaches placement).
+    pub fn new(shards: usize, policy: PlacementPolicy, qos: Option<QosConfig>) -> AdmissionFront {
+        assert!(shards >= 1, "the front needs at least one shard");
+        AdmissionFront {
+            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            next_seq: AtomicU64::new(0),
+            policy,
+            drain: Mutex::new(DrainState {
+                bucket: qos.map(TokenBucket::new),
+                per_shard: vec![LogHistogram::default(); shards],
+                shed: [0; 3],
+                admitted: 0,
+                rejected: 0,
+            }),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Queue one request arriving at virtual tick `at`; returns its
+    /// global submit sequence number.  Contends only on the app's own
+    /// shard.
+    pub fn submit(&self, task: RtTask, at: Tick) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let shard = (splitmix64(task.id as u64) % self.shards.len() as u64) as usize;
+        self.shards[shard].lock().unwrap().push_back(Arrival { seq, at, task });
+        seq
+    }
+
+    /// Requests queued and not yet drained.
+    pub fn pending(&self) -> usize {
+        self.shards.iter().map(|q| q.lock().unwrap().len()).sum()
+    }
+
+    /// Decide everything queued: swap each shard queue out (one lock
+    /// touch per shard), restore global submit order by sequence
+    /// number, gate each arrival through the token bucket, and place
+    /// every survivor in one [`ClusterState::place_sequence`] pass.
+    ///
+    /// The returned log is in submit order and element-for-element
+    /// identical to the serial path — a seq-order loop of (bucket
+    /// check, [`ClusterState::try_place`]) — because the bucket is
+    /// consulted in the same order with the same virtual clock and
+    /// `place_sequence` pins the placement decisions.
+    pub fn drain(&self, state: &mut ClusterState) -> Vec<FrontDecision> {
+        let mut batch: Vec<(usize, Arrival)> = Vec::new();
+        for (shard, q) in self.shards.iter().enumerate() {
+            let taken = std::mem::take(&mut *q.lock().unwrap());
+            batch.extend(taken.into_iter().map(|a| (shard, a)));
+        }
+        // Concurrent producers may interleave seq assignment and queue
+        // pushes, so neither a shard queue nor their concatenation is
+        // sorted — the sort is what re-anchors the parity guarantee.
+        batch.sort_by_key(|(_, a)| a.seq);
+
+        let mut drain = self.drain.lock().unwrap();
+        let mut decisions = Vec::with_capacity(batch.len());
+        let mut survivors: Vec<RtTask> = Vec::new();
+        let mut survivor_meta: Vec<(usize, usize)> = Vec::new();
+        for (shard, a) in batch {
+            let tier = a.task.qos;
+            let shed = match drain.bucket.as_mut() {
+                Some(b) => !b.try_admit(a.at, tier),
+                None => false,
+            };
+            if shed {
+                drain.shed[tier.index()] += 1;
+                decisions.push(FrontDecision { seq: a.seq, tier, outcome: FrontOutcome::Shed });
+            } else {
+                // Placeholder outcome; patched from the placement pass.
+                let outcome = FrontOutcome::Rejected;
+                decisions.push(FrontDecision { seq: a.seq, tier, outcome });
+                survivor_meta.push((decisions.len() - 1, shard));
+                survivors.push(a.task);
+            }
+        }
+        let placements = state.place_sequence(&survivors, self.policy);
+        for ((idx, shard), p) in survivor_meta.into_iter().zip(placements) {
+            drain.per_shard[shard].record(p.decision_ns as f64 / 1e6);
+            match p.placed {
+                Some((key, device)) => {
+                    drain.admitted += 1;
+                    decisions[idx].outcome = FrontOutcome::Admitted { key, device };
+                }
+                None => drain.rejected += 1,
+            }
+        }
+        decisions
+    }
+
+    /// Counters and per-shard decision-latency histograms accumulated
+    /// over every drain so far.
+    pub fn metrics(&self) -> FrontMetrics {
+        let d = self.drain.lock().unwrap();
+        FrontMetrics {
+            shards: self.shards.len(),
+            admitted: d.admitted,
+            rejected: d.rejected,
+            shed: d.shed,
+            per_shard: d.per_shard.clone(),
+        }
+    }
+}
+
+/// A point-in-time copy of the front's accumulated statistics.
+#[derive(Debug, Clone)]
+pub struct FrontMetrics {
+    pub shards: usize,
+    /// Survivors a device admitted.
+    pub admitted: u64,
+    /// Survivors no device admitted.
+    pub rejected: u64,
+    /// Token-bucket sheds by [`QosTier::index`].
+    pub shed: [u64; 3],
+    /// Placement decision latency (ms) per submitting shard.
+    pub per_shard: Vec<LogHistogram>,
+}
+
+impl FrontMetrics {
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    /// All shards' decision latencies folded into one histogram
+    /// (exact: integer bucket sums — see [`LogHistogram::merge`]).
+    pub fn merged(&self) -> LogHistogram {
+        let mut all = LogHistogram::default();
+        for h in &self.per_shard {
+            all.merge(h);
+        }
+        all
+    }
+
+    /// The `"front"` section of the §12 metrics snapshot
+    /// ([`crate::telemetry::snapshot::validate`] checks this shape).
+    pub fn json(&self) -> Json {
+        let mut shed = BTreeMap::new();
+        for tier in QosTier::ALL {
+            shed.insert(tier.name().into(), Json::Num(self.shed[tier.index()] as f64));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("shards".into(), Json::Num(self.shards as f64));
+        m.insert("admitted".into(), Json::Num(self.admitted as f64));
+        m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("shed_by_tier".into(), Json::Obj(shed));
+        m.insert("decision_latency".into(), hist_json(&self.merged()));
+        m.insert("per_shard".into(), Json::Arr(self.per_shard.iter().map(hist_json).collect()));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::RtgpuOpts;
+    use crate::model::testing::simple_task;
+    use crate::model::ClusterPlatform;
+
+    fn tiered(id: usize, tier: QosTier) -> RtTask {
+        let mut t = simple_task(id);
+        t.qos = tier;
+        t
+    }
+
+    fn small_fleet() -> ClusterState {
+        ClusterState::new(ClusterPlatform::homogeneous(2, 4), RtgpuOpts::default())
+    }
+
+    #[test]
+    fn token_bucket_sheds_best_effort_first() {
+        let cfg = QosConfig {
+            capacity: 6,
+            refill_period: 100,
+            reserve_guaranteed: 2,
+            reserve_standard: 2,
+        };
+        let mut b = TokenBucket::new(cfg);
+        // 6 tokens: best-effort may draw down to its floor of 4.
+        assert!(b.try_admit(0, QosTier::BestEffort));
+        assert!(b.try_admit(0, QosTier::BestEffort));
+        assert!(!b.try_admit(0, QosTier::BestEffort), "floor 4 reached: best-effort sheds");
+        // Standard still draws (floor 2) while best-effort sheds.
+        assert!(b.try_admit(0, QosTier::Standard));
+        assert!(b.try_admit(0, QosTier::Standard));
+        assert!(!b.try_admit(0, QosTier::Standard), "floor 2 reached: standard sheds");
+        // Guaranteed drains the reserve to zero — never shed while a
+        // token remains.
+        assert!(b.try_admit(0, QosTier::Guaranteed));
+        assert!(b.try_admit(0, QosTier::Guaranteed));
+        assert_eq!(b.tokens(), 0);
+        assert!(!b.try_admit(0, QosTier::Guaranteed), "empty bucket sheds even guaranteed");
+        // Virtual-tick refill: 250 ticks mint exactly 2 tokens, the
+        // 50-tick remainder carries (one more at 300, not before).
+        assert!(b.try_admit(250, QosTier::Guaranteed));
+        assert!(b.try_admit(250, QosTier::Guaranteed));
+        assert!(!b.try_admit(250, QosTier::Guaranteed));
+        assert!(!b.try_admit(299, QosTier::Guaranteed));
+        assert!(b.try_admit(300, QosTier::Guaranteed));
+    }
+
+    #[test]
+    fn token_bucket_refill_caps_at_capacity() {
+        let mut b = TokenBucket::new(QosConfig {
+            capacity: 3,
+            refill_period: 10,
+            reserve_guaranteed: 0,
+            reserve_standard: 0,
+        });
+        assert!(b.try_admit(0, QosTier::Standard));
+        // A long idle stretch mints at most back to capacity.
+        b.refill(1_000_000);
+        assert_eq!(b.tokens(), 3);
+    }
+
+    #[test]
+    fn qos_spec_parses_the_valid_set() {
+        assert_eq!(QosSpec::parse("off"), Ok(QosSpec::Off));
+        assert_eq!(QosSpec::parse("mix"), Ok(QosSpec::Mix));
+        assert_eq!(QosSpec::parse("gold"), Ok(QosSpec::Fixed(QosTier::Guaranteed)));
+        assert_eq!(QosSpec::parse("be"), Ok(QosSpec::Fixed(QosTier::BestEffort)));
+        let err = QosSpec::parse("bronzeish").unwrap_err();
+        for valid in ["guaranteed", "standard", "best-effort", "off", "mix"] {
+            assert!(err.contains(valid), "error must name {valid}: {err}");
+        }
+        assert_eq!(QosSpec::Mix.tier_for(0), Some(QosTier::Guaranteed));
+        assert_eq!(QosSpec::Mix.tier_for(2), Some(QosTier::BestEffort));
+        assert_eq!(QosSpec::Off.tier_for(7), None);
+    }
+
+    #[test]
+    fn parse_shards_accepts_counts_and_off() {
+        assert_eq!(parse_shards("off"), Ok(0));
+        assert_eq!(parse_shards("1"), Ok(1));
+        assert_eq!(parse_shards("8"), Ok(8));
+        for bad in ["0", "-2", "many"] {
+            let err = parse_shards(bad).unwrap_err();
+            assert!(err.contains("positive integer"), "{err}");
+            assert!(err.contains("off"), "{err}");
+        }
+    }
+
+    #[test]
+    fn drain_decides_in_submit_order_and_counts_outcomes() {
+        let front = AdmissionFront::new(4, PlacementPolicy::WorstFit, None);
+        let mut state = small_fleet();
+        // Enough load to exercise both admits and rejections.
+        for i in 0..10 {
+            front.submit(simple_task(i), 0);
+        }
+        assert_eq!(front.pending(), 10);
+        let log = front.drain(&mut state);
+        assert_eq!(front.pending(), 0);
+        let seqs: Vec<u64> = log.iter().map(|d| d.seq).collect();
+        assert_eq!(seqs, (0..10).collect::<Vec<u64>>(), "submit order restored across shards");
+        let m = front.metrics();
+        assert_eq!(m.admitted + m.rejected, 10);
+        assert!(m.admitted >= 1, "an open fleet admits something");
+        assert!(m.rejected >= 1, "10 simple tasks oversubscribe 2 devices");
+        assert_eq!(m.shed_total(), 0, "no bucket, no sheds");
+        assert_eq!(m.merged().count(), 10, "every placement decision timed");
+        // Draining again decides nothing new.
+        assert!(front.drain(&mut state).is_empty());
+    }
+
+    #[test]
+    fn drain_sheds_by_tier_before_placement() {
+        // Zero-refill bucket with 3 tokens; floors: guaranteed 0,
+        // standard 1, best-effort 2.
+        let cfg = QosConfig {
+            capacity: 3,
+            refill_period: 0,
+            reserve_guaranteed: 1,
+            reserve_standard: 1,
+        };
+        let front = AdmissionFront::new(2, PlacementPolicy::WorstFit, Some(cfg));
+        let mut state = small_fleet();
+        front.submit(tiered(0, QosTier::BestEffort), 0);
+        front.submit(tiered(1, QosTier::Standard), 0);
+        front.submit(tiered(2, QosTier::BestEffort), 0);
+        front.submit(tiered(3, QosTier::Guaranteed), 0);
+        front.submit(tiered(4, QosTier::Guaranteed), 0);
+        front.submit(tiered(5, QosTier::Guaranteed), 0);
+        let log = front.drain(&mut state);
+        let shed: Vec<bool> = log.iter().map(|d| d.outcome == FrontOutcome::Shed).collect();
+        // seq 0 (BE, tokens 3 > floor 2) admits; seq 1 (Std, 2 > 1)
+        // admits; seq 2 (BE, 1 ≤ 2) sheds; guaranteed drains 1 → 0,
+        // then sheds on empty.
+        assert_eq!(shed, vec![false, false, true, false, true, true]);
+        let m = front.metrics();
+        assert_eq!(m.shed[QosTier::BestEffort.index()], 1);
+        assert_eq!(m.shed[QosTier::Guaranteed.index()], 2, "empty bucket sheds guaranteed");
+        assert_eq!(m.shed[QosTier::Standard.index()], 0);
+        assert_eq!(m.admitted + m.rejected, 3, "only survivors reach placement");
+        // The snapshot section carries the same counters.
+        let Json::Obj(j) = m.json() else { panic!("front json must be an object") };
+        assert_eq!(j.get("shards"), Some(&Json::Num(2.0)));
+        let Some(Json::Obj(by_tier)) = j.get("shed_by_tier") else {
+            panic!("shed_by_tier must be an object")
+        };
+        assert_eq!(by_tier.get("best-effort"), Some(&Json::Num(1.0)));
+        assert!(j.contains_key("decision_latency"));
+    }
+}

@@ -26,6 +26,10 @@
 //!    device's serve loop (placement decided ownership — see
 //!    `crate::cluster`), with a deterministic virtual mode pinned to the
 //!    fleet simulator in `tests/cluster_parity.rs`.
+//! 6. **Admission front** ([`front`]) — sharded, batched request intake
+//!    with QoS-tiered token-bucket shedding for fleet-scale arrival
+//!    streams, decision-sequence-identical to the serial router
+//!    (DESIGN.md §14, `tests/front_parity.rs`).
 //!
 //! Implementation notes (deviations documented in DESIGN.md §4): CPU
 //! segments are dispatched non-preemptively (real threads cannot be
@@ -39,6 +43,7 @@
 pub mod admission;
 pub mod app;
 pub mod cluster_serve;
+pub mod front;
 pub mod metrics;
 pub mod serve;
 
@@ -47,6 +52,9 @@ pub use admission::{
 };
 pub use app::{AppSpec, GpuProfile};
 pub use cluster_serve::ClusterServe;
+pub use front::{
+    AdmissionFront, FrontDecision, FrontMetrics, FrontOutcome, QosConfig, QosSpec, TokenBucket,
+};
 pub use metrics::{AppStats, ServeReport};
 pub use serve::{
     serve, serve_telemetry, serve_virtual, serve_virtual_policy, serve_virtual_telemetry,

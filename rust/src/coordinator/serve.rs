@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::model::DeadlineMissAction;
 use crate::runtime::Engine;
 use crate::sched::driver;
 use crate::sched::{
@@ -137,6 +138,12 @@ pub fn serve(engine: &Engine, report: &AdmissionReport, cfg: &ServeConfig) -> Re
 /// the shared [`Recorder`], at the same chain boundaries the virtual
 /// drivers hook (device id 0, task id = app index).  Passing `None` is
 /// exactly [`serve`].
+///
+/// Each station buffers into a private recorder and folds it into the
+/// shared one once at shutdown ([`Recorder::merge`]) — the hot phase
+/// path never touches the shared lock, and merged statistics are
+/// identical to recording every event through it (pinned in
+/// `telemetry::sink::tests`).
 pub fn serve_telemetry(
     engine: &Engine,
     report: &AdmissionReport,
@@ -240,6 +247,10 @@ pub fn serve_telemetry(
             let pending = Arc::clone(&pending);
             let completed = Arc::clone(&completed);
             scope.spawn(move || {
+                // Contention fix: record into a station-local recorder,
+                // merged once at shutdown — one shared-lock touch per
+                // station instead of one per phase event.
+                let local = std::cell::RefCell::new(Recorder::new());
                 station(
                     cpu_rx,
                     |job| {
@@ -248,8 +259,8 @@ pub fn serve_telemetry(
                             Phase::Cpu(_) => {
                                 let t = Instant::now();
                                 spin_ms(ticks_to_ms(chain.duration(job.next_phase)));
-                                if let Some(rec) = recorder {
-                                    rec.lock().unwrap().on_phase(
+                                if recorder.is_some() {
+                                    local.borrow_mut().on_phase(
                                         0,
                                         job.app,
                                         chain.phase(job.next_phase),
@@ -283,8 +294,8 @@ pub fn serve_telemetry(
                                 dls.swap_remove(i);
                             }
                             drop(p);
-                            if let Some(rec) = recorder {
-                                rec.lock().unwrap().on_job(0, job.app, latency, missed);
+                            if recorder.is_some() {
+                                local.borrow_mut().on_job(0, job.app, latency, missed);
                             }
                             completed.fetch_add(1, Ordering::SeqCst);
                         } else {
@@ -292,6 +303,9 @@ pub fn serve_telemetry(
                         }
                     },
                 );
+                if let Some(rec) = recorder {
+                    rec.lock().unwrap().merge(&local.into_inner());
+                }
             });
         }
 
@@ -301,6 +315,7 @@ pub fn serve_telemetry(
             let cpu_tx = cpu_tx.clone();
             let bus_tx2 = bus_tx.clone();
             scope.spawn(move || {
+                let local = std::cell::RefCell::new(Recorder::new());
                 station(
                     bus_rx,
                     |job| {
@@ -314,8 +329,8 @@ pub fn serve_telemetry(
                         // DMA transfer: the bus is held, the CPU is not.
                         let t = Instant::now();
                         std::thread::sleep(Duration::from_secs_f64(ms / 1e3));
-                        if let Some(rec) = recorder {
-                            rec.lock().unwrap().on_phase(
+                        if recorder.is_some() {
+                            local.borrow_mut().on_phase(
                                 0,
                                 job.app,
                                 chain.phase(job.next_phase),
@@ -328,6 +343,9 @@ pub fn serve_telemetry(
                         route(job, &chains[job.app], &cpu_tx, &bus_tx2, &gpu_tx);
                     },
                 );
+                if let Some(rec) = recorder {
+                    rec.lock().unwrap().merge(&local.into_inner());
+                }
             });
         }
         drop(gpu_tx);
@@ -337,6 +355,7 @@ pub fn serve_telemetry(
         // this closure returns, or thread::scope would join forever on
         // station threads blocked in recv().
         let mut run_err: Option<anyhow::Error> = None;
+        let mut gpu_local = Recorder::new();
         loop {
             match gpu_rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(Msg::Work(mut job)) => {
@@ -349,8 +368,8 @@ pub fn serve_telemetry(
                     {
                         Ok(out) => {
                             job.gpu_ms = out.elapsed.as_secs_f64() * 1e3;
-                            if let Some(rec) = recorder {
-                                rec.lock().unwrap().on_phase(
+                            if recorder.is_some() {
+                                gpu_local.on_phase(
                                     0,
                                     job.app,
                                     chains[job.app].phase(job.next_phase),
@@ -391,6 +410,9 @@ pub fn serve_telemetry(
         // Shut the stations down (timer exits on its own).
         let _ = cpu_tx.send(Msg::Shutdown);
         let _ = bus_tx.send(Msg::Shutdown);
+        if let Some(rec) = recorder {
+            rec.lock().unwrap().merge(&gpu_local);
+        }
         match run_err {
             Some(e) => Err(e),
             None => Ok(()),
@@ -422,12 +444,21 @@ pub struct VirtualTask {
     pub period: Tick,
     pub deadline: Tick,
     pub arrival: ArrivalSpec,
+    /// Deadline-miss protocol for this task's releases (DESIGN.md §13);
+    /// the cluster router derives it from the app's QoS tier via
+    /// [`crate::model::RtTask::effective_miss_action`].
+    pub on_miss: DeadlineMissAction,
 }
 
 impl VirtualTask {
     /// The classic strictly periodic virtual task.
     pub fn periodic(period: Tick, deadline: Tick) -> VirtualTask {
-        VirtualTask { period, deadline, arrival: ArrivalSpec::Periodic }
+        VirtualTask {
+            period,
+            deadline,
+            arrival: ArrivalSpec::Periodic,
+            on_miss: DeadlineMissAction::Log,
+        }
     }
 }
 
@@ -483,7 +514,7 @@ pub fn serve_virtual_telemetry(
             deadline: t.deadline,
             priority: i,
             arrival: t.arrival.clone(),
-            on_miss: crate::model::DeadlineMissAction::Log,
+            on_miss: t.on_miss,
         })
         .collect();
     let cfg = DriverConfig {

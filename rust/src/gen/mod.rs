@@ -14,8 +14,8 @@
 //! platform has multiple SMs.
 
 use crate::model::{
-    ArrivalModel, Bounds, DeadlineMissAction, GpuSegment, KernelClass, MemoryModel, RtTask,
-    TaskSet,
+    ArrivalModel, Bounds, DeadlineMissAction, GpuSegment, KernelClass, MemoryModel, QosTier,
+    RtTask, TaskSet,
 };
 use crate::util::rng::{uunifast, Pcg};
 
@@ -158,6 +158,7 @@ pub fn generate_taskset(rng: &mut Pcg, cfg: &GenConfig, total_util: f64) -> Task
             period: deadline,
             arrival,
             on_miss: DeadlineMissAction::Log,
+            qos: QosTier::Standard,
         });
     }
     // 4. deadline-monotonic priorities.

@@ -19,7 +19,10 @@ use anyhow::Result;
 use rtgpu::analysis::{analyze, schedule_gpu_policy, Approach, RtgpuOpts, Search};
 use rtgpu::cluster::{simulate_cluster, simulate_cluster_telemetry, ClusterState, PlacementPolicy};
 use rtgpu::sched::GpuPolicyKind;
-use rtgpu::coordinator::{admit, serve, AdmissionState, AppSpec, ServeConfig};
+use rtgpu::coordinator::front::parse_shards;
+use rtgpu::coordinator::{
+    admit, serve, AdmissionFront, AdmissionState, AppSpec, QosConfig, QosSpec, ServeConfig,
+};
 use rtgpu::gen::{generate_taskset, GenConfig};
 use rtgpu::harness::chart::{results_dir, table, write_csv};
 use rtgpu::harness::sweep::{run_sweep, to_series, SweepSpec};
@@ -46,6 +49,7 @@ const USAGE: &str = "usage: rtgpu <serve|admit|cluster|sweep|validate|throughput
              [--subtasks M] [--placement ffd|worst-fit|p2c[:K]]\n\
              [--gpu-policy federated|preemptive|edf|ll]\n\
              [--arrival periodic|sporadic[:FRAC]|task]\n\
+             [--shards N|off] [--qos off|mix|TIER]\n\
              [--parallel T] [--place-seed S]\n\
              [--telemetry off|record|feedback]\n\
              [--metrics-out PATH]\n\
@@ -308,6 +312,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let telemetry = TelemetryMode::parse(args.str_or("telemetry", "off"))
         .map_err(|e| CliError(format!("--telemetry: {e}")))?;
     let metrics_out = args.get("metrics-out").map(String::from);
+    let shards =
+        parse_shards(args.str_or("shards", "off")).map_err(|e| CliError(format!("--shards: {e}")))?;
+    let qos_arg = args.str_or("qos", "off").to_string();
+    let qos_spec = QosSpec::parse(&qos_arg).map_err(|e| CliError(format!("--qos: {e}")))?;
     let shared = args.flag("shared-cpu");
     let seed = args.u64_or("seed", 42)?;
     args.finish()?;
@@ -323,6 +331,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let mut ts = generate_taskset(&mut Pcg::new(seed), &cfg, util);
     arrival.apply(&mut ts);
+    for (i, t) in ts.tasks.iter_mut().enumerate() {
+        if let Some(tier) = qos_spec.tier_for(i) {
+            t.qos = tier;
+        }
+    }
     println!(
         "fleet: {} × {}-SM devices ({} CPU, {} GPU policy); {} apps at total utilization {:.3}, \
          {} arrivals",
@@ -341,19 +354,50 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if let Some(seed) = place_seed {
         state = state.with_placement_seed(seed);
     }
-    let report = state.place_all(&ts.tasks, policy);
-    print!("{}", state.table());
-    if !report.all_placed() {
+    let front = (shards > 0).then(|| {
+        let bucket = (qos_spec != QosSpec::Off).then(QosConfig::default);
+        AdmissionFront::new(shards, policy, bucket)
+    });
+    if let Some(front) = &front {
+        // Sharded batched intake: one request per app on a 1 ms virtual
+        // arrival grid, one drain deciding the whole batch in submit
+        // order (bit-identical to the serial router path).
+        for (i, t) in ts.tasks.iter().enumerate() {
+            front.submit(t.clone(), i as u64 * 1_000_000);
+        }
+        front.drain(&mut state);
+        print!("{}", state.table());
+        let m = front.metrics();
         println!(
-            "placement ({}) rejected {} of {} apps: {:?}",
+            "front ({} shards, qos {qos_arg}, {}): {} admitted, {} rejected, {} shed \
+             (guaranteed {}, standard {}, best-effort {})",
+            m.shards,
             policy.label(),
-            report.rejected.len(),
-            ts.len(),
-            report.rejected
+            m.admitted,
+            m.rejected,
+            m.shed_total(),
+            m.shed[0],
+            m.shed[1],
+            m.shed[2],
         );
-        anyhow::bail!("fleet admission rejected the application set");
+        if m.admitted == 0 {
+            anyhow::bail!("the admission front admitted no apps");
+        }
+    } else {
+        let report = state.place_all(&ts.tasks, policy);
+        print!("{}", state.table());
+        if !report.all_placed() {
+            println!(
+                "placement ({}) rejected {} of {} apps: {:?}",
+                policy.label(),
+                report.rejected.len(),
+                ts.len(),
+                report.rejected
+            );
+            anyhow::bail!("fleet admission rejected the application set");
+        }
+        println!("placement ({}) admitted all {} apps", policy.label(), ts.len());
     }
-    println!("placement ({}) admitted all {} apps", policy.label(), ts.len());
 
     let wl = state.workload();
     let mut rec = Recorder::new();
@@ -409,7 +453,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             }
         }
         let (router, _) = state.serve_router();
-        let snap = router.metrics_snapshot(&rec, &events);
+        let mut snap = router.metrics_snapshot(&rec, &events);
+        if let (Some(front), Json::Obj(fields)) = (&front, &mut snap) {
+            fields.insert("front".into(), front.metrics().json());
+        }
         validate_snapshot(&snap).map_err(|e| anyhow::anyhow!("snapshot schema: {e}"))?;
         if let Some(path) = &metrics_out {
             std::fs::write(path, format!("{snap}\n"))?;

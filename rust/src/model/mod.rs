@@ -211,6 +211,72 @@ impl DeadlineMissAction {
     }
 }
 
+/// Serving quality-of-service class of an application (DESIGN.md §14).
+///
+/// Like [`DeadlineMissAction`], the admission *analysis* ignores this
+/// field — it is pure front-end overload semantics: when the sharded
+/// admission front's token bucket runs low, `BestEffort` arrivals shed
+/// first, then `Standard`; `Guaranteed` arrivals are only ever shed once
+/// the bucket is completely empty.  At the device, a `BestEffort` app
+/// serves as `Shed`-class work under the §13 overload monitor (see
+/// [`RtTask::effective_miss_action`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum QosTier {
+    /// Never shed while the bucket holds a single token; serves under
+    /// its declared miss action at the device.
+    Guaranteed,
+    /// The default tier: shed once the bucket falls into the guaranteed
+    /// reserve.
+    #[default]
+    Standard,
+    /// Sheds first (both reserves are off-limits) and serves as
+    /// `Shed`-class work under the §13 device overload monitor.
+    BestEffort,
+}
+
+impl QosTier {
+    pub const ALL: [QosTier; 3] = [QosTier::Guaranteed, QosTier::Standard, QosTier::BestEffort];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosTier::Guaranteed => "guaranteed",
+            QosTier::Standard => "standard",
+            QosTier::BestEffort => "best-effort",
+        }
+    }
+
+    /// Stable array index (shed counters are indexed by tier).
+    pub fn index(self) -> usize {
+        match self {
+            QosTier::Guaranteed => 0,
+            QosTier::Standard => 1,
+            QosTier::BestEffort => 2,
+        }
+    }
+
+    /// Parse a CLI spelling; the error names every accepted spelling.
+    pub fn parse(s: &str) -> Result<QosTier, String> {
+        match s {
+            "guaranteed" | "g" | "gold" => Ok(QosTier::Guaranteed),
+            "standard" | "std" | "silver" => Ok(QosTier::Standard),
+            "best-effort" | "besteffort" | "be" | "bronze" => Ok(QosTier::BestEffort),
+            _ => Err(format!(
+                "unknown QoS tier {s:?}; expected guaranteed (g, gold), \
+                 standard (std, silver) or best-effort (besteffort, be, bronze)"
+            )),
+        }
+    }
+
+    /// The §13 miss action this tier implies when the task does not
+    /// declare one explicitly: best-effort work is `Shed`-class.
+    pub fn miss_action(self) -> DeadlineMissAction {
+        match self {
+            QosTier::BestEffort => DeadlineMissAction::Shed,
+            QosTier::Guaranteed | QosTier::Standard => DeadlineMissAction::Log,
+        }
+    }
+}
+
 /// A sporadic RT-GPU task (Eq. 4): `m` CPU segments, `m−1` GPU segments
 /// and `copies·(m−1)` memory segments, with constrained deadline `D ≤ T`.
 #[derive(Debug, Clone)]
@@ -235,6 +301,10 @@ pub struct RtTask {
     pub arrival: ArrivalModel,
     /// Overload semantics: what the runtime does on a deadline miss.
     pub on_miss: DeadlineMissAction,
+    /// Serving QoS tier: which overload-shedding class the admission
+    /// front end puts this app in (the analysis ignores it, like
+    /// `on_miss`).
+    pub qos: QosTier,
 }
 
 impl RtTask {
@@ -272,6 +342,23 @@ impl RtTask {
     pub fn with_miss_action(mut self, action: DeadlineMissAction) -> RtTask {
         self.on_miss = action;
         self
+    }
+
+    /// Replace the serving QoS tier (builder style).
+    pub fn with_qos(mut self, qos: QosTier) -> RtTask {
+        self.qos = qos;
+        self
+    }
+
+    /// The §13 miss action this task actually serves under: an explicit
+    /// non-default `on_miss` wins; otherwise the QoS tier decides, so a
+    /// best-effort app degrades first under the device overload monitor
+    /// without its spec having to set both fields.
+    pub fn effective_miss_action(&self) -> DeadlineMissAction {
+        match self.on_miss {
+            DeadlineMissAction::Log => self.qos.miss_action(),
+            explicit => explicit,
+        }
     }
 
     /// Replace the arrival model with a sporadic process at this task's
@@ -550,6 +637,7 @@ pub mod testing {
             period: 60.0,
             arrival: ArrivalModel::Periodic,
             on_miss: DeadlineMissAction::Log,
+            qos: QosTier::Standard,
         }
     }
 
@@ -565,6 +653,7 @@ pub mod testing {
             period: deadline,
             arrival: ArrivalModel::Periodic,
             on_miss: DeadlineMissAction::Log,
+            qos: QosTier::Standard,
         }
     }
 }
@@ -696,6 +785,33 @@ mod tests {
         let good = simple_task(1);
         let ts = TaskSet::new_deadline_monotonic(vec![bad, good]);
         assert_eq!(ts.tasks[0].id, 1, "NaN sorts after every real deadline");
+    }
+
+    #[test]
+    fn qos_tier_parses_the_valid_set_and_composes_with_miss_actions() {
+        for tier in QosTier::ALL {
+            assert_eq!(QosTier::parse(tier.name()), Ok(tier));
+        }
+        assert_eq!(QosTier::parse("be"), Ok(QosTier::BestEffort));
+        assert_eq!(QosTier::parse("g"), Ok(QosTier::Guaranteed));
+        let err = QosTier::parse("platinum").unwrap_err();
+        for valid in ["guaranteed", "standard", "best-effort", "be", "std", "g"] {
+            assert!(err.contains(valid), "error must name {valid}: {err}");
+        }
+        assert_eq!(QosTier::default(), QosTier::Standard);
+
+        // Composition: tier implies the miss action only when the task
+        // does not declare one.
+        let t = simple_task(0);
+        assert_eq!(t.effective_miss_action(), DeadlineMissAction::Log);
+        let t = simple_task(0).with_qos(QosTier::BestEffort);
+        assert_eq!(t.effective_miss_action(), DeadlineMissAction::Shed);
+        let t = simple_task(0)
+            .with_qos(QosTier::BestEffort)
+            .with_miss_action(DeadlineMissAction::Boost);
+        assert_eq!(t.effective_miss_action(), DeadlineMissAction::Boost, "explicit action wins");
+        let t = simple_task(0).with_qos(QosTier::Guaranteed);
+        assert_eq!(t.effective_miss_action(), DeadlineMissAction::Log);
     }
 
     #[test]

@@ -396,6 +396,7 @@ mod tests {
             period: 200.0,
             arrival: crate::model::ArrivalModel::Periodic,
             on_miss: crate::model::DeadlineMissAction::Log,
+            qos: crate::model::QosTier::Standard,
         };
         let hi = mk(0, 1.0, 4.0, 200.0);
         let lo = mk(1, 0.1, 10.0, 200.0);

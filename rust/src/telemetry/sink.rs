@@ -122,6 +122,16 @@ impl Accum {
             self.sum_ms / self.count as f64
         }
     }
+
+    /// Fold `other` in.  Count/min/max exactly equal recording both
+    /// sample streams into one accumulator; the sum is equal up to
+    /// float associativity.
+    pub fn merge(&mut self, other: &Accum) {
+        self.count += other.count;
+        self.sum_ms += other.sum_ms;
+        self.min_ms = self.min_ms.min(other.min_ms);
+        self.max_ms = self.max_ms.max(other.max_ms);
+    }
 }
 
 /// Everything recorded about one task on one device.
@@ -150,6 +160,17 @@ impl TaskTelemetry {
         } else {
             self.missed as f64 / self.completed as f64
         }
+    }
+
+    /// Fold another recorder's view of the same (device, task) slot in.
+    pub fn merge(&mut self, other: &TaskTelemetry) {
+        self.latency.merge(&other.latency);
+        for (s, o) in self.segments.iter_mut().zip(&other.segments) {
+            s.merge(o);
+        }
+        self.completed += other.completed;
+        self.missed += other.missed;
+        self.shed += other.shed;
     }
 }
 
@@ -208,6 +229,21 @@ impl Recorder {
             0.0
         } else {
             missed as f64 / completed as f64
+        }
+    }
+
+    /// Fold `other` in slot-by-slot.  Each worker thread of the
+    /// wall-clock serving path records into a private recorder and the
+    /// drain merges here — one shared-lock touch per station instead of
+    /// one per phase event.  Merged quantiles equal single-recorder
+    /// quantiles over the same samples exactly: histogram buckets are
+    /// integer counts and [`LogHistogram::merge`] just sums them
+    /// (pinned by `merged_recorder_equals_single_recorder` below).
+    pub fn merge(&mut self, other: &Recorder) {
+        for (dev, tasks) in other.devices.iter().enumerate() {
+            for (task, tel) in tasks.iter().enumerate() {
+                self.slot(dev, task).merge(tel);
+            }
         }
     }
 }
@@ -270,5 +306,40 @@ mod tests {
         assert_eq!(r.device_miss_rate(0), 0.0, "untouched device");
         assert_eq!(r.device_miss_rate(7), 0.0, "unknown device");
         assert!(r.task(0, 0).is_none() || r.task(0, 0).unwrap().completed == 0);
+    }
+
+    #[test]
+    fn merged_recorder_equals_single_recorder() {
+        // Split one sample stream across two recorders (as the serving
+        // stations do), merge, and pin every statistic — quantiles
+        // included — to the recorder that saw the whole stream.
+        let samples: Vec<f64> = (0..200).map(|i| 0.37 * (i as f64 + 1.0)).collect();
+        let mut single = Recorder::new();
+        let mut a = Recorder::new();
+        let mut b = Recorder::new();
+        for (i, &ms) in samples.iter().enumerate() {
+            single.on_phase(0, 1, Phase::Gpu(0), ms);
+            single.on_job(0, 1, ms, i % 7 == 0);
+            let half = if i % 2 == 0 { &mut a } else { &mut b };
+            half.on_phase(0, 1, Phase::Gpu(0), ms);
+            half.on_job(0, 1, ms, i % 7 == 0);
+        }
+        single.on_shed(0, 1);
+        a.on_shed(0, 1);
+        a.merge(&b);
+        let (m, s) = (a.task(0, 1).unwrap(), single.task(0, 1).unwrap());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(m.latency.quantile(q), s.latency.quantile(q), "q{q} diverged");
+        }
+        assert_eq!(m.latency.count(), s.latency.count());
+        assert_eq!(m.completed, s.completed);
+        assert_eq!(m.missed, s.missed);
+        assert_eq!(m.shed, s.shed);
+        let (mg, sg) = (&m.segments[SegClass::Gpu.index()], &s.segments[SegClass::Gpu.index()]);
+        assert_eq!(mg.count, sg.count);
+        assert_eq!(mg.min_ms, sg.min_ms);
+        assert_eq!(mg.max_ms, sg.max_ms);
+        assert!((mg.sum_ms - sg.sum_ms).abs() < 1e-9);
+        assert_eq!(a.devices().len(), single.devices().len(), "no invented devices");
     }
 }

@@ -11,6 +11,9 @@
 //! * `"devices"` — per-device per-task recorder telemetry (latency
 //!   histogram summary plus per-segment-class accumulators);
 //! * `"drift"` — detected [`DriftEvent`](super::DriftEvent)s;
+//! * `"front"` — admission-front counters (shards, admitted, rejected,
+//!   shed_by_tier) plus its decision-latency histogram summary
+//!   ([`crate::coordinator::FrontMetrics::json`]);
 //! * free-form scalar fields (`wall_s`, `throughput_rps`, …).
 //!
 //! [`validate`] is the schema check both the CLI round-trip test and
@@ -190,6 +193,28 @@ pub fn validate(j: &Json) -> Result<(), String> {
             }
         }
     }
+    if let Some(front) = j.get("front") {
+        let at = "front";
+        for key in ["shards", "admitted", "rejected"] {
+            require_num(front, key, at)?;
+        }
+        let by_tier = front
+            .get("shed_by_tier")
+            .and_then(|s| match s {
+                Json::Obj(_) => Some(s),
+                _ => None,
+            })
+            .ok_or_else(|| format!("{at}: missing \"shed_by_tier\" object"))?;
+        for tier in ["guaranteed", "standard", "best-effort"] {
+            require_num(by_tier, tier, &format!("{at}.shed_by_tier"))?;
+        }
+        let lat = front
+            .get("decision_latency")
+            .ok_or_else(|| format!("{at}: missing \"decision_latency\""))?;
+        for key in ["count", "p50_ms", "p95_ms", "p99_ms", "max_ms"] {
+            require_num(lat, key, &format!("{at}.decision_latency"))?;
+        }
+    }
     if let Some(drift) = j.get("drift") {
         let arr = drift.as_array().ok_or_else(|| "\"drift\" must be an array".to_string())?;
         for (i, e) in arr.iter().enumerate() {
@@ -251,9 +276,22 @@ mod tests {
             r#"{"version":1,"kind":"rtgpu-metrics","apps":{}}"#,
             r#"{"version":1,"kind":"rtgpu-metrics","apps":[{"name":"a"}]}"#,
             r#"{"version":1,"kind":"rtgpu-metrics","devices":[{"device":0}]}"#,
+            r#"{"version":1,"kind":"rtgpu-metrics","front":{"shards":1}}"#,
+            r#"{"version":1,"kind":"rtgpu-metrics","front":{"shards":1,"admitted":0,
+                "rejected":0,"shed_by_tier":{"guaranteed":0,"standard":0}}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(validate(&j).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn validate_accepts_a_front_section() {
+        let good = r#"{"version":1,"kind":"rtgpu-metrics","front":{
+            "shards":2,"admitted":5,"rejected":1,
+            "shed_by_tier":{"guaranteed":0,"standard":0,"best-effort":3},
+            "decision_latency":{"count":6,"p50_ms":0.1,"p95_ms":0.2,
+                "p99_ms":0.2,"max_ms":0.3}}}"#;
+        validate(&Json::parse(good).unwrap()).unwrap();
     }
 }

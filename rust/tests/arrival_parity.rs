@@ -113,6 +113,7 @@ fn prop_zero_jitter_sporadic_replays_periodic_in_all_four_adapters() {
                     period: ms_to_ticks(t.period),
                     deadline: ms_to_ticks(t.deadline),
                     arrival: ArrivalSpec::from_model(&t.arrival),
+                    on_miss: t.effective_miss_action(),
                 })
                 .collect()
         };
@@ -272,6 +273,7 @@ fn jittered_sim_and_serve_traces_agree_with_matching_seeds() {
             period: ms_to_ticks(t.period),
             deadline: ms_to_ticks(t.deadline),
             arrival: ArrivalSpec::from_model(&t.arrival),
+            on_miss: t.effective_miss_action(),
         })
         .collect();
     let aligned = rtgpu::coordinator::serve_virtual_policy(

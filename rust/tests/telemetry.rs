@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 
 use rtgpu::coordinator::{serve_virtual_policy, serve_virtual_telemetry, ClusterServe, VirtualTask};
 use rtgpu::gen::{generate_taskset, GenConfig};
-use rtgpu::model::{testing, CpuTopology, RtTask, TaskSet};
+use rtgpu::model::{testing, CpuTopology, DeadlineMissAction, RtTask, TaskSet};
 use rtgpu::sched::{ArrivalSpec, Chain, GpuPolicyKind};
 use rtgpu::sim::{simulate, simulate_telemetry, ExecModel, SimConfig};
 use rtgpu::telemetry::snapshot::{drift_json, recorder_json, validate, wrap};
@@ -97,11 +97,17 @@ fn recording_sink_keeps_sim_results_identical() {
 fn recording_sink_keeps_virtual_serve_traces_identical() {
     let tasks = [
         VirtualTask::periodic(100, 90),
-        VirtualTask { period: 150, deadline: 140, arrival: ArrivalSpec::Periodic },
+        VirtualTask {
+            period: 150,
+            deadline: 140,
+            arrival: ArrivalSpec::Periodic,
+            on_miss: DeadlineMissAction::Log,
+        },
         VirtualTask {
             period: 200,
             deadline: 200,
             arrival: ArrivalSpec::Sporadic { min_separation: 200, jitter: 30 },
+            on_miss: DeadlineMissAction::Log,
         },
     ];
     for policy in [GpuPolicyKind::Federated, GpuPolicyKind::PreemptivePriority] {
