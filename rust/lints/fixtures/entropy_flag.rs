@@ -1,0 +1,5 @@
+// must-flag: unseeded entropy source.
+pub fn jitter() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

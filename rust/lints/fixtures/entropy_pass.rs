@@ -1,0 +1,6 @@
+// must-pass: forked seeded stream — replays bit-identically.
+use crate::util::rng::Pcg;
+
+pub fn jitter(root: &mut Pcg) -> u64 {
+    root.fork("jitter").next_u64()
+}

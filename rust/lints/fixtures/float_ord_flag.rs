@@ -1,0 +1,4 @@
+// must-flag: float ordering via partial_cmp in a decision path.
+pub fn pick(xs: &mut Vec<(u64, f64)>) {
+    xs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+}

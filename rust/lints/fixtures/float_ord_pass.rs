@@ -1,0 +1,4 @@
+// must-pass: total_cmp is the sanctioned float ordering.
+pub fn pick(xs: &mut Vec<(u64, f64)>) {
+    xs.sort_by(|a, b| a.1.total_cmp(&b.1));
+}

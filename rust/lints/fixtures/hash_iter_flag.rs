@@ -1,0 +1,6 @@
+// must-flag: HashMap in a decision-affecting module.
+use std::collections::HashMap;
+
+pub fn load(util: &HashMap<u64, f64>) -> f64 {
+    util.values().sum()
+}

@@ -1,0 +1,6 @@
+// must-pass: BTreeMap iterates in key order — deterministic.
+use std::collections::BTreeMap;
+
+pub fn load(util: &BTreeMap<u64, f64>) -> f64 {
+    util.values().sum()
+}

@@ -1,0 +1,6 @@
+// must-flag: unwrap/expect on decision-path fallible values.
+pub fn best(xs: &[f64]) -> f64 {
+    let first = xs.first().unwrap();
+    let last = xs.last().expect("non-empty");
+    first + last
+}

@@ -1,0 +1,11 @@
+// must-pass: propagate errors; lock()/join() unwraps are carved out
+// (poison propagation is the intended crash).
+use std::sync::Mutex;
+
+pub fn best(xs: &[f64]) -> Option<f64> {
+    Some(xs.first()? + xs.last()?)
+}
+
+pub fn drain(q: &Mutex<Vec<u64>>) -> Vec<u64> {
+    std::mem::take(&mut *q.lock().unwrap())
+}

@@ -1,0 +1,4 @@
+// must-flag: wall-clock read inside a decision path.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,11 @@
+// must-pass: carrying an Instant value someone else read is fine —
+// only the `::now` read itself is a wall-clock dependency.
+use std::time::Instant;
+
+pub struct Stamp {
+    pub at: Instant,
+}
+
+pub fn elapsed_ns(s: &Stamp, later: Instant) -> u128 {
+    later.duration_since(s.at).as_nanos()
+}

@@ -1,0 +1,542 @@
+//! `rtgpu-lint` — the determinism/soundness invariant checker
+//! (DESIGN.md §15).
+//!
+//! Every guarantee the rtgpu tree makes — admitted ⇒ no observed miss,
+//! sharded front ≡ serial router, parallel placement ≡ serial — is
+//! proven by *bit-identical trace parity*, so the hazard class that
+//! actually threatens the repo is silent nondeterminism: a NaN-unsafe
+//! float sort, hash-ordered iteration leaking into a decision
+//! sequence, an unseeded RNG, a wall-clock read inside a decision
+//! path.  This crate enforces the invariant catalog statically, with
+//! file/line diagnostics and inline `// lint:allow(rule): why`
+//! escapes.
+//!
+//! The scanner is dependency-free by necessity (the build environment
+//! is offline — no `syn`): a small lexer masks comments, strings, raw
+//! strings and char literals, drops `#[cfg(test)] mod` regions, and
+//! the rules do word-boundary token matching over the masked text.
+//! That makes every rule a conservative over-approximation — e.g.
+//! `hash-iter` quarantines the *type names* `HashMap`/`HashSet` in
+//! decision modules rather than proving an iteration exists — which is
+//! exactly the posture we want: the escape hatch demands a written
+//! justification, so every exception is reviewable in place.
+//!
+//! Rule catalog (scopes are paths relative to `src/`):
+//!
+//! | rule         | invariant                                            |
+//! |--------------|------------------------------------------------------|
+//! | `float-ord`  | no `partial_cmp` outside `util/` — float orderings   |
+//! |              | must be `f64::total_cmp` (NaN-safe, total)           |
+//! | `hash-iter`  | no `HashMap`/`HashSet` in `sched/`, `cluster/`,      |
+//! |              | `coordinator/`, `analysis/` unless justified as      |
+//! |              | lookup-only or collected-and-sorted                  |
+//! | `wallclock`  | no `Instant::now`/`SystemTime` outside               |
+//! |              | `coordinator/serve.rs` and `harness/`                |
+//! | `entropy`    | no `thread_rng`/`from_entropy`/`RandomState`/`OsRng` |
+//! |              | anywhere — all randomness forks seeded Pcg streams   |
+//! | `lib-unwrap` | no `unwrap`/`expect` in the four decision-path       |
+//! |              | module trees (lock/join poisoning carve-outs apply)  |
+
+use std::fmt;
+use std::path::Path;
+
+/// The five invariant rules, by their `lint:allow(...)` names.
+pub const RULE_NAMES: [&str; 5] =
+    ["float-ord", "hash-iter", "wallclock", "entropy", "lib-unwrap"];
+
+/// One finding, pointing at a file/line with the rule that fired.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the scanned root (always `/`-separated).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule name (one of [`RULE_NAMES`], or the meta-rules
+    /// `allow-syntax` / `stale-allow`).
+    pub rule: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// A `lint:allow(rule): justification` marker parsed from a comment.
+#[derive(Debug, Clone)]
+struct Allow {
+    line: usize,
+    rule: String,
+    /// Non-empty justification text after the closing `): `.
+    justified: bool,
+    /// Whether any diagnostic was suppressed by this marker.
+    used: bool,
+}
+
+/// Source with comments/strings blanked (same byte length, newlines
+/// kept) plus the comments' `lint:allow` markers.
+struct Masked {
+    text: String,
+    allows: Vec<Allow>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank out comments, string/char literals (raw and byte forms
+/// included) so token matching never fires inside them, collecting
+/// `lint:allow` markers from the comment text as we go.  Newlines are
+/// preserved so byte offsets map to the original line numbers.
+fn mask(src: &str) -> Masked {
+    let bytes = src.as_bytes();
+    let mut out = bytes.to_vec();
+    let mut allows = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Blank [from, to) in `out`, keeping newlines; scan the original
+    // text for allow markers first.
+    fn blank(out: &mut [u8], from: usize, to: usize) {
+        for b in &mut out[from..to] {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+    }
+
+    while i < bytes.len() {
+        let b = bytes[i];
+        match b {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b'/' if i + 1 < bytes.len() && bytes[i + 1] == b'/' => {
+                let end = src[i..].find('\n').map(|n| i + n).unwrap_or(bytes.len());
+                parse_allows(&src[i..end], line, &mut allows);
+                blank(&mut out, i, end);
+                i = end;
+            }
+            b'/' if i + 1 < bytes.len() && bytes[i + 1] == b'*' => {
+                // Rust block comments nest.
+                let start_line = line;
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < bytes.len() && depth > 0 {
+                    if bytes[j] == b'/' && j + 1 < bytes.len() && bytes[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if bytes[j] == b'*' && j + 1 < bytes.len() && bytes[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        if bytes[j] == b'\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                }
+                parse_allows(&src[i..j], start_line, &mut allows);
+                blank(&mut out, i, j);
+                i = j;
+            }
+            b'"' => {
+                let mut j = i + 1;
+                while j < bytes.len() {
+                    match bytes[j] {
+                        // An escape may be `\<newline>` (line
+                        // continuation) — keep the line count honest.
+                        b'\\' => {
+                            if j + 1 < bytes.len() && bytes[j + 1] == b'\n' {
+                                line += 1;
+                            }
+                            j += 2;
+                        }
+                        b'"' => break,
+                        b'\n' => {
+                            line += 1;
+                            j += 1;
+                        }
+                        _ => j += 1,
+                    }
+                }
+                let end = (j + 1).min(bytes.len());
+                blank(&mut out, i, end);
+                i = end;
+            }
+            b'r' | b'b' if !(i > 0 && is_ident(bytes[i - 1])) => {
+                // Possible raw/byte string prefix: r", r#", b", br#"…
+                let mut j = i + 1;
+                if b == b'b' && j < bytes.len() && bytes[j] == b'r' {
+                    j += 1;
+                }
+                let mut hashes = 0usize;
+                while j < bytes.len() && bytes[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                let raw = j > i + 1 || b == b'r';
+                if j < bytes.len() && bytes[j] == b'"' && (raw || b == b'b') {
+                    // Raw strings have no escapes; plain b"…" does.
+                    let mut k = j + 1;
+                    let closer: Vec<u8> = {
+                        let mut c = vec![b'"'];
+                        c.resize(1 + hashes, b'#');
+                        c
+                    };
+                    while k < bytes.len() {
+                        if bytes[k] == b'\n' {
+                            line += 1;
+                            k += 1;
+                        } else if !raw && bytes[k] == b'\\' {
+                            if k + 1 < bytes.len() && bytes[k + 1] == b'\n' {
+                                line += 1;
+                            }
+                            k += 2;
+                        } else if bytes[k] == b'"' && bytes[k..].starts_with(&closer) {
+                            k += closer.len();
+                            break;
+                        } else {
+                            k += 1;
+                        }
+                    }
+                    blank(&mut out, i, k.min(bytes.len()));
+                    i = k.min(bytes.len());
+                } else {
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                // Char literal vs lifetime: 'x' / '\n' are literals,
+                // 'a in `&'a T` is not (no closing quote after one
+                // character).
+                if i + 1 < bytes.len() && bytes[i + 1] == b'\\' {
+                    let mut j = i + 2;
+                    while j < bytes.len() && bytes[j] != b'\'' {
+                        j += 1;
+                    }
+                    let end = (j + 1).min(bytes.len());
+                    blank(&mut out, i, end);
+                    i = end;
+                } else if let Some(c) = src[i + 1..].chars().next() {
+                    let j = i + 1 + c.len_utf8();
+                    if j < bytes.len() && bytes[j] == b'\'' {
+                        blank(&mut out, i, j + 1);
+                        i = j + 1;
+                    } else {
+                        i += 1; // lifetime
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            _ => i += 1,
+        }
+    }
+
+    // `blank` never touches multi-byte sequences' validity concerns:
+    // it only writes ASCII spaces over bytes inside literals/comments,
+    // and code outside them is untouched — so `out` stays valid UTF-8
+    // wherever the rules look.
+    Masked { text: String::from_utf8_lossy(&out).into_owned(), allows }
+}
+
+/// Parse every `lint:allow(rule): justification` inside one comment.
+/// `line` is the comment's first line; markers on later lines of a
+/// block comment get their own line numbers.
+fn parse_allows(comment: &str, first_line: usize, out: &mut Vec<Allow>) {
+    let mut line = first_line;
+    for text in comment.split('\n') {
+        let mut rest = text;
+        while let Some(pos) = rest.find("lint:allow(") {
+            let after = &rest[pos + "lint:allow(".len()..];
+            let Some(close) = after.find(')') else { break };
+            let rule = after[..close].trim().to_string();
+            let tail = after[close + 1..].trim_start();
+            let justified = tail
+                .strip_prefix(':')
+                .map(|j| j.trim().len() >= 10)
+                .unwrap_or(false);
+            out.push(Allow { line, rule, justified, used: false });
+            rest = &after[close + 1..];
+        }
+        line += 1;
+    }
+}
+
+/// Byte ranges of `#[cfg(test)] mod … { … }` blocks in the masked
+/// text — test code is exempt from every rule.
+fn test_regions(masked: &str) -> Vec<(usize, usize)> {
+    let bytes = masked.as_bytes();
+    let mut regions = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = masked[from..].find("#[cfg(test)]") {
+        let attr = from + pos;
+        from = attr + "#[cfg(test)]".len();
+        // Expect `mod` (possibly after more attributes/whitespace)
+        // and brace-match its body.
+        let Some(open_rel) = masked[from..].find('{') else { break };
+        let head = &masked[from..from + open_rel];
+        if !head.split_whitespace().any(|w| w == "mod") || head.contains(';') {
+            continue; // `#[cfg(test)]` on something other than a mod block
+        }
+        let open = from + open_rel;
+        let mut depth = 1usize;
+        let mut j = open + 1;
+        while j < bytes.len() && depth > 0 {
+            match bytes[j] {
+                b'{' => depth += 1,
+                b'}' => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        regions.push((attr, j));
+        from = j;
+    }
+    regions
+}
+
+fn line_of(src: &str, pos: usize) -> usize {
+    src.as_bytes()[..pos].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Positions where `word` occurs with non-identifier boundaries.
+fn word_positions(text: &str, word: &str) -> Vec<usize> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = text[from..].find(word) {
+        let pos = from + rel;
+        let before_ok = pos == 0 || !is_ident(bytes[pos - 1]);
+        let end = pos + word.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            out.push(pos);
+        }
+        from = pos + word.len().max(1);
+    }
+    out
+}
+
+/// Does `Instant`/`SystemTime` at `pos` read the wall clock — i.e. is
+/// it followed by `::now`?  Bare type mentions (fields, signatures)
+/// carry clock values someone else read and are fine.
+fn is_clock_read(text: &str, pos: usize, word: &str) -> bool {
+    let mut rest = text[pos + word.len()..].trim_start();
+    let Some(stripped) = rest.strip_prefix("::") else { return false };
+    rest = stripped.trim_start();
+    rest.starts_with("now")
+}
+
+/// The receiver call directly before a `.unwrap()`/`.expect(` —
+/// `lock()`, `join()`, `read()`, `write()`, `into_inner()` unwraps
+/// propagate lock poisoning / worker panics, which *is* the intended
+/// crash; they are carved out of `lib-unwrap`.
+fn poison_carveout(text: &str, dot_pos: usize) -> bool {
+    let head = text[..dot_pos].trim_end();
+    ["lock()", "join()", "read()", "write()", "into_inner()"]
+        .iter()
+        .any(|c| head.ends_with(c))
+}
+
+fn in_dirs(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| path.starts_with(d))
+}
+
+const DECISION_DIRS: [&str; 4] = ["sched/", "cluster/", "coordinator/", "analysis/"];
+
+/// Run every rule over one file.  `rel_path` is the path relative to
+/// the scanned `src/` root with `/` separators — it selects each
+/// rule's scope.
+pub fn scan_source(rel_path: &str, src: &str) -> Vec<Diagnostic> {
+    let mut masked = mask(src);
+    let regions = test_regions(&masked.text);
+    let in_tests = |pos: usize| regions.iter().any(|&(a, b)| pos >= a && pos < b);
+    let mut raw: Vec<(usize, &'static str, String)> = Vec::new(); // (pos, rule, message)
+
+    // float-ord ------------------------------------------------------
+    if !in_dirs(rel_path, &["util/"]) {
+        for pos in word_positions(&masked.text, "partial_cmp") {
+            raw.push((
+                pos,
+                "float-ord",
+                "partial_cmp in a decision path — float orderings must use \
+                 f64::total_cmp (NaN-safe, total; the PR 4 placement-sort bug)"
+                    .into(),
+            ));
+        }
+    }
+
+    // hash-iter ------------------------------------------------------
+    if in_dirs(rel_path, &DECISION_DIRS) {
+        for word in ["HashMap", "HashSet"] {
+            for pos in word_positions(&masked.text, word) {
+                raw.push((
+                    pos,
+                    "hash-iter",
+                    format!(
+                        "{word} in a decision-affecting module — hash iteration \
+                         order can leak into decision sequences; use BTreeMap/\
+                         BTreeSet or collect-and-sort, or justify lookup-only use"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // wallclock ------------------------------------------------------
+    if rel_path != "coordinator/serve.rs" && !in_dirs(rel_path, &["harness/"]) {
+        for word in ["Instant", "SystemTime"] {
+            for pos in word_positions(&masked.text, word) {
+                if is_clock_read(&masked.text, pos, word) {
+                    raw.push((
+                        pos,
+                        "wallclock",
+                        format!(
+                            "{word}::now outside coordinator::serve/harness — \
+                             wall-clock reads in decision paths break virtual-\
+                             time replay"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // entropy --------------------------------------------------------
+    for word in ["thread_rng", "from_entropy", "RandomState", "OsRng", "getrandom"] {
+        for pos in word_positions(&masked.text, word) {
+            raw.push((
+                pos,
+                "entropy",
+                format!(
+                    "{word}: unseeded entropy — all randomness must fork from \
+                     seeded util::rng::Pcg streams so runs replay bit-identically"
+                ),
+            ));
+        }
+    }
+
+    // lib-unwrap -----------------------------------------------------
+    if in_dirs(rel_path, &DECISION_DIRS) {
+        for pat in [".unwrap()", ".expect("] {
+            let mut from = 0usize;
+            while let Some(rel) = masked.text[from..].find(pat) {
+                let pos = from + rel;
+                from = pos + pat.len();
+                if !poison_carveout(&masked.text, pos) {
+                    raw.push((
+                        pos,
+                        "lib-unwrap",
+                        "unwrap/expect in a library decision path — return the \
+                         error, restructure, or justify the invariant that makes \
+                         a panic the correct response"
+                            .into(),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Resolve against test regions and allows ------------------------
+    let mut diags = Vec::new();
+    for (pos, rule, message) in raw {
+        if in_tests(pos) {
+            continue;
+        }
+        let line = line_of(src, pos);
+        let suppressed = masked.allows.iter_mut().any(|a| {
+            let hit = a.rule == rule && (a.line == line || a.line + 1 == line);
+            if hit && a.justified {
+                a.used = true;
+            }
+            hit && a.justified
+        });
+        if !suppressed {
+            diags.push(Diagnostic { file: rel_path.into(), line, rule: rule.into(), message });
+        }
+    }
+    for a in &masked.allows {
+        if !RULE_NAMES.contains(&a.rule.as_str()) {
+            diags.push(Diagnostic {
+                file: rel_path.into(),
+                line: a.line,
+                rule: "allow-syntax".into(),
+                message: format!(
+                    "lint:allow({}) names no rule; valid rules: {}",
+                    a.rule,
+                    RULE_NAMES.join(", ")
+                ),
+            });
+        } else if !a.justified {
+            diags.push(Diagnostic {
+                file: rel_path.into(),
+                line: a.line,
+                rule: "allow-syntax".into(),
+                message: format!(
+                    "lint:allow({}) without a justification — write \
+                     `lint:allow({}): <why this exception is sound>`",
+                    a.rule, a.rule
+                ),
+            });
+        } else if !a.used {
+            diags.push(Diagnostic {
+                file: rel_path.into(),
+                line: a.line,
+                rule: "stale-allow".into(),
+                message: format!(
+                    "lint:allow({}) suppresses nothing on this or the next \
+                     line — remove it",
+                    a.rule
+                ),
+            });
+        }
+    }
+    diags.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    diags
+}
+
+/// Every `.rs` file under `root`, sorted, as (`rel_path`, contents).
+fn collect_sources(root: &Path) -> Result<Vec<(String, String)>, String> {
+    fn walk(dir: &Path, root: &Path, out: &mut Vec<(String, String)>) -> Result<(), String> {
+        let mut entries: Vec<_> = std::fs::read_dir(dir)
+            .map_err(|e| format!("read_dir {}: {e}", dir.display()))?
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        // read_dir order is OS-dependent; sort so diagnostics — and the
+        // linter's own exit status narrative — are deterministic.
+        entries.sort_by_key(|e| e.path());
+        for entry in entries {
+            let path = entry.path();
+            if path.is_dir() {
+                walk(&path, root, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .map_err(|e| e.to_string())?
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                let src =
+                    std::fs::read_to_string(&path).map_err(|e| format!("{rel}: {e}"))?;
+                out.push((rel, src));
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(root, root, &mut out)?;
+    Ok(out)
+}
+
+/// Scan a whole `src/` tree.  Returns (files scanned, diagnostics).
+pub fn scan_tree(root: &Path) -> Result<(usize, Vec<Diagnostic>), String> {
+    let sources = collect_sources(root)?;
+    let mut diags = Vec::new();
+    for (rel, src) in &sources {
+        diags.extend(scan_source(rel, src));
+    }
+    Ok((sources.len(), diags))
+}

@@ -1,0 +1,69 @@
+//! CLI for `rtgpu-lint`: scan the rtgpu source tree and exit non-zero
+//! on any diagnostic.
+//!
+//! ```text
+//! cargo run -p rtgpu-lint                 # scan ../src (or ./src)
+//! cargo run -p rtgpu-lint -- --root PATH  # scan PATH
+//! cargo run -p rtgpu-lint -- --report F   # also write diagnostics to F
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut report: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--report" => report = args.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                println!("usage: rtgpu-lint [--root SRC_DIR] [--report FILE]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("rtgpu-lint: unknown argument `{other}` (see --help)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    // Default root: the rtgpu `src/` tree, whether invoked from the
+    // workspace root (`rust/`) or the repo root.
+    let root = root.unwrap_or_else(|| {
+        ["src", "rust/src", "../src"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|p| p.join("lib.rs").is_file())
+            .unwrap_or_else(|| PathBuf::from("src"))
+    });
+
+    let (files, diags) = match rtgpu_lint::scan_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("rtgpu-lint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let mut body = String::new();
+    for d in &diags {
+        body.push_str(&d.to_string());
+        body.push('\n');
+    }
+    print!("{body}");
+    if let Some(path) = report {
+        if let Err(e) = std::fs::write(&path, &body) {
+            eprintln!("rtgpu-lint: write {}: {e}", path.display());
+            return ExitCode::FAILURE;
+        }
+    }
+
+    if diags.is_empty() {
+        println!("rtgpu-lint: {files} files clean ({} rules)", rtgpu_lint::RULE_NAMES.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("rtgpu-lint: {} diagnostic(s) across {files} files", diags.len());
+        ExitCode::FAILURE
+    }
+}

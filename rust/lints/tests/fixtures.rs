@@ -1,0 +1,190 @@
+//! Regression pins for the linter itself: one must-flag and one
+//! must-pass fixture per rule, the `lint:allow` escape hatch in all
+//! its states (justified / unjustified / stale / unknown rule), the
+//! path scoping of each rule, and the lexer's masking of comments,
+//! strings and `#[cfg(test)]` regions.
+
+use rtgpu_lint::scan_source;
+
+fn rules(path: &str, src: &str) -> Vec<String> {
+    scan_source(path, src).into_iter().map(|d| d.rule).collect()
+}
+
+// ---------------------------------------------------------------- rules
+
+#[test]
+fn float_ord_fires_and_passes() {
+    let flagged = rules("cluster/fix.rs", include_str!("../fixtures/float_ord_flag.rs"));
+    assert!(flagged.contains(&"float-ord".to_string()), "{flagged:?}");
+    // The fixture's `.unwrap()` on partial_cmp also trips lib-unwrap —
+    // both invariants are violated, both should fire.
+    assert!(flagged.contains(&"lib-unwrap".to_string()), "{flagged:?}");
+    assert!(rules("cluster/fix.rs", include_str!("../fixtures/float_ord_pass.rs")).is_empty());
+}
+
+#[test]
+fn hash_iter_fires_and_passes() {
+    assert_eq!(
+        rules("coordinator/fix.rs", include_str!("../fixtures/hash_iter_flag.rs")),
+        vec!["hash-iter".to_string(); 2], // the `use` and the signature
+    );
+    assert!(
+        rules("coordinator/fix.rs", include_str!("../fixtures/hash_iter_pass.rs")).is_empty()
+    );
+}
+
+#[test]
+fn wallclock_fires_and_passes() {
+    assert_eq!(
+        rules("sched/fix.rs", include_str!("../fixtures/wallclock_flag.rs")),
+        vec!["wallclock".to_string()],
+    );
+    assert!(rules("sched/fix.rs", include_str!("../fixtures/wallclock_pass.rs")).is_empty());
+}
+
+#[test]
+fn entropy_fires_and_passes() {
+    assert_eq!(
+        rules("telemetry/fix.rs", include_str!("../fixtures/entropy_flag.rs")),
+        vec!["entropy".to_string()],
+    );
+    assert!(rules("telemetry/fix.rs", include_str!("../fixtures/entropy_pass.rs")).is_empty());
+}
+
+#[test]
+fn lib_unwrap_fires_and_passes() {
+    assert_eq!(
+        rules("analysis/fix.rs", include_str!("../fixtures/lib_unwrap_flag.rs")),
+        vec!["lib-unwrap".to_string(); 2], // unwrap + expect
+    );
+    assert!(rules("analysis/fix.rs", include_str!("../fixtures/lib_unwrap_pass.rs")).is_empty());
+}
+
+// ---------------------------------------------------------- allow escapes
+
+#[test]
+fn justified_allow_suppresses_same_and_next_line() {
+    let src = "\
+// lint:allow(wallclock): fixture exception, measured value is telemetry-only
+let t = std::time::Instant::now();
+";
+    assert!(rules("sched/fix.rs", src).is_empty(), "next-line suppression");
+    let inline = "let t = std::time::Instant::now(); \
+// lint:allow(wallclock): fixture exception, telemetry-only timestamp\n";
+    assert!(rules("sched/fix.rs", inline).is_empty(), "same-line suppression");
+}
+
+#[test]
+fn unjustified_allow_is_an_error_and_does_not_suppress() {
+    let src = "\
+// lint:allow(wallclock)
+let t = std::time::Instant::now();
+";
+    let got = rules("sched/fix.rs", src);
+    assert!(got.contains(&"allow-syntax".to_string()), "{got:?}");
+    assert!(got.contains(&"wallclock".to_string()), "{got:?}");
+}
+
+#[test]
+fn stale_allow_is_an_error() {
+    let src = "// lint:allow(entropy): nothing on this line actually needs it\nlet x = 1;\n";
+    assert_eq!(rules("sched/fix.rs", src), vec!["stale-allow".to_string()]);
+}
+
+#[test]
+fn unknown_rule_in_allow_is_an_error() {
+    let src = "// lint:allow(no-such-rule): this rule name does not exist\n";
+    assert_eq!(rules("sched/fix.rs", src), vec!["allow-syntax".to_string()]);
+}
+
+#[test]
+fn allow_only_suppresses_its_own_rule() {
+    let src = "\
+// lint:allow(entropy): wrong rule named, wallclock hit must survive
+let t = std::time::Instant::now();
+";
+    let got = rules("sched/fix.rs", src);
+    assert!(got.contains(&"wallclock".to_string()), "{got:?}");
+    assert!(got.contains(&"stale-allow".to_string()), "{got:?}");
+}
+
+// ------------------------------------------------------------- scoping
+
+#[test]
+fn rule_scopes_follow_module_paths() {
+    let float = "pub fn f(a: f64, b: f64) { let _ = a.partial_cmp(&b); }\n";
+    assert!(rules("util/stats.rs", float).is_empty(), "float-ord exempt in util/");
+    assert!(!rules("cluster/x.rs", float).is_empty());
+
+    let hash = "use std::collections::HashMap;\n";
+    assert!(rules("telemetry/sink.rs", hash).is_empty(), "hash-iter scoped to decision dirs");
+    assert!(!rules("sched/x.rs", hash).is_empty());
+
+    let clock = "pub fn now() -> std::time::Instant { std::time::Instant::now() }\n";
+    assert!(rules("coordinator/serve.rs", clock).is_empty(), "serve loop owns the clock");
+    assert!(rules("harness/bench.rs", clock).is_empty(), "harness owns the clock");
+    assert!(!rules("coordinator/front.rs", clock).is_empty());
+
+    let unwrap = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    assert!(rules("telemetry/sink.rs", unwrap).is_empty(), "lib-unwrap scoped to decision dirs");
+    assert!(!rules("analysis/x.rs", unwrap).is_empty());
+}
+
+#[test]
+fn diagnostics_carry_file_and_line() {
+    let src = "\n\nlet t = std::time::Instant::now();\n";
+    let diags = scan_source("sched/fix.rs", src);
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].file, "sched/fix.rs");
+    assert_eq!(diags[0].line, 3);
+}
+
+// ------------------------------------------------------------- masking
+
+#[test]
+fn tokens_in_comments_and_strings_do_not_fire() {
+    let src = r##"
+// HashMap mentioned in a comment, and Instant::now too.
+/* block comment: thread_rng, partial_cmp, /* nested */ still masked */
+let s = "HashMap<Instant> thread_rng partial_cmp .unwrap()";
+let r = r#"SystemTime RandomState"#;
+let c = 'x';
+let lt: &'static str = s;
+"##;
+    assert!(rules("sched/fix.rs", src).is_empty());
+}
+
+#[test]
+fn cfg_test_modules_are_exempt() {
+    let src = "\
+pub fn lib_code() {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let x: Option<u32> = Some(1);
+        let _ = x.unwrap();
+        let _ = std::time::Instant::now();
+    }
+}
+";
+    assert!(rules("sched/fix.rs", src).is_empty());
+}
+
+#[test]
+fn poison_carveouts_do_not_fire() {
+    let src = "\
+use std::sync::Mutex;
+pub fn f(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap()
+}
+pub fn g(h: std::thread::JoinHandle<u64>) -> u64 {
+    h.join().expect(\"worker panicked\")
+}
+pub fn h(m: Mutex<u64>) -> u64 {
+    m.into_inner().unwrap()
+}
+";
+    assert!(rules("coordinator/fix.rs", src).is_empty());
+}

@@ -44,6 +44,7 @@ pub struct TaskBound {
     pub schedulable: bool,
 }
 
+// lint:allow(hash-iter): lookup-only store — every iteration (`entry_keys`) collects and sorts
 type SharedMap = std::collections::HashMap<(u64, usize, SmModel), std::sync::Arc<CachedTask>>;
 
 /// Cross-evaluation cache of per-`(task key, gn, sm model)` contexts.
@@ -129,6 +130,7 @@ impl SharedCache {
     pub fn retain_keys(&self, live: &[u64]) {
         // A hashed lookup: `Vec::contains` made this O(entries × live),
         // which the warm removal path pays on every membership change.
+        // lint:allow(hash-iter): membership probe only — the set is never iterated
         let live: std::collections::HashSet<u64> = live.iter().copied().collect();
         self.map.borrow_mut().retain(|&(key, _, _), _| live.contains(&key));
     }

@@ -66,6 +66,7 @@ use crate::coordinator::{AdmissionState, VirtualTask};
 use crate::model::{ClusterPlatform, CpuTopology, RtTask, TaskSet};
 use crate::sched::{ms_to_ticks, ArrivalSpec, DeviceId, GpuPolicyKind};
 use crate::util::rng::Pcg;
+use crate::util::sync::thread;
 
 use super::sim::{ClusterWorkload, DeviceWorkload};
 
@@ -294,7 +295,7 @@ impl ClusterState {
     /// is candidate-index-ordered (`tests/placement_parity.rs`).
     pub fn with_parallel(mut self, threads: usize) -> ClusterState {
         self.parallel = if threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
@@ -547,7 +548,7 @@ impl ClusterState {
         for batch in cands.chunks(width) {
             let probes: Vec<(DeviceId, AdmissionState)> =
                 batch.iter().map(|&d| (d, self.devices[d].clone())).collect();
-            let results: Vec<Probe> = std::thread::scope(|scope| {
+            let results: Vec<Probe> = thread::scope(|scope| {
                 let handles: Vec<_> = probes
                     .into_iter()
                     .map(|(dev, mut st)| {
@@ -654,6 +655,9 @@ impl ClusterState {
         let mut fresh = false;
         let mut out = Vec::with_capacity(tasks.len());
         for task in tasks {
+            // The stamp feeds the decision_ns metrics snapshot only,
+            // never a scheduling decision.
+            // lint:allow(wallclock): decision-latency telemetry read
             let t0 = std::time::Instant::now();
             if !fresh {
                 self.fill_candidates(policy, false, &mut cands);

@@ -138,6 +138,7 @@ fn simulate_cluster_impl(
     for d in &wl.devices {
         assert_eq!(d.alloc.len(), d.ts.len());
         if !d.ts.is_empty() {
+            // lint:allow(lib-unwrap): workload construction is caller error, crash loudly
             d.ts.validate().expect("invalid device task set");
         }
         for (t, &gn) in d.ts.tasks.iter().zip(&d.alloc) {

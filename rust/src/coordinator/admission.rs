@@ -11,7 +11,10 @@
 //!   the accepted allocation are cached so most membership changes decide
 //!   on a cheap warm path instead of a full Algorithm-2 rerun.
 
-use std::collections::{HashMap, HashSet};
+// Ordered collections on purpose: `rtgpu-lint`'s hash-iter rule keeps
+// hash-order iteration out of decision paths, and admission decisions
+// feed the parity-pinned placement traces (DESIGN.md §15).
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::Result;
 
@@ -240,7 +243,7 @@ pub struct AdmissionState {
     apps: Vec<(u64, RtTask)>,
     cache: SharedCache,
     /// Currently accepted physical SMs per app key.
-    current: HashMap<u64, usize>,
+    current: BTreeMap<u64, usize>,
 }
 
 impl AdmissionState {
@@ -266,7 +269,7 @@ impl AdmissionState {
             next_key: 0,
             apps: Vec::new(),
             cache: SharedCache::new(),
-            current: HashMap::new(),
+            current: BTreeMap::new(),
         }
     }
 
@@ -388,7 +391,7 @@ impl AdmissionState {
     /// non-schedulable verdict stands (callers shed load or migrate —
     /// see `cluster::placement`).
     pub fn reinflate(&mut self, factors: &[(u64, f64)]) -> AdmissionDecision {
-        let mut mutated: HashSet<u64> = HashSet::new();
+        let mut mutated: BTreeSet<u64> = BTreeSet::new();
         for &(key, factor) in factors {
             assert!(
                 factor.is_finite() && factor > 0.0,

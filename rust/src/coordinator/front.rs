@@ -24,8 +24,8 @@
 //! [`crate::model::RtTask::effective_miss_action`].
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 
 use crate::cluster::{ClusterState, PlacementPolicy};
 use crate::model::{QosTier, RtTask};

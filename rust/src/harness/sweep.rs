@@ -3,8 +3,8 @@
 //! approach accepts.  Task sets are generated once (deterministic in the
 //! seed) and analysed in parallel worker threads.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{thread, Mutex};
 
 use crate::analysis::{analyze, Approach, Search};
 use crate::gen::{generate_taskset, GenConfig};
@@ -72,7 +72,7 @@ pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Vec<AcceptanceCurve> {
         .collect();
 
     let threads = if threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     } else {
         threads
     };
@@ -86,7 +86,7 @@ pub fn run_sweep(spec: &SweepSpec, threads: usize) -> Vec<AcceptanceCurve> {
     let next = AtomicUsize::new(0);
     let panic_slot: Mutex<Option<String>> = Mutex::new(None);
 
-    std::thread::scope(|scope| {
+    thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
@@ -167,5 +167,31 @@ mod tests {
         let a = run_sweep(&spec, 1);
         let b = run_sweep(&spec, 4);
         assert_eq!(a[0].ratios, b[0].ratios);
+    }
+
+    /// Output ordering is fixed by the spec (approach order, then the
+    /// utils axis), never by worker completion order: a single worker
+    /// finishes items in sequence, 2 and 8 workers race freely, and
+    /// every curve must still come out identical and in the same
+    /// position.
+    #[test]
+    fn sweep_output_ordering_is_completion_order_independent() {
+        let mut spec = SweepSpec::quick(GenConfig::default(), 11);
+        spec.utils = vec![0.4, 1.2, 2.0];
+        spec.sets_per_point = 6;
+        let serial = run_sweep(&spec, 1);
+        for threads in [2, 8] {
+            let parallel = run_sweep(&spec, threads);
+            assert_eq!(serial.len(), parallel.len());
+            for (s, p) in serial.iter().zip(&parallel) {
+                assert_eq!(s.approach, p.approach, "curve order changed at {threads} threads");
+                assert_eq!(
+                    s.ratios,
+                    p.ratios,
+                    "{}: curve changed at {threads} threads",
+                    s.approach.name()
+                );
+            }
+        }
     }
 }

@@ -225,6 +225,7 @@ impl ArrivalState {
         if jitter == 0 {
             return 0;
         }
+        // lint:allow(lib-unwrap): ArrivalState::new creates the RNG whenever jitter > 0
         self.rng.as_mut().expect("jittered task has an RNG").below(jitter + 1)
     }
 

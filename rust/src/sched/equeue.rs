@@ -51,6 +51,7 @@ impl<E> PartialEq for Entry<E> {
 }
 impl<E> Eq for Entry<E> {}
 impl<E> PartialOrd for Entry<E> {
+    // lint:allow(float-ord): delegates to the total `Ord` over integer keys
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
@@ -148,6 +149,7 @@ impl<E> EventQueue<E> {
             if top.t >> SLOT_SHIFT >= limit {
                 break;
             }
+            // lint:allow(lib-unwrap): the `while let` peek above proves the heap non-empty
             let std::cmp::Reverse(e) = self.far.pop().expect("peeked");
             let s = &mut self.slots[((e.t >> SLOT_SHIFT) & MASK) as usize];
             s.events.push((e.t, e.seq, e.ev));
@@ -164,6 +166,7 @@ impl<E> EventQueue<E> {
         if self.wheel_len == 0 {
             // The whole backlog is far-future: jump the cursor straight to
             // its earliest slot (no empty-slot scanning on sparse runs).
+            // lint:allow(lib-unwrap): len > 0 with an empty wheel puts the backlog in `far`
             let t_min = self.far.peek().expect("len > 0").0.t;
             self.base_slot = t_min >> SLOT_SHIFT;
             self.drain_far();
@@ -180,6 +183,7 @@ impl<E> EventQueue<E> {
                 s.events.sort_unstable_by(|a, b| (b.0, b.1).cmp(&(a.0, a.1)));
                 s.sorted = true;
             }
+            // lint:allow(lib-unwrap): the is_empty check above continues past empty slots
             let (t, _, ev) = s.events.pop().expect("checked non-empty");
             self.wheel_len -= 1;
             self.len -= 1;

@@ -79,6 +79,7 @@ pub fn merge_priority_levels(deadlines: &[Vec<Tick>]) -> Vec<Vec<usize>> {
         let dev = (0..deadlines.len())
             .filter(|&d| heads[d] < deadlines[d].len())
             .min_by_key(|&d| (deadlines[d][heads[d]], d))
+            // lint:allow(lib-unwrap): `level < total` guarantees an unexhausted device remains
             .expect("heads exhausted before all levels assigned");
         levels[dev][heads[dev]] = level;
         heads[dev] += 1;

@@ -24,6 +24,7 @@ impl<T> PartialEq for Entry<T> {
 }
 impl<T> Eq for Entry<T> {}
 impl<T> PartialOrd for Entry<T> {
+    // lint:allow(float-ord): delegates to the total `Ord` over integer keys
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }

@@ -63,6 +63,7 @@ pub fn bench_n<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) ->
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
+        // lint:allow(wallclock): this IS the benchmark timing substrate
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed().as_secs_f64());
@@ -76,6 +77,7 @@ pub fn bench_n<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) ->
 
 fn bench_target<F: FnMut()>(name: &str, target_secs: f64, f: &mut F) -> BenchResult {
     // Calibrate: run once, extrapolate an iteration count in [10, 10_000].
+    // lint:allow(wallclock): calibration read for the timing substrate
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);

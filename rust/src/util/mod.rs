@@ -9,6 +9,8 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod model;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;

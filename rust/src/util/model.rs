@@ -1,0 +1,710 @@
+//! Exhaustive interleaving model checker for the concurrent front end.
+//!
+//! `loom` is the obvious tool for this job, but the build environment is
+//! fully offline (see [`crate::util`]), so this module hand-rolls the
+//! subset the repo needs: a depth-first explorer that runs a closed
+//! concurrent program under **every sequentially-consistent interleaving
+//! of its synchronisation operations** and re-executes it until the
+//! schedule tree is exhausted.
+//!
+//! How it works
+//! ------------
+//! Model threads are real OS threads, but they only ever run one at a
+//! time: every operation on a model primitive ([`sync::Mutex`],
+//! [`sync::AtomicU64`], [`thread::JoinHandle::join`]) parks the thread
+//! and hands control to the controller (the [`explore`] caller).  When
+//! all live threads are parked the controller computes the *enabled*
+//! set — parked threads whose operation can proceed (mutex free, join
+//! target finished) — and picks one according to a path odometer: a
+//! stack of `(chosen, width)` choices.  Replaying a prefix and bumping
+//! the last non-exhausted choice enumerates the full schedule tree
+//! depth-first, exactly once per interleaving.
+//!
+//! Because a thread runs uninterrupted from one sync op to the next,
+//! the explored granularity is "context switches at synchronisation
+//! points".  For programs whose shared state is only touched through
+//! the modeled primitives — which the `rtgpu-lint` rules and the
+//! [`crate::util::sync`] shim enforce for the four concurrent sites —
+//! this is sound for sequential consistency: the purely-local work
+//! between sync ops commutes.
+//!
+//! Honest limitations (vs. loom):
+//! * sequential consistency only — `Ordering` arguments are accepted
+//!   for API compatibility but every modeled access is SeqCst.  The
+//!   repo's atomics are counters whose *values* (not publication
+//!   order) carry the logic, so SC exploration covers the bugs that
+//!   matter here: lost updates, seq-stamp races, merge ordering.
+//! * `std::sync::mpsc` and `Condvar` are not modeled; code under test
+//!   must not use them (the serve loop's channel stays outside the
+//!   model — its recorders are what the loom tests exercise).
+//! * state explosion is the caller's problem: keep models at 2–3
+//!   threads and a handful of sync ops.  [`explore`] hard-fails after
+//!   [`MAX_INTERLEAVINGS`] schedules rather than hanging CI.
+//!
+//! Failure modes are first-class: an iteration with no enabled thread
+//! reports **deadlock** (with every thread unwound and the offending
+//! schedule still on the odometer), a thread that blocks outside the
+//! model trips a stall watchdog, and a schedule whose enabled-set
+//! width diverges from the replay path reports nondeterminism outside
+//! the modeled sync ops.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex as StdMutex};
+use std::time::Duration;
+
+/// Iteration cap: exploration panics rather than running CI forever.
+pub const MAX_INTERLEAVINGS: usize = 100_000;
+
+/// Watchdog for a model thread that blocks outside the model (a real
+/// channel recv, a non-shim lock): if no thread parks or finishes for
+/// this long, the iteration is declared stalled.
+const STALL: Duration = Duration::from_secs(30);
+
+/// What a parked thread is waiting to do.
+#[derive(Clone, Copy, Debug)]
+enum Block {
+    /// An always-enabled operation (atomic access, explicit yield).
+    Ready,
+    /// Acquire the mutex with this address-identity.
+    Lock(usize),
+    /// Join the model thread with this id.
+    Join(usize),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Choice {
+    chosen: usize,
+    width: usize,
+}
+
+#[derive(Default)]
+struct ThreadState {
+    parked: bool,
+    finished: bool,
+    block: Option<Block>,
+}
+
+struct Inner {
+    threads: Vec<ThreadState>,
+    /// Mutex address → owning thread id, while locked.
+    held: BTreeMap<usize, usize>,
+    /// The thread currently granted the right to run, if any.
+    turn: Option<usize>,
+    /// DFS odometer: replayed prefix + choices appended this iteration.
+    path: Vec<Choice>,
+    depth: usize,
+    abort: bool,
+    panic_note: Option<String>,
+}
+
+struct Explorer {
+    inner: StdMutex<Inner>,
+    cv: Condvar,
+}
+
+thread_local! {
+    /// The explorer + model-thread id of the current OS thread, when it
+    /// is running inside [`explore`].  `None` means pass-through: the
+    /// model primitives behave exactly like their `std` counterparts.
+    static CONTEXT: RefCell<Option<(Arc<Explorer>, usize)>> = const { RefCell::new(None) };
+}
+
+fn current() -> Option<(Arc<Explorer>, usize)> {
+    CONTEXT.with(|c| c.borrow().clone())
+}
+
+impl Explorer {
+    fn new(replay: Vec<Choice>) -> Self {
+        Explorer {
+            inner: StdMutex::new(Inner {
+                threads: Vec::new(),
+                held: BTreeMap::new(),
+                turn: None,
+                path: replay,
+                depth: 0,
+                abort: false,
+                panic_note: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Allocate a model-thread id.  Called by the *spawning* thread so
+    /// id assignment follows program order and replays deterministically.
+    fn register_thread(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        g.threads.push(ThreadState::default());
+        g.threads.len() - 1
+    }
+
+    /// Park at a synchronisation point and wait to be granted the turn.
+    /// On grant, a `Lock` operation records ownership before returning.
+    fn schedule_point(&self, me: usize, block: Block) {
+        let mut g = self.inner.lock().unwrap();
+        g.threads[me].parked = true;
+        g.threads[me].block = Some(block);
+        self.cv.notify_all();
+        loop {
+            if g.abort {
+                drop(g);
+                // resume_unwind (not panic!) keeps the abort cascade out
+                // of the panic hook — only the root cause gets printed.
+                resume_unwind(Box::new("rtgpu model abort"));
+            }
+            if g.turn == Some(me) {
+                g.turn = None;
+                g.threads[me].parked = false;
+                if let Block::Lock(addr) = block {
+                    g.held.insert(addr, me);
+                }
+                return;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn release_lock(&self, addr: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.held.remove(&addr);
+        self.cv.notify_all();
+    }
+
+    fn thread_finished(&self, me: usize, panicked: Option<String>) {
+        let mut g = self.inner.lock().unwrap();
+        g.threads[me].parked = false;
+        g.threads[me].finished = true;
+        if let Some(msg) = panicked {
+            g.panic_note.get_or_insert(msg);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Drive one iteration to completion: wait for quiescence, pick an
+    /// enabled thread per the odometer, grant it the turn, repeat.
+    fn run_scheduler(&self) -> Result<(), String> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            // Quiescence: nobody holds the turn and every live thread
+            // is parked at a sync point (threads run freely between
+            // sync points; only their *sync* behaviour is scheduled).
+            loop {
+                let quiescent = g.turn.is_none()
+                    && g.threads.iter().all(|t| t.finished || t.parked);
+                if quiescent {
+                    break;
+                }
+                let (g2, timeout) = self.cv.wait_timeout(g, STALL).unwrap();
+                g = g2;
+                let still_stuck = !(g.turn.is_none()
+                    && g.threads.iter().all(|t| t.finished || t.parked));
+                if timeout.timed_out() && still_stuck {
+                    g.abort = true;
+                    self.cv.notify_all();
+                    return Err(format!(
+                        "stalled after {STALL:?}: a model thread is blocked \
+                         outside the modeled sync ops (real channel/lock?)"
+                    ));
+                }
+            }
+            if g.threads.iter().all(|t| t.finished) {
+                return Ok(());
+            }
+            let enabled: Vec<usize> = g
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| !t.finished && t.parked)
+                .filter(|(_, t)| match t.block {
+                    Some(Block::Ready) | None => true,
+                    Some(Block::Lock(addr)) => !g.held.contains_key(&addr),
+                    Some(Block::Join(tid)) => g.threads[tid].finished,
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if enabled.is_empty() {
+                let live = g.threads.iter().filter(|t| !t.finished).count();
+                g.abort = true;
+                self.cv.notify_all();
+                return Err(format!(
+                    "deadlock: {live} live thread(s), none enabled \
+                     (lock cycle, or join on a blocked thread)"
+                ));
+            }
+            let idx = if g.depth < g.path.len() {
+                let c = g.path[g.depth];
+                if c.width != enabled.len() {
+                    g.abort = true;
+                    self.cv.notify_all();
+                    return Err(format!(
+                        "replay diverged at depth {}: enabled width {} vs {} \
+                         — the program is nondeterministic outside the \
+                         modeled sync ops",
+                        g.depth,
+                        enabled.len(),
+                        c.width
+                    ));
+                }
+                c.chosen
+            } else {
+                g.path.push(Choice { chosen: 0, width: enabled.len() });
+                0
+            };
+            g.depth += 1;
+            g.turn = Some(enabled[idx]);
+            self.cv.notify_all();
+        }
+    }
+
+    fn final_path(&self) -> Vec<Choice> {
+        self.inner.lock().unwrap().path.clone()
+    }
+
+    fn panic_note(&self) -> Option<String> {
+        self.inner.lock().unwrap().panic_note.clone()
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Body wrapper for every model thread: installs the thread-local
+/// context, funnels panics into the explorer (so the controller can
+/// report them even if nobody joins the handle), and re-raises them to
+/// preserve `std` join semantics.
+fn run_model_thread<T>(ex: Arc<Explorer>, tid: usize, body: impl FnOnce() -> T) -> T {
+    CONTEXT.with(|c| *c.borrow_mut() = Some((ex.clone(), tid)));
+    let out = catch_unwind(AssertUnwindSafe(body));
+    CONTEXT.with(|c| *c.borrow_mut() = None);
+    match out {
+        Ok(v) => {
+            ex.thread_finished(tid, None);
+            v
+        }
+        Err(payload) => {
+            ex.thread_finished(tid, Some(panic_message(payload.as_ref())));
+            resume_unwind(payload)
+        }
+    }
+}
+
+/// Run `f` under every sequentially-consistent interleaving of its
+/// model sync ops.  `f` is re-executed once per schedule; it must
+/// create all shared state afresh each call and confine cross-thread
+/// communication to the model primitives.  Panics (on the caller) at
+/// the first schedule that deadlocks, stalls, or fails an assertion.
+pub fn explore<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    explore_capped(MAX_INTERLEAVINGS, f);
+}
+
+/// [`explore`] with an explicit interleaving cap.
+pub fn explore_capped<F>(cap: usize, f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let mut replay: Vec<Choice> = Vec::new();
+    let mut iterations = 0usize;
+    loop {
+        iterations += 1;
+        assert!(
+            iterations <= cap,
+            "model: exceeded {cap} interleavings — shrink the model \
+             (fewer threads / sync ops) or raise the cap"
+        );
+        let ex = Arc::new(Explorer::new(std::mem::take(&mut replay)));
+        let root = ex.register_thread();
+        let (exw, fw) = (ex.clone(), f.clone());
+        let handle = std::thread::spawn(move || run_model_thread(exw, root, move || fw()));
+        let status = ex.run_scheduler();
+        if let Err(msg) = status {
+            // Abort is set: parked threads unwind on their own.  The
+            // root handle is deliberately not joined — a stalled thread
+            // may never return, and the test is failing regardless.
+            panic!("model: {msg} (schedule {iterations})");
+        }
+        if let Err(payload) = handle.join() {
+            eprintln!("model: assertion failed on schedule {iterations}");
+            resume_unwind(payload);
+        }
+        if let Some(note) = ex.panic_note() {
+            panic!("model: unjoined model thread panicked: {note}");
+        }
+        replay = ex.final_path();
+        while replay.last().is_some_and(|c| c.chosen + 1 >= c.width) {
+            replay.pop();
+        }
+        match replay.last_mut() {
+            Some(c) => c.chosen += 1,
+            None => break, // schedule tree exhausted
+        }
+    }
+}
+
+/// Model counterparts of `std::sync` primitives.  Outside [`explore`]
+/// they pass straight through to `std`; inside, every operation is a
+/// scheduling point.
+pub mod sync {
+    use super::{current, Arc, Block, Explorer};
+    use std::ops::{Deref, DerefMut};
+    use std::sync::atomic::Ordering;
+    use std::sync::{LockResult, PoisonError};
+
+    /// Pause at an always-enabled scheduling point (atomics use this).
+    fn point() {
+        if let Some((ex, me)) = current() {
+            ex.schedule_point(me, Block::Ready);
+        }
+    }
+
+    pub struct Mutex<T> {
+        inner: std::sync::Mutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        pub fn new(value: T) -> Self {
+            Mutex { inner: std::sync::Mutex::new(value) }
+        }
+
+        /// Model-aware `lock`: parks until the scheduler grants the
+        /// acquisition (the address doubles as the mutex identity — the
+        /// mutex cannot move while any guard borrows it, so the
+        /// identity is stable for the lifetime of the hold).
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            let release = current().map(|(ex, me)| {
+                let addr = &self.inner as *const std::sync::Mutex<T> as usize;
+                ex.schedule_point(me, Block::Lock(addr));
+                (ex, addr)
+            });
+            // The model guarantees exclusivity, so this real lock is
+            // always uncontended; it exists to hold the data and to
+            // reproduce std's poison semantics on panic.
+            match self.inner.lock() {
+                Ok(real) => Ok(MutexGuard { real: Some(real), release }),
+                Err(poisoned) => Err(PoisonError::new(MutexGuard {
+                    real: Some(poisoned.into_inner()),
+                    release,
+                })),
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+    }
+
+    pub struct MutexGuard<'a, T> {
+        real: Option<std::sync::MutexGuard<'a, T>>,
+        release: Option<(Arc<Explorer>, usize)>,
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.real.as_ref().expect("guard accessed after drop")
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.real.as_mut().expect("guard accessed after drop")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // Order matters: free the real lock, then tell the model —
+            // a waiter granted the lock must find it actually free.
+            drop(self.real.take());
+            if let Some((ex, addr)) = self.release.take() {
+                ex.release_lock(addr);
+            }
+        }
+    }
+
+    macro_rules! model_atomic {
+        ($name:ident, $std:ty, $prim:ty) => {
+            /// Model atomic: every access is a scheduling point.  The
+            /// `Ordering` argument is accepted for API compatibility
+            /// but the model explores sequential consistency only.
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub fn new(value: $prim) -> Self {
+                    Self { inner: <$std>::new(value) }
+                }
+
+                pub fn load(&self, _order: Ordering) -> $prim {
+                    point();
+                    self.inner.load(Ordering::SeqCst)
+                }
+
+                pub fn store(&self, value: $prim, _order: Ordering) {
+                    point();
+                    self.inner.store(value, Ordering::SeqCst);
+                }
+
+                pub fn fetch_add(&self, value: $prim, _order: Ordering) -> $prim {
+                    point();
+                    self.inner.fetch_add(value, Ordering::SeqCst)
+                }
+
+                pub fn fetch_max(&self, value: $prim, _order: Ordering) -> $prim {
+                    point();
+                    self.inner.fetch_max(value, Ordering::SeqCst)
+                }
+            }
+        };
+    }
+
+    model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+}
+
+/// Model counterparts of `std::thread`.  Spawns register the new
+/// thread with the explorer; joins are scheduling points; a scope's
+/// implicit join of unjoined handles is modeled explicitly so the
+/// scoping thread parks instead of blocking invisibly.
+pub mod thread {
+    use super::{current, run_model_thread, Arc, Block, Explorer};
+    use std::num::NonZeroUsize;
+
+    pub struct JoinHandle<T> {
+        target: Option<(Arc<Explorer>, usize)>,
+        real: std::thread::JoinHandle<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            if let (Some((ex, tid)), Some((_, me))) = (&self.target, current()) {
+                ex.schedule_point(me, Block::Join(*tid));
+            }
+            self.real.join()
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match current() {
+            Some((ex, _)) => {
+                let tid = ex.register_thread();
+                let exw = ex.clone();
+                JoinHandle {
+                    target: Some((ex, tid)),
+                    real: std::thread::spawn(move || run_model_thread(exw, tid, f)),
+                }
+            }
+            None => JoinHandle { target: None, real: std::thread::spawn(f) },
+        }
+    }
+
+    pub struct Scope<'scope, 'env: 'scope> {
+        inner: &'scope std::thread::Scope<'scope, 'env>,
+        /// Model-thread ids spawned in this scope; drained at scope
+        /// exit to model the implicit join.
+        pending: std::sync::Mutex<Vec<usize>>,
+    }
+
+    pub struct ScopedJoinHandle<'scope, T> {
+        target: Option<(Arc<Explorer>, usize)>,
+        real: std::thread::ScopedJoinHandle<'scope, T>,
+    }
+
+    impl<T> ScopedJoinHandle<'_, T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            if let (Some((ex, tid)), Some((_, me))) = (&self.target, current()) {
+                ex.schedule_point(me, Block::Join(*tid));
+            }
+            self.real.join()
+        }
+    }
+
+    impl<'scope, 'env> Scope<'scope, 'env> {
+        pub fn spawn<F, T>(&self, f: F) -> ScopedJoinHandle<'scope, T>
+        where
+            F: FnOnce() -> T + Send + 'scope,
+            T: Send + 'scope,
+        {
+            match current() {
+                Some((ex, _)) => {
+                    let tid = ex.register_thread();
+                    self.pending.lock().unwrap().push(tid);
+                    let exw = ex.clone();
+                    ScopedJoinHandle {
+                        target: Some((ex, tid)),
+                        real: self.inner.spawn(move || run_model_thread(exw, tid, f)),
+                    }
+                }
+                None => ScopedJoinHandle { target: None, real: self.inner.spawn(f) },
+            }
+        }
+    }
+
+    /// Like `std::thread::scope`, but the closure receives the model
+    /// [`Scope`].  Joining an already-joined model thread again at
+    /// scope exit is harmless (a finished thread's join is always
+    /// enabled), so handles joined explicitly need no bookkeeping.
+    pub fn scope<'env, F, T>(f: F) -> T
+    where
+        F: for<'scope> FnOnce(&Scope<'scope, 'env>) -> T,
+    {
+        std::thread::scope(|s| {
+            let scope = Scope { inner: s, pending: std::sync::Mutex::new(Vec::new()) };
+            let out = f(&scope);
+            if let Some((ex, me)) = current() {
+                let pending = std::mem::take(&mut *scope.pending.lock().unwrap());
+                for tid in pending {
+                    ex.schedule_point(me, Block::Join(tid));
+                }
+            }
+            out
+        })
+    }
+
+    /// Deterministic 2 inside the model (so parallel fan-outs are
+    /// model-checkable with a bounded schedule tree); real parallelism
+    /// outside it.
+    pub fn available_parallelism() -> std::io::Result<NonZeroUsize> {
+        match current() {
+            Some(_) => Ok(NonZeroUsize::new(2).expect("2 is non-zero")),
+            None => std::thread::available_parallelism(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{explore, sync, thread};
+    use std::collections::BTreeSet;
+    use std::sync::atomic::Ordering;
+    use std::sync::{Arc, Mutex as StdMutex};
+
+    /// The canary: an unguarded load-then-store increment pair must
+    /// exhibit BOTH the lost update (final 1) and the clean run
+    /// (final 2) somewhere in the schedule tree.
+    #[test]
+    fn explorer_finds_lost_update() {
+        let outcomes = Arc::new(StdMutex::new(BTreeSet::new()));
+        let sink = outcomes.clone();
+        explore(move || {
+            let n = Arc::new(sync::AtomicU64::new(0));
+            let workers: Vec<_> = (0..2)
+                .map(|_| {
+                    let n = n.clone();
+                    thread::spawn(move || {
+                        let v = n.load(Ordering::SeqCst);
+                        n.store(v + 1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().unwrap();
+            }
+            sink.lock().unwrap().insert(n.load(Ordering::SeqCst));
+        });
+        assert_eq!(*outcomes.lock().unwrap(), BTreeSet::from([1, 2]));
+    }
+
+    /// Mutex-guarded increments can never lose an update, and the
+    /// explorer must actually branch (more than one schedule).
+    #[test]
+    fn mutex_increments_are_never_lost() {
+        let schedules = Arc::new(StdMutex::new(0usize));
+        let counter = schedules.clone();
+        explore(move || {
+            *counter.lock().unwrap() += 1;
+            let n = sync::Mutex::new(0u64);
+            thread::scope(|s| {
+                for _ in 0..2 {
+                    s.spawn(|| {
+                        *n.lock().unwrap() += 1;
+                    });
+                }
+            });
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+        assert!(
+            *schedules.lock().unwrap() > 1,
+            "explorer should have branched over lock order"
+        );
+    }
+
+    /// ABBA lock order must be reported as a deadlock, not a hang.
+    #[test]
+    fn abba_lock_order_is_reported_as_deadlock() {
+        let result = std::panic::catch_unwind(|| {
+            explore(|| {
+                let a = Arc::new(sync::Mutex::new(()));
+                let b = Arc::new(sync::Mutex::new(()));
+                let (a2, b2) = (a.clone(), b.clone());
+                let h = thread::spawn(move || {
+                    let _g1 = a2.lock().unwrap();
+                    let _g2 = b2.lock().unwrap();
+                });
+                let _g1 = b.lock().unwrap();
+                let _g2 = a.lock().unwrap();
+                drop((_g2, _g1));
+                h.join().unwrap();
+            });
+        });
+        let payload = result.expect_err("ABBA ordering must deadlock somewhere");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("deadlock"), "unexpected failure: {msg}");
+    }
+
+    /// fetch_add hands out distinct stamps under every interleaving.
+    #[test]
+    fn fetch_add_stamps_are_unique() {
+        explore(|| {
+            let n = Arc::new(sync::AtomicU64::new(0));
+            let stamps = Arc::new(sync::Mutex::new(Vec::new()));
+            thread::scope(|s| {
+                for _ in 0..2 {
+                    let (n, stamps) = (n.clone(), stamps.clone());
+                    s.spawn(move || {
+                        let v = n.fetch_add(1, Ordering::Relaxed);
+                        stamps.lock().unwrap().push(v);
+                    });
+                }
+            });
+            let mut got = std::mem::take(&mut *stamps.lock().unwrap());
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1]);
+        });
+    }
+
+    /// Outside `explore`, the model primitives are plain std types.
+    #[test]
+    fn pass_through_outside_explore() {
+        let m = sync::Mutex::new(41u64);
+        *m.lock().unwrap() += 1;
+        assert_eq!(m.into_inner().unwrap(), 42);
+
+        let a = sync::AtomicUsize::new(0);
+        a.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(a.load(Ordering::Relaxed), 3);
+
+        let h = thread::spawn(|| 7u32);
+        assert_eq!(h.join().unwrap(), 7);
+        assert!(thread::available_parallelism().unwrap().get() >= 1);
+    }
+}

@@ -1,0 +1,71 @@
+//! Switchable synchronisation layer for the concurrent sites.
+//!
+//! Production builds re-export `std::sync`/`std::thread` unchanged —
+//! this module costs nothing.  Under `RUSTFLAGS="--cfg loom"` the same
+//! names resolve to [`crate::util::model`]'s primitives, whose every
+//! operation is a scheduling point of the exhaustive interleaving
+//! explorer.  The four concurrent sites — `coordinator::front`
+//! (shard mutexes + seq counter), `coordinator::serve` (per-worker
+//! recorders), `cluster::placement` (`with_parallel` commit) and
+//! `harness::sweep` (worker fan-out) — import their sync primitives
+//! from here and nowhere else, so the model checks in
+//! `tests/loom_front.rs` exercise the *same* code that runs in
+//! production, not a test-only re-implementation.  `rtgpu-lint` keeps
+//! wall-clock and entropy out of those sites; this shim keeps their
+//! scheduling model-checkable.
+//!
+//! Deliberately NOT shimmed: `Arc` (immutable refcount, no
+//! interleaving behaviour worth exploring) and `std::sync::mpsc` (the
+//! serve loop's channel feeds a wall-clock station loop that the model
+//! never runs; its shared mutable state — the recorders — goes through
+//! [`Mutex`] here).
+
+#[cfg(not(loom))]
+pub use std::sync::{Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::{
+        available_parallelism, scope, spawn, JoinHandle, Scope, ScopedJoinHandle,
+    };
+}
+
+#[cfg(loom)]
+pub use crate::util::model::sync::{Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use crate::util::model::sync::{AtomicU64, AtomicUsize};
+    // Ordering is plain data; the model accepts it and explores SeqCst.
+    pub use std::sync::atomic::Ordering;
+}
+
+#[cfg(loom)]
+pub mod thread {
+    pub use crate::util::model::thread::{
+        available_parallelism, scope, spawn, JoinHandle, Scope, ScopedJoinHandle,
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    /// The shim must expose the same surface under both cfgs; this
+    /// pins the std arm (the loom arm is pinned by tests/loom_front.rs).
+    #[test]
+    fn std_arm_round_trips() {
+        use super::atomic::{AtomicU64, Ordering};
+        let m = super::Mutex::new(1u32);
+        *m.lock().unwrap() += 1;
+        assert_eq!(m.into_inner().unwrap(), 2);
+        let a = AtomicU64::new(5);
+        assert_eq!(a.fetch_add(2, Ordering::Relaxed), 5);
+        assert_eq!(a.load(Ordering::Relaxed), 7);
+        let out = super::thread::scope(|s| s.spawn(|| 3u8).join().unwrap());
+        assert_eq!(out, 3);
+    }
+}

@@ -1,0 +1,206 @@
+//! Model-checked concurrency tests for the admission front end
+//! (DESIGN.md §15).  Compiled only under `RUSTFLAGS="--cfg loom"`;
+//! the [`rtgpu::util::sync`] shim then routes every lock and atomic in
+//! `coordinator/front.rs` through [`rtgpu::util::model`], and
+//! [`explore`] re-runs each closure under **every** sequentially-
+//! consistent interleaving of those sync ops.
+//!
+//! What is pinned here, exhaustively rather than probabilistically:
+//!
+//! * submit stamps are unique and gap-free no matter how producers
+//!   interleave, and `drain` always returns them in seq order;
+//! * a drain racing concurrent submits neither drops nor duplicates an
+//!   arrival — every seq shows up in exactly one drain's log;
+//! * [`Recorder::merge`] is interleaving-independent: merged telemetry
+//!   equals the single-recorder reference under every merge order
+//!   (the PR 9 contention design leans on this);
+//! * token-bucket shed decisions replay bit-identically from the
+//!   seq-ordered log, even when the *content* of that log depends on
+//!   the producer race.
+//!
+//! Models stay tiny (2 producer threads, a handful of sync ops) —
+//! state explosion is exponential in sync-op count, and `explore`
+//! hard-fails at [`rtgpu::util::model::MAX_INTERLEAVINGS`].
+
+#![cfg(loom)]
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex as StdMutex};
+
+use rtgpu::analysis::RtgpuOpts;
+use rtgpu::cluster::{ClusterState, PlacementPolicy};
+use rtgpu::coordinator::{AdmissionFront, FrontOutcome, QosConfig, TokenBucket};
+use rtgpu::model::testing::simple_task;
+use rtgpu::model::{ClusterPlatform, QosTier, RtTask};
+use rtgpu::telemetry::{Recorder, TelemetrySink};
+use rtgpu::util::model::{explore, thread};
+use rtgpu::util::sync::Mutex;
+
+fn small_fleet() -> ClusterState {
+    ClusterState::new(ClusterPlatform::homogeneous(2, 4), RtgpuOpts::default())
+}
+
+fn tiered(id: usize, tier: QosTier) -> RtTask {
+    let mut t = simple_task(id);
+    t.qos = tier;
+    t
+}
+
+/// A bucket that sheds everything: drains never reach placement, so
+/// each explored schedule stays cheap.
+fn shed_all() -> QosConfig {
+    QosConfig { capacity: 0, refill_period: 0, reserve_guaranteed: 0, reserve_standard: 0 }
+}
+
+/// Two racing producers: their seq stamps must come out unique and
+/// gap-free, and `drain` must restore global submit order regardless
+/// of which producer's push landed first in which shard.
+#[test]
+fn submit_stamps_are_unique_and_drain_restores_seq_order() {
+    explore(|| {
+        let front = Arc::new(AdmissionFront::new(2, PlacementPolicy::WorstFit, Some(shed_all())));
+        let workers: Vec<_> = (0..2)
+            .map(|i| {
+                let f = front.clone();
+                thread::spawn(move || f.submit(simple_task(i), 0))
+            })
+            .collect();
+        let mut stamps: Vec<u64> =
+            workers.into_iter().map(|w| w.join().expect("producer panicked")).collect();
+        stamps.sort_unstable();
+        assert_eq!(stamps, vec![0, 1], "fetch_add stamps must be unique and gap-free");
+
+        let mut state = small_fleet();
+        let seqs: Vec<u64> = front.drain(&mut state).iter().map(|d| d.seq).collect();
+        assert_eq!(seqs, vec![0, 1], "drain must restore global submit order");
+    });
+}
+
+/// A drain racing a live producer: across the racing drain and a final
+/// post-join drain, every submitted seq appears exactly once — the
+/// swap-out of a shard queue can never drop or duplicate an arrival,
+/// even when the producer is mid-submit (seq stamped, push pending).
+#[test]
+fn drain_racing_submit_neither_drops_nor_duplicates() {
+    explore(|| {
+        let front = Arc::new(AdmissionFront::new(2, PlacementPolicy::WorstFit, Some(shed_all())));
+        let producer = {
+            let f = front.clone();
+            thread::spawn(move || {
+                f.submit(simple_task(0), 0);
+                f.submit(simple_task(1), 0);
+            })
+        };
+        let mut state = small_fleet();
+        let racing: Vec<u64> = front.drain(&mut state).iter().map(|d| d.seq).collect();
+        producer.join().expect("producer panicked");
+        let after: Vec<u64> = front.drain(&mut state).iter().map(|d| d.seq).collect();
+
+        let mut all = racing.clone();
+        all.extend(&after);
+        let distinct: BTreeSet<u64> = all.iter().copied().collect();
+        assert_eq!(distinct.len(), all.len(), "duplicated seq: {racing:?} then {after:?}");
+        assert_eq!(distinct, BTreeSet::from([0, 1]), "dropped seq: {racing:?} then {after:?}");
+        assert_eq!(front.pending(), 0, "post-join drain must leave nothing queued");
+    });
+}
+
+/// The PR 9 serving-path design: workers record into private recorders
+/// and fold them into one shared recorder at the end.  Under every
+/// merge interleaving, the merged telemetry must equal the
+/// single-recorder reference — counts exactly, quantiles exactly
+/// (integer bucket sums).
+#[test]
+fn recorder_merge_is_interleaving_independent() {
+    explore(|| {
+        // The reference: both sample streams through one recorder.
+        let mut reference = Recorder::new();
+        for (dev, ms, missed) in [(0, 4.0, false), (0, 9.0, true), (1, 2.5, false)] {
+            reference.on_job(dev, 0, ms, missed);
+        }
+
+        let shared = Arc::new(Mutex::new(Recorder::new()));
+        thread::scope(|s| {
+            for samples in [vec![(0, 4.0, false), (0, 9.0, true)], vec![(1, 2.5, false)]] {
+                let shared = shared.clone();
+                s.spawn(move || {
+                    let mut private = Recorder::new();
+                    for (dev, ms, missed) in samples {
+                        private.on_job(dev, 0, ms, missed);
+                    }
+                    shared.lock().unwrap().merge(&private);
+                });
+            }
+        });
+
+        let merged = shared.lock().unwrap();
+        assert_eq!(merged.total_completed(), reference.total_completed());
+        assert_eq!(merged.total_missed(), reference.total_missed());
+        for dev in 0..2 {
+            let (m, r) = (merged.task(dev, 0).unwrap(), reference.task(dev, 0).unwrap());
+            assert_eq!(m.completed, r.completed, "device {dev} completed");
+            assert_eq!(m.missed, r.missed, "device {dev} missed");
+            assert_eq!(m.latency.count(), r.latency.count(), "device {dev} sample count");
+            assert_eq!(m.latency.p50(), r.latency.p50(), "device {dev} p50");
+            assert_eq!(m.latency.max_ms(), r.latency.max_ms(), "device {dev} max");
+        }
+    });
+}
+
+/// Token-bucket sheds replay bit-identically: whichever producer wins
+/// the seq race, re-running a fresh bucket over the drain log's
+/// (tier, at) pairs in seq order must reproduce the exact shed bits.
+/// The *content* of the log is interleaving-dependent here (2 tokens,
+/// floors G=0 / BE=1: BE-first admits both, G-first sheds the BE), so
+/// the oracle is checked under every schedule, not just one.
+#[test]
+fn token_bucket_sheds_replay_bit_identically() {
+    let outcomes = Arc::new(StdMutex::new(BTreeSet::new()));
+    let sink = outcomes.clone();
+    let cfg =
+        QosConfig { capacity: 2, refill_period: 0, reserve_guaranteed: 1, reserve_standard: 0 };
+    explore(move || {
+        let front = Arc::new(AdmissionFront::new(2, PlacementPolicy::WorstFit, Some(cfg)));
+        let workers: Vec<_> = [QosTier::BestEffort, QosTier::Guaranteed]
+            .into_iter()
+            .enumerate()
+            .map(|(i, tier)| {
+                let f = front.clone();
+                thread::spawn(move || f.submit(tiered(i, tier), 0))
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("producer panicked");
+        }
+
+        let mut state = small_fleet();
+        let log = front.drain(&mut state);
+        assert_eq!(log.len(), 2);
+
+        // The oracle: a fresh bucket replayed over the seq-ordered log.
+        let mut oracle = TokenBucket::new(cfg);
+        let shed_bits: Vec<bool> = log
+            .iter()
+            .map(|d| {
+                let shed = !oracle.try_admit(0, d.tier);
+                assert_eq!(
+                    shed,
+                    d.outcome == FrontOutcome::Shed,
+                    "seq {} ({:?}) diverged from the serial oracle",
+                    d.seq,
+                    d.tier
+                );
+                shed
+            })
+            .collect();
+        sink.lock().unwrap().insert(shed_bits);
+    });
+    // The race must actually produce both logs, or the test proved
+    // nothing about interleaving-dependence.
+    let seen = outcomes.lock().unwrap();
+    assert_eq!(
+        *seen,
+        BTreeSet::from([vec![false, false], vec![false, true]]),
+        "exploration should reach both the BE-first and G-first orders"
+    );
+}
